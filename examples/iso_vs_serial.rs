@@ -1,0 +1,112 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §7 "E2E").
+//!
+//! Exercises the full three-layer stack on a real workload: the rust
+//! coordinator executes AOT-lowered JAX/Pallas artifacts across TP worker
+//! threads with real ring collectives, under both the serial baseline
+//! (paper Fig 1a) and ISO (Fig 1d). Two regimes are measured:
+//!
+//! * **native** — the ring runs at shared-memory speed. Comm is ~free
+//!   relative to compute, i.e. the paper's "computation dominates" A800
+//!   regime taken to the extreme: ISO's chunk-splitting overhead shows and
+//!   the gain is small or negative — reproducing WHY the paper's A800
+//!   numbers are modest.
+//! * **emulated PCIe** — each ring hop is paced by the α+bytes/BW model at
+//!   a bandwidth calibrated so comm ≈ compute (the 4090-with-int8 balance
+//!   of Fig 2a). ISO then hides the collective behind compute and wins
+//!   wallclock, and the int8 wire shrinks comm for real.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example iso_vs_serial
+//! ```
+
+use iso::config::{CommQuant, EngineConfig, SplitPolicy, Strategy};
+use iso::coordinator::Engine;
+use iso::metrics::Histogram;
+
+struct Row {
+    ttft_mean: f64,
+    ttft_p50: f64,
+    overlap_eff: f64,
+}
+
+fn run(
+    strategy: Strategy,
+    tp: usize,
+    quant: CommQuant,
+    link_mbps: Option<f64>,
+    prompts: &[Vec<i32>],
+) -> anyhow::Result<Row> {
+    let cfg = EngineConfig {
+        strategy,
+        split: SplitPolicy::Even,
+        comm_quant: quant,
+        tp,
+        max_chunk: 64,
+        link_mbps,
+        ..Default::default()
+    };
+    let mut engine = Engine::start(cfg)?;
+    engine.prefill(&prompts[0])?; // warmup (first-execution costs)
+    let mut ttft = Histogram::new();
+    for p in prompts {
+        ttft.record(engine.prefill(p)?.ttft_ms);
+    }
+    let report = engine.shutdown()?;
+    let overlap_eff = report.workers.iter().map(|w| w.overlap_efficiency()).sum::<f64>()
+        / report.workers.len() as f64;
+    Ok(Row { ttft_mean: ttft.mean(), ttft_p50: ttft.p50(), overlap_eff })
+}
+
+fn main() -> anyhow::Result<()> {
+    let prompt_len = 128;
+    let n_requests = 10;
+    let prompts: Vec<Vec<i32>> = (0..n_requests)
+        .map(|r| (0..prompt_len).map(|i| ((i * 31 + r * 17) % 512) as i32).collect())
+        .collect();
+
+    println!(
+        "E2E: ISO vs serial on the real engine (tiny-gqa, {prompt_len}-token prompts, {n_requests} requests)\n"
+    );
+    println!(
+        "{:<22} {:<4} {:<10} {:>11} {:>11} {:>9} {:>10}",
+        "regime", "tp", "strategy", "ttft mean", "ttft p50", "ovl eff", "reduction"
+    );
+
+    // Regime 1: native shared-memory ring (compute dominates → paper's
+    // A800-like behaviour, ISO gain ≈ 0 or negative).
+    // Regime 2: emulated PCIe-class link calibrated so comm ≈ compute
+    // (the 4090+int8 balance → ISO should win).
+    for (regime, link, quant) in [
+        ("native (comm≈free)", None, CommQuant::F32),
+        ("emulated PCIe f32", Some(40.0), CommQuant::F32),
+        ("emulated PCIe int8", Some(40.0), CommQuant::Int8),
+    ] {
+        for tp in [2usize, 4] {
+            let serial = run(Strategy::Serial, tp, quant, link, &prompts)?;
+            let iso = run(Strategy::Iso, tp, quant, link, &prompts)?;
+            let reduction = (serial.ttft_mean - iso.ttft_mean) / serial.ttft_mean;
+            println!(
+                "{:<22} {:<4} {:<10} {:>9.1}ms {:>9.1}ms {:>9.2} {:>10}",
+                regime, tp, "serial", serial.ttft_mean, serial.ttft_p50, serial.overlap_eff, "-"
+            );
+            println!(
+                "{:<22} {:<4} {:<10} {:>9.1}ms {:>9.1}ms {:>9.2} {:>9.1}%",
+                regime,
+                tp,
+                "iso",
+                iso.ttft_mean,
+                iso.ttft_p50,
+                iso.overlap_eff,
+                reduction * 100.0
+            );
+        }
+        println!();
+    }
+
+    println!("native regime = paper's computation-dominates case (gain ≈ 0, §3.2/Fig 2b);");
+    println!("emulated-PCIe = comm ≈ compute (Fig 2a after int8): ISO hides the collective.");
+    println!("paper-scale Table-1 ratios: `cargo bench --bench table1`.");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Long-context study: how the ISO gain evolves from 1k to 128k tokens,
+//! with the compute/comm share analysis that drives Figure 2's asymmetric
+//! regimes, plus a Figure-1-style Gantt of each strategy's first layers.
+//!
+//! ```text
+//! cargo run --release --example long_context
+//! ```
+
+use iso::config::{SimExperiment, Strategy};
+use iso::hw::NodeProfile;
+use iso::model::ModelSpec;
+use iso::report::gantt;
+use iso::sched::{build, reduction_vs_serial, run, Coster};
+use iso::sim::OpKind;
+
+fn main() {
+    let platforms = [("4090", 4usize), ("a800", 4)];
+    let model = ModelSpec::gqa_70b();
+
+    println!("ISO gain and compute/comm balance vs context length — 70b GQA");
+    println!(
+        "{:<10} {:>8} {:>12} {:>12} {:>10} {:>10}",
+        "platform", "len", "compute/lyr", "comm/lyr", "comm share", "ISO gain"
+    );
+    for (gpu, cards) in platforms {
+        for i in 0..8 {
+            let len = 1024usize << i;
+            let node = NodeProfile::by_name(gpu, cards).unwrap();
+            let mut e = SimExperiment::new(node, model.clone(), len, Strategy::Iso);
+            e.gemm_segments = if gpu == "a800" { 4 } else { 1 };
+            let c = Coster::new(&e);
+            let compute = c.attn_block_s(len, 0) + c.mlp_block_s(len);
+            let comm = 2.0 * c.ar_s(len, 1);
+            println!(
+                "{:<10} {:>7}k {:>10.2}ms {:>10.2}ms {:>9.0}% {:>9.1}%",
+                format!("{gpu}-{cards}"),
+                len / 1024,
+                compute * 1e3,
+                comm * 1e3,
+                comm / (comm + compute) * 100.0,
+                reduction_vs_serial(&e) * 100.0
+            );
+        }
+    }
+
+    // Figure 1 style: timelines of the four pipelines on the same config.
+    let node = NodeProfile::rtx4090(4);
+    let len = 8192;
+    println!("\nFigure 1 — first ~3 layers of each pipeline (30b, 4090-4, 8k prompt):");
+    for strat in Strategy::all() {
+        let e = SimExperiment::new(node.clone(), ModelSpec::mha_30b(), len, strat);
+        let tl = run(&e);
+        let graph = build(&e);
+        let per_layer = tl.makespan_s / ModelSpec::mha_30b().n_layers as f64;
+        println!("\n({strat})  makespan {:.0}ms, {} ops", tl.makespan_s * 1e3, graph.ops.len());
+        print!("{}", gantt(&tl, 110, per_layer * 3.0));
+        println!(
+            "   busy: compute {:.0}ms, comm {:.0}ms, overlapped {:.0}ms",
+            tl.busy_s(OpKind::Compute) * 1e3,
+            tl.busy_s(OpKind::Comm) * 1e3,
+            tl.overlap_s() * 1e3
+        );
+    }
+}

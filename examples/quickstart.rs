@@ -1,0 +1,73 @@
+//! Quickstart: start the ISO engine on the tiny real model, serve a small
+//! batch of requests, print latency/throughput.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use iso::config::{CommQuant, EngineConfig, SplitPolicy, Strategy};
+use iso::coordinator::Engine;
+use iso::workload::{LenDist, TraceGen};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure: 2-way tensor parallelism, ISO overlap, balanced split.
+    let cfg = EngineConfig {
+        strategy: Strategy::Iso,
+        split: SplitPolicy::AttnBalanced,
+        comm_quant: CommQuant::F32,
+        tp: 2,
+        max_chunk: 64,
+        ..Default::default()
+    };
+
+    // 2. Start: compiles the AOT artifacts on each worker, loads weights.
+    println!("starting engine (tp={}, strategy={}) ...", cfg.tp, cfg.strategy);
+    let mut engine = Engine::start(cfg)?;
+    let vocab = engine.manifest.config.vocab;
+
+    // 3. Serve: a mixed batch of prompts, prefill + 4 decode steps each.
+    let mut gen = TraceGen::new(42, vocab, LenDist::Bimodal {
+        short: 48,
+        long: 160,
+        long_frac: 0.3,
+    })
+    .decode_steps(4);
+    let requests = gen.generate(8);
+
+    let t0 = std::time::Instant::now();
+    let mut total_tokens = 0usize;
+    for r in &requests {
+        let out = engine.generate(&r.prompt, r.decode_steps)?;
+        total_tokens += r.prompt.len() + out.tokens.len();
+        println!(
+            "req {:>2}: prompt={:>3} tok  ttft={:>7.1}ms  decoded={:?}",
+            r.id,
+            r.prompt.len(),
+            out.ttft_ms,
+            out.tokens
+        );
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // 4. Report.
+    let report = engine.shutdown()?;
+    let mut m = report.metrics;
+    println!("\n{}", m.report());
+    println!(
+        "throughput: {:.0} tok/s over {} requests ({:.2}s wall)",
+        total_tokens as f64 / wall_s,
+        requests.len(),
+        wall_s
+    );
+    for w in &report.workers {
+        println!(
+            "rank {}: compute={:.0}ms stall={:.0}ms comm={:.0}ms overlap_eff={:.2}",
+            w.rank,
+            w.compute_ms,
+            w.stall_ms,
+            w.comm_ms,
+            w.overlap_efficiency()
+        );
+    }
+    Ok(())
+}

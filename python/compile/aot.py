@@ -1,0 +1,171 @@
+"""AOT lowering: JAX stages → HLO text artifacts + manifest for rust.
+
+Run once at build time (`make artifacts`); python is never on the request
+path. The interchange format is **HLO text**, not a serialized
+HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction ids which
+the `xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs under artifacts/:
+  <stage>_tp<R>_t<T>.hlo.txt   one per (stage, tp-degree, chunk length);
+                               rank-agnostic (weights are runtime inputs)
+  weights_tp<R>/<tensor>.f32   raw little-endian f32 shard dumps
+  golden_tokens.i32 / golden_logits.f32
+                               reference prompt + full-model logits the
+                               rust integration tests assert against
+  manifest.json                index of all of the above + model geometry
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import weights as W
+
+# Chunk lengths compiled for the engine: 1 is the decode step; the rest are
+# prefill chunk sizes ISO picks from when splitting a sequence.
+CHUNK_LENS = (1, 16, 32, 64)
+TP_DEGREES = (1, 2, 4)
+GOLDEN_PROMPT_LEN = 96
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_stage(name, fn, example_args, out_dir, inputs_meta, outputs_meta, **meta):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {"name": name, "file": f"{name}.hlo.txt",
+             "inputs": inputs_meta, "outputs": outputs_meta}
+    entry.update(meta)
+    return entry
+
+
+def build_all(out_dir: str, cfg: M.TinyConfig, use_pallas: bool = True,
+              chunk_lens=CHUNK_LENS, tp_degrees=TP_DEGREES) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    d, hd, S, V = cfg.d_model, cfg.head_dim, cfg.max_seq, cfg.vocab
+    modules = []
+
+    # --- embed & logits (replicated; depend only on t) -----------------
+    for t in chunk_lens:
+        modules.append(lower_stage(
+            f"embed_t{t}", M.make_embed_fn(),
+            (_sds((t,), jnp.int32), _sds((V, d))), out_dir,
+            [_spec((t,), "i32"), _spec((V, d))], [_spec((t, d))],
+            stage="embed", tp=0, t=t))
+        modules.append(lower_stage(
+            f"logits_t{t}", M.make_logits_fn(cfg, use_pallas),
+            (_sds((t, d)), _sds((d,)), _sds((d, V))), out_dir,
+            [_spec((t, d)), _spec((d,)), _spec((d, V))], [_spec((t, V))],
+            stage="logits", tp=0, t=t))
+
+    # --- attention & MLP (per tp degree × chunk length) -----------------
+    for tp in tp_degrees:
+        cfg.validate_tp(tp)
+        hq, hkv, ff = cfg.n_heads // tp, cfg.n_kv_heads // tp, cfg.d_ff // tp
+        for t in chunk_lens:
+            attn_args = (
+                _sds((t, d)), _sds((d,)),
+                _sds((d, hq * hd)), _sds((d, hkv * hd)), _sds((d, hkv * hd)),
+                _sds((hq * hd, d)),
+                _sds((hkv, S, hd)), _sds((hkv, S, hd)),
+                _sds((), jnp.int32),
+            )
+            modules.append(lower_stage(
+                f"attn_tp{tp}_t{t}", M.make_attn_fn(cfg, tp, use_pallas),
+                attn_args, out_dir,
+                [_spec((t, d)), _spec((d,)), _spec((d, hq * hd)),
+                 _spec((d, hkv * hd)), _spec((d, hkv * hd)), _spec((hq * hd, d)),
+                 _spec((hkv, S, hd)), _spec((hkv, S, hd)), _spec((), "i32")],
+                [_spec((t, d)), _spec((hkv, S, hd)), _spec((hkv, S, hd))],
+                stage="attn", tp=tp, t=t))
+            modules.append(lower_stage(
+                f"mlp_tp{tp}_t{t}", M.make_mlp_fn(cfg, use_pallas),
+                (_sds((t, d)), _sds((d,)), _sds((d, ff)), _sds((d, ff)), _sds((ff, d))),
+                out_dir,
+                [_spec((t, d)), _spec((d,)), _spec((d, ff)), _spec((d, ff)),
+                 _spec((ff, d))],
+                [_spec((t, d))],
+                stage="mlp", tp=tp, t=t))
+
+    # --- weights (sharded per tp degree) --------------------------------
+    weights = W.make_weights(cfg)
+    weight_entries = {}
+    for tp in tp_degrees:
+        wdir = os.path.join(out_dir, f"weights_tp{tp}")
+        weight_entries[f"tp{tp}"] = W.export_weights(cfg, weights, tp, wdir)
+
+    # --- golden reference (full model, no TP, no chunking) --------------
+    rng = np.random.default_rng(cfg.seed)
+    tokens = rng.integers(0, V, size=GOLDEN_PROMPT_LEN, dtype=np.int32)
+    logits = np.asarray(
+        M.forward_reference(cfg, weights, jnp.asarray(tokens), use_pallas=False),
+        dtype=np.float32)
+    tokens.tofile(os.path.join(out_dir, "golden_tokens.i32"))
+    logits.tofile(os.path.join(out_dir, "golden_logits.f32"))
+
+    manifest = {
+        "format_version": 1,
+        "paper": "ISO: Overlap of Computation and Communication within Sequence (Xiao & Su, 2024)",
+        "config": {
+            "vocab": V, "d_model": d, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": hd, "d_ff": cfg.d_ff, "max_seq": S,
+            "eps": cfg.eps, "rope_theta": cfg.rope_theta, "seed": cfg.seed,
+        },
+        "chunk_lens": list(chunk_lens),
+        "tp_degrees": list(tp_degrees),
+        "modules": modules,
+        "weights": weight_entries,
+        "golden": {
+            "tokens_file": "golden_tokens.i32",
+            "logits_file": "golden_logits.f32",
+            "prompt_len": GOLDEN_PROMPT_LEN,
+            "logits_shape": [GOLDEN_PROMPT_LEN, V],
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path instead of Pallas kernels")
+    args = ap.parse_args()
+    manifest = build_all(args.out, M.GQA_TINY, use_pallas=not args.no_pallas)
+    n = len(manifest["modules"])
+    print(f"wrote {n} HLO modules + weights + golden to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Layer-1 Pallas kernel: chunked-prefill causal flash attention with GQA.
+
+This is the paper's compute hot spot re-derived for TPU idioms (see
+DESIGN.md §3 Hardware adaptation):
+
+* the GPU flash-attention threadblock/shared-memory tiling becomes a
+  BlockSpec HBM↔VMEM schedule: grid ``(q_head, q_block, kv_block)`` with the
+  innermost kv axis sequential, streaming one ``[block_k, head_dim]`` K/V
+  tile into VMEM at a time;
+* the warp-level online softmax becomes a vectorized online softmax whose
+  running max / denominator / accumulator live in VMEM scratch that
+  persists across the sequential kv axis;
+* tensor-core WMMA becomes MXU matmuls (``jnp.dot`` with
+  ``preferred_element_type=float32``);
+* GQA shares K/V tiles across the query-head group via the BlockSpec index
+  map (``q_head // group``) — no K/V duplication in VMEM.
+
+Chunked prefill: queries are a chunk of ``t`` tokens at absolute positions
+``q_positions`` (``offset .. offset+t-1``); K/V is the max-seq padded cache
+that already contains this chunk's keys/values. The causal mask compares
+absolute positions, which simultaneously enforces causality *and* masks the
+padded tail — exactly the semantics ISO needs for its intra-sequence
+micro-batches (chunk 1 attends over chunk 0's cached KV).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; TPU performance is estimated analytically (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    qpos_ref,  # [block_q] int32 — absolute positions of this q tile
+    q_ref,     # [1, block_q, head_dim]
+    k_ref,     # [1, block_k, head_dim]
+    v_ref,     # [1, block_k, head_dim]
+    o_ref,     # [1, block_q, head_dim]
+    m_scr,     # VMEM [block_q] running max
+    l_scr,     # VMEM [block_q] running denominator
+    acc_scr,   # VMEM [block_q, head_dim] running numerator
+    *,
+    sm_scale: float,
+    block_k: int,
+    kv_blocks: int,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # [bq, d]
+    k = k_ref[0].astype(jnp.float32)          # [bk, d]
+    v = v_ref[0].astype(jnp.float32)          # [bk, d]
+
+    # MXU matmul; scores in f32.
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale                               # [bq, bk]
+
+    q_pos = qpos_ref[...]                      # [bq] int32 absolute positions
+    k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+    mask = k_pos[None, :] <= q_pos[:, None]    # causal over absolute positions
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    # Online softmax update.
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)            # rescale factor for old state
+    p = jnp.exp(scores - m_new[:, None])
+    # Rows where everything is masked so far: m_new == NEG_INF ⇒ p would be
+    # exp(0) = 1 for masked entries; force them to zero.
+    p = jnp.where(mask, p, 0.0)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(j == kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of ``n`` that is ≤ preferred (TPU-native is 128)."""
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sm_scale", "block_q", "block_k", "interpret")
+)
+def flash_attention_chunk(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_positions: jnp.ndarray,
+    sm_scale: float | None = None,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = True,
+):
+    """Chunked-prefill causal attention (see module docstring).
+
+    Shapes: q ``[n_q_heads, t, d]``; k, v ``[n_kv_heads, S, d]``;
+    q_positions ``[t]`` int32. Returns ``[n_q_heads, t, d]`` in q's dtype.
+    """
+    n_q_heads, t, head_dim = q.shape
+    n_kv_heads, S, _ = k.shape
+    if n_q_heads % n_kv_heads != 0:
+        raise ValueError(f"GQA requires n_q_heads % n_kv_heads == 0, got {q.shape=} {k.shape=}")
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (head_dim ** 0.5)
+    bq = block_q or _pick_block(t, 128)
+    bk = block_k or _pick_block(S, 128)
+    if t % bq or S % bk:
+        raise ValueError(f"block sizes must divide dims: {t=} {bq=} {S=} {bk=}")
+    kv_blocks = S // bk
+
+    grid = (n_q_heads, t // bq, kv_blocks)
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=float(sm_scale), block_k=bk, kv_blocks=kv_blocks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq,), lambda h, i, j: (i,)),              # q positions
+            pl.BlockSpec((1, bq, head_dim), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, head_dim), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, bk, head_dim), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, head_dim), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q_heads, t, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, head_dim), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions.astype(jnp.int32), q, k, v)
+
+
+def vmem_bytes(t: int, S: int, head_dim: int, block_q: int | None = None,
+               block_k: int | None = None, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one kernel instance (DESIGN.md §8)."""
+    bq = block_q or _pick_block(t, 128)
+    bk = block_k or _pick_block(S, 128)
+    tiles = (bq + 2 * bk + bq) * head_dim * dtype_bytes      # q, k, v, o
+    scratch = (2 * bq + bq * head_dim) * 4                   # m, l, acc (f32)
+    return tiles + scratch + bq * 4                          # + positions
+
+
+def mxu_utilization_estimate(t: int, S: int, head_dim: int) -> float:
+    """Fraction of MXU-issue slots doing useful work for one (q,kv) tile pair.
+
+    The MXU is a 128×128 systolic array; a [bq,d]×[d,bk] matmul keeps it
+    busy for ceil(bq/128)*ceil(bk/128)*ceil(d/128) passes of which the
+    useful fraction is (bq*bk*d) / (ceil…*128^3).
+    """
+    import math
+
+    bq = _pick_block(t, 128)
+    bk = _pick_block(S, 128)
+    passes = math.ceil(bq / 128) * math.ceil(bk / 128) * math.ceil(head_dim / 128)
+    return (bq * bk * head_dim) / (passes * 128 ** 3)

@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernels: symmetric per-row int8 quantize / dequantize.
+
+These implement the paper's §3.2 "communication dominates" optimization —
+the 4090 wire format converts fp16/fp32 activations to int8 before the
+tensor-parallel all-reduce, halving (vs fp16) or quartering (vs fp32) the
+bytes on the ring. The rust collective (`rust/src/quant.rs`) implements the
+identical algorithm on the wire; these kernels are the in-graph variant and
+the cross-language conformance oracle.
+
+TPU notes: per-row amax is a lane reduction (VPU), the scale broadcast and
+round are elementwise; rows are tiled in VMEM-sized row blocks. Stored
+scales are f32; payload int8 (int8 is also the MXU's high-rate input type,
+which is why the paper quantizes weights/KV to int8 in the first place).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                    # [br, d]
+    amax = jnp.max(jnp.abs(x), axis=-1)                   # [br]
+    scale = amax / 127.0
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(x * inv[:, None]), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+
+
+def _pick_block(n: int, preferred: int = 128) -> int:
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_int8(x: jnp.ndarray, block_rows: int | None = None, interpret: bool = True):
+    """Quantize ``x: [n, d]`` → (q int8 ``[n, d]``, scale f32 ``[n]``)."""
+    n, d = x.shape
+    br = block_rows or _pick_block(n)
+    grid = (n // br,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.int8),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, block_rows: int | None = None,
+                    interpret: bool = True):
+    """Dequantize (q int8 ``[n, d]``, scale ``[n]``) → f32 ``[n, d]``."""
+    n, d = q.shape
+    br = block_rows or _pick_block(n)
+    grid = (n // br,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert the Pallas kernels match these within dtype-appropriate tolerances.
+They are also what the L2 model traces when ``use_pallas=False``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis: x / rms(x) * weight."""
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jnp.reciprocal(jnp.sqrt(var + eps)) * weight.astype(jnp.float32)
+    return out.astype(orig_dtype)
+
+
+def quantize_int8_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-row int8 quantization over the last axis.
+
+    Returns (q, scale) with q int8 in [-127, 127] and scale float32 such
+    that ``x ≈ q * scale`` row-wise. Zero rows get scale 0 (and q == 0),
+    matching the rust `quant::quantize_rows` implementation bit-for-bit in
+    round-to-nearest-even.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = amax / 127.0
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(xf * inv), -127.0, 127.0).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def dequantize_int8_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8_ref` (lossy)."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def attention_chunk_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_positions: jnp.ndarray,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    """Chunked-prefill causal attention over a (padded) KV cache.
+
+    Args:
+      q: ``[n_q_heads, t, head_dim]`` — queries for the current chunk.
+      k, v: ``[n_kv_heads, S, head_dim]`` — the full (max-seq padded) cache,
+        already containing this chunk's keys/values at their absolute
+        positions. ``n_q_heads % n_kv_heads == 0`` (GQA; MHA when equal).
+      q_positions: ``[t]`` int32 absolute positions of the chunk's queries.
+      sm_scale: softmax scale; defaults to ``1/sqrt(head_dim)``.
+
+    The causal mask compares *absolute* positions: key position ``j`` is
+    visible to query position ``p`` iff ``j <= p``. Padding beyond the
+    valid prefix is masked out automatically because every padded position
+    exceeds the largest query position.
+    """
+    n_q_heads, t, head_dim = q.shape
+    n_kv_heads, S, _ = k.shape
+    assert n_q_heads % n_kv_heads == 0
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (head_dim ** 0.5)
+
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    mask = k_pos[None, :] <= q_positions.astype(jnp.int32)[:, None]  # [t, S]
+
+    kq = jnp.repeat(k, group, axis=0)  # [n_q_heads, S, d]
+    vq = jnp.repeat(v, group, axis=0)
+    scores = jnp.einsum(
+        "htd,hsd->hts",
+        q.astype(jnp.float32),
+        kq.astype(jnp.float32),
+    ) * sm_scale
+    scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("hts,hsd->htd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def swiglu_ref(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+    """LLaMA-style SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    h = (g * jnp.reciprocal(1.0 + jnp.exp(-g))) * u
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_ref(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary position embedding (half-split convention).
+
+    x: ``[n_heads, t, head_dim]``; positions: ``[t]`` absolute positions.
+    """
+    n_heads, t, head_dim = x.shape
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [t, half]
+    cos = jnp.cos(angles)[None, :, :]
+    sin = jnp.sin(angles)[None, :, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,258 @@
+"""Layer-2: the JAX model — a LLaMA-style GQA transformer, TP-sharded.
+
+The model is expressed as *per-rank stage functions* that exactly mirror
+Megatron-style tensor parallelism as the paper describes it (§2.1): each
+transformer layer is
+
+    x ─ rmsnorm ─ qkv(shard) ─ rope ─ attention(shard) ─ o_proj(shard) ─▶ partial
+        partial ──[ALL-REDUCE (rust collective)]──▶ + residual
+    x ─ rmsnorm ─ gate/up(shard) ─ swiglu ─ down(shard) ─▶ partial
+        partial ──[ALL-REDUCE (rust collective)]──▶ + residual
+
+The all-reduces and residual adds happen in the rust coordinator — that is
+the communication the paper overlaps, so it must live on the rust side
+where ISO schedules it. Consequently every stage below computes a *partial*
+(pre-all-reduce) result, and the same HLO serves every rank: weights are
+runtime inputs, so one artifact per (stage, tp, chunk_len) covers all ranks.
+
+Chunked prefill (and therefore ISO's intra-sequence micro-batches) is
+first-class: `attn_chunk_stage` takes the KV cache plus a dynamic sequence
+offset, scatters this chunk's K/V into the cache, and attends causally over
+absolute positions via the L1 Pallas flash-attention kernel.
+
+Python never runs at serving time; `aot.py` lowers these functions to HLO
+text once (`make artifacts`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attention import flash_attention_chunk
+from .kernels.rmsnorm import rmsnorm
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    """Geometry of the tiny-but-real model used for end-to-end validation.
+
+    GQA (n_kv_heads < n_heads) like the paper's 70B config; set
+    n_kv_heads == n_heads for the 30B-style MHA variant.
+    """
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    head_dim: int = 16
+    d_ff: int = 512
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    eps: float = 1e-5
+    seed: int = 20240817  # arXiv date of the ISO paper
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def validate_tp(self, tp: int) -> None:
+        if self.n_heads % tp or self.n_kv_heads % tp or self.d_ff % tp:
+            raise ValueError(f"tp={tp} does not divide heads/kv_heads/d_ff of {self}")
+
+
+MHA_TINY = TinyConfig(n_kv_heads=8)      # MHA variant (paper's 30B analogue)
+GQA_TINY = TinyConfig()                  # GQA variant (paper's 70B analogue)
+
+
+# ---------------------------------------------------------------------------
+# Stage functions (per TP rank; weights are runtime inputs)
+# ---------------------------------------------------------------------------
+
+def embed_stage(tokens: jnp.ndarray, emb: jnp.ndarray) -> jnp.ndarray:
+    """tokens [t] int32, emb [vocab, d] → x [t, d] f32 (replicated)."""
+    return emb[tokens]
+
+
+def attn_chunk_stage(
+    cfg: TinyConfig,
+    tp: int,
+    x: jnp.ndarray,        # [t, d] current hidden states (replicated)
+    ln_w: jnp.ndarray,     # [d]
+    wq: jnp.ndarray,       # [d, q_dim/tp]
+    wk: jnp.ndarray,       # [d, kv_dim/tp]
+    wv: jnp.ndarray,       # [d, kv_dim/tp]
+    wo: jnp.ndarray,       # [q_dim/tp, d]
+    k_cache: jnp.ndarray,  # [n_kv_heads/tp, S, head_dim]
+    v_cache: jnp.ndarray,  # [n_kv_heads/tp, S, head_dim]
+    offset: jnp.ndarray,   # scalar int32 — absolute position of x[0]
+    use_pallas: bool = True,
+):
+    """One rank's attention for one sequence chunk → (partial, k', v').
+
+    `partial` is the pre-all-reduce o_proj output; the rust coordinator
+    all-reduces it across ranks and adds the residual.
+    """
+    t = x.shape[0]
+    hq = cfg.n_heads // tp
+    hkv = cfg.n_kv_heads // tp
+    hd = cfg.head_dim
+    positions = offset + jnp.arange(t, dtype=jnp.int32)
+
+    h = rmsnorm(x, ln_w, eps=cfg.eps) if use_pallas else kref.rmsnorm_ref(x, ln_w, cfg.eps)
+    q = (h @ wq).reshape(t, hq, hd).transpose(1, 0, 2)    # [hq, t, hd]
+    k = (h @ wk).reshape(t, hkv, hd).transpose(1, 0, 2)   # [hkv, t, hd]
+    v = (h @ wv).reshape(t, hkv, hd).transpose(1, 0, 2)
+
+    q = kref.rope_ref(q, positions, cfg.rope_theta)
+    k = kref.rope_ref(k, positions, cfg.rope_theta)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, offset, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, offset, 0))
+
+    if use_pallas:
+        attn = flash_attention_chunk(q, k_cache, v_cache, positions)
+    else:
+        attn = kref.attention_chunk_ref(q, k_cache, v_cache, positions)
+    partial = attn.transpose(1, 0, 2).reshape(t, hq * hd) @ wo   # [t, d]
+    return partial, k_cache, v_cache
+
+
+def mlp_chunk_stage(
+    cfg: TinyConfig,
+    x: jnp.ndarray,       # [t, d] hidden states after attention all-reduce
+    ln_w: jnp.ndarray,    # [d]
+    w_gate: jnp.ndarray,  # [d, ff/tp]
+    w_up: jnp.ndarray,    # [d, ff/tp]
+    w_down: jnp.ndarray,  # [ff/tp, d]
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """One rank's MLP for one chunk → partial [t, d] (pre-all-reduce)."""
+    h = rmsnorm(x, ln_w, eps=cfg.eps) if use_pallas else kref.rmsnorm_ref(x, ln_w, cfg.eps)
+    return kref.swiglu_ref(h, w_gate, w_up, w_down)
+
+
+def logits_stage(cfg: TinyConfig, x: jnp.ndarray, ln_w: jnp.ndarray,
+                 head: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    """Final norm + LM head (replicated): x [t, d] → logits [t, vocab]."""
+    h = rmsnorm(x, ln_w, eps=cfg.eps) if use_pallas else kref.rmsnorm_ref(x, ln_w, cfg.eps)
+    return h @ head
+
+
+# ---------------------------------------------------------------------------
+# Full-model reference (no TP, no chunking) — the numerics oracle
+# ---------------------------------------------------------------------------
+
+def forward_reference(cfg: TinyConfig, weights: dict, tokens: jnp.ndarray,
+                      use_pallas: bool = False) -> jnp.ndarray:
+    """Whole-model single-chunk forward; ground truth for every split.
+
+    Used by pytest to prove (a) TP partial sums == full model and
+    (b) chunked prefill == one-shot prefill, and to emit the golden logits
+    the rust integration tests assert against.
+    """
+    t = int(tokens.shape[0])
+    x = embed_stage(tokens, weights["emb"])
+    offset = jnp.int32(0)
+    for layer in range(cfg.n_layers):
+        w = weights[f"layer{layer}"]
+        k_cache = jnp.zeros((cfg.n_kv_heads, cfg.max_seq, cfg.head_dim), jnp.float32)
+        v_cache = jnp.zeros_like(k_cache)
+        partial, _, _ = attn_chunk_stage(
+            cfg, 1, x, w["ln1"], w["wq"], w["wk"], w["wv"], w["wo"],
+            k_cache, v_cache, offset, use_pallas=use_pallas,
+        )
+        x = x + partial
+        x = x + mlp_chunk_stage(cfg, x, w["ln2"], w["w_gate"], w["w_up"],
+                                w["w_down"], use_pallas=use_pallas)
+    return logits_stage(cfg, x, weights["ln_f"], weights["head"],
+                        use_pallas=use_pallas)
+
+
+def forward_tp_chunked(cfg: TinyConfig, weights: dict, tokens: jnp.ndarray,
+                       tp: int, chunk_len: int, use_pallas: bool = True) -> jnp.ndarray:
+    """Python emulation of exactly what the rust coordinator executes:
+    TP-sharded stages + explicit all-reduce (sum over ranks) + residual,
+    chunked prefill with a persistent KV cache per (rank, layer).
+
+    This is the conformance model for the rust engine: same stage
+    boundaries, same reduction order, same cache handling.
+    """
+    from .weights import shard_layer  # local import to avoid cycle
+
+    cfg.validate_tp(tp)
+    t_total = int(tokens.shape[0])
+    assert t_total % chunk_len == 0
+    caches = {
+        (r, l): (
+            jnp.zeros((cfg.n_kv_heads // tp, cfg.max_seq, cfg.head_dim), jnp.float32),
+            jnp.zeros((cfg.n_kv_heads // tp, cfg.max_seq, cfg.head_dim), jnp.float32),
+        )
+        for r in range(tp) for l in range(cfg.n_layers)
+    }
+    all_logits = []
+    for c in range(t_total // chunk_len):
+        offset = jnp.int32(c * chunk_len)
+        chunk = tokens[c * chunk_len:(c + 1) * chunk_len]
+        x = embed_stage(chunk, weights["emb"])
+        for layer in range(cfg.n_layers):
+            partials = []
+            for r in range(tp):
+                sw = shard_layer(cfg, weights[f"layer{layer}"], tp, r)
+                kc, vc = caches[(r, layer)]
+                p, kc, vc = attn_chunk_stage(
+                    cfg, tp, x, sw["ln1"], sw["wq"], sw["wk"], sw["wv"], sw["wo"],
+                    kc, vc, offset, use_pallas=use_pallas)
+                caches[(r, layer)] = (kc, vc)
+                partials.append(p)
+            x = x + sum(partials)                       # all-reduce + residual
+            partials = []
+            for r in range(tp):
+                sw = shard_layer(cfg, weights[f"layer{layer}"], tp, r)
+                partials.append(mlp_chunk_stage(
+                    cfg, x, sw["ln2"], sw["w_gate"], sw["w_up"], sw["w_down"],
+                    use_pallas=use_pallas))
+            x = x + sum(partials)                       # all-reduce + residual
+        all_logits.append(logits_stage(cfg, x, weights["ln_f"], weights["head"],
+                                       use_pallas=use_pallas))
+    return jnp.concatenate(all_logits, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Lowering entry points (consumed by aot.py)
+# ---------------------------------------------------------------------------
+
+def make_attn_fn(cfg: TinyConfig, tp: int, use_pallas: bool = True):
+    """Bind static config → a jit-able attention stage with pure array args."""
+    def fn(x, ln_w, wq, wk, wv, wo, k_cache, v_cache, offset):
+        return attn_chunk_stage(cfg, tp, x, ln_w, wq, wk, wv, wo,
+                                k_cache, v_cache, offset, use_pallas=use_pallas)
+    return fn
+
+
+def make_mlp_fn(cfg: TinyConfig, use_pallas: bool = True):
+    def fn(x, ln_w, w_gate, w_up, w_down):
+        return (mlp_chunk_stage(cfg, x, ln_w, w_gate, w_up, w_down,
+                                use_pallas=use_pallas),)
+    return fn
+
+
+def make_embed_fn():
+    def fn(tokens, emb):
+        return (embed_stage(tokens, emb),)
+    return fn
+
+
+def make_logits_fn(cfg: TinyConfig, use_pallas: bool = True):
+    def fn(x, ln_w, head):
+        return (logits_stage(cfg, x, ln_w, head, use_pallas=use_pallas),)
+    return fn

@@ -1,0 +1,87 @@
+"""L1/L2 performance report (DESIGN.md §8).
+
+interpret=True wallclock is NOT a TPU proxy, so the L1 numbers here are
+*structural*: VMEM footprint of the flash-attention BlockSpec schedule and
+MXU-utilization estimates per configuration, plus an HLO op census of the
+lowered stages (catches XLA fusion regressions at L2).
+
+Usage: cd python && python -m compile.perf_report
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+
+from .kernels.flash_attention import mxu_utilization_estimate, vmem_bytes, _pick_block
+from . import aot
+from . import model as M
+
+
+def l1_report() -> None:
+    print("=== L1: flash-attention kernel structure ===")
+    print(f"{'t':>6} {'S':>7} {'d':>5} {'bq':>5} {'bk':>5} {'VMEM':>10} {'MXU util':>9}")
+    for (t, S, d) in [
+        (64, 256, 16),        # tiny engine config
+        (128, 1024, 128),     # TPU-native tiles
+        (512, 8192, 128),     # paper-ish 8k context chunk
+        (2048, 65536, 128),   # long-context chunk
+    ]:
+        bq, bk = _pick_block(t, 128), _pick_block(S, 128)
+        vm = vmem_bytes(t, S, d)
+        util = mxu_utilization_estimate(t, S, d)
+        ok = "" if vm < 16 << 20 else "  !! exceeds 16MiB VMEM"
+        print(f"{t:>6} {S:>7} {d:>5} {bq:>5} {bk:>5} {vm/1024:>8.1f}KiB {util:>9.2f}{ok}")
+
+
+def l2_report() -> None:
+    print("\n=== L2: lowered-stage HLO census (fusion check) ===")
+    cfg = M.TinyConfig(n_layers=2)
+    for name, fn, args in [
+        ("attn_tp2_t64", M.make_attn_fn(cfg, 2), None),
+        ("mlp_tp2_t64", M.make_mlp_fn(cfg), None),
+    ]:
+        if name.startswith("attn"):
+            hq, hkv = cfg.n_heads // 2, cfg.n_kv_heads // 2
+            import jax.numpy as jnp
+            sds = jax.ShapeDtypeStruct
+            args = (
+                sds((64, cfg.d_model), jnp.float32),
+                sds((cfg.d_model,), jnp.float32),
+                sds((cfg.d_model, hq * cfg.head_dim), jnp.float32),
+                sds((cfg.d_model, hkv * cfg.head_dim), jnp.float32),
+                sds((cfg.d_model, hkv * cfg.head_dim), jnp.float32),
+                sds((hq * cfg.head_dim, cfg.d_model), jnp.float32),
+                sds((hkv, cfg.max_seq, cfg.head_dim), jnp.float32),
+                sds((hkv, cfg.max_seq, cfg.head_dim), jnp.float32),
+                sds((), jnp.int32),
+            )
+        else:
+            import jax.numpy as jnp
+            sds = jax.ShapeDtypeStruct
+            ff = cfg.d_ff // 2
+            args = (
+                sds((64, cfg.d_model), jnp.float32),
+                sds((cfg.d_model,), jnp.float32),
+                sds((cfg.d_model, ff), jnp.float32),
+                sds((cfg.d_model, ff), jnp.float32),
+                sds((ff, cfg.d_model), jnp.float32),
+            )
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        count = lambda op: len(re.findall(rf"\s{op}\(", text))
+        dots = count("dot")
+        fusions = count("fusion")
+        allreduce = count("all-reduce")
+        loops = count("while")
+        total = len(re.findall(r"^\s+%?\S+ = ", text, re.M))
+        print(f"{name}: {total} instructions — dot={dots} fusion={fusions} "
+              f"while={loops} all-reduce={allreduce}")
+        assert allreduce == 0, "collectives must live in the rust coordinator"
+        assert dots >= 3, f"{name}: expected the stage GEMMs to lower to dots"
+    print("(no all-reduce in any stage: communication is the rust coordinator's job)")
+
+
+if __name__ == "__main__":
+    l1_report()
+    l2_report()

@@ -1,0 +1,100 @@
+"""Deterministic tiny-model weights + Megatron-style TP sharding.
+
+The paper's checkpoints are proprietary; per DESIGN.md §2 we substitute a
+deterministic synthetic model: weights are drawn from a fixed PRNG seed so
+python tests, the AOT artifacts, and the rust engine all agree bit-for-bit
+on what the model is. `export_weights` dumps every *sharded* tensor as raw
+little-endian f32 (plus a manifest entry) for the rust runtime to mmap.
+
+Sharding follows Megatron-LM exactly (the paper's §2.1 TP layout):
+  column-parallel: wq, wk, wv (split output dim, by head), w_gate, w_up;
+  row-parallel:    wo, w_down (split input dim) → partial sums that the
+                   rust collective all-reduces.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import TinyConfig
+
+
+def _init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def make_weights(cfg: TinyConfig) -> dict:
+    """Full (unsharded) weights, deterministic in cfg.seed."""
+    key = jax.random.PRNGKey(cfg.seed)
+    n_keys = 2 + cfg.n_layers * 9 + 2
+    keys = iter(jax.random.split(key, n_keys))
+    w = {
+        "emb": _init(next(keys), (cfg.vocab, cfg.d_model), scale=0.02),
+        "head": _init(next(keys), (cfg.d_model, cfg.vocab)),
+    }
+    for layer in range(cfg.n_layers):
+        w[f"layer{layer}"] = {
+            "ln1": 1.0 + 0.01 * _init(next(keys), (cfg.d_model,), scale=1.0),
+            "wq": _init(next(keys), (cfg.d_model, cfg.q_dim)),
+            "wk": _init(next(keys), (cfg.d_model, cfg.kv_dim)),
+            "wv": _init(next(keys), (cfg.d_model, cfg.kv_dim)),
+            "wo": _init(next(keys), (cfg.q_dim, cfg.d_model)),
+            "ln2": 1.0 + 0.01 * _init(next(keys), (cfg.d_model,), scale=1.0),
+            "w_gate": _init(next(keys), (cfg.d_model, cfg.d_ff)),
+            "w_up": _init(next(keys), (cfg.d_model, cfg.d_ff)),
+            "w_down": _init(next(keys), (cfg.d_ff, cfg.d_model)),
+        }
+    w["ln_f"] = 1.0 + 0.01 * _init(next(keys), (cfg.d_model,), scale=1.0)
+    return w
+
+
+def shard_layer(cfg: TinyConfig, lw: dict, tp: int, rank: int) -> dict:
+    """Megatron TP shard of one layer's weights for `rank` of `tp`."""
+    cfg.validate_tp(tp)
+    hq, hkv, ff = cfg.n_heads // tp, cfg.n_kv_heads // tp, cfg.d_ff // tp
+    hd = cfg.head_dim
+
+    def col_heads(wm, heads_per_rank):  # [d, H*hd] → rank's [d, hpr*hd]
+        return wm[:, rank * heads_per_rank * hd:(rank + 1) * heads_per_rank * hd]
+
+    return {
+        "ln1": lw["ln1"],
+        "wq": col_heads(lw["wq"], hq),
+        "wk": col_heads(lw["wk"], hkv),
+        "wv": col_heads(lw["wv"], hkv),
+        "wo": lw["wo"][rank * hq * hd:(rank + 1) * hq * hd, :],
+        "ln2": lw["ln2"],
+        "w_gate": lw["w_gate"][:, rank * ff:(rank + 1) * ff],
+        "w_up": lw["w_up"][:, rank * ff:(rank + 1) * ff],
+        "w_down": lw["w_down"][rank * ff:(rank + 1) * ff, :],
+    }
+
+
+def export_weights(cfg: TinyConfig, weights: dict, tp: int, out_dir: str) -> list[dict]:
+    """Dump per-rank sharded tensors as raw LE f32; return manifest entries."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries: list[dict] = []
+
+    def dump(name: str, arr) -> None:
+        a = np.asarray(arr, dtype=np.float32)
+        path = os.path.join(out_dir, f"{name}.f32")
+        a.tofile(path)
+        entries.append({"name": name, "shape": list(a.shape),
+                        "dtype": "f32", "file": f"{os.path.basename(out_dir)}/{name}.f32"})
+
+    dump("emb", weights["emb"])
+    dump("head", weights["head"])
+    dump("ln_f", weights["ln_f"])
+    for layer in range(cfg.n_layers):
+        for r in range(tp):
+            sw = shard_layer(cfg, weights[f"layer{layer}"], tp, r)
+            for tname, arr in sw.items():
+                dump(f"layer{layer}.rank{r}.{tname}", arr)
+    return entries

@@ -1,0 +1,166 @@
+"""L2 correctness: stage functions, TP sharding, chunked-prefill invariants.
+
+The two theorems the whole system rests on (paper §3.1):
+  1. TP partial sums == full model (Megatron sharding is exact);
+  2. chunked prefill over a persistent KV cache == one-shot prefill —
+     therefore ISO's intra-sequence split is *numerically free*.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import weights as W
+
+CFG = M.TinyConfig(n_layers=2)  # 2 layers keep the test fast; geometry identical
+FULL = M.GQA_TINY
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return W.make_weights(CFG)
+
+
+def tokens(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=n, dtype=np.int32))
+
+
+class TestShapes:
+    def test_embed(self, weights):
+        x = M.embed_stage(tokens(8), weights["emb"])
+        assert x.shape == (8, CFG.d_model)
+
+    @pytest.mark.parametrize("tp", [1, 2, 4])
+    def test_attn_stage_shapes(self, weights, tp):
+        sw = W.shard_layer(CFG, weights["layer0"], tp, 0)
+        x = M.embed_stage(tokens(16), weights["emb"])
+        kc = jnp.zeros((CFG.n_kv_heads // tp, CFG.max_seq, CFG.head_dim), jnp.float32)
+        p, k2, v2 = M.attn_chunk_stage(
+            CFG, tp, x, sw["ln1"], sw["wq"], sw["wk"], sw["wv"], sw["wo"],
+            kc, kc, jnp.int32(0))
+        assert p.shape == (16, CFG.d_model)
+        assert k2.shape == kc.shape and v2.shape == kc.shape
+
+    @pytest.mark.parametrize("tp", [1, 2, 4])
+    def test_mlp_stage_shapes(self, weights, tp):
+        sw = W.shard_layer(CFG, weights["layer0"], tp, 0)
+        x = M.embed_stage(tokens(16), weights["emb"])
+        p = M.mlp_chunk_stage(CFG, x, sw["ln2"], sw["w_gate"], sw["w_up"], sw["w_down"])
+        assert p.shape == (16, CFG.d_model)
+
+    def test_logits(self, weights):
+        x = M.embed_stage(tokens(4), weights["emb"])
+        lg = M.logits_stage(CFG, x, weights["ln_f"], weights["head"])
+        assert lg.shape == (4, CFG.vocab)
+
+
+class TestTpExactness:
+    """Sum over rank partials must equal the unsharded computation."""
+
+    @pytest.mark.parametrize("tp", [2, 4])
+    def test_attn_partials_sum_to_full(self, weights, tp):
+        toks = tokens(16, seed=1)
+        x = M.embed_stage(toks, weights["emb"])
+        lw = weights["layer0"]
+        S = CFG.max_seq
+
+        kc_full = jnp.zeros((CFG.n_kv_heads, S, CFG.head_dim), jnp.float32)
+        full, _, _ = M.attn_chunk_stage(
+            CFG, 1, x, lw["ln1"], lw["wq"], lw["wk"], lw["wv"], lw["wo"],
+            kc_full, kc_full, jnp.int32(0), use_pallas=False)
+
+        acc = jnp.zeros_like(full)
+        for r in range(tp):
+            sw = W.shard_layer(CFG, lw, tp, r)
+            kc = jnp.zeros((CFG.n_kv_heads // tp, S, CFG.head_dim), jnp.float32)
+            p, _, _ = M.attn_chunk_stage(
+                CFG, tp, x, sw["ln1"], sw["wq"], sw["wk"], sw["wv"], sw["wo"],
+                kc, kc, jnp.int32(0), use_pallas=False)
+            acc = acc + p
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("tp", [2, 4])
+    def test_mlp_partials_sum_to_full(self, weights, tp):
+        x = M.embed_stage(tokens(16, seed=2), weights["emb"])
+        lw = weights["layer0"]
+        full = M.mlp_chunk_stage(CFG, x, lw["ln2"], lw["w_gate"], lw["w_up"],
+                                 lw["w_down"], use_pallas=False)
+        acc = jnp.zeros_like(full)
+        for r in range(tp):
+            sw = W.shard_layer(CFG, lw, tp, r)
+            acc = acc + M.mlp_chunk_stage(CFG, x, sw["ln2"], sw["w_gate"],
+                                          sw["w_up"], sw["w_down"], use_pallas=False)
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestChunkedPrefill:
+    """ISO's enabling invariant: chunked == one-shot (paper §3.1)."""
+
+    @pytest.mark.parametrize("tp,chunk", [(1, 16), (1, 32), (2, 16), (2, 32), (4, 16)])
+    def test_chunked_tp_equals_reference(self, weights, tp, chunk):
+        toks = tokens(64, seed=3)
+        ref_logits = M.forward_reference(CFG, weights, toks, use_pallas=False)
+        got = M.forward_tp_chunked(CFG, weights, toks, tp=tp, chunk_len=chunk,
+                                   use_pallas=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref_logits),
+                                   rtol=5e-4, atol=5e-4)
+
+    def test_pallas_path_matches_ref_path(self, weights):
+        toks = tokens(32, seed=4)
+        a = M.forward_tp_chunked(CFG, weights, toks, tp=2, chunk_len=16,
+                                 use_pallas=True)
+        b = M.forward_tp_chunked(CFG, weights, toks, tp=2, chunk_len=16,
+                                 use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-4)
+
+    def test_uneven_iso_split_equals_even(self, weights):
+        """Paper §6: a 60/40 split must be as exact as 50/50 — the split
+        point is a pure scheduling knob, never a numerics knob."""
+        toks = tokens(64, seed=5)
+        even = M.forward_tp_chunked(CFG, weights, toks, tp=2, chunk_len=32,
+                                    use_pallas=False)
+        uneven = M.forward_tp_chunked(CFG, weights, toks, tp=2, chunk_len=16,
+                                      use_pallas=False)  # 4 chunks of 16
+        np.testing.assert_allclose(np.asarray(even), np.asarray(uneven),
+                                   rtol=5e-4, atol=5e-4)
+
+
+class TestWeights:
+    def test_deterministic(self):
+        a = W.make_weights(CFG)
+        b = W.make_weights(CFG)
+        np.testing.assert_array_equal(np.asarray(a["emb"]), np.asarray(b["emb"]))
+        np.testing.assert_array_equal(np.asarray(a["layer0"]["wq"]),
+                                      np.asarray(b["layer0"]["wq"]))
+
+    def test_shards_partition_columns(self, weights):
+        lw = weights["layer0"]
+        parts = [W.shard_layer(CFG, lw, 2, r)["wq"] for r in range(2)]
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(parts, axis=1)), np.asarray(lw["wq"]))
+
+    def test_shards_partition_rows(self, weights):
+        lw = weights["layer0"]
+        parts = [W.shard_layer(CFG, lw, 4, r)["w_down"] for r in range(4)]
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(parts, axis=0)), np.asarray(lw["w_down"]))
+
+    def test_invalid_tp_rejected(self):
+        with pytest.raises(ValueError):
+            CFG.validate_tp(3)
+
+    def test_export_manifest_entries(self, weights, tmp_path):
+        entries = W.export_weights(CFG, weights, 2, str(tmp_path / "w"))
+        names = {e["name"] for e in entries}
+        assert "emb" in names and "layer0.rank0.wq" in names
+        assert "layer1.rank1.w_down" in names
+        # file sizes match shapes
+        for e in entries:
+            sz = (tmp_path / "w" / (e["name"] + ".f32")).stat().st_size
+            want = 4 * int(np.prod(e["shape"]))
+            assert sz == want

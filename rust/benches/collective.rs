@@ -1,0 +1,49 @@
+//! BENCH — ring all-reduce microbenchmark: payload sweep × rank count ×
+//! wire format. The collective is ISO's overlapped resource; its cost
+//! model (bytes moved, quantization overhead) feeds the simulator
+//! calibration.
+
+use iso::collective::run_on_ring;
+use iso::config::CommQuant;
+use iso::util::bench::{bench, section};
+
+fn main() {
+    for n in [2usize, 4] {
+        section(&format!("ring all-reduce, {n} ranks"));
+        for (rows, cols) in [(64usize, 128usize), (192, 128), (512, 512)] {
+            let elems = rows * cols;
+            let mb = (elems * 4) as f64 / (1 << 20) as f64;
+            for quant in [CommQuant::F32, CommQuant::Int8] {
+                let label = format!(
+                    "{n}r {rows}x{cols} ({mb:.1}MiB) {}",
+                    if quant == CommQuant::Int8 { "int8" } else { "f32" }
+                );
+                let data: Vec<f32> = (0..elems).map(|i| (i % 97) as f32 * 0.01).collect();
+                let r = bench(&label, 2, 10, || {
+                    let d = &data;
+                    run_on_ring(n, move |_, h| {
+                        let mut x = d.clone();
+                        h.allreduce(&mut x, rows, cols, quant);
+                    });
+                });
+                // effective algorithm bandwidth (per rank payload / time)
+                let algbw = mb / (r.mean_ms / 1e3) / 1024.0; // GiB/s
+                println!("    algbw {algbw:.2} GiB/s");
+            }
+        }
+    }
+
+    section("quantize/dequantize kernel (wire codec)");
+    let data: Vec<f32> = (0..192 * 128).map(|i| ((i * 7) % 255) as f32 * 0.01 - 1.0).collect();
+    bench("quantize_rows 192x128", 5, 50, || {
+        std::hint::black_box(iso::quant::quantize_rows(&data, 192, 128));
+    });
+    let q = iso::quant::quantize_rows(&data, 192, 128);
+    bench("dequantize_rows 192x128", 5, 50, || {
+        std::hint::black_box(iso::quant::dequantize_rows(&q));
+    });
+    let mut acc = vec![0.0f32; 192 * 128];
+    bench("dequantize_add 192x128", 5, 50, || {
+        iso::quant::dequantize_add(&q, &mut acc);
+    });
+}

@@ -1,0 +1,67 @@
+//! BENCH — the real engine end-to-end: serial vs ISO TTFT on the tiny
+//! model executed through PJRT + ring collectives, plus decode latency.
+//! This is the L3 hot-path benchmark the §Perf pass optimizes.
+//!
+//! Requires `make artifacts`.
+
+use iso::config::{CommQuant, EngineConfig, SplitPolicy, Strategy};
+use iso::coordinator::Engine;
+use iso::runtime::Manifest;
+use iso::util::bench::{bench, section};
+
+fn cfg(strategy: Strategy, tp: usize, quant: CommQuant, link_mbps: Option<f64>) -> EngineConfig {
+    EngineConfig {
+        strategy,
+        split: SplitPolicy::Even,
+        comm_quant: quant,
+        tp,
+        max_chunk: 64,
+        link_mbps,
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    if Manifest::load("artifacts").is_err() {
+        eprintln!("SKIP e2e_engine bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let prompt: Vec<i32> = (0..128).map(|i| ((i * 31) % 512) as i32).collect();
+
+    for tp in [2usize, 4] {
+        section(&format!("prefill TTFT, tp={tp} (128-token prompt)"));
+        let mut results = Vec::new();
+        for (name, strat, quant, link) in [
+            ("serial/f32 native", Strategy::Serial, CommQuant::F32, None),
+            ("iso/f32 native", Strategy::Iso, CommQuant::F32, None),
+            ("serial/f32 pcie-emu", Strategy::Serial, CommQuant::F32, Some(40.0)),
+            ("iso/f32 pcie-emu", Strategy::Iso, CommQuant::F32, Some(40.0)),
+            ("iso/int8 pcie-emu", Strategy::Iso, CommQuant::Int8, Some(40.0)),
+        ] {
+            let mut engine = Engine::start(cfg(strat, tp, quant, link))?;
+            engine.prefill(&prompt)?; // warmup
+            let r = bench(&format!("tp{tp} {name}"), 1, 8, || {
+                engine.prefill(&prompt).unwrap();
+            });
+            let report = engine.shutdown()?;
+            let eff = report.workers.iter().map(|w| w.overlap_efficiency()).sum::<f64>()
+                / report.workers.len() as f64;
+            println!("    overlap efficiency {eff:.2}");
+            results.push((name, r.mean_ms));
+        }
+        let native = (results[0].1 - results[1].1) / results[0].1;
+        let pcie = (results[2].1 - results[3].1) / results[2].1;
+        println!("  → ISO reduction: native {:.1}%, pcie-emulated {:.1}%", native * 100.0, pcie * 100.0);
+    }
+
+    section("decode step latency (t=1 chunks, blocking — overlap unprofitable per paper)");
+    let mut engine = Engine::start(cfg(Strategy::Iso, 2, CommQuant::F32, None))?;
+    let short: Vec<i32> = (0..32).map(|i| i as i32).collect();
+    engine.generate(&short, 2)?; // warmup
+    bench("tp2 decode 8 steps", 1, 5, || {
+        engine.generate(&short, 8).unwrap();
+    });
+    engine.shutdown()?;
+
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! BENCH — Figure 1: the four pipeline schematics ((a) serial, (b) gemm
+//! overlap, (c) request overlap, (d) ISO) regenerated as simulator
+//! timelines + ASCII Gantt charts, with busy/overlap accounting.
+
+use iso::config::{SimExperiment, Strategy};
+use iso::hw::NodeProfile;
+use iso::model::ModelSpec;
+use iso::report::{gantt, timeline_json};
+use iso::sched::run;
+use iso::sim::OpKind;
+use iso::util::bench::{bench, section};
+
+fn main() {
+    let node = NodeProfile::rtx4090(4);
+    let model = ModelSpec::mha_30b();
+    let len = 8192;
+
+    std::fs::create_dir_all("target/bench-out").ok();
+    for strat in Strategy::all() {
+        let e = SimExperiment::new(node.clone(), model.clone(), len, strat);
+        let tl = run(&e);
+        section(&format!("Figure 1 ({strat}) — 30b, 4090-4, 8k prompt"));
+        let per_layer = tl.makespan_s / model.n_layers as f64;
+        print!("{}", gantt(&tl, 110, per_layer * 3.0));
+        let compute = tl.busy_s(OpKind::Compute);
+        let comm = tl.busy_s(OpKind::Comm);
+        println!(
+            "makespan {:>7.1}ms | compute busy {:>7.1}ms | comm busy {:>7.1}ms | overlapped {:>7.1}ms ({:.0}% of comm)",
+            tl.makespan_s * 1e3,
+            compute * 1e3,
+            comm * 1e3,
+            tl.overlap_s() * 1e3,
+            tl.overlap_s() / comm * 100.0
+        );
+        std::fs::write(
+            format!("target/bench-out/fig1_{strat}.json"),
+            timeline_json(&tl).to_string(),
+        )
+        .ok();
+    }
+
+    section("figure ordering (paper: ISO (d) is the shortest pipeline)");
+    let mut spans: Vec<(Strategy, f64)> = Strategy::all()
+        .into_iter()
+        .map(|s| {
+            let e = SimExperiment::new(node.clone(), model.clone(), len, s);
+            // request-overlap runs two requests; normalize per request
+            let norm = if s == Strategy::RequestOverlap { 2.0 } else { 1.0 };
+            (s, run(&e).makespan_s / norm)
+        })
+        .collect();
+    spans.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (s, t) in &spans {
+        println!("{:<16} {:>8.1} ms/request", s.to_string(), t * 1e3);
+    }
+    // ISO must beat serial and gemm-overlap outright. Request-overlap gets
+    // per-request parity here only because the two simulated requests are
+    // *perfectly* balanced — and it still needs two concurrent requests and
+    // inflates each request's latency (paper §1); ISO needs one request.
+    let t = |strat: Strategy| spans.iter().find(|(s, _)| *s == strat).unwrap().1;
+    assert!(t(Strategy::Iso) < t(Strategy::Serial));
+    assert!(t(Strategy::Iso) < t(Strategy::GemmOverlap));
+    assert!(t(Strategy::Iso) < t(Strategy::RequestOverlap) * 1.10);
+
+    section("timing");
+    bench("lower+simulate ISO graph (60 layers)", 2, 20, || {
+        let e = SimExperiment::new(node.clone(), model.clone(), len, Strategy::Iso);
+        std::hint::black_box(run(&e));
+    });
+}

@@ -1,0 +1,94 @@
+//! BENCH — Figure 2: the two asymmetric regimes and their mitigations.
+//!
+//! (a) Communication dominates (4090): int8 wire quantization drops the
+//!     comm share from ~75% to ~50% and unlocks the ISO gain.
+//! (b) Computation dominates (A800): NCCL SM contention inflates
+//!     overlapped GEMMs 15–20%; segmenting the GEMM into multiple kernel
+//!     launches reclaims the SMs the moment comm ends.
+
+use iso::config::{SimExperiment, Strategy};
+use iso::hw::NodeProfile;
+use iso::model::ModelSpec;
+use iso::sched::{prefill_s, reduction_vs_serial, Coster};
+use iso::util::bench::section;
+
+fn main() {
+    // ---- (a) communication dominates ------------------------------------
+    section("Fig 2a — 4090-4, 30b: wire format vs comm share and ISO gain");
+    println!(
+        "{:<8} {:>10} {:>12} {:>12} {:>10}",
+        "len", "wire", "comm share", "ISO gain", "Δ vs fp16"
+    );
+    for len in [2048usize, 4096, 8192, 16384] {
+        let node = NodeProfile::rtx4090(4);
+        let model = ModelSpec::mha_30b();
+        let mut fp16 = SimExperiment::new(node.clone(), model.clone(), len, Strategy::Iso);
+        fp16.int8_wire = false;
+        let mut int8 = fp16.clone();
+        int8.int8_wire = true;
+
+        let share = |e: &SimExperiment| {
+            let c = Coster::new(e);
+            let compute = c.attn_block_s(len, 0) + c.mlp_block_s(len);
+            let comm = 2.0 * c.ar_s(len, 1);
+            comm / (comm + compute)
+        };
+        let g_fp16 = reduction_vs_serial(&fp16);
+        let g_int8 = reduction_vs_serial(&int8);
+        println!(
+            "{:>6}k {:>10} {:>11.0}% {:>11.1}% {:>10}",
+            len / 1024,
+            "fp16",
+            share(&fp16) * 100.0,
+            g_fp16 * 100.0,
+            "-"
+        );
+        println!(
+            "{:>6}k {:>10} {:>11.0}% {:>11.1}% {:>+9.1}%",
+            len / 1024,
+            "int8",
+            share(&int8) * 100.0,
+            g_int8 * 100.0,
+            (g_int8 - g_fp16) * 100.0
+        );
+    }
+    println!("paper: int8 wire reduces the 4090 comm share from ~75% to ~50%");
+
+    // ---- (b) computation dominates ---------------------------------------
+    section("Fig 2b — A800, 70b: GEMM segmentation vs SM contention");
+    println!(
+        "{:<10} {:<8} {:>10} {:>12} {:>12}",
+        "platform", "len", "segments", "prefill", "ISO gain"
+    );
+    for cards in [4usize, 8] {
+        for len in [8192usize, 16384] {
+            for segments in [1usize, 2, 4, 8] {
+                let mut e = SimExperiment::new(
+                    NodeProfile::a800(cards),
+                    ModelSpec::gqa_70b(),
+                    len,
+                    Strategy::Iso,
+                );
+                e.gemm_segments = segments;
+                println!(
+                    "{:<10} {:>6}k {:>10} {:>10.1}ms {:>11.1}%",
+                    format!("a800-{cards}"),
+                    len / 1024,
+                    segments,
+                    prefill_s(&e) * 1e3,
+                    reduction_vs_serial(&e) * 100.0
+                );
+            }
+            println!();
+        }
+    }
+    println!("paper: contention costs 15–20% on A800, negligible on 4090;");
+    println!("multiple kernel launches let compute reclaim the GPU after comm ends.");
+
+    // sanity: segmentation must help on a800, and contention must be the reason
+    let mut seg1 = SimExperiment::new(NodeProfile::a800(8), ModelSpec::gqa_70b(), 16384, Strategy::Iso);
+    seg1.gemm_segments = 1;
+    let mut seg4 = seg1.clone();
+    seg4.gemm_segments = 4;
+    assert!(prefill_s(&seg4) < prefill_s(&seg1));
+}

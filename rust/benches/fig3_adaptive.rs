@@ -1,0 +1,66 @@
+//! BENCH — Figure 3 / §6: adaptive attention/MLP imbalance splitting.
+//!
+//! Sweeps split policies across platforms and context lengths; verifies
+//! that (i) the balanced policies shrink the chunk-time imbalance the
+//! paper describes, and (ii) they never lose to the 50/50 split.
+
+use iso::config::{SimExperiment, SplitPolicy, Strategy};
+use iso::hw::NodeProfile;
+use iso::model::ModelSpec;
+use iso::sched::prefill_s;
+use iso::split::{attn_imbalance, choose_split, imbalance};
+use iso::util::bench::section;
+
+fn main() {
+    let policies = [
+        ("even", SplitPolicy::Even),
+        ("ratio:0.55", SplitPolicy::Ratio(0.55)),
+        ("ratio:0.6", SplitPolicy::Ratio(0.6)),
+        ("attn-balanced", SplitPolicy::AttnBalanced),
+        ("adaptive(fig3)", SplitPolicy::AdaptiveAttnMlp),
+    ];
+
+    for (gpu, cards, model_name) in
+        [("4090", 4usize, "30b"), ("4090", 4, "70b"), ("a800", 8, "70b")]
+    {
+        let node = NodeProfile::by_name(gpu, cards).unwrap();
+        let model = ModelSpec::by_name(model_name).unwrap();
+        section(&format!("Fig 3 — {model_name} on {gpu}-{cards}"));
+        println!(
+            "{:<16} {:>8} {:>9} {:>12} {:>12} {:>12}",
+            "policy", "len", "t0 frac", "chunk imbal", "attn imbal", "prefill"
+        );
+        for len in [4096usize, 16384, 65536] {
+            let mut best = f64::INFINITY;
+            let mut even_t = 0.0;
+            for (name, p) in policies {
+                let s = choose_split(p, &node, &model, len);
+                let mut e =
+                    SimExperiment::new(node.clone(), model.clone(), len, Strategy::Iso);
+                e.split = p;
+                e.gemm_segments = if gpu == "a800" { 4 } else { 1 };
+                let t = prefill_s(&e);
+                if p == SplitPolicy::Even {
+                    even_t = t;
+                }
+                best = best.min(t);
+                println!(
+                    "{:<16} {:>7}k {:>9.2} {:>11.1}% {:>11.1}% {:>10.1}ms",
+                    name,
+                    len / 1024,
+                    s.t0 as f64 / len as f64,
+                    imbalance(&node, &model, &s) * 100.0,
+                    attn_imbalance(&node, &model, &s) * 100.0,
+                    t * 1e3
+                );
+            }
+            println!(
+                "{:<16} {:>7}k best saves {:.1}% vs even\n",
+                "→",
+                len / 1024,
+                (even_t - best) / even_t * 100.0
+            );
+            assert!(best <= even_t * 1.001, "a balanced policy lost to even");
+        }
+    }
+}

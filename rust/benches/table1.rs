@@ -1,0 +1,59 @@
+//! BENCH — Table 1: regenerate the paper's headline grid (% decrease of
+//! prefill duration, ISO vs serial) over {4090,A800}×{4,8}×{30b,70b}×
+//! {1k..128k}, plus the §4.2 strategy-comparison rows, and time the
+//! simulator itself.
+//!
+//! Paper reference values (Table 1):
+//!   4090-4 30b: 38 42 43 44 47 48 · 70b: 43 44 45 46 47 46
+//!   4090-8 30b: 11 10 18 21 30 33 36 · 70b: 14 19 22 23 35 42 39
+//!   A800-4 30b:  0  8 18 11 12  9 10  5 · 70b: -6  2  8 10  9  8  8  3
+//!   A800-8 30b:  8 24 22 20 16 25 11 10 · 70b:  3  9 14 15 16 15 14  7
+
+use iso::config::Strategy;
+use iso::report::{render_table1, table1, table1_csv};
+use iso::util::bench::{bench, section};
+
+fn main() {
+    section("Table 1 — ISO (simulated)");
+    let rows = table1(Strategy::Iso);
+    print!("{}", render_table1(&rows, ""));
+
+    section("Table 1 rows — gemm-overlap baseline (paper §4.2)");
+    let gemm = table1(Strategy::GemmOverlap);
+    print!("{}", render_table1(&gemm, ""));
+
+    section("Table 1 rows — request-overlap baseline (throughput-normalized)");
+    let req = table1(Strategy::RequestOverlap);
+    print!("{}", render_table1(&req, ""));
+
+    section("summary vs paper");
+    let avg = |rows: &[iso::report::Table1Row], gpu: &str| {
+        let (mut s, mut n) = (0.0, 0);
+        for r in rows.iter().filter(|r| r.gpu == gpu) {
+            for (len, red) in &r.cells {
+                if *len >= 4096 {
+                    s += red;
+                    n += 1;
+                }
+            }
+        }
+        s / n as f64
+    };
+    println!(
+        "4090 average (>=4k): measured {:>4.0}%   paper ~35%",
+        avg(&rows, "4090") * 100.0
+    );
+    println!(
+        "a800 average (>=4k): measured {:>4.0}%   paper ~15%",
+        avg(&rows, "a800") * 100.0
+    );
+
+    section("simulator throughput");
+    bench("full Table-1 grid (60 cells × 2 runs)", 1, 5, || {
+        std::hint::black_box(table1(Strategy::Iso));
+    });
+
+    std::fs::create_dir_all("target/bench-out").ok();
+    std::fs::write("target/bench-out/table1.csv", table1_csv(&rows)).ok();
+    println!("\nwrote target/bench-out/table1.csv");
+}

@@ -1,0 +1,305 @@
+//! Continuous batching: request queue, admission, and the chunked-prefill
+//! batch composer that feeds the coordinator.
+//!
+//! The scheduler follows SARATHI-style chunked prefill (paper §2.1): every
+//! engine iteration executes one *chunk* of one or more sequences. Under
+//! the ISO strategy the composer emits the two intra-sequence micro-chunks
+//! of the *same* sequence so the coordinator can ping-pong their
+//! compute/communication (paper §3.1); under the serial strategy it emits
+//! one chunk at a time.
+
+use std::collections::VecDeque;
+
+use crate::config::{SplitPolicy, Strategy};
+use crate::workload::Request;
+
+/// Scheduler state of one live sequence.
+#[derive(Clone, Debug)]
+pub struct SeqState {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Tokens already prefixed into the KV cache.
+    pub done: usize,
+    pub decode_steps: usize,
+    pub decoded: usize,
+    pub arrival_s: f64,
+}
+
+impl SeqState {
+    pub fn new(r: &Request) -> Self {
+        SeqState {
+            id: r.id,
+            prompt: r.prompt.clone(),
+            done: 0,
+            decode_steps: r.decode_steps,
+            decoded: 0,
+            arrival_s: r.arrival_s,
+        }
+    }
+
+    pub fn prefill_remaining(&self) -> usize {
+        self.prompt.len().saturating_sub(self.done)
+    }
+
+    pub fn in_decode(&self) -> bool {
+        self.prefill_remaining() == 0 && self.decoded < self.decode_steps
+    }
+
+    pub fn finished(&self) -> bool {
+        self.prefill_remaining() == 0 && self.decoded >= self.decode_steps
+    }
+}
+
+/// One schedulable unit of work: a chunk of a sequence's prefill.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkJob {
+    pub seq: u64,
+    /// Index of the first token of the chunk within the sequence.
+    pub offset: usize,
+    /// Chunk length (must match a compiled artifact chunk size).
+    pub len: usize,
+    /// Micro-batch lane for ISO ping-pong (0 or 1).
+    pub lane: usize,
+    /// True if this chunk completes the sequence's prefill.
+    pub last: bool,
+}
+
+/// The prefill plan for one sequence under a strategy: a list of chunk
+/// jobs whose lengths tile the prompt with compiled chunk sizes.
+pub fn plan_prefill(
+    seq: u64,
+    prompt_len: usize,
+    strategy: Strategy,
+    split: SplitPolicy,
+    chunk_sizes: &[usize],
+) -> Vec<ChunkJob> {
+    assert!(!chunk_sizes.is_empty());
+    let mut sizes: Vec<usize> = chunk_sizes.to_vec();
+    sizes.sort_unstable();
+
+    match strategy {
+        Strategy::Iso => {
+            // Split the sequence into two micro-batches (lanes), then tile
+            // each lane with compiled chunk sizes. Lane 1 may only start a
+            // given layer after lane 0 — enforced by the coordinator; here
+            // we fix lane membership and offsets.
+            let t0 = match split {
+                SplitPolicy::Even => prompt_len / 2,
+                SplitPolicy::Ratio(r) => {
+                    ((prompt_len as f64 * r).round() as usize).clamp(1, prompt_len - 1)
+                }
+                // Engine-side balanced split: causal attention makes the
+                // tail heavier, so give the head slightly more tokens
+                // (cheap closed-form of split::choose_split's bisection:
+                // t0 s.t. t0^2/2 == t^2/2 - t0^2/2 ... i.e. t0 = t/sqrt2
+                // on the attention term; temper toward even for the
+                // position-free GEMM share).
+                SplitPolicy::AttnBalanced | SplitPolicy::AdaptiveAttnMlp => {
+                    (prompt_len as f64 * 0.55).round() as usize
+                }
+            };
+            let t0 = round_to_tiles(t0.clamp(1, prompt_len - 1), &sizes, prompt_len);
+            let mut jobs = tile(seq, 0, t0, 0, &sizes);
+            jobs.extend(tile(seq, t0, prompt_len - t0, 1, &sizes));
+            if let Some(j) = jobs.last_mut() {
+                j.last = true;
+            }
+            jobs
+        }
+        _ => {
+            let mut jobs = tile(seq, 0, prompt_len, 0, &sizes);
+            if let Some(j) = jobs.last_mut() {
+                j.last = true;
+            }
+            jobs
+        }
+    }
+}
+
+/// Tile `len` tokens starting at `offset` with the largest chunks first.
+fn tile(seq: u64, offset: usize, len: usize, lane: usize, sizes: &[usize]) -> Vec<ChunkJob> {
+    let mut out = Vec::new();
+    let mut pos = 0;
+    while pos < len {
+        let remaining = len - pos;
+        // Largest compiled size that fits; fall back to the smallest size
+        // (callers pad prompts to a multiple of the smallest size).
+        let size = sizes
+            .iter()
+            .rev()
+            .find(|&&s| s <= remaining)
+            .copied()
+            .unwrap_or_else(|| panic!("remaining {remaining} below smallest chunk {sizes:?}"));
+        out.push(ChunkJob { seq, offset: offset + pos, len: size, lane, last: false });
+        pos += size;
+    }
+    out
+}
+
+/// Round `t0` to something exactly tileable, keeping it in (0, total).
+fn round_to_tiles(t0: usize, sizes: &[usize], total: usize) -> usize {
+    let g = sizes[0]; // smallest compiled chunk
+    let rounded = ((t0 + g / 2) / g * g).clamp(g, total - g);
+    rounded
+}
+
+/// FIFO admission queue with a live-sequence cap.
+#[derive(Debug)]
+pub struct Admission {
+    queue: VecDeque<Request>,
+    pub max_live: usize,
+    pub live: usize,
+}
+
+impl Admission {
+    pub fn new(max_live: usize) -> Self {
+        Admission { queue: VecDeque::new(), max_live, live: 0 }
+    }
+
+    pub fn submit(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit as many requests as capacity allows.
+    pub fn admit(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        while self.live < self.max_live {
+            match self.queue.pop_front() {
+                Some(r) => {
+                    self.live += 1;
+                    out.push(r);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub fn complete(&mut self) {
+        assert!(self.live > 0, "complete() without a live sequence");
+        self.live -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prop;
+
+    const SIZES: &[usize] = &[16, 32, 64];
+
+    #[test]
+    fn serial_plan_tiles_whole_prompt() {
+        let jobs = plan_prefill(1, 96, Strategy::Serial, SplitPolicy::Even, SIZES);
+        let total: usize = jobs.iter().map(|j| j.len).sum();
+        assert_eq!(total, 96);
+        assert_eq!(jobs[0].offset, 0);
+        assert!(jobs.last().unwrap().last);
+        assert!(jobs.iter().all(|j| j.lane == 0));
+        // offsets are contiguous
+        let mut pos = 0;
+        for j in &jobs {
+            assert_eq!(j.offset, pos);
+            pos += j.len;
+        }
+    }
+
+    #[test]
+    fn iso_plan_has_two_lanes_contiguous() {
+        let jobs = plan_prefill(1, 128, Strategy::Iso, SplitPolicy::Even, SIZES);
+        let lane0: usize = jobs.iter().filter(|j| j.lane == 0).map(|j| j.len).sum();
+        let lane1: usize = jobs.iter().filter(|j| j.lane == 1).map(|j| j.len).sum();
+        assert_eq!(lane0 + lane1, 128);
+        assert_eq!(lane0, 64);
+        // lane 1 starts exactly where lane 0 ends
+        let first1 = jobs.iter().find(|j| j.lane == 1).unwrap();
+        assert_eq!(first1.offset, lane0);
+    }
+
+    #[test]
+    fn iso_balanced_gives_head_more_tokens() {
+        let jobs = plan_prefill(1, 128, Strategy::Iso, SplitPolicy::AttnBalanced, SIZES);
+        let lane0: usize = jobs.iter().filter(|j| j.lane == 0).map(|j| j.len).sum();
+        assert!(lane0 > 48 && lane0 < 128, "lane0 = {lane0}");
+    }
+
+    #[test]
+    fn ratio_split_respects_tiles() {
+        let jobs = plan_prefill(1, 128, Strategy::Iso, SplitPolicy::Ratio(0.6), SIZES);
+        let lane0: usize = jobs.iter().filter(|j| j.lane == 0).map(|j| j.len).sum();
+        assert_eq!(lane0 % 16, 0);
+        assert!(lane0 >= 16 && lane0 <= 112);
+    }
+
+    #[test]
+    fn prop_plan_tiles_exactly_with_compiled_sizes() {
+        Prop::new(57).cases(200).run("prefill plan tiles prompt", |rng| {
+            let len = rng.range(2, 40) * 16; // padded prompts
+            let strat = if rng.f64() < 0.5 { Strategy::Iso } else { Strategy::Serial };
+            let jobs = plan_prefill(7, len, strat, SplitPolicy::Even, SIZES);
+            let total: usize = jobs.iter().map(|j| j.len).sum();
+            if total != len {
+                return Err(format!("tiled {total} != {len}"));
+            }
+            for j in &jobs {
+                if !SIZES.contains(&j.len) {
+                    return Err(format!("chunk size {} not compiled", j.len));
+                }
+            }
+            // offsets contiguous within each lane, lane1 after lane0
+            let mut pos = 0;
+            for j in jobs.iter().filter(|j| j.lane == 0) {
+                if j.offset != pos {
+                    return Err(format!("lane0 gap at {pos}"));
+                }
+                pos += j.len;
+            }
+            for j in jobs.iter().filter(|j| j.lane == 1) {
+                if j.offset != pos {
+                    return Err(format!("lane1 gap at {pos}"));
+                }
+                pos += j.len;
+            }
+            // exactly one `last`
+            if jobs.iter().filter(|j| j.last).count() != 1 {
+                return Err("need exactly one last chunk".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seq_state_lifecycle() {
+        let r = Request { id: 1, arrival_s: 0.0, prompt: vec![0; 32], decode_steps: 2 };
+        let mut s = SeqState::new(&r);
+        assert_eq!(s.prefill_remaining(), 32);
+        assert!(!s.in_decode() && !s.finished());
+        s.done = 32;
+        assert!(s.in_decode());
+        s.decoded = 2;
+        assert!(s.finished());
+    }
+
+    #[test]
+    fn admission_respects_cap() {
+        let mut a = Admission::new(2);
+        for i in 0..5 {
+            a.submit(Request { id: i, arrival_s: 0.0, prompt: vec![0; 4], decode_steps: 0 });
+        }
+        assert_eq!(a.admit().len(), 2);
+        assert_eq!(a.pending(), 3);
+        assert!(a.admit().is_empty());
+        a.complete();
+        assert_eq!(a.admit().len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn complete_without_live_panics() {
+        Admission::new(1).complete();
+    }
+}

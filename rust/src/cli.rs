@@ -1,0 +1,130 @@
+//! Hand-rolled CLI (no clap offline — DESIGN.md §5): subcommand + flags.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, `--key value` flags, bare positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from arbitrary args (first is the subcommand). `--flag` with
+    /// no value is stored as "true".
+    pub fn parse(args: &[String]) -> Result<Cli, String> {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        if let Some(cmd) = it.next() {
+            cli.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    cli.flags.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    cli.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                cli.positional.push(a.clone());
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn from_env() -> Result<Cli, String> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        Cli::parse(&args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad number {v:?}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+pub const USAGE: &str = "\
+iso-serve — ISO (Intra-Sequence Overlap) LLM serving engine + paper-eval simulator
+
+USAGE:
+  iso-serve <command> [flags]
+
+COMMANDS:
+  serve       run the real engine on a synthetic trace
+              --tp N --strategy iso|serial --requests N --prompt-len N
+              --decode N --comm-quant f32|int8 --split even|ratio:X|balanced
+              --rate R (req/s Poisson arrivals → continuous batching)
+              --config FILE (e.g. configs/engine-iso.conf; flags override)
+  table1      print the paper's Table 1 from the calibrated simulator
+              --strategy iso|gemm-overlap|request-overlap  --csv FILE
+  timeline    ASCII Gantt of one prefill (Figure 1)
+              --gpu 4090|a800 --cards N --model 30b|70b --len N
+              --strategy ... --layers N
+  sweep       reduction vs prompt length for one platform
+              --gpu ... --cards N --model ... --strategy ...
+              --hw-file FILE (custom [hardware] profile, e.g.
+                configs/hardware-h800ish.conf)
+  help        this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_positional() {
+        // valued flags take the next token greedily; trailing bare flags
+        // become booleans
+        let c = Cli::parse(&v(&["serve", "--tp", "4", "extra", "--verbose"])).unwrap();
+        assert_eq!(c.command, "serve");
+        assert_eq!(c.get("tp"), Some("4"));
+        assert_eq!(c.get("verbose"), Some("true"));
+        assert_eq!(c.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let c = Cli::parse(&v(&["table1", "--strategy=iso", "--csv=out.csv"])).unwrap();
+        assert_eq!(c.get("strategy"), Some("iso"));
+        assert_eq!(c.get("csv"), Some("out.csv"));
+    }
+
+    #[test]
+    fn usize_parsing() {
+        let c = Cli::parse(&v(&["serve", "--tp", "8"])).unwrap();
+        assert_eq!(c.usize_or("tp", 2).unwrap(), 8);
+        assert_eq!(c.usize_or("missing", 7).unwrap(), 7);
+        let bad = Cli::parse(&v(&["serve", "--tp", "x"])).unwrap();
+        assert!(bad.usize_or("tp", 2).is_err());
+    }
+
+    #[test]
+    fn empty_args_ok() {
+        let c = Cli::parse(&[]).unwrap();
+        assert_eq!(c.command, "");
+    }
+}

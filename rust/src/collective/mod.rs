@@ -1,0 +1,376 @@
+//! Real ring all-reduce across tensor-parallel worker threads.
+//!
+//! This is the communication that ISO overlaps. Each TP rank is a thread;
+//! ranks are connected in a ring of mpsc channels (the CPU stand-in for
+//! NCCL's NVLink/PCIe ring — same algorithm, same step structure:
+//! reduce-scatter then all-gather, 2(R−1) steps moving 1/R of the payload
+//! each).
+//!
+//! Wire formats (paper §3.2 "communication dominates"): `F32` sends raw
+//! activations; `Int8` quantizes each hop's segment with per-row scales
+//! (`quant::quantize_rows`), cutting wire bytes ~4× at a bounded, tested
+//! accuracy cost — the CPU analogue of the paper's fp16→int8 compression.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::config::CommQuant;
+use crate::quant::quantize_rows;
+
+/// One hop's payload.
+enum Wire {
+    F32(Vec<f32>),
+    I8 { rows: usize, cols: usize, scales: Vec<f32>, data: Vec<i8> },
+}
+
+impl Wire {
+    fn bytes(&self) -> usize {
+        match self {
+            Wire::F32(v) => v.len() * 4,
+            Wire::I8 { scales, data, .. } => scales.len() * 4 + data.len(),
+        }
+    }
+}
+
+/// Emulated link speed for the ring (DESIGN.md §2: the CPU testbed's
+/// shared-memory channels are far faster than PCIe/NVLink relative to its
+/// compute, so engine experiments can throttle each hop to a calibrated
+/// `alpha + bytes/bandwidth` — the same α/β model the simulator uses.
+/// Quantized wire formats then genuinely shrink the transfer time, exactly
+/// like the paper's fp16→int8 compression on the 4090).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Throttle {
+    /// Per-hop latency (seconds).
+    pub alpha_s: f64,
+    /// Wire bandwidth in bytes/second.
+    pub bytes_per_s: f64,
+}
+
+impl Throttle {
+    fn pace(&self, bytes: usize) {
+        let secs = self.alpha_s + bytes as f64 / self.bytes_per_s;
+        std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+    }
+}
+
+/// A rank's handle into the ring; moved into its worker thread.
+pub struct RingHandle {
+    pub rank: usize,
+    pub n: usize,
+    tx_next: Sender<Wire>,
+    rx_prev: Receiver<Wire>,
+    /// Total wire bytes this rank has sent.
+    pub sent_bytes: u64,
+    /// Optional emulated link speed.
+    pub throttle: Option<Throttle>,
+}
+
+/// Build a ring of `n` handles (index = rank).
+pub fn ring(n: usize) -> Vec<RingHandle> {
+    assert!(n >= 1);
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    // rank r sends to (r+1)%n, so its tx is txs[(r+1)%n]'s producing end;
+    // rotate the tx list left by one relative to rx.
+    let mut handles = Vec::with_capacity(n);
+    let mut txs_rot: Vec<Option<Sender<Wire>>> = txs.into_iter().map(Some).collect();
+    for (r, rx) in rxs.into_iter().enumerate() {
+        let tx = txs_rot[(r + 1) % n].take().expect("tx taken twice");
+        handles.push(RingHandle {
+            rank: r,
+            n,
+            tx_next: tx,
+            rx_prev: rx,
+            sent_bytes: 0,
+            throttle: None,
+        });
+    }
+    handles
+}
+
+/// Row-range of ring segment `i` when `rows` are split into `n` segments.
+fn seg_range(rows: usize, n: usize, i: usize) -> (usize, usize) {
+    // First `rows % n` segments get one extra row.
+    let base = rows / n;
+    let extra = rows % n;
+    let start = i * base + i.min(extra);
+    let len = base + usize::from(i < extra);
+    (start, start + len)
+}
+
+impl RingHandle {
+    /// In-place sum-all-reduce over `data` viewed as `rows × cols`
+    /// (row-major). All ranks must call with equal shapes. `quant`
+    /// selects the wire format. Returns wire bytes sent by this rank.
+    pub fn allreduce(
+        &mut self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+    ) -> u64 {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        if self.n == 1 || data.is_empty() {
+            return 0;
+        }
+        let n = self.n;
+        let r = self.rank;
+        let before = self.sent_bytes;
+
+        // --- reduce-scatter: after n-1 steps rank r owns segment (r+1)%n.
+        for s in 0..n - 1 {
+            let send_i = (r + n - s) % n;
+            let recv_i = (r + n - s - 1) % n;
+            let (a, b) = seg_range(rows, n, send_i);
+            self.send_segment(&data[a * cols..b * cols], b - a, cols, quant);
+            let (a, b) = seg_range(rows, n, recv_i);
+            // accumulate in place — int8 wire dequantizes straight into
+            // the accumulator (no intermediate vec, §Perf)
+            self.recv_apply(&mut data[a * cols..b * cols], b - a, cols, true);
+        }
+
+        // --- all-gather: broadcast the reduced segments around the ring.
+        for s in 0..n - 1 {
+            let send_i = (r + 1 + n - s) % n;
+            let recv_i = (r + n - s) % n;
+            let (a, b) = seg_range(rows, n, send_i);
+            self.send_segment(&data[a * cols..b * cols], b - a, cols, quant);
+            let (a, b) = seg_range(rows, n, recv_i);
+            self.recv_apply(&mut data[a * cols..b * cols], b - a, cols, false);
+        }
+        self.sent_bytes - before
+    }
+
+    fn send_segment(&mut self, seg: &[f32], rows: usize, cols: usize, quant: CommQuant) {
+        let wire = match quant {
+            CommQuant::Int8 => {
+                let q = quantize_rows(seg, rows, cols);
+                Wire::I8 { rows, cols, scales: q.scales, data: q.data }
+            }
+            // fp16 wire is modeled as f32 on CPU (same algorithm; the
+            // byte accounting for fp16 lives in the simulator).
+            CommQuant::Fp16 | CommQuant::F32 => Wire::F32(seg.to_vec()),
+        };
+        self.sent_bytes += wire.bytes() as u64;
+        if let Some(t) = self.throttle {
+            t.pace(wire.bytes());
+        }
+        self.tx_next.send(wire).expect("ring peer hung up");
+    }
+
+    /// Receive the next segment and either accumulate (`add = true`,
+    /// reduce-scatter) or overwrite (`add = false`, all-gather) in place.
+    fn recv_apply(&mut self, out: &mut [f32], rows: usize, cols: usize, add: bool) {
+        match self.rx_prev.recv().expect("ring peer hung up") {
+            Wire::F32(v) => {
+                debug_assert_eq!(v.len(), rows * cols);
+                if add {
+                    for (o, x) in out.iter_mut().zip(v) {
+                        *o += x;
+                    }
+                } else {
+                    out.copy_from_slice(&v);
+                }
+            }
+            Wire::I8 { rows: qr, cols: qc, scales, data } => {
+                debug_assert_eq!((qr, qc), (rows, cols));
+                let q = crate::quant::QuantizedRows { rows: qr, cols: qc, scales, data };
+                if add {
+                    crate::quant::dequantize_add(&q, out);
+                } else {
+                    crate::quant::dequantize_into(&q, out);
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: run `f(rank, handle)` on `n` scoped threads over a fresh
+/// ring and return the per-rank results in rank order.
+pub fn run_on_ring<T: Send>(
+    n: usize,
+    f: impl Fn(usize, &mut RingHandle) -> T + Sync,
+) -> Vec<T> {
+    let handles = ring(n);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut join = Vec::new();
+        for (r, mut h) in handles.into_iter().enumerate() {
+            let f = &f;
+            join.push(scope.spawn(move || (r, f(r, &mut h))));
+        }
+        for j in join {
+            let (r, v) = j.join().expect("ring worker panicked");
+            out[r] = Some(v);
+        }
+    });
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Prop, Rng};
+
+    fn gold_sum(parts: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = vec![0.0f32; parts[0].len()];
+        for p in parts {
+            for (o, x) in out.iter_mut().zip(p) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn seg_ranges_partition_rows() {
+        for rows in [1usize, 5, 16, 17, 64] {
+            for n in [1usize, 2, 3, 4, 8] {
+                let mut covered = 0;
+                for i in 0..n {
+                    let (a, b) = seg_range(rows, n, i);
+                    assert_eq!(a, covered, "rows={rows} n={n} i={i}");
+                    covered = b;
+                }
+                assert_eq!(covered, rows);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_allreduce_exact() {
+        for n in [1usize, 2, 3, 4, 8] {
+            let mut rng = Rng::new(100 + n as u64);
+            let (rows, cols) = (13, 7); // deliberately not divisible by n
+            let parts: Vec<Vec<f32>> =
+                (0..n).map(|_| rng.normal_vec(rows * cols, 1.0)).collect();
+            let want = gold_sum(&parts);
+            let results = run_on_ring(n, |r, h| {
+                let mut data = parts[r].clone();
+                h.allreduce(&mut data, rows, cols, CommQuant::F32);
+                data
+            });
+            for (r, got) in results.iter().enumerate() {
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                        "n={n} rank={r} idx={i}: {g} != {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_ranks_agree_bitwise_f32() {
+        let n = 4;
+        let mut rng = Rng::new(7);
+        let parts: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(64, 1.0)).collect();
+        let results = run_on_ring(n, |r, h| {
+            let mut data = parts[r].clone();
+            h.allreduce(&mut data, 8, 8, CommQuant::F32);
+            data
+        });
+        for r in 1..n {
+            assert_eq!(results[0], results[r], "rank {r} differs from rank 0");
+        }
+    }
+
+    #[test]
+    fn int8_allreduce_bounded_error() {
+        let n = 4;
+        let (rows, cols) = (16, 32);
+        let mut rng = Rng::new(9);
+        let parts: Vec<Vec<f32>> =
+            (0..n).map(|_| rng.normal_vec(rows * cols, 1.0)).collect();
+        let want = gold_sum(&parts);
+        let results = run_on_ring(n, |r, h| {
+            let mut data = parts[r].clone();
+            h.allreduce(&mut data, rows, cols, CommQuant::Int8);
+            data
+        });
+        // Error accumulates over ~2(R-1) quantized hops; bound loosely.
+        let amax = want.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let tol = amax * 0.05;
+        for got in &results {
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= tol, "{g} vs {w} (tol {tol})");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_wire_bytes_quarter_of_f32() {
+        let n = 4;
+        let (rows, cols) = (64, 128);
+        let data = vec![1.0f32; rows * cols];
+        let bytes = run_on_ring(n, |_, h| {
+            let mut d = data.clone();
+            h.allreduce(&mut d, rows, cols, CommQuant::F32)
+        });
+        let bytes_q = run_on_ring(n, |_, h| {
+            let mut d = data.clone();
+            h.allreduce(&mut d, rows, cols, CommQuant::Int8)
+        });
+        for (f, q) in bytes.iter().zip(&bytes_q) {
+            let ratio = *q as f64 / *f as f64;
+            assert!((0.24..0.30).contains(&ratio), "wire ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let mut h = ring(1).pop().unwrap();
+        let mut data = vec![1.0, 2.0, 3.0, 4.0];
+        let sent = h.allreduce(&mut data, 2, 2, CommQuant::F32);
+        assert_eq!(sent, 0);
+        assert_eq!(data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn back_to_back_allreduces_stay_consistent() {
+        // The engine issues two all-reduces per layer; make sure ring
+        // state can be reused without cross-talk.
+        let n = 3;
+        let results = run_on_ring(n, |r, h| {
+            let mut a = vec![r as f32; 6];
+            h.allreduce(&mut a, 2, 3, CommQuant::F32);
+            let mut b = vec![(r + 1) as f32; 6];
+            h.allreduce(&mut b, 3, 2, CommQuant::F32);
+            (a, b)
+        });
+        for (a, b) in &results {
+            assert!(a.iter().all(|&x| x == 3.0)); // 0+1+2
+            assert!(b.iter().all(|&x| x == 6.0)); // 1+2+3
+        }
+    }
+
+    #[test]
+    fn prop_f32_allreduce_matches_gold() {
+        Prop::new(41).cases(30).run("ring == serial sum", |rng| {
+            let n = rng.range(2, 6);
+            let rows = rng.range(1, 20);
+            let cols = rng.range(1, 20);
+            let parts: Vec<Vec<f32>> =
+                (0..n).map(|_| rng.normal_vec(rows * cols, 2.0)).collect();
+            let want = gold_sum(&parts);
+            let results = run_on_ring(n, |r, h| {
+                let mut d = parts[r].clone();
+                h.allreduce(&mut d, rows, cols, CommQuant::F32);
+                d
+            });
+            for got in &results {
+                for (g, w) in got.iter().zip(&want) {
+                    if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
+                        return Err(format!("{g} != {w} (n={n} rows={rows} cols={cols})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

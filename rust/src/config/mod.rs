@@ -1,0 +1,352 @@
+//! Engine / experiment configuration.
+//!
+//! Three layers of config compose a run:
+//!   * `ModelConfig`   — which transformer (paper-scale spec or the tiny
+//!     real model the CPU engine executes);
+//!   * `HardwareConfig`— which node profile (4090/A800 × cards) for the
+//!     simulator, or `CpuThreads` for the real engine;
+//!   * `EngineConfig`  — overlap strategy, split policy, quantization,
+//!     chunking, batching.
+//!
+//! A small line-based config-file format (`key = value`, `#` comments,
+//! `[section]` headers) replaces TOML in the offline build; presets cover
+//! every paper experiment so files are optional.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use crate::hw::NodeProfile;
+use crate::model::ModelSpec;
+
+/// Which overlap strategy the scheduler runs (paper Fig 1 a–d).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// (a) original serial pipeline: compute → comm → compute → comm.
+    Serial,
+    /// (b) GEMM overlap: tile o_proj/down into the collective (T3/Flux-like).
+    GemmOverlap,
+    /// (c) request-level overlap: two requests ping-pong compute/comm (Liger).
+    RequestOverlap,
+    /// (d) ISO: two intra-sequence chunks overlap (the paper's contribution).
+    Iso,
+}
+
+impl Strategy {
+    pub fn all() -> [Strategy; 4] {
+        [Strategy::Serial, Strategy::GemmOverlap, Strategy::RequestOverlap, Strategy::Iso]
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "serial" => Some(Strategy::Serial),
+            "gemm" | "gemm-overlap" | "gemm_overlap" => Some(Strategy::GemmOverlap),
+            "request" | "request-overlap" | "request_overlap" => Some(Strategy::RequestOverlap),
+            "iso" => Some(Strategy::Iso),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Strategy::Serial => "serial",
+            Strategy::GemmOverlap => "gemm-overlap",
+            Strategy::RequestOverlap => "request-overlap",
+            Strategy::Iso => "iso",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// How ISO picks the intra-sequence split point (paper §3.2/§6 + Fig 3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SplitPolicy {
+    /// 50/50 token split.
+    Even,
+    /// Fixed fraction for the first chunk (e.g. 0.6 → 60/40, paper §6).
+    Ratio(f64),
+    /// Solve for the split equalizing *time* of the two chunks, accounting
+    /// for the causal-attention imbalance (second half is heavier).
+    AttnBalanced,
+    /// Fig 3: additionally rebalance attention vs MLP across micro-batches.
+    AdaptiveAttnMlp,
+}
+
+impl SplitPolicy {
+    pub fn parse(s: &str) -> Option<SplitPolicy> {
+        let ls = s.to_ascii_lowercase();
+        match ls.as_str() {
+            "even" => Some(SplitPolicy::Even),
+            "balanced" | "attn-balanced" => Some(SplitPolicy::AttnBalanced),
+            "adaptive" | "attn-mlp" => Some(SplitPolicy::AdaptiveAttnMlp),
+            _ => ls
+                .strip_prefix("ratio:")
+                .and_then(|r| r.parse::<f64>().ok())
+                .filter(|r| (0.05..=0.95).contains(r))
+                .map(SplitPolicy::Ratio),
+        }
+    }
+}
+
+/// Wire format of the tensor-parallel collectives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommQuant {
+    /// fp16 activations on the wire (A800 default).
+    Fp16,
+    /// int8 + per-row scales (4090 default, paper §3.2).
+    Int8,
+    /// f32 (the CPU engine's native dtype; no quant).
+    F32,
+}
+
+impl CommQuant {
+    pub fn parse(s: &str) -> Option<CommQuant> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp16" | "f16" => Some(CommQuant::Fp16),
+            "int8" | "i8" => Some(CommQuant::Int8),
+            "f32" | "fp32" | "none" => Some(CommQuant::F32),
+            _ => None,
+        }
+    }
+}
+
+/// Number of segments the pre-collective GEMM is split into when compute
+/// dominates (paper §3.2 "computation dominates": multiple kernel launches
+/// so compute reclaims the SMs the moment comm ends).
+pub const DEFAULT_GEMM_SEGMENTS: usize = 4;
+
+/// Full engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub strategy: Strategy,
+    pub split: SplitPolicy,
+    pub comm_quant: CommQuant,
+    /// Segments for the computation-dominates mitigation (1 = off).
+    pub gemm_segments: usize,
+    /// Tensor-parallel degree for the real CPU engine.
+    pub tp: usize,
+    /// Max chunk length the engine schedules (must exist in artifacts).
+    pub max_chunk: usize,
+    /// Max concurrent sequences in a batch.
+    pub max_batch: usize,
+    /// Decode steps to run per request after prefill (0 = prefill only).
+    pub decode_steps: usize,
+    /// Artifact directory for the real engine.
+    pub artifacts_dir: String,
+    /// Emulated wire bandwidth for the ring (MB/s). `None` = full memory
+    /// speed. Throttling reproduces the paper's compute:comm ratios on the
+    /// CPU testbed (DESIGN.md §2); the int8 wire then genuinely shrinks
+    /// the transfer time, like the 4090's fp16→int8 compression.
+    pub link_mbps: Option<f64>,
+    /// Emulated per-hop latency (µs) when `link_mbps` is set.
+    pub link_alpha_us: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            strategy: Strategy::Iso,
+            split: SplitPolicy::AttnBalanced,
+            comm_quant: CommQuant::F32,
+            gemm_segments: DEFAULT_GEMM_SEGMENTS,
+            tp: 2,
+            max_chunk: 64,
+            max_batch: 8,
+            decode_steps: 0,
+            artifacts_dir: "artifacts".into(),
+            link_mbps: None,
+            link_alpha_us: 50.0,
+        }
+    }
+}
+
+/// A fully-specified simulator experiment (one Table-1 cell).
+#[derive(Clone, Debug)]
+pub struct SimExperiment {
+    pub node: NodeProfile,
+    pub model: ModelSpec,
+    pub prompt_len: usize,
+    pub strategy: Strategy,
+    pub split: SplitPolicy,
+    pub int8_wire: bool,
+    pub gemm_segments: usize,
+}
+
+impl SimExperiment {
+    pub fn new(node: NodeProfile, model: ModelSpec, prompt_len: usize, strategy: Strategy) -> Self {
+        let int8_wire = node.int8_wire_default;
+        SimExperiment {
+            node,
+            model,
+            prompt_len,
+            strategy,
+            split: SplitPolicy::AttnBalanced,
+            int8_wire,
+            gemm_segments: DEFAULT_GEMM_SEGMENTS,
+        }
+    }
+}
+
+/// Parse the line-based config format:
+/// ```text
+/// [engine]
+/// strategy = iso
+/// tp = 4
+/// ```
+pub fn parse_config_file(path: &Path) -> Result<BTreeMap<String, String>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+    parse_config_str(&text)
+}
+
+/// Keys are returned as `section.key` (or bare `key` before any section).
+pub fn parse_config_str(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`, got {raw:?}", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, v.trim().to_string());
+    }
+    Ok(out)
+}
+
+impl EngineConfig {
+    /// Build from parsed `section.key` pairs; unknown keys are errors so
+    /// typos don't silently fall back to defaults.
+    pub fn from_map(map: &BTreeMap<String, String>) -> Result<Self, String> {
+        let mut cfg = EngineConfig::default();
+        for (k, v) in map {
+            match k.as_str() {
+                "engine.strategy" => {
+                    cfg.strategy =
+                        Strategy::parse(v).ok_or_else(|| format!("bad strategy {v:?}"))?
+                }
+                "engine.split" => {
+                    cfg.split = SplitPolicy::parse(v).ok_or_else(|| format!("bad split {v:?}"))?
+                }
+                "engine.comm_quant" => {
+                    cfg.comm_quant =
+                        CommQuant::parse(v).ok_or_else(|| format!("bad comm_quant {v:?}"))?
+                }
+                "engine.gemm_segments" => {
+                    cfg.gemm_segments = v.parse().map_err(|_| format!("bad gemm_segments {v:?}"))?
+                }
+                "engine.tp" => cfg.tp = v.parse().map_err(|_| format!("bad tp {v:?}"))?,
+                "engine.max_chunk" => {
+                    cfg.max_chunk = v.parse().map_err(|_| format!("bad max_chunk {v:?}"))?
+                }
+                "engine.max_batch" => {
+                    cfg.max_batch = v.parse().map_err(|_| format!("bad max_batch {v:?}"))?
+                }
+                "engine.decode_steps" => {
+                    cfg.decode_steps = v.parse().map_err(|_| format!("bad decode_steps {v:?}"))?
+                }
+                "engine.artifacts_dir" => cfg.artifacts_dir = v.clone(),
+                "engine.link_mbps" => {
+                    cfg.link_mbps =
+                        Some(v.parse().map_err(|_| format!("bad link_mbps {v:?}"))?)
+                }
+                "engine.link_alpha_us" => {
+                    cfg.link_alpha_us = v.parse().map_err(|_| format!("bad link_alpha_us {v:?}"))?
+                }
+                other => return Err(format!("unknown config key {other:?}")),
+            }
+        }
+        if cfg.gemm_segments == 0 {
+            return Err("gemm_segments must be >= 1".into());
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in Strategy::all() {
+            assert_eq!(Strategy::parse(&s.to_string()), Some(s));
+        }
+        assert_eq!(Strategy::parse("GEMM-OVERLAP"), Some(Strategy::GemmOverlap));
+        assert!(Strategy::parse("magic").is_none());
+    }
+
+    #[test]
+    fn split_policy_parse() {
+        assert_eq!(SplitPolicy::parse("even"), Some(SplitPolicy::Even));
+        assert_eq!(SplitPolicy::parse("ratio:0.6"), Some(SplitPolicy::Ratio(0.6)));
+        assert_eq!(SplitPolicy::parse("balanced"), Some(SplitPolicy::AttnBalanced));
+        assert_eq!(SplitPolicy::parse("adaptive"), Some(SplitPolicy::AdaptiveAttnMlp));
+        assert!(SplitPolicy::parse("ratio:1.5").is_none());
+        assert!(SplitPolicy::parse("ratio:abc").is_none());
+    }
+
+    #[test]
+    fn config_file_parsing() {
+        let text = r#"
+            # a comment
+            [engine]
+            strategy = iso       # trailing comment
+            split = ratio:0.6
+            tp = 4
+            comm_quant = int8
+        "#;
+        let map = parse_config_str(text).unwrap();
+        let cfg = EngineConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.strategy, Strategy::Iso);
+        assert_eq!(cfg.split, SplitPolicy::Ratio(0.6));
+        assert_eq!(cfg.tp, 4);
+        assert_eq!(cfg.comm_quant, CommQuant::Int8);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let map = parse_config_str("[engine]\nstrtegy = iso").unwrap();
+        assert!(EngineConfig::from_map(&map).is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let map = parse_config_str("[engine]\ntp = four").unwrap();
+        assert!(EngineConfig::from_map(&map).is_err());
+        let map = parse_config_str("[engine]\ngemm_segments = 0").unwrap();
+        assert!(EngineConfig::from_map(&map).is_err());
+    }
+
+    #[test]
+    fn missing_equals_is_error() {
+        assert!(parse_config_str("[engine]\nstrategy iso").is_err());
+    }
+
+    #[test]
+    fn experiment_inherits_node_wire_default() {
+        use crate::hw::NodeProfile;
+        use crate::model::ModelSpec;
+        let e = SimExperiment::new(
+            NodeProfile::rtx4090(4),
+            ModelSpec::mha_30b(),
+            4096,
+            Strategy::Iso,
+        );
+        assert!(e.int8_wire);
+        let e = SimExperiment::new(NodeProfile::a800(4), ModelSpec::gqa_70b(), 4096, Strategy::Iso);
+        assert!(!e.int8_wire);
+    }
+}

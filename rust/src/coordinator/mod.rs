@@ -1,0 +1,877 @@
+//! The serving engine: leader + N tensor-parallel worker pairs.
+//!
+//! Topology (one process, mirroring the paper's one-node TP deployment):
+//!
+//! ```text
+//!   leader (Engine)  ──jobs──▶  rank r: COMPUTE thread (PJRT client,
+//!        ▲                         compiled stages, KV caches)
+//!        │ logits                      │ partials      ▲ reduced
+//!        └────────── rank 0 ◀──        ▼               │
+//!                                  rank r: COMM thread (ring all-reduce)
+//! ```
+//!
+//! Every rank executes the identical job stream; the ring synchronizes
+//! them. Each rank is a *pair* of threads — compute and communication —
+//! the CPU analogue of a GPU's compute stream + NCCL stream. ISO's overlap
+//! is real here: while the comm thread blocks in the ring all-reduce of
+//! chunk 0's partials, the compute thread executes chunk 1's attention
+//! (paper §3.1, Fig 1d). The serial baseline (`Strategy::Serial`) issues
+//! the same work but blocks on every collective before continuing —
+//! exactly pipeline (a).
+//!
+//! Python is long gone by the time this runs: stages were AOT-lowered to
+//! HLO text by `make artifacts` and are compiled per worker at startup.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::batch::{plan_prefill, ChunkJob};
+use crate::collective::{ring, RingHandle};
+use crate::config::{CommQuant, EngineConfig, Strategy};
+use crate::metrics::{EngineMetrics, Timer};
+use crate::runtime::{Arg, DevTensor, Executable, Manifest, Tensor, WorkerRuntime};
+
+/// Jobs broadcast from the leader to every rank (identical stream).
+#[derive(Clone, Debug)]
+enum Job {
+    /// Prefill a sequence occupying `slot`. `tokens` is the (padded)
+    /// prompt; `chunks` its tiling; `logits_row` the true-last-token row
+    /// within the final chunk.
+    Prefill { slot: usize, tokens: Vec<i32>, chunks: Vec<ChunkJob>, logits_row: usize },
+    /// One decode step: token at absolute position `offset`.
+    Decode { slot: usize, token: i32, offset: usize },
+    /// Free a slot's caches.
+    Release { slot: usize },
+    Shutdown,
+}
+
+/// Replies from rank 0 only.
+#[derive(Clone, Debug)]
+enum Reply {
+    Logits(Vec<f32>),
+    Released,
+}
+
+/// Work handed from a compute thread to its comm thread.
+struct CommJob {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+/// Per-worker performance counters (returned at shutdown).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub rank: usize,
+    pub compute_ms: f64,
+    /// Time the compute thread spent blocked waiting for reduced results.
+    pub stall_ms: f64,
+    pub comm_ms: f64,
+    pub wire_bytes: u64,
+    pub allreduces: u64,
+}
+
+impl WorkerStats {
+    /// Comm time hidden behind compute (the achieved overlap).
+    pub fn overlapped_ms(&self) -> f64 {
+        (self.comm_ms - self.stall_ms).max(0.0)
+    }
+
+    /// Fraction of comm hidden (1.0 = perfectly overlapped).
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.comm_ms <= 0.0 {
+            return 1.0;
+        }
+        self.overlapped_ms() / self.comm_ms
+    }
+}
+
+/// Result of one prefill.
+#[derive(Clone, Debug)]
+pub struct PrefillOut {
+    pub first_token: i32,
+    pub ttft_ms: f64,
+    pub logits: Vec<f32>,
+}
+
+/// Result of a full generate call.
+#[derive(Clone, Debug)]
+pub struct GenOut {
+    pub tokens: Vec<i32>,
+    pub ttft_ms: f64,
+    pub decode_ms: Vec<f64>,
+}
+
+/// Final engine report.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    pub metrics: EngineMetrics,
+    pub workers: Vec<WorkerStats>,
+}
+
+/// Accounting from `Engine::serve_trace` (continuous batching).
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    /// TTFT measured from *arrival* (includes queueing).
+    pub ttft_ms: crate::metrics::Histogram,
+    /// Request completion latency from arrival.
+    pub e2e_ms: crate::metrics::Histogram,
+    pub completed: u64,
+    pub generated: u64,
+    pub wall_s: f64,
+}
+
+impl TraceReport {
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.generated as f64 / self.wall_s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker (compute + comm threads)
+// ---------------------------------------------------------------------------
+
+/// Everything a rank's compute thread owns.
+struct ComputeWorker {
+    rank: usize,
+    strategy: Strategy,
+    geo_layers: usize,
+    d_model: usize,
+    // compiled stages keyed by chunk length
+    embed: BTreeMap<usize, Executable>,
+    attn: BTreeMap<usize, Executable>,
+    mlp: BTreeMap<usize, Executable>,
+    logits: BTreeMap<usize, Executable>,
+    // weights: per layer, in stage argument order
+    layer_w: Vec<LayerWeights>,
+    emb: DevTensor,
+    ln_f: DevTensor,
+    head: DevTensor,
+    // KV caches: slot → per-layer (k, v)
+    caches: BTreeMap<usize, Vec<(Tensor, Tensor)>>,
+    kv_shape: Vec<usize>,
+    // comm plumbing
+    to_comm: Sender<CommJob>,
+    from_comm: Receiver<(Vec<f32>, u64)>,
+    stats: WorkerStats,
+}
+
+struct LayerWeights {
+    ln1: DevTensor,
+    wq: DevTensor,
+    wk: DevTensor,
+    wv: DevTensor,
+    wo: DevTensor,
+    ln2: DevTensor,
+    w_gate: DevTensor,
+    w_up: DevTensor,
+    w_down: DevTensor,
+}
+
+impl ComputeWorker {
+    fn build(
+        rank: usize,
+        cfg: &EngineConfig,
+        manifest: Manifest,
+        to_comm: Sender<CommJob>,
+        from_comm: Receiver<(Vec<f32>, u64)>,
+    ) -> Result<Self> {
+        let tp = cfg.tp;
+        let rt = WorkerRuntime::new(manifest)?;
+        let geo = rt.manifest.config;
+        let mut embed = BTreeMap::new();
+        let mut attn = BTreeMap::new();
+        let mut mlp = BTreeMap::new();
+        let mut logits = BTreeMap::new();
+        for &t in &rt.manifest.chunk_lens.clone() {
+            if t > cfg.max_chunk && t != 1 {
+                continue;
+            }
+            embed.insert(t, rt.compile(&format!("embed_t{t}"))?);
+            attn.insert(t, rt.compile(&format!("attn_tp{tp}_t{t}"))?);
+            mlp.insert(t, rt.compile(&format!("mlp_tp{tp}_t{t}"))?);
+            if rank == 0 {
+                logits.insert(t, rt.compile(&format!("logits_t{t}"))?);
+            }
+        }
+        if attn.is_empty() {
+            bail!("no chunk sizes compiled (max_chunk {} too small?)", cfg.max_chunk);
+        }
+        // Prime XLA's lazy first-execution init at startup so the first
+        // request doesn't pay it (§Perf: first TTFT was ~50x p50 before).
+        for exe in embed
+            .values()
+            .chain(attn.values())
+            .chain(mlp.values())
+            .chain(logits.values())
+        {
+            exe.warmup()?;
+        }
+
+        let mut layer_w = Vec::with_capacity(geo.n_layers);
+        for l in 0..geo.n_layers {
+            let w = |n: &str| -> Result<DevTensor> {
+                DevTensor::from_tensor(&rt.load_weight(tp, &format!("layer{l}.rank{rank}.{n}"))?)
+            };
+            layer_w.push(LayerWeights {
+                ln1: w("ln1")?,
+                wq: w("wq")?,
+                wk: w("wk")?,
+                wv: w("wv")?,
+                wo: w("wo")?,
+                ln2: w("ln2")?,
+                w_gate: w("w_gate")?,
+                w_up: w("w_up")?,
+                w_down: w("w_down")?,
+            });
+        }
+        let emb = DevTensor::from_tensor(&rt.load_weight(tp, "emb")?)?;
+        let ln_f = DevTensor::from_tensor(&rt.load_weight(tp, "ln_f")?)?;
+        let head = DevTensor::from_tensor(&rt.load_weight(tp, "head")?)?;
+        let kv_shape = vec![geo.n_kv_heads / tp, geo.max_seq, geo.head_dim];
+
+        Ok(ComputeWorker {
+            rank,
+            strategy: cfg.strategy,
+            geo_layers: geo.n_layers,
+            d_model: geo.d_model,
+            embed,
+            attn,
+            mlp,
+            logits,
+            layer_w,
+            emb,
+            ln_f,
+            head,
+            caches: BTreeMap::new(),
+            kv_shape,
+            to_comm,
+            from_comm,
+            stats: WorkerStats { rank, ..Default::default() },
+        })
+    }
+
+    fn ensure_slot(&mut self, slot: usize) {
+        if !self.caches.contains_key(&slot) {
+            let per_layer = (0..self.geo_layers)
+                .map(|_| {
+                    (Tensor::zeros(self.kv_shape.clone()), Tensor::zeros(self.kv_shape.clone()))
+                })
+                .collect();
+            self.caches.insert(slot, per_layer);
+        }
+    }
+
+    /// Submit a partial for all-reduce.
+    fn submit(&mut self, data: Vec<f32>, rows: usize) {
+        let cols = self.d_model;
+        self.stats.allreduces += 1;
+        self.to_comm
+            .send(CommJob { data, rows, cols })
+            .expect("comm thread hung up");
+    }
+
+    /// Block until the next reduced result arrives (FIFO).
+    fn recv_reduced(&mut self) -> Vec<f32> {
+        let t = Timer::start();
+        let (data, bytes) = self.from_comm.recv().expect("comm thread hung up");
+        self.stats.stall_ms += t.elapsed_ms();
+        self.stats.wire_bytes += bytes;
+        data
+    }
+
+    fn run_embed(&mut self, tokens: &[i32]) -> Result<Tensor> {
+        let t = tokens.len();
+        let exe = self.embed.get(&t).ok_or_else(|| anyhow!("no embed_t{t}"))?;
+        let out = exe.run(&[Arg::I32(tokens), Arg::Dev(&self.emb)])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// One chunk's attention partial; updates the slot's KV cache.
+    fn run_attn(&mut self, slot: usize, layer: usize, x: &Tensor, offset: usize) -> Result<Tensor> {
+        let t = x.shape[0];
+        let timer = Timer::start();
+        let exe = self.attn.get(&t).ok_or_else(|| anyhow!("no attn_t{t}"))?;
+        let w = &self.layer_w[layer];
+        // Move the caches out instead of cloning them (§Perf): the stage
+        // returns the updated caches, which we put back below.
+        let (k_cache, v_cache) = std::mem::replace(
+            &mut self.caches.get_mut(&slot).unwrap()[layer],
+            (Tensor::zeros(vec![0]), Tensor::zeros(vec![0])),
+        );
+        let out = exe.run(&[
+            Arg::F32(x),
+            Arg::Dev(&w.ln1),
+            Arg::Dev(&w.wq),
+            Arg::Dev(&w.wk),
+            Arg::Dev(&w.wv),
+            Arg::Dev(&w.wo),
+            Arg::F32(&k_cache),
+            Arg::F32(&v_cache),
+            Arg::Scalar(offset as i32),
+        ])?;
+        let mut it = out.into_iter();
+        let partial = it.next().unwrap();
+        let new_k = it.next().unwrap();
+        let new_v = it.next().unwrap();
+        self.caches.get_mut(&slot).unwrap()[layer] = (new_k, new_v);
+        self.stats.compute_ms += timer.elapsed_ms();
+        Ok(partial)
+    }
+
+    fn run_mlp(&mut self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        let t = x.shape[0];
+        let timer = Timer::start();
+        let exe = self.mlp.get(&t).ok_or_else(|| anyhow!("no mlp_t{t}"))?;
+        let w = &self.layer_w[layer];
+        let out = exe.run(&[
+            Arg::F32(x),
+            Arg::Dev(&w.ln2),
+            Arg::Dev(&w.w_gate),
+            Arg::Dev(&w.w_up),
+            Arg::Dev(&w.w_down),
+        ])?;
+        self.stats.compute_ms += timer.elapsed_ms();
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    fn run_logits(&mut self, x: &Tensor) -> Result<Tensor> {
+        let t = x.shape[0];
+        let exe = self.logits.get(&t).ok_or_else(|| anyhow!("no logits_t{t}"))?;
+        let out = exe.run(&[Arg::F32(x), Arg::Dev(&self.ln_f), Arg::Dev(&self.head)])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Residual add: x += reduced.
+    fn add_residual(x: &mut Tensor, reduced: &[f32]) {
+        debug_assert_eq!(x.data.len(), reduced.len());
+        for (a, b) in x.data.iter_mut().zip(reduced) {
+            *a += b;
+        }
+    }
+
+    /// Prefill one sequence with the ISO pipelined schedule (or blocking
+    /// serial when `strategy != Iso`). Returns last-chunk logits (rank 0).
+    fn prefill(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        chunks: &[ChunkJob],
+        logits_row: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        self.ensure_slot(slot);
+        // Embed every chunk up front (replicated tiny work, like every TP
+        // implementation does).
+        let mut xs: Vec<Tensor> = chunks
+            .iter()
+            .map(|c| self.run_embed(&tokens[c.offset..c.offset + c.len]))
+            .collect::<Result<_>>()?;
+
+        match self.strategy {
+            Strategy::Iso => self.prefill_pipelined(slot, chunks, &mut xs)?,
+            _ => self.prefill_blocking(slot, chunks, &mut xs)?,
+        }
+
+        if self.rank == 0 {
+            let last_idx = chunks.iter().position(|c| c.last).expect("no last chunk");
+            let logits = self.run_logits(&xs[last_idx])?;
+            let vocab = logits.shape[1];
+            let row = logits.data[logits_row * vocab..(logits_row + 1) * vocab].to_vec();
+            Ok(Some(row))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Fig 1(d): per layer, compute every chunk's attention back-to-back
+    /// while earlier chunks' collectives fly; MLPs interleave with the
+    /// attention collectives; next layer starts as soon as *that chunk's*
+    /// MLP collective lands. The KV ordering constraint is honored by
+    /// construction: chunk i's attention executes after chunk i-1's within
+    /// the same thread, and chunks are offset-ordered.
+    fn prefill_pipelined(
+        &mut self,
+        slot: usize,
+        chunks: &[ChunkJob],
+        xs: &mut [Tensor],
+    ) -> Result<()> {
+        let k = chunks.len();
+        for l in 0..self.geo_layers {
+            for i in 0..k {
+                if l > 0 {
+                    // consume chunk i's MLP all-reduce from layer l-1
+                    let reduced = self.recv_reduced();
+                    Self::add_residual(&mut xs[i], &reduced);
+                }
+                let partial = self.run_attn(slot, l, &xs[i], chunks[i].offset)?;
+                self.submit(partial.data, chunks[i].len);
+            }
+            for i in 0..k {
+                let reduced = self.recv_reduced();
+                Self::add_residual(&mut xs[i], &reduced);
+                let partial = self.run_mlp(l, &xs[i])?;
+                self.submit(partial.data, chunks[i].len);
+            }
+        }
+        for x in xs.iter_mut() {
+            let reduced = self.recv_reduced();
+            Self::add_residual(x, &reduced);
+        }
+        Ok(())
+    }
+
+    /// Fig 1(a): strict compute → comm → compute → comm.
+    fn prefill_blocking(
+        &mut self,
+        slot: usize,
+        chunks: &[ChunkJob],
+        xs: &mut [Tensor],
+    ) -> Result<()> {
+        for i in 0..chunks.len() {
+            for l in 0..self.geo_layers {
+                let partial = self.run_attn(slot, l, &xs[i], chunks[i].offset)?;
+                self.submit(partial.data, chunks[i].len);
+                let reduced = self.recv_reduced();
+                Self::add_residual(&mut xs[i], &reduced);
+                let partial = self.run_mlp(l, &xs[i])?;
+                self.submit(partial.data, chunks[i].len);
+                let reduced = self.recv_reduced();
+                Self::add_residual(&mut xs[i], &reduced);
+            }
+        }
+        Ok(())
+    }
+
+    /// One decode step (t = 1): blocking schedule — the paper finds
+    /// overlap unprofitable in decode (§1, §6) and so do we.
+    fn decode(&mut self, slot: usize, token: i32, offset: usize) -> Result<Option<Vec<f32>>> {
+        self.ensure_slot(slot);
+        let mut x = self.run_embed(&[token])?;
+        for l in 0..self.geo_layers {
+            let partial = self.run_attn(slot, l, &x, offset)?;
+            self.submit(partial.data, 1);
+            let reduced = self.recv_reduced();
+            Self::add_residual(&mut x, &reduced);
+            let partial = self.run_mlp(l, &x)?;
+            self.submit(partial.data, 1);
+            let reduced = self.recv_reduced();
+            Self::add_residual(&mut x, &reduced);
+        }
+        if self.rank == 0 {
+            Ok(Some(self.run_logits(&x)?.data))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.caches.remove(&slot);
+    }
+}
+
+/// Comm-thread main loop: drain all-reduce jobs through the ring.
+fn comm_main(
+    mut handle: RingHandle,
+    quant: CommQuant,
+    jobs: Receiver<CommJob>,
+    results: Sender<(Vec<f32>, u64)>,
+) -> WorkerStats {
+    let mut stats = WorkerStats { rank: handle.rank, ..Default::default() };
+    while let Ok(mut job) = jobs.recv() {
+        let t = Timer::start();
+        let bytes = handle.allreduce(&mut job.data, job.rows, job.cols, quant);
+        stats.comm_ms += t.elapsed_ms();
+        stats.wire_bytes += bytes;
+        stats.allreduces += 1;
+        if results.send((job.data, bytes)).is_err() {
+            break; // compute thread gone (shutdown)
+        }
+    }
+    stats
+}
+
+/// Compute-thread main loop.
+fn compute_main(
+    rank: usize,
+    cfg: EngineConfig,
+    manifest: Manifest,
+    jobs: Receiver<Job>,
+    reply: Option<Sender<Reply>>,
+    to_comm: Sender<CommJob>,
+    from_comm: Receiver<(Vec<f32>, u64)>,
+) -> Result<WorkerStats> {
+    let mut w = ComputeWorker::build(rank, &cfg, manifest, to_comm, from_comm)
+        .with_context(|| format!("building worker {rank}"))?;
+    while let Ok(job) = jobs.recv() {
+        match job {
+            Job::Prefill { slot, tokens, chunks, logits_row } => {
+                let logits = w.prefill(slot, &tokens, &chunks, logits_row)?;
+                if let (Some(tx), Some(row)) = (&reply, logits) {
+                    tx.send(Reply::Logits(row)).ok();
+                }
+            }
+            Job::Decode { slot, token, offset } => {
+                let logits = w.decode(slot, token, offset)?;
+                if let (Some(tx), Some(row)) = (&reply, logits) {
+                    tx.send(Reply::Logits(row)).ok();
+                }
+            }
+            Job::Release { slot } => {
+                w.release(slot);
+                if let Some(tx) = &reply {
+                    tx.send(Reply::Released).ok();
+                }
+            }
+            Job::Shutdown => break,
+        }
+    }
+    Ok(w.stats)
+}
+
+// ---------------------------------------------------------------------------
+// Engine (leader)
+// ---------------------------------------------------------------------------
+
+/// The leader: owns the worker threads and the request-facing API.
+pub struct Engine {
+    cfg: EngineConfig,
+    pub manifest: Manifest,
+    job_txs: Vec<Sender<Job>>,
+    reply_rx: Receiver<Reply>,
+    compute_joins: Vec<JoinHandle<Result<WorkerStats>>>,
+    comm_joins: Vec<JoinHandle<WorkerStats>>,
+    pub metrics: EngineMetrics,
+    free_slots: Vec<usize>,
+    smallest_chunk: usize,
+}
+
+impl Engine {
+    /// Start the engine: spawn `cfg.tp` worker pairs, compile artifacts,
+    /// load weights. Everything heavyweight happens here, once.
+    pub fn start(cfg: EngineConfig) -> Result<Engine> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        if !manifest.tp_degrees.contains(&cfg.tp) {
+            bail!("tp={} not in artifacts (have {:?})", cfg.tp, manifest.tp_degrees);
+        }
+        let prefill_chunks: Vec<usize> = manifest
+            .chunk_lens
+            .iter()
+            .copied()
+            .filter(|&t| t > 1 && t <= cfg.max_chunk)
+            .collect();
+        if prefill_chunks.is_empty() {
+            bail!("no prefill chunk sizes <= max_chunk {}", cfg.max_chunk);
+        }
+        let smallest_chunk = *prefill_chunks.iter().min().unwrap();
+
+        let rings = ring(cfg.tp);
+        let (reply_tx, reply_rx) = channel();
+        let mut job_txs = Vec::new();
+        let mut compute_joins = Vec::new();
+        let mut comm_joins = Vec::new();
+
+        for (rank, mut ring_handle) in rings.into_iter().enumerate() {
+            let (job_tx, job_rx) = channel();
+            let (to_comm, comm_rx) = channel();
+            let (res_tx, from_comm) = channel();
+            let quant = cfg.comm_quant;
+            if let Some(mbps) = cfg.link_mbps {
+                ring_handle.throttle = Some(crate::collective::Throttle {
+                    alpha_s: cfg.link_alpha_us * 1e-6,
+                    bytes_per_s: mbps * 1e6,
+                });
+            }
+            comm_joins.push(
+                std::thread::Builder::new()
+                    .name(format!("iso-comm-{rank}"))
+                    .spawn(move || comm_main(ring_handle, quant, comm_rx, res_tx))
+                    .expect("spawn comm thread"),
+            );
+            let reply = if rank == 0 { Some(reply_tx.clone()) } else { None };
+            let cfg_c = cfg.clone();
+            let manifest_c = manifest.clone();
+            compute_joins.push(
+                std::thread::Builder::new()
+                    .name(format!("iso-compute-{rank}"))
+                    .spawn(move || {
+                        compute_main(rank, cfg_c, manifest_c, job_rx, reply, to_comm, from_comm)
+                    })
+                    .expect("spawn compute thread"),
+            );
+            job_txs.push(job_tx);
+        }
+
+        let free_slots = (0..cfg.max_batch).rev().collect();
+        Ok(Engine {
+            cfg,
+            manifest,
+            job_txs,
+            reply_rx,
+            compute_joins,
+            comm_joins,
+            metrics: EngineMetrics::default(),
+            free_slots,
+            smallest_chunk,
+        })
+    }
+
+    fn broadcast(&self, job: Job) {
+        for tx in &self.job_txs {
+            tx.send(job.clone()).expect("worker hung up");
+        }
+    }
+
+    fn recv_logits(&self) -> Result<Vec<f32>> {
+        match self.reply_rx.recv() {
+            Ok(Reply::Logits(v)) => Ok(v),
+            Ok(other) => bail!("unexpected reply {other:?}"),
+            Err(_) => bail!("rank0 worker died — check earlier errors"),
+        }
+    }
+
+    /// Pad a prompt to a tile-able length (appended tokens are masked out
+    /// of the true-last-token logits by causality).
+    fn pad(&self, prompt: &[i32]) -> Vec<i32> {
+        let len = crate::workload::pad_to_chunk(prompt.len().max(2), self.smallest_chunk);
+        let mut v = prompt.to_vec();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Prefill one prompt; returns the first generated token and TTFT.
+    pub fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+        let slot = self.acquire_slot()?;
+        let out = self.prefill_in_slot(slot, prompt);
+        self.release_slot(slot)?;
+        out
+    }
+
+    fn acquire_slot(&mut self) -> Result<usize> {
+        self.free_slots.pop().ok_or_else(|| anyhow!("no free sequence slots"))
+    }
+
+    fn release_slot(&mut self, slot: usize) -> Result<()> {
+        self.broadcast(Job::Release { slot });
+        match self.reply_rx.recv() {
+            Ok(Reply::Released) => {}
+            other => bail!("bad release reply: {other:?}"),
+        }
+        self.free_slots.push(slot);
+        Ok(())
+    }
+
+    fn prefill_in_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<PrefillOut> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let padded = self.pad(prompt);
+        if padded.len() > self.manifest.config.max_seq {
+            bail!("prompt {} exceeds max_seq {}", padded.len(), self.manifest.config.max_seq);
+        }
+        let sizes: Vec<usize> = self
+            .manifest
+            .chunk_lens
+            .iter()
+            .copied()
+            .filter(|&t| t > 1 && t <= self.cfg.max_chunk)
+            .collect();
+        let chunks =
+            plan_prefill(slot as u64, padded.len(), self.cfg.strategy, self.cfg.split, &sizes);
+        let last = chunks.iter().find(|c| c.last).unwrap();
+        let true_last = prompt.len() - 1;
+        if true_last < last.offset {
+            bail!("internal: true last token not in final chunk");
+        }
+        let logits_row = true_last - last.offset;
+
+        let timer = Timer::start();
+        self.broadcast(Job::Prefill {
+            slot,
+            tokens: padded,
+            chunks: chunks.clone(),
+            logits_row,
+        });
+        let logits = self.recv_logits()?;
+        let ttft = timer.elapsed_ms();
+
+        self.metrics.ttft_ms.record(ttft);
+        self.metrics.prefill_chunks += chunks.len() as u64;
+        self.metrics.generated_tokens += 1;
+        let first_token = argmax(&logits);
+        Ok(PrefillOut { first_token, ttft_ms: ttft, logits })
+    }
+
+    /// Prefill + `steps` greedy decode steps.
+    pub fn generate(&mut self, prompt: &[i32], steps: usize) -> Result<GenOut> {
+        let slot = self.acquire_slot()?;
+        let result = (|| {
+            let pre = self.prefill_in_slot(slot, prompt)?;
+            let mut tokens = vec![pre.first_token];
+            let mut decode_ms = Vec::with_capacity(steps);
+            let mut offset = prompt.len();
+            for _ in 0..steps.min(self.manifest.config.max_seq - offset) {
+                let t = Timer::start();
+                self.broadcast(Job::Decode { slot, token: *tokens.last().unwrap(), offset });
+                let logits = self.recv_logits()?;
+                decode_ms.push(t.elapsed_ms());
+                self.metrics.decode_ms.record(*decode_ms.last().unwrap());
+                self.metrics.generated_tokens += 1;
+                tokens.push(argmax(&logits));
+                offset += 1;
+            }
+            Ok(GenOut { tokens, ttft_ms: pre.ttft_ms, decode_ms })
+        })();
+        self.release_slot(slot)?;
+        result
+    }
+
+    /// Serve a full trace with continuous batching: admission up to
+    /// `max_batch` live sequences, arrival-time pacing, prefill per
+    /// request, then round-robin single-token decode across live
+    /// sequences (step-granular continuous batching). Returns per-request
+    /// latency accounting.
+    pub fn serve_trace(&mut self, reqs: &[crate::workload::Request]) -> Result<TraceReport> {
+        use std::collections::VecDeque;
+
+        struct Live {
+            slot: usize,
+            #[allow(dead_code)] // kept for tracing/debug output
+            id: u64,
+            tokens: Vec<i32>,
+            prompt_len: usize,
+            decode_left: usize,
+            arrival_s: f64,
+        }
+
+        let mut pending: VecDeque<&crate::workload::Request> = {
+            let mut v: Vec<&crate::workload::Request> = reqs.iter().collect();
+            v.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            v.into_iter().collect()
+        };
+        let mut live: Vec<Live> = Vec::new();
+        let mut report = TraceReport::default();
+        let clock = Timer::start();
+
+        while !pending.is_empty() || !live.is_empty() {
+            let now_s = clock.elapsed_ms() / 1e3;
+
+            // Admission: arrived requests while slots are free.
+            while let Some(next) = pending.front() {
+                if next.arrival_s > now_s && !live.is_empty() {
+                    break; // not arrived yet; keep decoding the live set
+                }
+                if self.free_slots.is_empty() {
+                    break;
+                }
+                if next.arrival_s > now_s {
+                    // idle engine: sleep until the next arrival
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        next.arrival_s - now_s,
+                    ));
+                }
+                let r = pending.pop_front().unwrap();
+                let slot = self.acquire_slot()?;
+                let out = self.prefill_in_slot(slot, &r.prompt)?;
+                report
+                    .ttft_ms
+                    .record(clock.elapsed_ms() - r.arrival_s * 1e3);
+                live.push(Live {
+                    slot,
+                    id: r.id,
+                    tokens: vec![out.first_token],
+                    prompt_len: r.prompt.len(),
+                    decode_left: r.decode_steps,
+                    arrival_s: r.arrival_s,
+                });
+            }
+
+            // One round-robin decode step for every live sequence.
+            let max_seq = self.manifest.config.max_seq;
+            let mut i = 0;
+            while i < live.len() {
+                let l = &mut live[i];
+                let offset = l.prompt_len + l.tokens.len() - 1;
+                if l.decode_left == 0 || offset >= max_seq {
+                    // finished: emit + free
+                    let l = live.swap_remove(i);
+                    report
+                        .e2e_ms
+                        .record(clock.elapsed_ms() - l.arrival_s * 1e3);
+                    report.completed += 1;
+                    report.generated += l.tokens.len() as u64;
+                    self.release_slot(l.slot)?;
+                    continue;
+                }
+                let token = *l.tokens.last().unwrap();
+                let slot = l.slot;
+                self.broadcast(Job::Decode { slot, token, offset });
+                let logits = self.recv_logits()?;
+                let l = &mut live[i];
+                l.tokens.push(argmax(&logits));
+                l.decode_left -= 1;
+                self.metrics.generated_tokens += 1;
+                i += 1;
+            }
+        }
+        report.wall_s = clock.elapsed_ms() / 1e3;
+        Ok(report)
+    }
+
+    /// Graceful shutdown; returns metrics + per-worker stats.
+    pub fn shutdown(mut self) -> Result<EngineReport> {
+        self.broadcast(Job::Shutdown);
+        let mut workers = Vec::new();
+        for j in self.compute_joins.drain(..) {
+            workers.push(j.join().map_err(|_| anyhow!("compute thread panicked"))??);
+        }
+        // Comm threads exit when their compute thread drops the sender.
+        for (w, j) in workers.iter_mut().zip(self.comm_joins.drain(..)) {
+            let comm = j.join().map_err(|_| anyhow!("comm thread panicked"))?;
+            w.comm_ms = comm.comm_ms;
+            w.allreduces = comm.allreduces;
+            w.wire_bytes = comm.wire_bytes;
+        }
+        let mut metrics = self.metrics.clone();
+        metrics.allreduces = workers.iter().map(|w| w.allreduces).sum();
+        metrics.comm_bytes = workers.iter().map(|w| w.wire_bytes).sum();
+        metrics.overlapped_ms = workers.iter().map(|w| w.overlapped_ms()).sum::<f64>()
+            / workers.len().max(1) as f64;
+        Ok(EngineReport { metrics, workers })
+    }
+}
+
+fn argmax(v: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 3.0]), 1); // first max wins
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn worker_stats_overlap_efficiency() {
+        let s = WorkerStats { comm_ms: 10.0, stall_ms: 2.0, ..Default::default() };
+        assert!((s.overlapped_ms() - 8.0).abs() < 1e-12);
+        assert!((s.overlap_efficiency() - 0.8).abs() < 1e-12);
+        let no_comm = WorkerStats::default();
+        assert_eq!(no_comm.overlap_efficiency(), 1.0);
+    }
+}

@@ -1,0 +1,343 @@
+//! Hardware profiles and cost models — the calibrated substitute for the
+//! paper's 4090/A800 testbeds (DESIGN.md §2).
+//!
+//! Everything here is derived from public spec sheets and standard
+//! collective cost models:
+//!   * GEMM: `time = flops / (peak * eff(m)) + launch_overhead`, where the
+//!     efficiency curve `eff(m) = peak_eff * m/(m + m_half)` captures the
+//!     small-m (short-chunk) efficiency cliff that makes short prompts
+//!     lose from splitting (paper §4.2);
+//!   * ring all-reduce: `2(R-1) * (alpha + bytes/R / link_bw)`;
+//!   * NCCL SM contention: compute issued while a collective is in flight
+//!     is inflated by `contention_factor` (paper §3.2: 15–20% on A800,
+//!     negligible on 4090).
+
+/// Interconnect profile for a ring collective.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkProfile {
+    /// Per-step latency in seconds (software + transport).
+    pub alpha_s: f64,
+    /// Per-direction per-link bandwidth in bytes/second.
+    pub link_bytes_per_s: f64,
+}
+
+impl LinkProfile {
+    /// Ring all-reduce wall time for `bytes` across `r` ranks.
+    /// 2(R−1) steps, each moving bytes/R over one link.
+    pub fn ring_allreduce_s(&self, bytes: f64, r: usize) -> f64 {
+        if r <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let steps = 2.0 * (r as f64 - 1.0);
+        steps * (self.alpha_s + (bytes / r as f64) / self.link_bytes_per_s)
+    }
+
+    /// Bus bandwidth achieved by the ring (NCCL's "busbw") — diagnostic.
+    pub fn busbw(&self, bytes: f64, r: usize) -> f64 {
+        let t = self.ring_allreduce_s(bytes, r);
+        if t == 0.0 {
+            return 0.0;
+        }
+        bytes * 2.0 * (r as f64 - 1.0) / r as f64 / t
+    }
+}
+
+/// One GPU model's compute profile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Peak dense GEMM throughput in FLOP/s for the serving dtype
+    /// (int8 tensor ops per the paper's quant setup).
+    pub peak_flops: f64,
+    /// Asymptotic fraction of peak a well-shaped GEMM reaches.
+    pub peak_eff: f64,
+    /// GEMM rows at which efficiency reaches half of `peak_eff`.
+    pub m_half: f64,
+    /// Per-kernel-launch overhead (s).
+    pub launch_s: f64,
+    /// Compute-time inflation while a collective shares the SMs
+    /// (paper §3.2: A800 1.15–1.20, 4090 ≈ 1).
+    pub contention: f64,
+}
+
+impl DeviceProfile {
+    /// GEMM efficiency at m rows (0..peak_eff].
+    pub fn eff(&self, m: usize) -> f64 {
+        self.peak_eff * m as f64 / (m as f64 + self.m_half)
+    }
+
+    /// Wall time of a GEMM-shaped op with `flops` work and `m` rows.
+    pub fn gemm_s(&self, flops: f64, m: usize) -> f64 {
+        if flops <= 0.0 {
+            return 0.0;
+        }
+        flops / (self.peak_flops * self.eff(m)) + self.launch_s
+    }
+}
+
+/// A full node: device + interconnect + card count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeProfile {
+    pub device: DeviceProfile,
+    pub link: LinkProfile,
+    pub cards: usize,
+    /// Whether the wire supports the int8 comm-quant path (paper: used on
+    /// 4090, not on A800).
+    pub int8_wire_default: bool,
+}
+
+impl NodeProfile {
+    /// RTX 4090 node: strong int8 compute, PCIe-only ring (no NVLink) —
+    /// the paper's communication-dominated platform.
+    pub fn rtx4090(cards: usize) -> Self {
+        assert!(cards >= 1);
+        // 8-card rings cross the host bridge more often → lower per-link
+        // effective bandwidth and higher step latency.
+        let (alpha, bw) = if cards <= 4 {
+            (20e-6, 14.0e9)
+        } else {
+            (26e-6, 10.5e9)
+        };
+        NodeProfile {
+            device: DeviceProfile {
+                name: "rtx4090".into(),
+                peak_flops: 330e12, // int8 dense tensor TOPS
+                peak_eff: 0.72,
+                m_half: 96.0,
+                launch_s: 8e-6,
+                contention: 1.02, // paper: negligible
+            },
+            link: LinkProfile { alpha_s: alpha, link_bytes_per_s: bw },
+            cards,
+            int8_wire_default: true,
+        }
+    }
+
+    /// A800 node: A100-class compute, 400 GB/s NVLink — the paper's
+    /// computation-dominated platform.
+    pub fn a800(cards: usize) -> Self {
+        assert!(cards >= 1);
+        // 8-card rings: NVSwitch keeps per-link bandwidth, but NCCL uses
+        // more channels → more SMs stolen from compute (higher contention).
+        let (contention, bw) = if cards <= 4 { (1.17, 150.0e9) } else { (1.20, 165.0e9) };
+        NodeProfile {
+            device: DeviceProfile {
+                name: "a800".into(),
+                peak_flops: 624e12, // int8 dense tensor TOPS
+                peak_eff: 0.78,
+                m_half: 160.0,
+                launch_s: 6e-6,
+                contention, // paper: 15–20%
+            },
+            link: LinkProfile { alpha_s: 6e-6, link_bytes_per_s: bw },
+            cards,
+            int8_wire_default: false,
+        }
+    }
+
+    pub fn by_name(name: &str, cards: usize) -> Option<Self> {
+        match name {
+            "4090" | "rtx4090" => Some(Self::rtx4090(cards)),
+            "a800" | "A800" => Some(Self::a800(cards)),
+            _ => None,
+        }
+    }
+
+    /// Build a custom profile from `[hardware]` config keys (see
+    /// `config::parse_config_str`). Unknown keys are errors; omitted keys
+    /// default to the A800 preset so a partial file tweaks one knob.
+    ///
+    /// ```text
+    /// [hardware]
+    /// name = h800ish
+    /// cards = 8
+    /// peak_tflops = 990        # int8 dense
+    /// peak_eff = 0.8
+    /// m_half = 200
+    /// launch_us = 5
+    /// contention = 1.12
+    /// link_alpha_us = 5
+    /// link_gbps = 200          # bytes/s = gbps * 1e9
+    /// int8_wire = false
+    /// ```
+    pub fn from_map(map: &std::collections::BTreeMap<String, String>) -> Result<Self, String> {
+        let mut p = Self::a800(4);
+        for (k, v) in map {
+            let Some(key) = k.strip_prefix("hardware.") else {
+                continue; // other sections are someone else's business
+            };
+            let fval = || -> Result<f64, String> {
+                v.parse().map_err(|_| format!("bad {key} value {v:?}"))
+            };
+            match key {
+                "name" => p.device.name = v.clone(),
+                "cards" => {
+                    p.cards = v.parse().map_err(|_| format!("bad cards {v:?}"))?;
+                    if p.cards == 0 {
+                        return Err("cards must be >= 1".into());
+                    }
+                }
+                "peak_tflops" => p.device.peak_flops = fval()? * 1e12,
+                "peak_eff" => p.device.peak_eff = fval()?,
+                "m_half" => p.device.m_half = fval()?,
+                "launch_us" => p.device.launch_s = fval()? * 1e-6,
+                "contention" => {
+                    p.device.contention = fval()?;
+                    if p.device.contention < 1.0 {
+                        return Err("contention must be >= 1.0".into());
+                    }
+                }
+                "link_alpha_us" => p.link.alpha_s = fval()? * 1e-6,
+                "link_gbps" => p.link.link_bytes_per_s = fval()? * 1e9,
+                "int8_wire" => {
+                    p.int8_wire_default = match v.as_str() {
+                        "true" => true,
+                        "false" => false,
+                        _ => return Err(format!("bad int8_wire {v:?}")),
+                    }
+                }
+                other => return Err(format!("unknown hardware key {other:?}")),
+            }
+        }
+        Ok(p)
+    }
+
+    /// All-reduce wall time for `bytes` of fp16 activations, with optional
+    /// int8 wire quantization (halves payload, adds per-row scales ≈ +2%).
+    pub fn allreduce_s(&self, fp16_bytes: usize, int8_wire: bool) -> f64 {
+        let wire = if int8_wire {
+            fp16_bytes as f64 * 0.51 // int8 payload + scales
+        } else {
+            fp16_bytes as f64
+        };
+        self.link.ring_allreduce_s(wire, self.cards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_allreduce_scales_with_ranks_and_bytes() {
+        let l = LinkProfile { alpha_s: 10e-6, link_bytes_per_s: 10e9 };
+        let t4 = l.ring_allreduce_s(100e6, 4);
+        let t8 = l.ring_allreduce_s(100e6, 8);
+        assert!(t8 > t4); // 2(R-1)/R grows with R
+        assert!(l.ring_allreduce_s(200e6, 4) > 1.9 * t4);
+        assert_eq!(l.ring_allreduce_s(100e6, 1), 0.0);
+    }
+
+    #[test]
+    fn busbw_approaches_link_bw_for_big_messages() {
+        let l = LinkProfile { alpha_s: 10e-6, link_bytes_per_s: 10e9 };
+        let bus = l.busbw(1e9, 8);
+        assert!(bus > 0.9 * 10e9, "busbw {bus}");
+        // tiny messages are latency-bound
+        assert!(l.busbw(1e3, 8) < 0.1 * 10e9);
+    }
+
+    #[test]
+    fn efficiency_curve_monotone_saturating() {
+        let d = NodeProfile::a800(4).device;
+        assert!(d.eff(128) < d.eff(1024));
+        assert!(d.eff(16384) <= d.peak_eff);
+        assert!(d.eff(16384) > 0.95 * d.peak_eff);
+    }
+
+    #[test]
+    fn gemm_time_includes_launch_overhead() {
+        let d = NodeProfile::rtx4090(4).device;
+        let tiny = d.gemm_s(1.0, 1);
+        assert!(tiny >= d.launch_s);
+        assert_eq!(d.gemm_s(0.0, 1), 0.0);
+    }
+
+    #[test]
+    fn paper_regime_4090_comm_dominates() {
+        // Paper §3.2/Fig 2a: on 4090, fp16 comm ≈ 75% of a layer; int8
+        // wire brings it to ≈ 50%.
+        use crate::model::ModelSpec;
+        let node = NodeProfile::rtx4090(4);
+        let m = ModelSpec::mha_30b();
+        let t = 4096;
+        let c = m.layer_chunk_cost(t, 0);
+        let flops = (c.gemm_flops_attn + c.gemm_flops_mlp + c.attn_flops) / 4.0;
+        let compute = node.device.gemm_s(flops, t);
+        let comm_fp16 = 2.0 * node.allreduce_s(c.ar_bytes, false);
+        let comm_int8 = 2.0 * node.allreduce_s(c.ar_bytes, true);
+        let share_fp16 = comm_fp16 / (comm_fp16 + compute);
+        let share_int8 = comm_int8 / (comm_int8 + compute);
+        assert!((0.65..0.85).contains(&share_fp16), "fp16 comm share {share_fp16}");
+        assert!((0.42..0.62).contains(&share_int8), "int8 comm share {share_int8}");
+    }
+
+    #[test]
+    fn paper_regime_a800_compute_dominates() {
+        // Paper §3.2: on A/H-series the computation share exceeds ~75%.
+        use crate::model::ModelSpec;
+        let node = NodeProfile::a800(4);
+        let m = ModelSpec::gqa_70b();
+        let t = 8192;
+        let c = m.layer_chunk_cost(t, 0);
+        let flops = (c.gemm_flops_attn + c.gemm_flops_mlp + c.attn_flops) / 4.0;
+        let compute = node.device.gemm_s(flops, t);
+        let comm = 2.0 * node.allreduce_s(c.ar_bytes, false);
+        let share = compute / (comm + compute);
+        assert!(share > 0.70, "compute share {share}");
+    }
+
+    #[test]
+    fn int8_wire_halves_comm() {
+        let node = NodeProfile::rtx4090(4);
+        let fp16 = node.allreduce_s(100 << 20, false);
+        let int8 = node.allreduce_s(100 << 20, true);
+        assert!((0.45..0.60).contains(&(int8 / fp16)));
+    }
+
+    #[test]
+    fn presets_by_name() {
+        assert_eq!(NodeProfile::by_name("4090", 8).unwrap().cards, 8);
+        assert_eq!(NodeProfile::by_name("a800", 4).unwrap().device.name, "a800");
+        assert!(NodeProfile::by_name("h100", 4).is_none());
+    }
+
+    #[test]
+    fn custom_profile_from_config() {
+        let text = r#"
+            [hardware]
+            name = h800ish
+            cards = 8
+            peak_tflops = 990
+            contention = 1.12
+            link_gbps = 200
+            int8_wire = false
+        "#;
+        let map = crate::config::parse_config_str(text).unwrap();
+        let p = NodeProfile::from_map(&map).unwrap();
+        assert_eq!(p.device.name, "h800ish");
+        assert_eq!(p.cards, 8);
+        assert_eq!(p.device.peak_flops, 990e12);
+        assert_eq!(p.link.link_bytes_per_s, 200e9);
+        assert!(!p.int8_wire_default);
+        // untouched knobs keep the a800 defaults
+        assert_eq!(p.device.m_half, 160.0);
+    }
+
+    #[test]
+    fn custom_profile_rejects_bad_keys_and_values() {
+        let bad_key = crate::config::parse_config_str("[hardware]\nwatts = 300").unwrap();
+        assert!(NodeProfile::from_map(&bad_key).is_err());
+        let bad_val =
+            crate::config::parse_config_str("[hardware]\ncontention = 0.5").unwrap();
+        assert!(NodeProfile::from_map(&bad_val).is_err());
+        let zero_cards = crate::config::parse_config_str("[hardware]\ncards = 0").unwrap();
+        assert!(NodeProfile::from_map(&zero_cards).is_err());
+    }
+
+    #[test]
+    fn contention_in_paper_band() {
+        assert!((1.15..=1.20).contains(&NodeProfile::a800(4).device.contention));
+        assert!(NodeProfile::rtx4090(4).device.contention < 1.05);
+    }
+}

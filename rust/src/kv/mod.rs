@@ -1,0 +1,313 @@
+//! Paged KV-cache manager (vLLM-style block allocator).
+//!
+//! The real engine keeps one cache per (rank, layer) as a dense
+//! `[n_kv_heads/tp, max_seq, head_dim]` f32 buffer matching the AOT
+//! attention stage's input; this module manages *which sequence owns which
+//! slot range* — block allocation, per-sequence block tables, chunk
+//! appends, and free-list invariants. Chunked prefill appends one chunk's
+//! worth of positions at a time, which is exactly what ISO's intra-sequence
+//! micro-batches do.
+
+use std::collections::BTreeMap;
+
+/// Allocation error.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum KvError {
+    #[error("out of KV blocks (need {need}, free {free})")]
+    OutOfBlocks { need: usize, free: usize },
+    #[error("unknown sequence {0}")]
+    UnknownSeq(u64),
+    #[error("sequence {seq} over capacity: {len} + {add} > {cap}")]
+    OverCapacity { seq: u64, len: usize, add: usize, cap: usize },
+}
+
+/// Block-granular KV allocator for a fixed-capacity cache region.
+#[derive(Debug)]
+pub struct KvManager {
+    block_tokens: usize,
+    n_blocks: usize,
+    free: Vec<usize>,
+    /// seq id → (block ids, token length)
+    seqs: BTreeMap<u64, SeqEntry>,
+}
+
+#[derive(Debug, Clone)]
+struct SeqEntry {
+    blocks: Vec<usize>,
+    len: usize,
+}
+
+impl KvManager {
+    /// `capacity_tokens` total slots, managed in blocks of `block_tokens`.
+    pub fn new(capacity_tokens: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0 && capacity_tokens % block_tokens == 0);
+        let n_blocks = capacity_tokens / block_tokens;
+        KvManager {
+            block_tokens,
+            n_blocks,
+            free: (0..n_blocks).rev().collect(),
+            seqs: BTreeMap::new(),
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn capacity_tokens(&self) -> usize {
+        self.n_blocks * self.block_tokens
+    }
+
+    pub fn seq_len(&self, seq: u64) -> Option<usize> {
+        self.seqs.get(&seq).map(|e| e.len)
+    }
+
+    pub fn live_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Register a new empty sequence.
+    pub fn add_seq(&mut self, seq: u64) {
+        assert!(!self.seqs.contains_key(&seq), "seq {seq} already exists");
+        self.seqs.insert(seq, SeqEntry { blocks: Vec::new(), len: 0 });
+    }
+
+    /// Can `tokens` more be appended to `seq` without failing?
+    pub fn can_append(&self, seq: u64, tokens: usize) -> bool {
+        match self.seqs.get(&seq) {
+            None => false,
+            Some(e) => {
+                let have = e.blocks.len() * self.block_tokens - e.len;
+                let need_tokens = tokens.saturating_sub(have);
+                let need_blocks = need_tokens.div_ceil(self.block_tokens);
+                need_blocks <= self.free.len()
+            }
+        }
+    }
+
+    /// Append a chunk of `tokens` to `seq`; returns the absolute start
+    /// position of the chunk (== previous length).
+    pub fn append(&mut self, seq: u64, tokens: usize) -> Result<usize, KvError> {
+        let e = self.seqs.get(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        let have = e.blocks.len() * self.block_tokens - e.len;
+        let need_tokens = tokens.saturating_sub(have);
+        let need_blocks = need_tokens.div_ceil(self.block_tokens);
+        if need_blocks > self.free.len() {
+            return Err(KvError::OutOfBlocks { need: need_blocks, free: self.free.len() });
+        }
+        let e = self.seqs.get_mut(&seq).unwrap();
+        for _ in 0..need_blocks {
+            e.blocks.push(self.free.pop().unwrap());
+        }
+        let start = e.len;
+        e.len += tokens;
+        Ok(start)
+    }
+
+    /// Release a sequence's blocks back to the free list.
+    pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
+        let e = self.seqs.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        self.free.extend(e.blocks);
+        Ok(())
+    }
+
+    /// The block table of a sequence (block ids in position order).
+    pub fn block_table(&self, seq: u64) -> Option<&[usize]> {
+        self.seqs.get(&seq).map(|e| e.blocks.as_slice())
+    }
+
+    /// Internal invariant: no block is both free and owned, and every
+    /// block is accounted for exactly once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.n_blocks];
+        for &b in &self.free {
+            if seen[b] {
+                return Err(format!("block {b} double-listed in free list"));
+            }
+            seen[b] = true;
+        }
+        for (seq, e) in &self.seqs {
+            if e.len > e.blocks.len() * self.block_tokens {
+                return Err(format!("seq {seq} len {} exceeds its blocks", e.len));
+            }
+            for &b in &e.blocks {
+                if seen[b] {
+                    return Err(format!("block {b} owned twice (seq {seq})"));
+                }
+                seen[b] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked blocks (neither free nor owned)".into());
+        }
+        Ok(())
+    }
+}
+
+/// A dense per-(rank, layer) KV region matching the AOT attention stage
+/// input: `[n_kv_heads, max_seq, head_dim]` f32, plus the write helper the
+/// coordinator uses to scatter a chunk's K/V at its absolute offset.
+#[derive(Clone, Debug)]
+pub struct DenseKv {
+    pub n_kv_heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl DenseKv {
+    pub fn new(n_kv_heads: usize, max_seq: usize, head_dim: usize) -> Self {
+        let n = n_kv_heads * max_seq * head_dim;
+        DenseKv { n_kv_heads, max_seq, head_dim, k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    /// Overwrite from a full returned cache (the AOT attention stage
+    /// returns the updated `[h, S, d]` cache tensors).
+    pub fn store(&mut self, k: Vec<f32>, v: Vec<f32>) {
+        debug_assert_eq!(k.len(), self.k.len());
+        debug_assert_eq!(v.len(), self.v.len());
+        self.k = k;
+        self.v = v;
+    }
+
+    /// Zero positions `[from, to)` across all heads (sequence release).
+    pub fn zero_range(&mut self, from: usize, to: usize) {
+        for h in 0..self.n_kv_heads {
+            let base = h * self.max_seq * self.head_dim;
+            let a = base + from * self.head_dim;
+            let b = base + to * self.head_dim;
+            self.k[a..b].fill(0.0);
+            self.v[a..b].fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Prop, Rng};
+
+    #[test]
+    fn append_returns_absolute_offsets() {
+        let mut kv = KvManager::new(256, 16);
+        kv.add_seq(1);
+        assert_eq!(kv.append(1, 64).unwrap(), 0);
+        assert_eq!(kv.append(1, 64).unwrap(), 64); // ISO chunk 1 offset
+        assert_eq!(kv.seq_len(1), Some(128));
+    }
+
+    #[test]
+    fn blocks_allocated_lazily_and_exactly() {
+        let mut kv = KvManager::new(256, 16);
+        kv.add_seq(1);
+        kv.append(1, 8).unwrap();
+        assert_eq!(kv.block_table(1).unwrap().len(), 1);
+        kv.append(1, 8).unwrap(); // fits the same block
+        assert_eq!(kv.block_table(1).unwrap().len(), 1);
+        kv.append(1, 1).unwrap();
+        assert_eq!(kv.block_table(1).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn out_of_blocks_fails_cleanly() {
+        let mut kv = KvManager::new(64, 16);
+        kv.add_seq(1);
+        assert!(matches!(
+            kv.append(1, 100),
+            Err(KvError::OutOfBlocks { .. })
+        ));
+        // failed append must not leak partial state
+        assert_eq!(kv.seq_len(1), Some(0));
+        assert_eq!(kv.free_blocks(), 4);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_returns_blocks() {
+        let mut kv = KvManager::new(128, 16);
+        kv.add_seq(1);
+        kv.add_seq(2);
+        kv.append(1, 48).unwrap();
+        kv.append(2, 32).unwrap();
+        kv.release(1).unwrap();
+        assert_eq!(kv.free_blocks(), 8 - 2);
+        assert!(kv.seq_len(1).is_none());
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.release(1), Err(KvError::UnknownSeq(1)));
+    }
+
+    #[test]
+    fn can_append_predicts_append() {
+        let mut kv = KvManager::new(64, 16);
+        kv.add_seq(1);
+        assert!(kv.can_append(1, 64));
+        assert!(!kv.can_append(1, 65));
+        kv.append(1, 64).unwrap();
+        assert!(!kv.can_append(1, 1));
+        assert!(!kv.can_append(99, 1)); // unknown seq
+    }
+
+    #[test]
+    fn prop_alloc_release_never_leaks() {
+        Prop::new(31).cases(200).run("kv alloc/release invariants", |rng: &mut Rng| {
+            let mut kv = KvManager::new(1024, 16);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..100 {
+                match rng.range(0, 3) {
+                    0 => {
+                        kv.add_seq(next_id);
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let seq = live[rng.range(0, live.len())];
+                        let n = rng.range(1, 100);
+                        if kv.can_append(seq, n) {
+                            kv.append(seq, n).map_err(|e| e.to_string())?;
+                        } else {
+                            // must fail without corrupting state
+                            let before = kv.free_blocks();
+                            let _ = kv.append(seq, n);
+                            if kv.free_blocks() != before {
+                                return Err("failed append leaked blocks".into());
+                            }
+                        }
+                    }
+                    _ if !live.is_empty() => {
+                        let i = rng.range(0, live.len());
+                        let seq = live.swap_remove(i);
+                        kv.release(seq).map_err(|e| e.to_string())?;
+                    }
+                    _ => {}
+                }
+                kv.check_invariants()?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_kv_store_and_zero() {
+        let mut kv = DenseKv::new(2, 8, 4);
+        let k: Vec<f32> = (0..2 * 8 * 4).map(|i| i as f32).collect();
+        kv.store(k.clone(), k.clone());
+        kv.zero_range(2, 4);
+        for h in 0..2 {
+            for pos in 2..4 {
+                for d in 0..4 {
+                    let idx = h * 32 + pos * 4 + d;
+                    assert_eq!(kv.k[idx], 0.0);
+                }
+            }
+            // outside range untouched
+            let idx = h * 32 + 4 * 4;
+            assert_eq!(kv.k[idx], k[idx]);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! # iso — Intra-Sequence Overlap of computation and communication
+//!
+//! A production-shaped reproduction of *"ISO: Overlap of Computation and
+//! Communication within Sequence For LLM Inference"* (Bin Xiao, Lei Su;
+//! Baichuan Inc., 2024).
+//!
+//! The paper overlaps the tensor-parallel all-reduces of LLM prefill with
+//! compute by splitting each sequence into two intra-sequence micro-batches
+//! (chunked-prefill style) and ping-ponging compute/communication between
+//! them, preserving only the causal attention ordering between chunks.
+//!
+//! This crate provides:
+//! * a **real serving engine** (`coordinator`, `runtime`, `collective`,
+//!   `kv`, `batch`): N tensor-parallel worker threads executing AOT-lowered
+//!   JAX/Pallas artifacts via PJRT, a real ring all-reduce (fp32 or int8
+//!   wire), a paged KV cache, continuous batching, and the ISO pipelined
+//!   scheduler — python never runs at serving time;
+//! * a **calibrated simulator** (`sim`, `sched`, `hw`, `model`, `split`)
+//!   reproducing every table and figure of the paper's evaluation on
+//!   modeled 4090/A800 nodes;
+//! * shared substrates: `config`, `quant`, `metrics`, `workload`,
+//!   `report`, `util`.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod batch;
+pub mod cli;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod hw;
+pub mod kv;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod split;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,189 @@
+//! `iso-serve` — leader entrypoint.
+//!
+//! Subcommands (see `iso-serve help`):
+//!   serve     real engine (PJRT + ring collectives) on a synthetic trace
+//!   table1    the paper's Table 1 from the calibrated simulator
+//!   timeline  Figure-1 Gantt of one prefill
+//!   sweep     reduction vs prompt length
+
+use anyhow::{anyhow, bail, Result};
+
+use iso::cli::{Cli, USAGE};
+use iso::config::{
+    parse_config_file, CommQuant, EngineConfig, SimExperiment, SplitPolicy, Strategy,
+};
+use iso::coordinator::Engine;
+use iso::hw::NodeProfile;
+use iso::model::ModelSpec;
+use iso::report::{gantt, render_table1, table1, table1_csv};
+use iso::sched::{reduction_vs_serial, run};
+use iso::workload::{LenDist, TraceGen};
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env().map_err(|e| anyhow!(e))?;
+    match cli.command.as_str() {
+        "serve" => serve(&cli),
+        "table1" => cmd_table1(&cli),
+        "timeline" => timeline(&cli),
+        "sweep" => sweep(&cli),
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn strategy_flag(cli: &Cli) -> Result<Strategy> {
+    let s = cli.get_or("strategy", "iso");
+    Strategy::parse(&s).ok_or_else(|| anyhow!("bad --strategy {s:?}"))
+}
+
+fn serve(cli: &Cli) -> Result<()> {
+    let mut cfg = if let Some(path) = cli.get("config") {
+        let map = parse_config_file(std::path::Path::new(path)).map_err(|e| anyhow!(e))?;
+        EngineConfig::from_map(&map).map_err(|e| anyhow!(e))?
+    } else {
+        EngineConfig::default()
+    };
+    if cli.has("strategy") {
+        cfg.strategy = strategy_flag(cli)?;
+    }
+    if cli.has("tp") {
+        cfg.tp = cli.usize_or("tp", cfg.tp).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(q) = cli.get("comm-quant") {
+        cfg.comm_quant = CommQuant::parse(q).ok_or_else(|| anyhow!("bad --comm-quant {q:?}"))?;
+    }
+    if let Some(s) = cli.get("split") {
+        cfg.split = SplitPolicy::parse(s).ok_or_else(|| anyhow!("bad --split {s:?}"))?;
+    }
+    let n_requests = cli.usize_or("requests", 8).map_err(|e| anyhow!(e))?;
+    let prompt_len = cli.usize_or("prompt-len", 128).map_err(|e| anyhow!(e))?;
+    let decode = cli.usize_or("decode", 0).map_err(|e| anyhow!(e))?;
+
+    println!(
+        "engine: tp={} strategy={} comm_quant={:?} artifacts={}",
+        cfg.tp, cfg.strategy, cfg.comm_quant, cfg.artifacts_dir
+    );
+    let mut engine = Engine::start(cfg)?;
+    let vocab = engine.manifest.config.vocab;
+    let max_seq = engine.manifest.config.max_seq;
+    if prompt_len + decode > max_seq {
+        bail!("prompt-len {prompt_len} + decode {decode} exceeds max_seq {max_seq}");
+    }
+    let rate: f64 = cli
+        .get("rate")
+        .map(|v| v.parse().map_err(|_| anyhow!("bad --rate {v:?}")))
+        .transpose()?
+        .unwrap_or(0.0);
+    let mut tracegen =
+        TraceGen::new(7, vocab, LenDist::Fixed(prompt_len)).decode_steps(decode).rate(rate);
+    let reqs = tracegen.generate(n_requests);
+    if rate > 0.0 {
+        // Continuous batching over a paced arrival trace.
+        let trace = engine.serve_trace(&reqs)?;
+        let mut t = trace.clone();
+        println!(
+            "completed {} requests, {:.0} tok/s; {}",
+            trace.completed,
+            trace.throughput_tok_s(),
+            t.ttft_ms.summary("ttft_from_arrival_ms"),
+        );
+        println!("{}", t.e2e_ms.summary("e2e_ms"));
+    } else {
+        for r in &reqs {
+            let out = engine.generate(&r.prompt, r.decode_steps)?;
+            println!(
+                "req {:>3}: ttft {:>8.1}ms  tokens {:?}",
+                r.id,
+                out.ttft_ms,
+                &out.tokens[..out.tokens.len().min(8)]
+            );
+        }
+    }
+    let report = engine.shutdown()?;
+    let mut m = report.metrics;
+    println!("\n{}", m.report());
+    for w in &report.workers {
+        println!(
+            "rank {}: compute={:.0}ms stall={:.0}ms comm={:.0}ms overlap_eff={:.2}",
+            w.rank,
+            w.compute_ms,
+            w.stall_ms,
+            w.comm_ms,
+            w.overlap_efficiency()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table1(cli: &Cli) -> Result<()> {
+    let strategy = strategy_flag(cli)?;
+    let rows = table1(strategy);
+    print!(
+        "{}",
+        render_table1(
+            &rows,
+            &format!("% decrease in prefill duration vs serial — {strategy} (simulated)"),
+        )
+    );
+    if let Some(path) = cli.get("csv") {
+        std::fs::write(path, table1_csv(&rows))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn node_from_flags(cli: &Cli) -> Result<(NodeProfile, ModelSpec)> {
+    let model_name = cli.get_or("model", "30b");
+    let model =
+        ModelSpec::by_name(&model_name).ok_or_else(|| anyhow!("bad --model {model_name:?}"))?;
+    // --hw-file points at a [hardware] config (see configs/hardware-*.conf)
+    // for custom platforms; otherwise --gpu/--cards select a preset.
+    let node = if let Some(path) = cli.get("hw-file") {
+        let map = parse_config_file(std::path::Path::new(path)).map_err(|e| anyhow!(e))?;
+        NodeProfile::from_map(&map).map_err(|e| anyhow!(e))?
+    } else {
+        let gpu = cli.get_or("gpu", "4090");
+        let cards = cli.usize_or("cards", 4).map_err(|e| anyhow!(e))?;
+        NodeProfile::by_name(&gpu, cards).ok_or_else(|| anyhow!("bad --gpu {gpu:?}"))?
+    };
+    Ok((node, model))
+}
+
+fn timeline(cli: &Cli) -> Result<()> {
+    let (node, model) = node_from_flags(cli)?;
+    let len = cli.usize_or("len", 8192).map_err(|e| anyhow!(e))?;
+    let layers = cli.usize_or("layers", 3).map_err(|e| anyhow!(e))?;
+    let strategy = strategy_flag(cli)?;
+    let e = SimExperiment::new(node, model.clone(), len, strategy);
+    let tl = run(&e);
+    println!(
+        "{strategy} on {}·{} cards, {} len {}: makespan {:.1}ms",
+        e.node.device.name,
+        e.node.cards,
+        model.name,
+        len,
+        tl.makespan_s * 1e3
+    );
+    let until = tl.makespan_s / model.n_layers as f64 * layers as f64;
+    print!("{}", gantt(&tl, 110, until));
+    Ok(())
+}
+
+fn sweep(cli: &Cli) -> Result<()> {
+    let (node, model) = node_from_flags(cli)?;
+    let strategy = strategy_flag(cli)?;
+    println!("reduction vs serial — {} on {}-{}", model.name, node.device.name, node.cards);
+    for i in 0..8 {
+        let len = 1024usize << i;
+        let mut e = SimExperiment::new(node.clone(), model.clone(), len, strategy);
+        e.gemm_segments = if node.device.name == "a800" { 4 } else { 1 };
+        println!("{:>7}k  {:>6.1}%", len / 1024, reduction_vs_serial(&e) * 100.0);
+    }
+    Ok(())
+}

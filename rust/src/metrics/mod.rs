@@ -1,0 +1,207 @@
+//! Serving metrics: monotonic timers, streaming histograms, and the
+//! latency/throughput summaries the examples and benches report.
+
+use std::time::{Duration, Instant};
+
+/// Wall-clock stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Reservoir-free exact histogram: keeps all samples (our runs are small
+/// enough), gives exact percentiles. Values are in arbitrary units; the
+/// engine records milliseconds.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile by nearest-rank (q in [0,1]).
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let rank = ((q * self.samples.len() as f64).ceil() as usize).clamp(1, self.samples.len());
+        self.samples[rank - 1]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(0.50)
+    }
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(0.95)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    pub fn summary(&mut self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={:.3} p50={:.3} p95={:.3} p99={:.3} min={:.3} max={:.3}",
+            self.len(),
+            self.mean(),
+            self.p50(),
+            self.p95(),
+            self.p99(),
+            self.min(),
+            self.max()
+        )
+    }
+}
+
+/// Engine-level counters reported by the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    /// Time-to-first-token per request (ms) — the paper's headline metric.
+    pub ttft_ms: Histogram,
+    /// Per-decode-step latency (ms).
+    pub decode_ms: Histogram,
+    /// Prefill chunks executed.
+    pub prefill_chunks: u64,
+    /// All-reduce invocations.
+    pub allreduces: u64,
+    /// Bytes moved by collectives (post-quantization wire bytes).
+    pub comm_bytes: u64,
+    /// Total generated tokens.
+    pub generated_tokens: u64,
+    /// Wall time the comm stream overlapped with compute (ms, ISO only).
+    pub overlapped_ms: f64,
+}
+
+impl EngineMetrics {
+    pub fn report(&mut self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.ttft_ms.summary("ttft_ms"));
+        s.push('\n');
+        if !self.decode_ms.is_empty() {
+            s.push_str(&self.decode_ms.summary("decode_ms"));
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "prefill_chunks={} allreduces={} comm_bytes={} generated={} overlapped_ms={:.2}",
+            self.prefill_chunks,
+            self.allreduces,
+            self.comm_bytes,
+            self.generated_tokens,
+            self.overlapped_ms
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact_nearest_rank() {
+        let mut h = Histogram::new();
+        for v in 1..=100 {
+            h.record(v as f64);
+        }
+        assert_eq!(h.p50(), 50.0);
+        assert_eq!(h.p95(), 95.0);
+        assert_eq!(h.p99(), 99.0);
+        assert_eq!(h.percentile(1.0), 100.0);
+        assert_eq!(h.percentile(0.0), 1.0); // clamped to rank 1
+    }
+
+    #[test]
+    fn mean_min_max() {
+        let mut h = Histogram::new();
+        for v in [2.0, 4.0, 6.0] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 4.0);
+        assert_eq!(h.min(), 2.0);
+        assert_eq!(h.max(), 6.0);
+        assert_eq!(h.len(), 3);
+    }
+
+    #[test]
+    fn empty_histogram_is_nan() {
+        let mut h = Histogram::new();
+        assert!(h.mean().is_nan());
+        assert!(h.p50().is_nan());
+    }
+
+    #[test]
+    fn record_after_percentile_resorts() {
+        let mut h = Histogram::new();
+        h.record(10.0);
+        assert_eq!(h.p50(), 10.0);
+        h.record(1.0);
+        assert_eq!(h.percentile(0.5), 1.0);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn engine_metrics_report_contains_counts() {
+        let mut m = EngineMetrics::default();
+        m.ttft_ms.record(12.5);
+        m.prefill_chunks = 4;
+        m.allreduces = 16;
+        let r = m.report();
+        assert!(r.contains("prefill_chunks=4"));
+        assert!(r.contains("allreduces=16"));
+    }
+}

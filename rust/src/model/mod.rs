@@ -1,0 +1,237 @@
+//! Transformer geometry and exact per-op cost accounting.
+//!
+//! The simulator consumes `(flops, gemm_rows, bytes)` per op — never
+//! weights — so the paper-scale models are pure specs. Geometry follows
+//! the paper's evaluation: a ~30B dense MHA model and a ~70B dense GQA
+//! model (§4.1), with int8 weights/KV/GEMM and fp16 activations.
+
+/// Transformer geometry (single model replica; TP divides it by `cards`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    /// bytes per activation element on the wire *before* any comm quant
+    /// (fp16 = 2, matching the paper's activation dtype).
+    pub act_bytes: usize,
+}
+
+impl ModelSpec {
+    /// ~30B dense MHA — LLaMA-30B-like geometry (paper's "30b (MHA)").
+    pub fn mha_30b() -> Self {
+        ModelSpec {
+            name: "30b-mha".into(),
+            d_model: 6656,
+            n_heads: 52,
+            n_kv_heads: 52,
+            head_dim: 128,
+            d_ff: 17920,
+            n_layers: 60,
+            vocab: 64000,
+            act_bytes: 2,
+        }
+    }
+
+    /// ~70B dense GQA — LLaMA-70B-like geometry (paper's "70b (GQA)").
+    pub fn gqa_70b() -> Self {
+        ModelSpec {
+            name: "70b-gqa".into(),
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 28672,
+            n_layers: 80,
+            vocab: 64000,
+            act_bytes: 2,
+        }
+    }
+
+    /// The tiny real model the CPU engine actually executes (must match
+    /// `python/compile/model.py::GQA_TINY`).
+    pub fn tiny_gqa() -> Self {
+        ModelSpec {
+            name: "tiny-gqa".into(),
+            d_model: 128,
+            n_heads: 8,
+            n_kv_heads: 4,
+            head_dim: 16,
+            d_ff: 512,
+            n_layers: 4,
+            vocab: 512,
+            act_bytes: 4, // CPU engine keeps f32 activations
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "30b" | "30b-mha" => Some(Self::mha_30b()),
+            "70b" | "70b-gqa" => Some(Self::gqa_70b()),
+            "tiny" | "tiny-gqa" => Some(Self::tiny_gqa()),
+            _ => None,
+        }
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Total parameter count (sanity check for the spec tables).
+    pub fn param_count(&self) -> usize {
+        let per_layer = self.d_model * (self.q_dim() + 2 * self.kv_dim()) // qkv
+            + self.q_dim() * self.d_model                                // o_proj
+            + 3 * self.d_model * self.d_ff                               // gate/up/down
+            + 2 * self.d_model;                                          // norms
+        2 * self.vocab * self.d_model + self.n_layers * per_layer + self.d_model
+    }
+
+    /// KV-cache bytes per token (int8 KV per the paper's quant setup).
+    pub fn kv_bytes_per_token(&self, kv_quant_bytes: usize) -> usize {
+        2 * self.kv_dim() * kv_quant_bytes * self.n_layers
+    }
+}
+
+/// FLOPs and shape metadata for the compute ops of one layer over a chunk
+/// of `t` tokens whose first token sits at absolute position `offset`.
+/// All values are *whole-replica*; divide FLOPs by the TP degree for
+/// per-device work (the sim does).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerChunkCost {
+    /// qkv + o_proj + gate/up/down GEMM flops (2*m*n*k convention).
+    pub gemm_flops_attn: f64,
+    pub gemm_flops_mlp: f64,
+    /// attention score+value flops (quadratic part, causal).
+    pub attn_flops: f64,
+    /// rows (m) of the chunk GEMMs — drives the efficiency curve.
+    pub gemm_rows: usize,
+    /// bytes all-reduced after attention / after MLP (pre-quant, fp16).
+    pub ar_bytes: usize,
+}
+
+impl ModelSpec {
+    /// Costs of one transformer layer on a chunk `[offset, offset+t)`.
+    ///
+    /// Causal attention over the KV cache: each query row `i` attends to
+    /// `offset + i + 1` keys, so total attended keys = t*offset + t(t+1)/2.
+    pub fn layer_chunk_cost(&self, t: usize, offset: usize) -> LayerChunkCost {
+        let d = self.d_model as f64;
+        let tf = t as f64;
+        let qd = self.q_dim() as f64;
+        let kvd = self.kv_dim() as f64;
+        let ff = self.d_ff as f64;
+
+        let qkv = 2.0 * tf * d * (qd + 2.0 * kvd);
+        let o = 2.0 * tf * qd * d;
+        let mlp = 3.0 * 2.0 * tf * d * ff;
+
+        let attended = tf * offset as f64 + tf * (tf + 1.0) / 2.0;
+        // score (q·k) + weighted value (p·v), over n_heads*head_dim each.
+        let attn = 2.0 * 2.0 * attended * qd;
+
+        LayerChunkCost {
+            gemm_flops_attn: qkv + o,
+            gemm_flops_mlp: mlp,
+            attn_flops: attn,
+            gemm_rows: t,
+            ar_bytes: t * self.d_model * self.act_bytes,
+        }
+    }
+
+    /// Whole-prefill flops for a prompt of `len` tokens (all layers).
+    pub fn prefill_flops(&self, len: usize) -> f64 {
+        let c = self.layer_chunk_cost(len, 0);
+        self.n_layers as f64 * (c.gemm_flops_attn + c.gemm_flops_mlp + c.attn_flops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_near_nominal() {
+        let p30 = ModelSpec::mha_30b().param_count() as f64 / 1e9;
+        let p70 = ModelSpec::gqa_70b().param_count() as f64 / 1e9;
+        assert!((30.0..36.0).contains(&p30), "30b spec has {p30}B params");
+        assert!((65.0..72.0).contains(&p70), "70b spec has {p70}B params");
+    }
+
+    #[test]
+    fn gqa_shrinks_kv() {
+        let mha = ModelSpec::mha_30b();
+        let gqa = ModelSpec::gqa_70b();
+        assert_eq!(mha.kv_dim(), mha.q_dim());
+        assert!(gqa.kv_dim() * 8 == gqa.q_dim());
+        assert!(gqa.kv_bytes_per_token(1) < mha.kv_bytes_per_token(1));
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(ModelSpec::by_name("30b").unwrap().name, "30b-mha");
+        assert_eq!(ModelSpec::by_name("70b-gqa").unwrap().name, "70b-gqa");
+        assert_eq!(ModelSpec::by_name("tiny").unwrap().name, "tiny-gqa");
+        assert!(ModelSpec::by_name("13b").is_none());
+    }
+
+    #[test]
+    fn chunk_costs_additive_in_tokens() {
+        // Splitting [0, 2t) into [0, t) + [t, 2t) preserves total flops —
+        // the ISO split is work-conserving (paper §3.1).
+        let m = ModelSpec::gqa_70b();
+        let t = 1024;
+        let full = m.layer_chunk_cost(2 * t, 0);
+        let a = m.layer_chunk_cost(t, 0);
+        let b = m.layer_chunk_cost(t, t);
+        let sum_attn = a.attn_flops + b.attn_flops;
+        assert!((full.attn_flops - sum_attn).abs() / full.attn_flops < 1e-12);
+        let sum_gemm = a.gemm_flops_attn + b.gemm_flops_attn;
+        assert!((full.gemm_flops_attn - sum_gemm).abs() / full.gemm_flops_attn < 1e-12);
+        assert_eq!(full.ar_bytes, a.ar_bytes + b.ar_bytes);
+    }
+
+    #[test]
+    fn second_chunk_attention_heavier() {
+        // Paper §6: the latter half of the sequence does markedly more
+        // attention work — the motivation for uneven splits.
+        let m = ModelSpec::mha_30b();
+        let a = m.layer_chunk_cost(2048, 0);
+        let b = m.layer_chunk_cost(2048, 2048);
+        assert!(b.attn_flops > 2.0 * a.attn_flops);
+        assert_eq!(a.gemm_flops_mlp, b.gemm_flops_mlp); // MLP is position-free
+    }
+
+    #[test]
+    fn ar_bytes_are_fp16_activations() {
+        let m = ModelSpec::gqa_70b();
+        let c = m.layer_chunk_cost(4096, 0);
+        assert_eq!(c.ar_bytes, 4096 * 8192 * 2);
+    }
+
+    #[test]
+    fn prefill_flops_scale_superlinearly() {
+        let m = ModelSpec::mha_30b();
+        let f1 = m.prefill_flops(1024);
+        let f2 = m.prefill_flops(2048);
+        assert!(f2 > 2.0 * f1); // quadratic attention term
+        assert!(f2 < 4.0 * f1);
+    }
+
+    #[test]
+    fn tiny_matches_python_config() {
+        // Must agree with python/compile/model.py::GQA_TINY.
+        let t = ModelSpec::tiny_gqa();
+        assert_eq!(
+            (t.d_model, t.n_heads, t.n_kv_heads, t.head_dim, t.d_ff, t.n_layers, t.vocab),
+            (128, 8, 4, 16, 512, 4, 512)
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! Paper-artifact rendering: Table 1 grids, Figure-1 ASCII Gantt charts,
+//! and CSV/JSON dumps for downstream plotting.
+
+use crate::config::{SimExperiment, Strategy};
+use crate::hw::NodeProfile;
+use crate::model::ModelSpec;
+use crate::sched;
+use crate::sim::{OpKind, Timeline};
+use crate::util::Json;
+
+/// One row of the Table-1 grid.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub gpu: String,
+    pub cards: usize,
+    pub model: String,
+    /// (prompt_len, reduction) pairs; reduction is the fractional decrease
+    /// of prefill duration vs the serial baseline (paper's percentages).
+    pub cells: Vec<(usize, f64)>,
+}
+
+/// Prompt lengths per platform, matching Table 1's populated cells
+/// ("-" cells are lengths the authors could not fit in memory).
+pub fn table1_lens(gpu: &str, cards: usize) -> Vec<usize> {
+    let all: Vec<usize> = (0..8).map(|i| 1024 << i).collect(); // 1k..128k
+    match (gpu, cards) {
+        ("4090", 4) => all[..6].to_vec(),  // 1k..32k
+        ("4090", 8) => all[..7].to_vec(),  // 1k..64k
+        _ => all,                          // a800: 1k..128k
+    }
+}
+
+/// Compute the full Table-1 grid for a strategy (Iso reproduces the
+/// paper's table; other strategies give the §4.2 comparison rows).
+pub fn table1(strategy: Strategy) -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for (gpu, cards) in [("4090", 4), ("4090", 8), ("a800", 4), ("a800", 8)] {
+        for model_name in ["30b", "70b"] {
+            let model = ModelSpec::by_name(model_name).unwrap();
+            let node = NodeProfile::by_name(gpu, cards).unwrap();
+            let mut cells = Vec::new();
+            for len in table1_lens(gpu, cards) {
+                let mut e = SimExperiment::new(node.clone(), model.clone(), len, strategy);
+                // Paper setup: segmented GEMMs on the compute-bound A800,
+                // monolithic launches on the 4090.
+                e.gemm_segments = if gpu == "a800" { 4 } else { 1 };
+                cells.push((len, sched::reduction_vs_serial(&e)));
+            }
+            rows.push(Table1Row {
+                gpu: gpu.into(),
+                cards,
+                model: model_name.into(),
+                cells,
+            });
+        }
+    }
+    rows
+}
+
+/// Render the grid in the paper's layout.
+pub fn render_table1(rows: &[Table1Row], title: &str) -> String {
+    let lens: Vec<usize> = (0..8).map(|i| 1024 << i).collect();
+    let mut s = String::new();
+    s.push_str(&format!("{title}\n"));
+    s.push_str(&format!("{:<14} {:<6}", "GPU", "model"));
+    for l in &lens {
+        s.push_str(&format!(" {:>6}", format_len(*l)));
+    }
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!("{:<14} {:<6}", format!("{} {}c", r.gpu, r.cards), r.model));
+        for l in &lens {
+            match r.cells.iter().find(|(len, _)| len == l) {
+                Some((_, red)) => s.push_str(&format!(" {:>5.0}%", red * 100.0)),
+                None => s.push_str(&format!(" {:>6}", "-")),
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+fn format_len(l: usize) -> String {
+    format!("{}k", l / 1024)
+}
+
+/// CSV dump (gpu,cards,model,len,reduction).
+pub fn table1_csv(rows: &[Table1Row]) -> String {
+    let mut s = String::from("gpu,cards,model,prompt_len,reduction\n");
+    for r in rows {
+        for (len, red) in &r.cells {
+            s.push_str(&format!("{},{},{},{},{:.4}\n", r.gpu, r.cards, r.model, len, red));
+        }
+    }
+    s
+}
+
+/// JSON dump of a timeline (for external plotting of Figure 1).
+pub fn timeline_json(tl: &Timeline) -> Json {
+    let mut spans = Vec::new();
+    for s in &tl.spans {
+        let mut o = Json::obj();
+        o.set("label", s.label.as_str())
+            .set("kind", if s.kind == OpKind::Compute { "compute" } else { "comm" })
+            .set("chunk", s.chunk)
+            .set("start_us", s.start_s * 1e6)
+            .set("end_us", s.end_s * 1e6)
+            .set("contended", s.contended);
+        spans.push(o);
+    }
+    let mut root = Json::obj();
+    root.set("makespan_us", tl.makespan_s * 1e6).set("spans", Json::Arr(spans));
+    root
+}
+
+/// ASCII Gantt of the first `layers` layers of a timeline — the Figure-1
+/// schematic, regenerated from the simulator.
+pub fn gantt(tl: &Timeline, width: usize, until_s: f64) -> String {
+    let until = if until_s > 0.0 { until_s } else { tl.makespan_s };
+    let scale = width as f64 / until;
+    let mut out = String::new();
+    for (kind, name) in [(OpKind::Compute, "COMPUTE"), (OpKind::Comm, "COMM   ")] {
+        let mut row = vec![' '; width];
+        for s in tl.spans.iter().filter(|s| s.kind == kind && s.start_s < until) {
+            let a = (s.start_s * scale) as usize;
+            let b = (((s.end_s.min(until)) * scale) as usize).max(a + 1).min(width);
+            let ch = match (kind, s.chunk % 2, s.contended) {
+                (OpKind::Compute, 0, false) => '0',
+                (OpKind::Compute, 1, false) => '1',
+                (OpKind::Compute, 0, true) => 'o',
+                (OpKind::Compute, 1, true) => 'i',
+                (OpKind::Comm, 0, _) => '#',
+                _ => '%',
+            };
+            for c in row.iter_mut().take(b).skip(a) {
+                *c = ch;
+            }
+        }
+        out.push_str(name);
+        out.push(' ');
+        out.push('|');
+        out.extend(row);
+        out.push('|');
+        out.push('\n');
+    }
+    out.push_str(
+        "        0/1: chunk compute  o/i: contended compute  #/%: chunk all-reduce\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimExperiment;
+
+    #[test]
+    fn lens_match_paper_populated_cells() {
+        assert_eq!(table1_lens("4090", 4).len(), 6);
+        assert_eq!(table1_lens("4090", 8).len(), 7);
+        assert_eq!(table1_lens("a800", 4).len(), 8);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let rows = vec![Table1Row {
+            gpu: "4090".into(),
+            cards: 4,
+            model: "30b".into(),
+            cells: vec![(1024, 0.38), (2048, 0.42)],
+        }];
+        let csv = table1_csv(&rows);
+        assert!(csv.starts_with("gpu,cards,model"));
+        assert!(csv.contains("4090,4,30b,1024,0.38"));
+    }
+
+    #[test]
+    fn render_marks_missing_cells() {
+        let rows = vec![Table1Row {
+            gpu: "4090".into(),
+            cards: 4,
+            model: "30b".into(),
+            cells: vec![(1024, 0.5)],
+        }];
+        let s = render_table1(&rows, "t");
+        assert!(s.contains("50%"));
+        assert!(s.contains(" -"));
+    }
+
+    #[test]
+    fn gantt_renders_both_streams() {
+        let e = SimExperiment::new(
+            NodeProfile::rtx4090(4),
+            ModelSpec::mha_30b(),
+            4096,
+            Strategy::Iso,
+        );
+        let tl = sched::run(&e);
+        let g = gantt(&tl, 100, tl.makespan_s / 20.0);
+        assert!(g.contains("COMPUTE"));
+        assert!(g.contains("COMM"));
+        assert!(g.contains('#') || g.contains('%'));
+    }
+
+    #[test]
+    fn timeline_json_roundtrips() {
+        let e = SimExperiment::new(
+            NodeProfile::rtx4090(4),
+            ModelSpec::mha_30b(),
+            1024,
+            Strategy::Serial,
+        );
+        let tl = sched::run(&e);
+        let j = timeline_json(&tl);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert!(parsed.get("makespan_us").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            parsed.get("spans").unwrap().as_arr().unwrap().len(),
+            tl.spans.len()
+        );
+    }
+}

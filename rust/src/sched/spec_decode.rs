@@ -1,0 +1,174 @@
+//! Speculative-decode overlap study (paper §6, "Benefits for the Decode
+//! Stage").
+//!
+//! Plain decode moves one token per step — far too little compute and
+//! communication to overlap profitably (the paper's and our engine's
+//! finding). Speculative sampling verifies `k` draft tokens per step,
+//! which turns each decode step into a k-token chunk — a miniature
+//! prefill. The paper conjectures this makes ISO profitable on the
+//! 4090-4 (comm-heavy) platform; this module models exactly that:
+//! a verify step of `k` tokens at context offset `ctx`, run serially or
+//! ISO-split into two sub-chunks.
+
+use crate::sim::{simulate, OpGraph, OpKind, Timeline};
+
+use super::Coster;
+
+/// Build the op graph of ONE speculative verify step over all layers.
+/// `k` draft tokens at context length `ctx`; `iso` splits them k/2 + k/2.
+pub fn build_verify_step(c: &Coster, k: usize, ctx: usize, iso: bool) -> OpGraph {
+    let mut g = OpGraph::new();
+    if !iso || k < 2 {
+        let mut prev: Vec<usize> = vec![];
+        for l in 0..c.model.n_layers {
+            let attn = g.push(
+                format!("L{l}.verify_attn"),
+                OpKind::Compute,
+                c.attn_block_s(k, ctx),
+                &prev,
+                0,
+            );
+            let ar0 = g.push(format!("L{l}.ar0"), OpKind::Comm, c.ar_s(k, 1), &[attn], 0);
+            let mlp = g.push(
+                format!("L{l}.verify_mlp"),
+                OpKind::Compute,
+                c.mlp_block_s(k),
+                &[ar0],
+                0,
+            );
+            let ar1 = g.push(format!("L{l}.ar1"), OpKind::Comm, c.ar_s(k, 1), &[mlp], 0);
+            prev = vec![ar1];
+        }
+        return g;
+    }
+
+    let k0 = k / 2;
+    let k1 = k - k0;
+    let mut prev0: Vec<usize> = vec![];
+    let mut prev1: Vec<usize> = vec![];
+    for l in 0..c.model.n_layers {
+        let a0 = g.push(
+            format!("L{l}.attn0"),
+            OpKind::Compute,
+            c.attn_block_s(k0, ctx),
+            &prev0,
+            0,
+        );
+        let ar_a0 = g.push(format!("L{l}.ar_a0"), OpKind::Comm, c.ar_s(k0, 1), &[a0], 0);
+        // draft chunk 1 attends over chunk 0's freshly-written KV
+        let mut deps1 = prev1.clone();
+        deps1.push(a0);
+        let a1 = g.push(
+            format!("L{l}.attn1"),
+            OpKind::Compute,
+            c.attn_block_s(k1, ctx + k0),
+            &deps1,
+            1,
+        );
+        let ar_a1 = g.push(format!("L{l}.ar_a1"), OpKind::Comm, c.ar_s(k1, 1), &[a1], 1);
+        let m0 = g.push(
+            format!("L{l}.mlp0"),
+            OpKind::Compute,
+            c.mlp_block_s(k0),
+            &[ar_a0],
+            0,
+        );
+        let ar_m0 = g.push(format!("L{l}.ar_m0"), OpKind::Comm, c.ar_s(k0, 1), &[m0], 0);
+        let m1 = g.push(
+            format!("L{l}.mlp1"),
+            OpKind::Compute,
+            c.mlp_block_s(k1),
+            &[ar_a1],
+            1,
+        );
+        let ar_m1 = g.push(format!("L{l}.ar_m1"), OpKind::Comm, c.ar_s(k1, 1), &[m1], 1);
+        prev0 = vec![ar_m0];
+        prev1 = vec![ar_m1];
+    }
+    g
+}
+
+/// Simulate one verify step; returns (serial_s, iso_s).
+pub fn verify_step_times(c: &Coster, k: usize, ctx: usize, contention: f64) -> (f64, f64) {
+    let serial = simulate(&build_verify_step(c, k, ctx, false), contention).makespan_s;
+    let iso = simulate(&build_verify_step(c, k, ctx, true), contention).makespan_s;
+    (serial, iso)
+}
+
+/// Timeline of one ISO verify step (for Gantt rendering).
+pub fn verify_timeline(c: &Coster, k: usize, ctx: usize, contention: f64) -> Timeline {
+    simulate(&build_verify_step(c, k, ctx, true), contention)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SimExperiment, Strategy};
+    use crate::hw::NodeProfile;
+    use crate::model::ModelSpec;
+
+    fn coster(gpu: &str, cards: usize, model: &str) -> (Coster, f64) {
+        let e = SimExperiment::new(
+            NodeProfile::by_name(gpu, cards).unwrap(),
+            ModelSpec::by_name(model).unwrap(),
+            4096,
+            Strategy::Iso,
+        );
+        let contention = e.node.device.contention;
+        (Coster::new(&e), contention)
+    }
+
+    #[test]
+    fn single_token_decode_gains_nothing() {
+        // k=1 cannot split; ISO == serial (paper: decode overlap
+        // unprofitable).
+        let (c, f) = coster("4090", 4, "30b");
+        let (serial, iso) = verify_step_times(&c, 1, 4096, f);
+        assert!((serial - iso).abs() / serial < 1e-9);
+    }
+
+    #[test]
+    fn speculative_k_unlocks_overlap_on_4090() {
+        // Paper §6: "speculative sampling could potentially offer benefits
+        // on the 4090 with 4 cards ... a greater number of input tokens".
+        // Our α/β collective model adds a quantitative rider: splitting
+        // doubles the number of (latency-bound) collectives, so the gain
+        // only turns positive once k is large enough for the bandwidth
+        // term to dominate — k ≳ 128 drafted tokens on 4090-4.
+        let (c, f) = coster("4090", 4, "30b");
+        let gain = |k: usize| {
+            let (s, i) = verify_step_times(&c, k, 4096, f);
+            (s - i) / s
+        };
+        assert!(gain(32) > gain(8), "gain should grow with k");
+        assert!(gain(256) > gain(32), "gain should keep growing with k");
+        assert!(gain(256) > 0.10, "k=256 on 4090-4 should be clearly profitable: {}", gain(256));
+        assert!(gain(8) < 0.0, "small-k splitting is latency-dominated");
+    }
+
+    #[test]
+    fn small_k_on_a800_stays_marginal() {
+        let (c, f) = coster("a800", 4, "70b");
+        let (s, i) = verify_step_times(&c, 4, 4096, f);
+        let gain = (s - i) / s;
+        assert!(gain < 0.10, "A800 small-k gain should be marginal: {gain}");
+    }
+
+    #[test]
+    fn verify_step_costs_scale_with_context() {
+        // Longer context → heavier attention in the verify step.
+        let (c, f) = coster("4090", 4, "30b");
+        let (s_short, _) = verify_step_times(&c, 16, 1024, f);
+        let (s_long, _) = verify_step_times(&c, 16, 65536, f);
+        assert!(s_long > s_short);
+    }
+
+    #[test]
+    fn iso_graph_doubles_collectives() {
+        let (c, _) = coster("4090", 4, "30b");
+        let serial = build_verify_step(&c, 16, 1024, false);
+        let iso = build_verify_step(&c, 16, 1024, true);
+        let count = |g: &OpGraph| g.ops.iter().filter(|o| o.kind == OpKind::Comm).count();
+        assert_eq!(count(&iso), 2 * count(&serial));
+    }
+}

@@ -1,0 +1,228 @@
+//! Sequence-split policies for ISO's intra-sequence micro-batches.
+//!
+//! Paper §3.1 splits 50/50; §6 observes that causal attention makes the
+//! second half markedly heavier and proposes uneven splits (e.g. 60/40)
+//! and, further, decoupling the attention split from the MLP split
+//! (Fig 3). `choose_split` implements all of these against the calibrated
+//! cost model so the simulator, the benches, and the real engine agree on
+//! the split point.
+
+use crate::config::SplitPolicy;
+use crate::hw::NodeProfile;
+use crate::model::ModelSpec;
+
+/// The token counts assigned to the two micro-batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Split {
+    /// Tokens in chunk 0 (attention phase).
+    pub t0: usize,
+    /// Tokens in chunk 1.
+    pub t1: usize,
+    /// Tokens in the MLP micro-batches (== t0/t1 unless AdaptiveAttnMlp).
+    pub mlp_t0: usize,
+    pub mlp_t1: usize,
+}
+
+impl Split {
+    pub fn total(&self) -> usize {
+        self.t0 + self.t1
+    }
+}
+
+/// Per-chunk compute time (one device) of the *whole layer* — used to
+/// balance the two chunks.
+fn chunk_time_s(node: &NodeProfile, model: &ModelSpec, t: usize, offset: usize) -> f64 {
+    if t == 0 {
+        return 0.0;
+    }
+    let c = model.layer_chunk_cost(t, offset);
+    let flops = (c.gemm_flops_attn + c.gemm_flops_mlp + c.attn_flops) / node.cards as f64;
+    node.device.gemm_s(flops, t)
+}
+
+/// Attention-only per-chunk time (for the AdaptiveAttnMlp balance).
+fn attn_time_s(node: &NodeProfile, model: &ModelSpec, t: usize, offset: usize) -> f64 {
+    if t == 0 {
+        return 0.0;
+    }
+    let c = model.layer_chunk_cost(t, offset);
+    let flops = (c.gemm_flops_attn + c.attn_flops) / node.cards as f64;
+    node.device.gemm_s(flops, t)
+}
+
+/// Pick the split point for a prompt of `t` tokens.
+pub fn choose_split(
+    policy: SplitPolicy,
+    node: &NodeProfile,
+    model: &ModelSpec,
+    t: usize,
+) -> Split {
+    assert!(t >= 2, "cannot split a prompt of {t} tokens");
+    let t0 = match policy {
+        SplitPolicy::Even => t / 2,
+        SplitPolicy::Ratio(r) => ((t as f64 * r).round() as usize).clamp(1, t - 1),
+        SplitPolicy::AttnBalanced | SplitPolicy::AdaptiveAttnMlp => {
+            balance(t, |t0| {
+                let a = chunk_time_s(node, model, t0, 0);
+                let b = chunk_time_s(node, model, t - t0, t0);
+                a - b
+            })
+        }
+    };
+    let (mlp_t0, mlp_t1) = match policy {
+        // Fig 3: MLP cost is position-free, so its micro-batches split
+        // evenly regardless of the attention split.
+        SplitPolicy::AdaptiveAttnMlp => (t / 2, t - t / 2),
+        _ => (t0, t - t0),
+    };
+    Split { t0, t1: t - t0, mlp_t0, mlp_t1 }
+}
+
+/// Find t0 in [1, t-1] where `f(t0)` crosses zero (f is monotone
+/// increasing in t0 for our cost shapes); returns the closest integer.
+fn balance(t: usize, f: impl Fn(usize) -> f64) -> usize {
+    let (mut lo, mut hi) = (1usize, t - 1);
+    if f(lo) >= 0.0 {
+        return lo;
+    }
+    if f(hi) <= 0.0 {
+        return hi;
+    }
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if f(mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // Pick whichever side is closer to balanced.
+    if f(lo).abs() <= f(hi).abs() {
+        lo
+    } else {
+        hi
+    }
+}
+
+/// Predicted imbalance |time0 - time1| / max for diagnostics and the Fig-3
+/// bench.
+pub fn imbalance(node: &NodeProfile, model: &ModelSpec, s: &Split) -> f64 {
+    let a = chunk_time_s(node, model, s.t0, 0);
+    let b = chunk_time_s(node, model, s.t1, s.t0);
+    (a - b).abs() / a.max(b)
+}
+
+/// Attention-phase imbalance (drives Fig 3's motivation).
+pub fn attn_imbalance(node: &NodeProfile, model: &ModelSpec, s: &Split) -> f64 {
+    let a = attn_time_s(node, model, s.t0, 0);
+    let b = attn_time_s(node, model, s.t1, s.t0);
+    (a - b).abs() / a.max(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prop;
+
+    fn setup() -> (NodeProfile, ModelSpec) {
+        (NodeProfile::a800(4), ModelSpec::gqa_70b())
+    }
+
+    #[test]
+    fn even_split_halves() {
+        let (n, m) = setup();
+        let s = choose_split(SplitPolicy::Even, &n, &m, 4096);
+        assert_eq!((s.t0, s.t1), (2048, 2048));
+        assert_eq!((s.mlp_t0, s.mlp_t1), (2048, 2048));
+    }
+
+    #[test]
+    fn ratio_split() {
+        let (n, m) = setup();
+        let s = choose_split(SplitPolicy::Ratio(0.6), &n, &m, 1000);
+        assert_eq!(s.t0, 600);
+        assert_eq!(s.t1, 400);
+    }
+
+    #[test]
+    fn balanced_split_gives_first_chunk_more_tokens() {
+        // Causal attention: chunk 1 attends over chunk 0's KV too, so the
+        // balanced point puts MORE tokens in chunk 0 (paper §6's 60/40).
+        let (n, m) = setup();
+        for t in [2048usize, 8192, 32768] {
+            let s = choose_split(SplitPolicy::AttnBalanced, &n, &m, t);
+            assert!(s.t0 > s.t1, "t={t}: t0={} t1={}", s.t0, s.t1);
+            assert!(s.t0 < (t as f64 * 0.75) as usize, "t={t}: t0={}", s.t0);
+        }
+    }
+
+    #[test]
+    fn balanced_split_reduces_imbalance_vs_even() {
+        let (n, m) = setup();
+        for t in [4096usize, 16384] {
+            let even = choose_split(SplitPolicy::Even, &n, &m, t);
+            let bal = choose_split(SplitPolicy::AttnBalanced, &n, &m, t);
+            assert!(
+                imbalance(&n, &m, &bal) < imbalance(&n, &m, &even),
+                "t={t}: bal {} !< even {}",
+                imbalance(&n, &m, &bal),
+                imbalance(&n, &m, &even)
+            );
+            assert!(imbalance(&n, &m, &bal) < 0.03, "t={t}");
+        }
+    }
+
+    #[test]
+    fn adaptive_attn_mlp_splits_mlp_evenly() {
+        let (n, m) = setup();
+        let s = choose_split(SplitPolicy::AdaptiveAttnMlp, &n, &m, 8192);
+        assert!(s.t0 > s.t1); // attention still balanced
+        assert_eq!(s.mlp_t0, 4096);
+        assert_eq!(s.mlp_t1, 4096);
+        assert_eq!(s.t0 + s.t1, 8192);
+    }
+
+    #[test]
+    fn longer_prompts_push_balance_toward_60_40() {
+        // As the quadratic attention term grows, the balanced first chunk
+        // grows past 50% toward the paper's illustrative 60%.
+        let (n, m) = setup();
+        let frac = |t: usize| {
+            let s = choose_split(SplitPolicy::AttnBalanced, &n, &m, t);
+            s.t0 as f64 / t as f64
+        };
+        assert!(frac(65536) > frac(1024));
+        assert!((0.5..0.75).contains(&frac(65536)));
+    }
+
+    #[test]
+    fn prop_split_conserves_tokens() {
+        let (n, m) = setup();
+        Prop::new(23).cases(128).run("split conserves tokens", |rng| {
+            let t = rng.range(2, 65536);
+            for policy in [
+                SplitPolicy::Even,
+                SplitPolicy::Ratio(rng.f32_range(0.1, 0.9) as f64),
+                SplitPolicy::AttnBalanced,
+                SplitPolicy::AdaptiveAttnMlp,
+            ] {
+                let s = choose_split(policy, &n, &m, t);
+                if s.t0 + s.t1 != t || s.mlp_t0 + s.mlp_t1 != t {
+                    return Err(format!("{policy:?} t={t}: {s:?}"));
+                }
+                if s.t0 == 0 || s.t1 == 0 {
+                    return Err(format!("{policy:?} t={t}: empty chunk {s:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn attn_imbalance_shrinks_under_balanced_policy() {
+        let (n, m) = setup();
+        let even = choose_split(SplitPolicy::Even, &n, &m, 16384);
+        let adaptive = choose_split(SplitPolicy::AdaptiveAttnMlp, &n, &m, 16384);
+        assert!(attn_imbalance(&n, &m, &adaptive) < attn_imbalance(&n, &m, &even));
+    }
+}

@@ -1,0 +1,60 @@
+//! Bench harness (criterion is unavailable offline — DESIGN.md §5):
+//! warmup + timed samples, mean/p50/p95 reporting, and paper-table
+//! formatting shared by every `cargo bench` target.
+
+use crate::metrics::Histogram;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+/// Time `f` for `samples` iterations after `warmup` untimed runs.
+pub fn bench(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = Histogram::new();
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        h.record(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        samples,
+        mean_ms: h.mean(),
+        p50_ms: h.p50(),
+        p95_ms: h.p95(),
+    };
+    println!(
+        "{:<44} n={:<4} mean={:>9.3}ms p50={:>9.3}ms p95={:>9.3}ms",
+        r.name, r.samples, r.mean_ms, r.p50_ms, r.p95_ms
+    );
+    r
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_times() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.samples, 5);
+        assert!(r.mean_ms >= 0.0 && r.p95_ms >= r.p50_ms * 0.5);
+    }
+}

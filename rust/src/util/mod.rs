@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNG, JSON writer, property-test
+//! driver. The offline build has no `rand`/`serde`/`proptest`, so these are
+//! hand-rolled (DESIGN.md §5).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use prop::Prop;
+pub use rng::Rng;

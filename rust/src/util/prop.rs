@@ -1,0 +1,73 @@
+//! Hand-rolled property-test driver (no proptest in the offline build).
+//!
+//! Runs a closure over many RNG-derived cases; on failure it panics with
+//! the failing case index and seed so the case is reproducible with
+//! `Prop::new(seed).run_from(index, ..)`.
+
+use super::rng::Rng;
+
+pub struct Prop {
+    seed: u64,
+    cases: usize,
+}
+
+impl Prop {
+    pub fn new(seed: u64) -> Self {
+        Prop { seed, cases: 256 }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Run `f` over `cases` independent RNG streams; `f` returns
+    /// `Err(String)` (or panics) to fail.
+    pub fn run<F>(&self, name: &str, mut f: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        self.run_from(0, name, &mut f);
+    }
+
+    /// Re-run starting from a specific failing case index.
+    pub fn run_from<F>(&self, start: usize, name: &str, f: &mut F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for case in start..self.cases {
+            let mut rng = Rng::new(self.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property '{name}' failed at case {case} (seed {}): {msg}\n\
+                     reproduce with Prop::new({}).run_from({case}, ..)",
+                    self.seed, self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new(1).cases(64).run("u64 below bound", |rng| {
+            let n = rng.range(1, 1000) as u64;
+            let x = rng.below(n);
+            if x < n {
+                Ok(())
+            } else {
+                Err(format!("{x} >= {n}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure_with_case() {
+        Prop::new(2).cases(8).run("always fails", |_| Err("nope".into()));
+    }
+}

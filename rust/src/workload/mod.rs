@@ -1,0 +1,170 @@
+//! Workload generation: prompt-length distributions, Poisson arrivals,
+//! and request traces for the engine examples and benches.
+//!
+//! The paper evaluates batch-size-1 prefill at fixed prompt lengths
+//! (Table 1); the serving examples additionally exercise realistic mixed
+//! traffic, for which we provide lognormal-ish length mixtures and
+//! Poisson arrivals (the standard serving-benchmark setup).
+
+use crate::util::Rng;
+
+/// One inference request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Decode steps requested after prefill.
+    pub decode_steps: usize,
+}
+
+/// Prompt-length distribution.
+#[derive(Clone, Copy, Debug)]
+pub enum LenDist {
+    /// Every prompt exactly n tokens (Table-1 style).
+    Fixed(usize),
+    /// Uniform in [lo, hi].
+    Uniform(usize, usize),
+    /// Mixture: short chats + long documents (serving-realistic).
+    Bimodal { short: usize, long: usize, long_frac: f64 },
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(lo, hi) => rng.range(lo, hi + 1),
+            LenDist::Bimodal { short, long, long_frac } => {
+                if rng.f64() < long_frac {
+                    // jitter ±25% around the mode
+                    let j = 0.75 + rng.f64() * 0.5;
+                    ((long as f64 * j) as usize).max(2)
+                } else {
+                    let j = 0.75 + rng.f64() * 0.5;
+                    ((short as f64 * j) as usize).max(2)
+                }
+            }
+        }
+    }
+}
+
+/// Trace generator.
+#[derive(Clone, Debug)]
+pub struct TraceGen {
+    pub rng: Rng,
+    pub vocab: usize,
+    pub lens: LenDist,
+    /// Mean arrival rate (requests/second); 0 = all arrive at t=0.
+    pub rate: f64,
+    pub decode_steps: usize,
+}
+
+impl TraceGen {
+    pub fn new(seed: u64, vocab: usize, lens: LenDist) -> Self {
+        TraceGen { rng: Rng::new(seed), vocab, lens, rate: 0.0, decode_steps: 0 }
+    }
+
+    pub fn rate(mut self, r: f64) -> Self {
+        self.rate = r;
+        self
+    }
+
+    pub fn decode_steps(mut self, n: usize) -> Self {
+        self.decode_steps = n;
+        self
+    }
+
+    /// Generate `n` requests.
+    pub fn generate(&mut self, n: usize) -> Vec<Request> {
+        let mut t = 0.0;
+        (0..n)
+            .map(|i| {
+                if self.rate > 0.0 {
+                    t += self.rng.exponential(self.rate);
+                }
+                let len = self.lens.sample(&mut self.rng);
+                let prompt =
+                    (0..len).map(|_| self.rng.below(self.vocab as u64) as i32).collect();
+                Request {
+                    id: i as u64,
+                    arrival_s: t,
+                    prompt,
+                    decode_steps: self.decode_steps,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Round `len` up to a multiple of `chunk` (engine prompts must tile into
+/// compiled chunk sizes).
+pub fn pad_to_chunk(len: usize, chunk: usize) -> usize {
+    len.div_ceil(chunk) * chunk
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_lengths() {
+        let mut g = TraceGen::new(1, 512, LenDist::Fixed(96));
+        let reqs = g.generate(10);
+        assert!(reqs.iter().all(|r| r.prompt.len() == 96));
+        assert!(reqs.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn uniform_lengths_in_range() {
+        let mut g = TraceGen::new(2, 512, LenDist::Uniform(10, 20));
+        for r in g.generate(200) {
+            assert!((10..=20).contains(&r.prompt.len()));
+        }
+    }
+
+    #[test]
+    fn bimodal_mixes_modes() {
+        let mut g = TraceGen::new(3, 512, LenDist::Bimodal { short: 32, long: 512, long_frac: 0.3 });
+        let reqs = g.generate(500);
+        let longs = reqs.iter().filter(|r| r.prompt.len() > 128).count();
+        assert!((100..250).contains(&longs), "got {longs} long prompts");
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_with_mean_rate() {
+        let mut g = TraceGen::new(4, 512, LenDist::Fixed(8)).rate(10.0);
+        let reqs = g.generate(2000);
+        let mut last = 0.0;
+        for r in &reqs {
+            assert!(r.arrival_s >= last);
+            last = r.arrival_s;
+        }
+        let span = reqs.last().unwrap().arrival_s;
+        let rate = 2000.0 / span;
+        assert!((8.0..12.0).contains(&rate), "empirical rate {rate}");
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let mut g = TraceGen::new(5, 100, LenDist::Fixed(50));
+        for r in g.generate(20) {
+            assert!(r.prompt.iter().all(|&t| (0..100).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TraceGen::new(7, 512, LenDist::Uniform(5, 50)).generate(20);
+        let b = TraceGen::new(7, 512, LenDist::Uniform(5, 50)).generate(20);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pad_to_chunk_works() {
+        assert_eq!(pad_to_chunk(96, 64), 128);
+        assert_eq!(pad_to_chunk(64, 64), 64);
+        assert_eq!(pad_to_chunk(1, 16), 16);
+    }
+}

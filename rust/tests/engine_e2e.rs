@@ -1,0 +1,272 @@
+//! End-to-end engine tests: the full three-layer stack — rust coordinator
+//! executing AOT JAX/Pallas artifacts over real ring collectives — checked
+//! against the python full-model golden logits.
+//!
+//! Requires `make artifacts`.
+
+use iso::config::{CommQuant, EngineConfig, SplitPolicy, Strategy};
+use iso::coordinator::Engine;
+use iso::runtime::Manifest;
+
+fn have_artifacts() -> bool {
+    match Manifest::load("artifacts") {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            false
+        }
+    }
+}
+
+fn cfg(strategy: Strategy, tp: usize) -> EngineConfig {
+    EngineConfig {
+        strategy,
+        split: SplitPolicy::Even,
+        comm_quant: CommQuant::F32,
+        gemm_segments: 1,
+        tp,
+        max_chunk: 64,
+        max_batch: 4,
+        decode_steps: 0,
+        artifacts_dir: "artifacts".into(),
+        ..Default::default()
+    }
+}
+
+/// Cosine similarity guard for logits vectors.
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut max_err = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        max_err = max_err.max((g - w).abs());
+    }
+    assert!(max_err < tol, "{what}: max |err| = {max_err} >= {tol}");
+}
+
+#[test]
+fn serial_engine_matches_golden_logits() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    let (tokens, golden, shape) = m.golden_data().unwrap();
+    let mut e = Engine::start(cfg(Strategy::Serial, 2)).unwrap();
+    let out = e.prefill(&tokens).unwrap();
+    let vocab = shape[1];
+    let want = &golden[(tokens.len() - 1) * vocab..tokens.len() * vocab];
+    assert_close(&out.logits, want, 2e-3, "serial tp=2 last-row logits");
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn iso_engine_matches_golden_logits() {
+    // The ISO invariant end-to-end: the pipelined two-chunk schedule over
+    // real collectives is numerically identical (to fp tolerance) to the
+    // one-shot python reference.
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    let (tokens, golden, shape) = m.golden_data().unwrap();
+    for tp in [1usize, 2, 4] {
+        let mut e = Engine::start(cfg(Strategy::Iso, tp)).unwrap();
+        let out = e.prefill(&tokens).unwrap();
+        let vocab = shape[1];
+        let want = &golden[(tokens.len() - 1) * vocab..tokens.len() * vocab];
+        assert_close(&out.logits, want, 2e-3, &format!("iso tp={tp} last-row logits"));
+        e.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn iso_equals_serial_numerics() {
+    if !have_artifacts() {
+        return;
+    }
+    let prompt: Vec<i32> = (0..96).map(|i| (i * 37 % 512) as i32).collect();
+    let mut serial = Engine::start(cfg(Strategy::Serial, 2)).unwrap();
+    let a = serial.prefill(&prompt).unwrap();
+    serial.shutdown().unwrap();
+    let mut iso = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
+    let b = iso.prefill(&prompt).unwrap();
+    iso.shutdown().unwrap();
+    assert_close(&a.logits, &b.logits, 1e-4, "iso vs serial logits");
+    assert_eq!(a.first_token, b.first_token);
+}
+
+#[test]
+fn int8_wire_close_to_f32() {
+    if !have_artifacts() {
+        return;
+    }
+    let prompt: Vec<i32> = (0..64).map(|i| (i * 13 % 512) as i32).collect();
+    let mut f32e = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
+    let a = f32e.prefill(&prompt).unwrap();
+    f32e.shutdown().unwrap();
+
+    let mut c = cfg(Strategy::Iso, 2);
+    c.comm_quant = CommQuant::Int8;
+    let mut int8e = Engine::start(c).unwrap();
+    let b = int8e.prefill(&prompt).unwrap();
+    let report = int8e.shutdown().unwrap();
+
+    // int8 wire must (a) agree closely on logits, (b) move ~4x fewer bytes.
+    let denom: f32 = a.logits.iter().map(|v| v * v).sum::<f32>().sqrt();
+    let num: f32 = a
+        .logits
+        .iter()
+        .zip(&b.logits)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f32>()
+        .sqrt();
+    assert!(num / denom < 0.05, "relative logits error {}", num / denom);
+    assert!(report.metrics.comm_bytes > 0);
+}
+
+#[test]
+fn uneven_split_same_numerics() {
+    // Paper §6: the split ratio is a scheduling knob, not a numerics knob.
+    if !have_artifacts() {
+        return;
+    }
+    let prompt: Vec<i32> = (0..128).map(|i| (i * 7 % 512) as i32).collect();
+    let mut even = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
+    let a = even.prefill(&prompt).unwrap();
+    even.shutdown().unwrap();
+
+    let mut c = cfg(Strategy::Iso, 2);
+    c.split = SplitPolicy::Ratio(0.75);
+    let mut uneven = Engine::start(c).unwrap();
+    let b = uneven.prefill(&prompt).unwrap();
+    uneven.shutdown().unwrap();
+    assert_close(&a.logits, &b.logits, 1e-4, "even vs 75/25 split");
+}
+
+#[test]
+fn generate_decodes_greedily_and_consistently() {
+    if !have_artifacts() {
+        return;
+    }
+    let prompt: Vec<i32> = (0..32).map(|i| (i * 11 % 512) as i32).collect();
+    let mut e1 = Engine::start(cfg(Strategy::Serial, 2)).unwrap();
+    let g1 = e1.generate(&prompt, 4).unwrap();
+    e1.shutdown().unwrap();
+    let mut e2 = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
+    let g2 = e2.generate(&prompt, 4).unwrap();
+    e2.shutdown().unwrap();
+    assert_eq!(g1.tokens.len(), 5); // first + 4 decode steps
+    assert_eq!(g1.tokens, g2.tokens, "serial and ISO must decode identically");
+}
+
+#[test]
+fn engine_reuses_slots_across_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut e = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
+    let prompt: Vec<i32> = (0..48).map(|i| i as i32 % 512).collect();
+    let a = e.prefill(&prompt).unwrap();
+    for _ in 0..5 {
+        let b = e.prefill(&prompt).unwrap();
+        assert_eq!(a.first_token, b.first_token, "slot reuse changed results");
+    }
+    let report = e.shutdown().unwrap();
+    assert_eq!(report.metrics.ttft_ms.len(), 6);
+    assert!(report.workers.iter().all(|w| w.allreduces > 0));
+}
+
+#[test]
+fn rejects_overlong_prompts_and_bad_tp() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut e = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
+    let too_long: Vec<i32> = vec![0; 300]; // max_seq = 256
+    assert!(e.prefill(&too_long).is_err());
+    // engine must still work after a rejected request
+    let ok: Vec<i32> = vec![1; 32];
+    assert!(e.prefill(&ok).is_ok());
+    e.shutdown().unwrap();
+
+    let mut bad = cfg(Strategy::Iso, 3);
+    bad.tp = 3;
+    assert!(Engine::start(bad).is_err());
+}
+
+#[test]
+fn serve_trace_continuous_batching() {
+    // Admission-capped continuous batching over a paced arrival trace:
+    // every request completes, decode interleaves across live sequences,
+    // and queueing shows up in arrival-relative TTFT.
+    if !have_artifacts() {
+        return;
+    }
+    use iso::workload::{LenDist, TraceGen};
+    let mut c = cfg(Strategy::Iso, 2);
+    c.max_batch = 2; // force queueing with more requests than slots
+    let mut e = Engine::start(c).unwrap();
+    let mut gen = TraceGen::new(11, 512, LenDist::Uniform(20, 60)).decode_steps(3).rate(50.0);
+    let reqs = gen.generate(6);
+    let trace = e.serve_trace(&reqs).unwrap();
+    assert_eq!(trace.completed, 6);
+    assert_eq!(trace.ttft_ms.len(), 6);
+    assert_eq!(trace.e2e_ms.len(), 6);
+    // 1 first token + 3 decode steps each
+    assert_eq!(trace.generated, 6 * 4);
+    assert!(trace.throughput_tok_s() > 0.0);
+    let report = e.shutdown().unwrap();
+    assert!(report.metrics.generated_tokens >= 18);
+}
+
+#[test]
+fn serve_trace_respects_decode_budget_and_max_seq() {
+    if !have_artifacts() {
+        return;
+    }
+    use iso::workload::Request;
+    let mut e = Engine::start(cfg(Strategy::Serial, 2)).unwrap();
+    // 250-token prompt (pads to 256 = max_seq): no decode room at all.
+    let reqs = vec![Request {
+        id: 0,
+        arrival_s: 0.0,
+        prompt: vec![1; 240],
+        decode_steps: 50,
+    }];
+    let trace = e.serve_trace(&reqs).unwrap();
+    assert_eq!(trace.completed, 1);
+    // decode stops at max_seq even though 50 steps were requested
+    assert!(trace.generated <= 1 + (256 - 240) as u64);
+    e.shutdown().unwrap();
+}
+
+#[test]
+fn iso_overlap_is_real() {
+    // The point of the paper: the comm stream's time must be (partially)
+    // hidden behind compute under ISO, and visibly less hidden in serial.
+    if !have_artifacts() {
+        return;
+    }
+    let prompt: Vec<i32> = (0..128).map(|i| (i * 3 % 512) as i32).collect();
+
+    let mut iso = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
+    for _ in 0..3 {
+        iso.prefill(&prompt).unwrap();
+    }
+    let iso_rep = iso.shutdown().unwrap();
+
+    let mut ser = Engine::start(cfg(Strategy::Serial, 2)).unwrap();
+    for _ in 0..3 {
+        ser.prefill(&prompt).unwrap();
+    }
+    let ser_rep = ser.shutdown().unwrap();
+
+    let iso_eff: f64 = iso_rep.workers.iter().map(|w| w.overlap_efficiency()).sum::<f64>()
+        / iso_rep.workers.len() as f64;
+    let ser_eff: f64 = ser_rep.workers.iter().map(|w| w.overlap_efficiency()).sum::<f64>()
+        / ser_rep.workers.len() as f64;
+    eprintln!("overlap efficiency: iso={iso_eff:.3} serial={ser_eff:.3}");
+    assert!(
+        iso_eff > ser_eff,
+        "ISO should hide more comm than serial: {iso_eff} vs {ser_eff}"
+    );
+}

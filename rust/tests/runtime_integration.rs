@@ -1,0 +1,212 @@
+//! Integration: manifest + PJRT execution of real AOT artifacts.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use iso::runtime::{Arg, Manifest, Tensor, WorkerRuntime};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_engine_needs() {
+    let Some(m) = manifest() else { return };
+    assert_eq!(m.config.d_model, 128);
+    assert_eq!(m.config.n_layers, 4);
+    assert!(m.tp_degrees.contains(&2));
+    for tp in &m.tp_degrees {
+        for t in &m.chunk_lens {
+            assert!(m.module(&format!("attn_tp{tp}_t{t}")).is_ok());
+            assert!(m.module(&format!("mlp_tp{tp}_t{t}")).is_ok());
+        }
+    }
+    for t in &m.chunk_lens {
+        assert!(m.module(&format!("embed_t{t}")).is_ok());
+        assert!(m.module(&format!("logits_t{t}")).is_ok());
+    }
+}
+
+#[test]
+fn weights_load_with_declared_shapes() {
+    let Some(m) = manifest() else { return };
+    let rt = WorkerRuntime::new(m).unwrap();
+    let emb = rt.load_weight(2, "emb").unwrap();
+    assert_eq!(emb.shape, vec![512, 128]);
+    let wq = rt.load_weight(2, "layer0.rank1.wq").unwrap();
+    assert_eq!(wq.shape, vec![128, 4 * 16]); // hq/tp=4 heads × hd=16
+    let down = rt.load_weight(4, "layer3.rank3.w_down").unwrap();
+    assert_eq!(down.shape, vec![512 / 4, 128]);
+}
+
+#[test]
+fn embed_stage_is_a_table_lookup() {
+    let Some(m) = manifest() else { return };
+    let rt = WorkerRuntime::new(m).unwrap();
+    let exe = rt.compile("embed_t16").unwrap();
+    let emb = rt.load_weight(1, "emb").unwrap();
+    let tokens: Vec<i32> = (0..16).collect();
+    let out = exe.run(&[Arg::I32(&tokens), Arg::F32(&emb)]).unwrap();
+    assert_eq!(out[0].shape, vec![16, 128]);
+    // row i of output == row tokens[i] of emb
+    for i in 0..16 {
+        let got = &out[0].data[i * 128..(i + 1) * 128];
+        let want = &emb.data[(tokens[i] as usize) * 128..(tokens[i] as usize + 1) * 128];
+        assert_eq!(got, want, "row {i}");
+    }
+}
+
+#[test]
+fn attn_stage_writes_kv_at_offset() {
+    let Some(m) = manifest() else { return };
+    let rt = WorkerRuntime::new(m).unwrap();
+    let exe = rt.compile("attn_tp2_t16").unwrap();
+    let w = |n: &str| rt.load_weight(2, &format!("layer0.rank0.{n}")).unwrap();
+    let x = Tensor::new(vec![16, 128], (0..16 * 128).map(|i| (i % 7) as f32 * 0.01).collect());
+    let kc = Tensor::zeros(vec![2, 256, 16]);
+    let vc = Tensor::zeros(vec![2, 256, 16]);
+    let offset = 32;
+    let out = exe
+        .run(&[
+            Arg::F32(&x),
+            Arg::F32(&w("ln1")),
+            Arg::F32(&w("wq")),
+            Arg::F32(&w("wk")),
+            Arg::F32(&w("wv")),
+            Arg::F32(&w("wo")),
+            Arg::F32(&kc),
+            Arg::F32(&vc),
+            Arg::Scalar(offset),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].shape, vec![16, 128]);
+    let new_k = &out[1];
+    // positions [32, 48) must be written, everything else still zero
+    for h in 0..2 {
+        for pos in 0..256 {
+            let row = &new_k.data[(h * 256 + pos) * 16..(h * 256 + pos + 1) * 16];
+            let nonzero = row.iter().any(|&v| v != 0.0);
+            let expect = (32..48).contains(&pos);
+            assert_eq!(nonzero, expect, "h={h} pos={pos}");
+        }
+    }
+}
+
+#[test]
+fn tp_partials_sum_matches_tp1() {
+    // sum over ranks of attn partials (tp=2) == the tp=1 partial.
+    let Some(m) = manifest() else { return };
+    let rt = WorkerRuntime::new(m).unwrap();
+    let x = Tensor::new(vec![16, 128], (0..16 * 128).map(|i| ((i % 13) as f32 - 6.0) * 0.02).collect());
+
+    let exe1 = rt.compile("attn_tp1_t16").unwrap();
+    let w1 = |n: &str| rt.load_weight(1, &format!("layer0.rank0.{n}")).unwrap();
+    let full = exe1
+        .run(&[
+            Arg::F32(&x),
+            Arg::F32(&w1("ln1")),
+            Arg::F32(&w1("wq")),
+            Arg::F32(&w1("wk")),
+            Arg::F32(&w1("wv")),
+            Arg::F32(&w1("wo")),
+            Arg::F32(&Tensor::zeros(vec![4, 256, 16])),
+            Arg::F32(&Tensor::zeros(vec![4, 256, 16])),
+            Arg::Scalar(0),
+        ])
+        .unwrap();
+
+    let exe2 = rt.compile("attn_tp2_t16").unwrap();
+    let mut acc = vec![0.0f32; 16 * 128];
+    for rank in 0..2 {
+        let w = |n: &str| rt.load_weight(2, &format!("layer0.rank{rank}.{n}")).unwrap();
+        let part = exe2
+            .run(&[
+                Arg::F32(&x),
+                Arg::F32(&w("ln1")),
+                Arg::F32(&w("wq")),
+                Arg::F32(&w("wk")),
+                Arg::F32(&w("wv")),
+                Arg::F32(&w("wo")),
+                Arg::F32(&Tensor::zeros(vec![2, 256, 16])),
+                Arg::F32(&Tensor::zeros(vec![2, 256, 16])),
+                Arg::Scalar(0),
+            ])
+            .unwrap();
+        for (a, b) in acc.iter_mut().zip(&part[0].data) {
+            *a += b;
+        }
+    }
+    for (i, (a, b)) in acc.iter().zip(&full[0].data).enumerate() {
+        assert!((a - b).abs() < 1e-3, "idx {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    // Failure injection: a syntactically-broken manifest and a manifest
+    // whose weights lie about their sizes must both fail loudly.
+    let dir = std::env::temp_dir().join("iso_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format_version":1,"config":{"vocab":8,"d_model":0,"n_layers":0,
+            "n_heads":1,"n_kv_heads":1,"head_dim":1,"d_ff":1,"max_seq":8},
+            "modules":[],"weights":{},"chunk_lens":[],"tp_degrees":[],
+            "golden":{"tokens_file":"t","logits_file":"l","prompt_len":0,
+            "logits_shape":[0,0]}}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("incomplete"), "{err}");
+}
+
+#[test]
+fn truncated_weight_file_detected() {
+    let Some(m) = manifest() else { return };
+    // Copy the artifacts manifest but point at a truncated weight file.
+    let dir = std::env::temp_dir().join("iso_truncated_weight");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::copy(m.dir.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    let m2 = Manifest::load(&dir).unwrap();
+    // read_f32 with a non-multiple-of-4 file must error, not mis-parse
+    std::fs::create_dir_all(dir.join("weights_tp2")).unwrap();
+    std::fs::write(dir.join("weights_tp2/emb.f32"), [0u8; 7]).unwrap();
+    assert!(m2.read_f32("weights_tp2/emb.f32").is_err());
+    // and a missing file is a clean error
+    assert!(m2.read_f32("weights_tp2/nope.f32").is_err());
+}
+
+#[test]
+fn engine_rejects_missing_chunk_artifacts() {
+    // An engine config demanding a tp degree the artifacts don't have
+    // must fail at start, not at first request.
+    use iso::config::EngineConfig;
+    use iso::coordinator::Engine;
+    if manifest().is_none() {
+        return;
+    }
+    let mut cfg = EngineConfig::default();
+    cfg.tp = 8; // artifacts ship tp ∈ {1,2,4}
+    assert!(Engine::start(cfg).is_err());
+}
+
+#[test]
+fn golden_data_consistent() {
+    let Some(m) = manifest() else { return };
+    let (tokens, logits, shape) = m.golden_data().unwrap();
+    assert_eq!(tokens.len(), m.golden.prompt_len);
+    assert_eq!(shape, vec![m.golden.prompt_len, m.config.vocab]);
+    assert_eq!(logits.len(), shape[0] * shape[1]);
+    assert!(tokens.iter().all(|&t| (t as usize) < m.config.vocab));
+    assert!(logits.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,221 @@
+//! Simulator-level reproduction checks: the *shape* of every paper claim.
+//!
+//! These encode Table 1 and the §4.2 findings as assertions, so a
+//! calibration regression that flips a paper conclusion fails CI.
+
+use iso::config::{SimExperiment, SplitPolicy, Strategy};
+use iso::hw::NodeProfile;
+use iso::model::ModelSpec;
+use iso::report::{table1, table1_lens};
+use iso::sched::{prefill_s, reduction_vs_serial};
+use iso::split::choose_split;
+
+fn exp(gpu: &str, cards: usize, model: &str, len: usize, strategy: Strategy) -> SimExperiment {
+    let mut e = SimExperiment::new(
+        NodeProfile::by_name(gpu, cards).unwrap(),
+        ModelSpec::by_name(model).unwrap(),
+        len,
+        strategy,
+    );
+    e.gemm_segments = if gpu == "a800" { 4 } else { 1 };
+    e
+}
+
+#[test]
+fn table1_iso_always_wins_at_4k_plus() {
+    // Paper: "our main focus is on prompt lengths that exceed 4k" — every
+    // populated >=4k cell in Table 1 is positive.
+    for (gpu, cards) in [("4090", 4), ("4090", 8), ("a800", 4), ("a800", 8)] {
+        for model in ["30b", "70b"] {
+            for len in table1_lens(gpu, cards) {
+                if len < 4096 {
+                    continue;
+                }
+                let red = reduction_vs_serial(&exp(gpu, cards, model, len, Strategy::Iso));
+                assert!(
+                    red > 0.0,
+                    "{gpu}-{cards} {model} {len}: ISO reduction {red} <= 0"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn table1_4090_average_band() {
+    // Paper: ≈35% average on 4090 (≥4k cells).
+    let mut sum = 0.0;
+    let mut n = 0;
+    for cards in [4usize, 8] {
+        for model in ["30b", "70b"] {
+            for len in table1_lens("4090", cards) {
+                if len < 4096 {
+                    continue;
+                }
+                sum += reduction_vs_serial(&exp("4090", cards, model, len, Strategy::Iso));
+                n += 1;
+            }
+        }
+    }
+    let avg = sum / n as f64;
+    assert!((0.25..0.50).contains(&avg), "4090 average reduction {avg}, paper ≈0.35");
+}
+
+#[test]
+fn table1_a800_average_band() {
+    // Paper: ≈15% average on A800 (≥4k cells).
+    let mut sum = 0.0;
+    let mut n = 0;
+    for cards in [4usize, 8] {
+        for model in ["30b", "70b"] {
+            for len in table1_lens("a800", cards) {
+                if len < 4096 {
+                    continue;
+                }
+                sum += reduction_vs_serial(&exp("a800", cards, model, len, Strategy::Iso));
+                n += 1;
+            }
+        }
+    }
+    let avg = sum / n as f64;
+    assert!((0.08..0.30).contains(&avg), "a800 average reduction {avg}, paper ≈0.15");
+}
+
+#[test]
+fn gains_4090_exceed_a800() {
+    // The paper's headline contrast: ~35% vs ~15%.
+    for model in ["30b", "70b"] {
+        for len in [4096usize, 16384] {
+            let g4090 = reduction_vs_serial(&exp("4090", 4, model, len, Strategy::Iso));
+            let a800 = reduction_vs_serial(&exp("a800", 4, model, len, Strategy::Iso));
+            assert!(
+                g4090 > a800,
+                "{model} {len}: 4090 {g4090} !> a800 {a800}"
+            );
+        }
+    }
+}
+
+#[test]
+fn short_prompts_gain_least_on_a800() {
+    // Paper Table 1: A800 1k cells are ~0% (even −6%); gains peak mid-range.
+    let short = reduction_vs_serial(&exp("a800", 4, "70b", 1024, Strategy::Iso));
+    let mid = reduction_vs_serial(&exp("a800", 4, "70b", 8192, Strategy::Iso));
+    assert!(short < mid, "1k ({short}) should gain less than 8k ({mid})");
+    assert!(short < 0.12, "1k gain {short} should be small");
+}
+
+#[test]
+fn gains_rise_with_length_on_4090_8c() {
+    // Paper: 4090-8 goes 11% → 36% as prompts grow (comm amortizes).
+    let r1k = reduction_vs_serial(&exp("4090", 8, "30b", 1024, Strategy::Iso));
+    let r64k = reduction_vs_serial(&exp("4090", 8, "30b", 65536, Strategy::Iso));
+    assert!(r64k > r1k + 0.10, "64k ({r64k}) should clearly beat 1k ({r1k})");
+}
+
+#[test]
+fn gemm_overlap_marginal_on_a800_and_worse_than_iso_everywhere() {
+    // Paper §4.2: "overlapping communication and matrix computations on
+    // the A800 yields marginal gains of 2%–5% and even negative gains on
+    // the 4090. In all tested scenarios, ISO surpasses this approach."
+    for (gpu, cards, model, len) in [
+        ("a800", 4, "70b", 8192usize),
+        ("a800", 8, "30b", 8192),
+        ("4090", 4, "30b", 4096),
+        ("4090", 8, "70b", 16384),
+    ] {
+        let gemm = reduction_vs_serial(&exp(gpu, cards, model, len, Strategy::GemmOverlap));
+        let iso = reduction_vs_serial(&exp(gpu, cards, model, len, Strategy::Iso));
+        assert!(iso > gemm, "{gpu}-{cards} {model} {len}: iso {iso} !> gemm {gemm}");
+        if gpu == "a800" {
+            assert!((-0.02..0.12).contains(&gemm), "a800 gemm-overlap {gemm}");
+        } else {
+            assert!(gemm < 0.05, "4090 gemm-overlap should be ~<=0, got {gemm}");
+        }
+    }
+}
+
+#[test]
+fn request_overlap_needs_two_requests_and_inflates_latency() {
+    // Paper §1: request overlap "results in increased latency for
+    // individual requests" while raising throughput.
+    let e = exp("4090", 4, "30b", 4096, Strategy::RequestOverlap);
+    let serial_solo = prefill_s(&exp("4090", 4, "30b", 4096, Strategy::Serial));
+    let both = prefill_s(&e);
+    assert!(both > serial_solo, "per-request latency must inflate");
+    assert!(reduction_vs_serial(&e) > 0.0, "but throughput improves");
+    // and ISO gets comparable-or-better throughput gains with ONE request
+    let iso = reduction_vs_serial(&exp("4090", 4, "30b", 4096, Strategy::Iso));
+    assert!(iso >= reduction_vs_serial(&e) - 0.05);
+}
+
+#[test]
+fn adaptive_split_helps_when_comm_between_attn_and_mlp() {
+    // Paper §6/Fig 3: when comm lies between attention and MLP times,
+    // smarter splits beat 50/50.
+    let node = NodeProfile::rtx4090(4);
+    let model = ModelSpec::gqa_70b();
+    let mut even = SimExperiment::new(node.clone(), model.clone(), 16384, Strategy::Iso);
+    even.split = SplitPolicy::Even;
+    let mut bal = even.clone();
+    bal.split = SplitPolicy::AttnBalanced;
+    let te = prefill_s(&even);
+    let tb = prefill_s(&bal);
+    assert!(tb <= te * 1.002, "balanced ({tb}) should not lose to even ({te})");
+}
+
+#[test]
+fn full_table_renders_without_panic_and_matches_lens() {
+    let rows = table1(Strategy::Iso);
+    assert_eq!(rows.len(), 8); // 4 platforms × 2 models
+    for r in &rows {
+        assert_eq!(r.cells.len(), table1_lens(&r.gpu, r.cards).len());
+        for (len, red) in &r.cells {
+            assert!(red.is_finite(), "{} {}c {} {len}", r.gpu, r.cards, r.model);
+            assert!(*red > -0.25 && *red < 0.60);
+        }
+    }
+}
+
+#[test]
+fn shipped_config_files_parse() {
+    // The configs/ presets documented in the README must stay valid.
+    use iso::config::{parse_config_file, EngineConfig};
+    use std::path::Path;
+    for f in ["configs/engine-iso.conf", "configs/engine-serial-baseline.conf"] {
+        let map = parse_config_file(Path::new(f)).unwrap();
+        let cfg = EngineConfig::from_map(&map).unwrap();
+        assert!(cfg.tp >= 1, "{f}");
+    }
+    let map = parse_config_file(Path::new("configs/hardware-h800ish.conf")).unwrap();
+    let node = NodeProfile::from_map(&map).unwrap();
+    assert_eq!(node.device.name, "h800ish");
+    assert_eq!(node.cards, 8);
+}
+
+#[test]
+fn newer_chip_between_extremes_gains_positive() {
+    // Paper §6: "newer chips may lie somewhere in between, generally
+    // yielding positive gains from ISO" — check with the shipped h800ish
+    // profile.
+    use iso::config::parse_config_file;
+    let map = parse_config_file(std::path::Path::new("configs/hardware-h800ish.conf")).unwrap();
+    let node = NodeProfile::from_map(&map).unwrap();
+    for len in [4096usize, 16384, 65536] {
+        let e = SimExperiment::new(node.clone(), ModelSpec::gqa_70b(), len, Strategy::Iso);
+        let red = reduction_vs_serial(&e);
+        assert!(red > 0.05, "h800ish {len}: {red}");
+    }
+}
+
+#[test]
+fn split_policies_agree_between_sim_and_engine_planner() {
+    // The simulator's balanced split and the engine's cheap 0.55 heuristic
+    // must point the same direction (first chunk ≥ half).
+    let node = NodeProfile::a800(4);
+    let model = ModelSpec::gqa_70b();
+    for t in [4096usize, 16384, 65536] {
+        let s = choose_split(SplitPolicy::AttnBalanced, &node, &model, t);
+        assert!(s.t0 >= t / 2, "t={t}: balanced t0 {} < half", s.t0);
+    }
+}
