@@ -1,0 +1,19 @@
+# Repo entrypoints. `make artifacts` is the handoff between the python
+# AOT layer and the rust engine (DESIGN.md §1): HLO text + weights +
+# golden logits land in rust/artifacts, where cargo (cwd = rust/) finds
+# them at "artifacts".
+
+.PHONY: artifacts test bench clean
+
+artifacts:
+	cd python/compile && python3 aot.py --out ../../rust/artifacts
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && cargo bench --bench collective
+	cd rust && cargo bench --bench e2e_engine
+
+clean:
+	rm -rf rust/target rust/artifacts

@@ -1,13 +1,30 @@
 //! BENCH — ring all-reduce microbenchmark: payload sweep × rank count ×
-//! wire format. The collective is ISO's overlapped resource; its cost
-//! model (bytes moved, quantization overhead) feeds the simulator
-//! calibration.
+//! wire format × segment streaming. The collective is ISO's overlapped
+//! resource; its cost model (bytes moved, quantization overhead, segment
+//! pipelining) feeds the simulator calibration.
+//!
+//! Appends a machine-readable section to `BENCH_PR1.json` (override the
+//! path with `ISO_PERF_SNAPSHOT`) so the segment-sweep trend can be
+//! compared against the simulator's prediction across PRs.
 
-use iso::collective::run_on_ring;
+use iso::collective::{run_on_ring, Throttle};
 use iso::config::CommQuant;
+use iso::report::{append_perf_records, PerfRecord};
 use iso::util::bench::{bench, section};
 
+/// The repo's scaled-down 4090 PCIe calibration (DESIGN.md §2): the CPU
+/// testbed throttles each ring hop to α + bytes/B so compute:comm ratios
+/// match the paper's node, not the memory bus.
+const PCIE_MBPS: f64 = 40.0;
+const PCIE_ALPHA_S: f64 = 5e-6;
+
+fn snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT").unwrap_or_else(|_| "../BENCH_PR1.json".into())
+}
+
 fn main() {
+    let mut records = Vec::new();
+
     for n in [2usize, 4] {
         section(&format!("ring all-reduce, {n} ranks"));
         for (rows, cols) in [(64usize, 128usize), (192, 128), (512, 512)] {
@@ -33,6 +50,44 @@ fn main() {
         }
     }
 
+    // --- segment streaming sweep (the PR-1 tentpole): double-buffered
+    // sub-messages hide reduction/quantization behind wire time on a
+    // throttled link; more segments also means more per-message α.
+    let n = 4;
+    let (rows, cols) = (192usize, 128usize);
+    for (link, link_label) in [
+        (None, "native"),
+        (Some(Throttle { alpha_s: PCIE_ALPHA_S, bytes_per_s: PCIE_MBPS * 1e6 }), "pcie-emu"),
+    ] {
+        section(&format!("segmented all-reduce sweep, {n} ranks {rows}x{cols}, {link_label}"));
+        for quant in [CommQuant::F32, CommQuant::Int8] {
+            for segments in [1usize, 2, 4, 8] {
+                let qname = if quant == CommQuant::Int8 { "int8" } else { "f32" };
+                let label = format!("{link_label} {qname} segments={segments}");
+                let data: Vec<f32> = (0..rows * cols).map(|i| (i % 89) as f32 * 0.01).collect();
+                let samples = if link.is_some() { 5 } else { 10 };
+                let r = bench(&label, 1, samples, || {
+                    let d = &data;
+                    run_on_ring(n, move |_, h| {
+                        h.throttle = link;
+                        let mut x = d.clone();
+                        h.allreduce_seg(&mut x, rows, cols, quant, segments);
+                    });
+                });
+                records.push(
+                    PerfRecord::new(
+                        &format!("{n}r {rows}x{cols} {label}"),
+                        r.mean_ms,
+                        r.p50_ms,
+                        r.p95_ms,
+                    )
+                    .with("segments", segments as f64)
+                    .with("throttled", if link.is_some() { 1.0 } else { 0.0 }),
+                );
+            }
+        }
+    }
+
     section("quantize/dequantize kernel (wire codec)");
     let data: Vec<f32> = (0..192 * 128).map(|i| ((i * 7) % 255) as f32 * 0.01 - 1.0).collect();
     bench("quantize_rows 192x128", 5, 50, || {
@@ -46,4 +101,10 @@ fn main() {
     bench("dequantize_add 192x128", 5, 50, || {
         iso::quant::dequantize_add(&q, &mut acc);
     });
+
+    let path = snapshot_path();
+    match append_perf_records(&path, "collective", &records) {
+        Ok(()) => println!("\nwrote {} collective records to {path}", records.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
 }

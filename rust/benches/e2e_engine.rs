@@ -1,12 +1,22 @@
 //! BENCH — the real engine end-to-end: serial vs ISO TTFT on the tiny
-//! model executed through PJRT + ring collectives, plus decode latency.
-//! This is the L3 hot-path benchmark the §Perf pass optimizes.
+//! model executed through PJRT + ring collectives, plus decode latency
+//! and the PR-1 segment-streaming sweep. This is the L3 hot-path
+//! benchmark the §Perf pass optimizes.
+//!
+//! Appends machine-readable sections to `BENCH_PR1.json` (override with
+//! `ISO_PERF_SNAPSHOT`): the engine's measured segments ∈ {1,2,4,8}
+//! sweep next to the simulator's `ar_s(t, segments)` pipelined-tile
+//! prediction, so the sim-vs-engine trend direction is recorded per PR.
 //!
 //! Requires `make artifacts`.
 
-use iso::config::{CommQuant, EngineConfig, SplitPolicy, Strategy};
+use iso::config::{CommQuant, EngineConfig, SimExperiment, SplitPolicy, Strategy};
 use iso::coordinator::Engine;
+use iso::hw::NodeProfile;
+use iso::model::ModelSpec;
+use iso::report::{append_perf_records, PerfRecord};
 use iso::runtime::Manifest;
+use iso::sched::Coster;
 use iso::util::bench::{bench, section};
 
 fn cfg(strategy: Strategy, tp: usize, quant: CommQuant, link_mbps: Option<f64>) -> EngineConfig {
@@ -21,7 +31,49 @@ fn cfg(strategy: Strategy, tp: usize, quant: CommQuant, link_mbps: Option<f64>) 
     }
 }
 
+fn snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT").unwrap_or_else(|_| "../BENCH_PR1.json".into())
+}
+
+/// Simulator prediction for the exposed (un-hidden) time of one
+/// segment-streamed all-reduce: the first comm tile is always exposed;
+/// each later tile hides up to one compute tile behind it (paper §3.2,
+/// Fig 1b — the same pipelined-tile model `sched::build_gemm_overlap`
+/// lowers). Strictly decreasing in `segments` while compute tiles are
+/// nonzero, which is the direction the engine sweep must reproduce.
+fn sim_exposed_ar_s(c: &Coster, t: usize, segments: usize) -> f64 {
+    let ar_tile = c.ar_s(t, segments);
+    let gemm_tile = c.o_proj_seg_s(t, segments);
+    ar_tile + (segments as f64 - 1.0) * (ar_tile - gemm_tile).max(0.0)
+}
+
 fn main() -> anyhow::Result<()> {
+    let path = snapshot_path();
+
+    // --- simulator side of the segment sweep (no artifacts needed).
+    let sim_exp = SimExperiment::new(
+        NodeProfile::rtx4090(4),
+        ModelSpec::mha_30b(),
+        4096,
+        Strategy::Iso,
+    );
+    let coster = Coster::new(&sim_exp);
+    let mut sim_records = Vec::new();
+    section("simulator: predicted exposed AR time vs segments (4090-4, 30b, t=4096)");
+    for segments in [1usize, 2, 4, 8] {
+        let exposed_ms = sim_exposed_ar_s(&coster, 4096, segments) * 1e3;
+        println!("  segments={segments}: exposed {exposed_ms:.3}ms");
+        let case = format!("sim 4090-4 30b t4096 seg{segments}");
+        sim_records.push(
+            PerfRecord::new(&case, exposed_ms, exposed_ms, exposed_ms)
+                .with("segments", segments as f64)
+                .with("exposed_ms", exposed_ms),
+        );
+    }
+    if let Err(e) = append_perf_records(&path, "sim_segments", &sim_records) {
+        eprintln!("could not write {path}: {e}");
+    }
+
     if Manifest::load("artifacts").is_err() {
         eprintln!("SKIP e2e_engine bench: run `make artifacts` first");
         return Ok(());
@@ -52,6 +104,49 @@ fn main() -> anyhow::Result<()> {
         let native = (results[0].1 - results[1].1) / results[0].1;
         let pcie = (results[2].1 - results[3].1) / results[2].1;
         println!("  → ISO reduction: native {:.1}%, pcie-emulated {:.1}%", native * 100.0, pcie * 100.0);
+    }
+
+    // --- PR-1 tentpole: comm_segments sweep on the throttled (4090 PCIe
+    // calibration) link. Wall time and exposed comm should trend down
+    // from segments=1 to 4, matching the simulator's direction above.
+    section("engine: ISO prefill vs comm_segments (tp=2, pcie-emu 40 MB/s, α=5µs)");
+    let mut eng_records = Vec::new();
+    let mut prev_exposed = f64::INFINITY;
+    for segments in [1usize, 2, 4, 8] {
+        let mut c = cfg(Strategy::Iso, 2, CommQuant::F32, Some(40.0));
+        c.link_alpha_us = 5.0;
+        c.comm_segments = segments;
+        let mut engine = Engine::start(c)?;
+        engine.prefill(&prompt)?; // warmup
+        let r = bench(&format!("tp2 iso pcie-emu segments={segments}"), 1, 6, || {
+            engine.prefill(&prompt).unwrap();
+        });
+        let report = engine.shutdown()?;
+        let m = report.metrics;
+        println!(
+            "    exposed {:.2}ms overlapped {:.2}ms wire_msgs {} seg_acks {}",
+            m.exposed_ms, m.overlapped_ms, m.comm_msgs, m.seg_acks
+        );
+        if segments <= 4 {
+            if m.exposed_ms > prev_exposed {
+                println!("    (warning: exposed comm did not decrease at segments={segments})");
+            }
+            prev_exposed = m.exposed_ms;
+        }
+        let case = format!("tp2 iso pcie-emu seg{segments}");
+        eng_records.push(
+            PerfRecord::new(&case, r.mean_ms, r.p50_ms, r.p95_ms)
+                .with("segments", segments as f64)
+                .with("exposed_ms", m.exposed_ms)
+                .with("overlapped_ms", m.overlapped_ms)
+                .with("wire_msgs", m.comm_msgs as f64)
+                .with("seg_acks", m.seg_acks as f64),
+        );
+    }
+    if let Err(e) = append_perf_records(&path, "e2e_engine_segments", &eng_records) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("  wrote engine segment sweep to {path}");
     }
 
     section("decode step latency (t=1 chunks, blocking — overlap unprofitable per paper)");

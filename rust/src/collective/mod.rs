@@ -8,13 +8,26 @@
 //!
 //! Wire formats (paper §3.2 "communication dominates"): `F32` sends raw
 //! activations; `Int8` quantizes each hop's segment with per-row scales
-//! (`quant::quantize_rows`), cutting wire bytes ~4× at a bounded, tested
-//! accuracy cost — the CPU analogue of the paper's fp16→int8 compression.
+//! (`quant::quantize_rows_into`), cutting wire bytes ~4× at a bounded,
+//! tested accuracy cost — the CPU analogue of the paper's fp16→int8
+//! compression.
+//!
+//! Segmented streaming (DESIGN.md §4): `allreduce_seg` splits every hop's
+//! chunk into `segments` sub-messages sent double-buffered — one message
+//! in flight while the previous one is reduced — so the wire time of
+//! sub-message `k+1` overlaps the dequantize/accumulate of sub-message
+//! `k`. Because the ring's chunk↔rank mapping (and therefore the
+//! per-element accumulation order) is untouched, the segmented result is
+//! **bit-identical** to the unsegmented path for every wire format. All
+//! wire buffers come from a per-rank [`BufferPool`]; received buffers are
+//! recycled into the receiver's pool, so buffers circulate around the
+//! ring and the steady state allocates nothing.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
 
 use crate::config::CommQuant;
-use crate::quant::quantize_rows;
+use crate::quant::quantize_rows_into;
 
 /// One hop's payload.
 enum Wire {
@@ -31,24 +44,97 @@ impl Wire {
     }
 }
 
+/// A wire message: payload plus its modeled arrival deadline.
+struct Packet {
+    /// When the bytes finish "arriving" under [`Throttle`]; `None` when
+    /// the link runs at memory speed.
+    arrive_at: Option<Instant>,
+    wire: Wire,
+}
+
+/// Reusable per-rank wire buffers (DESIGN.md §4). Senders draw from the
+/// pool; receivers recycle arrived buffers back into *their* pool, so in
+/// steady state buffers circulate the ring and no hop allocates.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    f32_free: Vec<Vec<f32>>,
+    i8_free: Vec<Vec<i8>>,
+    /// Buffers created because the pool was empty.
+    pub allocs: u64,
+    /// Buffers served from the free list.
+    pub reuses: u64,
+}
+
+impl BufferPool {
+    /// Free-list cap; beyond this, returned buffers are dropped.
+    const MAX_FREE: usize = 64;
+
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        match self.f32_free.pop() {
+            Some(v) => {
+                self.reuses += 1;
+                v
+            }
+            None => {
+                self.allocs += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    pub fn put_f32(&mut self, mut v: Vec<f32>) {
+        if self.f32_free.len() < Self::MAX_FREE {
+            v.clear();
+            self.f32_free.push(v);
+        }
+    }
+
+    pub fn take_i8(&mut self) -> Vec<i8> {
+        match self.i8_free.pop() {
+            Some(v) => {
+                self.reuses += 1;
+                v
+            }
+            None => {
+                self.allocs += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    pub fn put_i8(&mut self, mut v: Vec<i8>) {
+        if self.i8_free.len() < Self::MAX_FREE {
+            v.clear();
+            self.i8_free.push(v);
+        }
+    }
+}
+
 /// Emulated link speed for the ring (DESIGN.md §2: the CPU testbed's
 /// shared-memory channels are far faster than PCIe/NVLink relative to its
 /// compute, so engine experiments can throttle each hop to a calibrated
 /// `alpha + bytes/bandwidth` — the same α/β model the simulator uses.
 /// Quantized wire formats then genuinely shrink the transfer time, exactly
 /// like the paper's fp16→int8 compression on the 4090).
+///
+/// The link is modeled as an asynchronous DMA engine: the **sender**
+/// stamps each message with an arrival deadline (`max(link free, now) +
+/// α + bytes/B`) and returns immediately; the **receiver** sleeps until
+/// the deadline before touching the payload. CPU work on either side
+/// therefore genuinely overlaps wire time, which is what makes segmented
+/// streaming hide the reduction cost (DESIGN.md §4).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Throttle {
-    /// Per-hop latency (seconds).
+    /// Per-message latency (seconds).
     pub alpha_s: f64,
     /// Wire bandwidth in bytes/second.
     pub bytes_per_s: f64,
 }
 
 impl Throttle {
-    fn pace(&self, bytes: usize) {
-        let secs = self.alpha_s + bytes as f64 / self.bytes_per_s;
-        std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+    /// Time for `bytes` to cross the link.
+    pub fn wire_s(&self, bytes: usize) -> f64 {
+        self.alpha_s + bytes as f64 / self.bytes_per_s
     }
 }
 
@@ -56,12 +142,18 @@ impl Throttle {
 pub struct RingHandle {
     pub rank: usize,
     pub n: usize,
-    tx_next: Sender<Wire>,
-    rx_prev: Receiver<Wire>,
+    tx_next: Sender<Packet>,
+    rx_prev: Receiver<Packet>,
     /// Total wire bytes this rank has sent.
     pub sent_bytes: u64,
+    /// Total wire messages this rank has sent.
+    pub sent_msgs: u64,
     /// Optional emulated link speed.
     pub throttle: Option<Throttle>,
+    /// When this rank's outgoing link frees up (throttled mode).
+    link_busy: Option<Instant>,
+    /// Reusable wire buffers.
+    pool: BufferPool,
 }
 
 /// Build a ring of `n` handles (index = rank).
@@ -77,7 +169,7 @@ pub fn ring(n: usize) -> Vec<RingHandle> {
     // rank r sends to (r+1)%n, so its tx is txs[(r+1)%n]'s producing end;
     // rotate the tx list left by one relative to rx.
     let mut handles = Vec::with_capacity(n);
-    let mut txs_rot: Vec<Option<Sender<Wire>>> = txs.into_iter().map(Some).collect();
+    let mut txs_rot: Vec<Option<Sender<Packet>>> = txs.into_iter().map(Some).collect();
     for (r, rx) in rxs.into_iter().enumerate() {
         let tx = txs_rot[(r + 1) % n].take().expect("tx taken twice");
         handles.push(RingHandle {
@@ -86,15 +178,20 @@ pub fn ring(n: usize) -> Vec<RingHandle> {
             tx_next: tx,
             rx_prev: rx,
             sent_bytes: 0,
+            sent_msgs: 0,
             throttle: None,
+            link_busy: None,
+            pool: BufferPool::default(),
         });
     }
     handles
 }
 
-/// Row-range of ring segment `i` when `rows` are split into `n` segments.
-fn seg_range(rows: usize, n: usize, i: usize) -> (usize, usize) {
-    // First `rows % n` segments get one extra row.
+/// Row-range of segment `i` when `rows` are split into `n` contiguous
+/// segments: the first `rows % n` segments get one extra row, so the
+/// ranges partition `[0, rows)` exactly (no gap, no overlap) for any
+/// `rows` and `n >= 1`, including `rows < n` (trailing segments empty).
+pub fn seg_range(rows: usize, n: usize, i: usize) -> (usize, usize) {
     let base = rows / n;
     let extra = rows % n;
     let start = i * base + i.min(extra);
@@ -113,68 +210,186 @@ impl RingHandle {
         cols: usize,
         quant: CommQuant,
     ) -> u64 {
+        self.allreduce_seg(data, rows, cols, quant, 1)
+    }
+
+    /// Segment-streamed all-reduce: every hop's chunk moves as
+    /// `segments` double-buffered sub-messages (see module docs).
+    /// Bit-identical to `allreduce` for every `segments >= 1`.
+    pub fn allreduce_seg(
+        &mut self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+        segments: usize,
+    ) -> u64 {
+        self.allreduce_seg_with(data, rows, cols, quant, segments, |_, _, _| {})
+    }
+
+    /// Like [`RingHandle::allreduce_seg`], invoking `on_final(row_start,
+    /// row_end, values)` the moment each contiguous row-range of the
+    /// result becomes final on this rank — the rank's own reduced chunk
+    /// right after the reduce-scatter phase, then every received
+    /// sub-message during the all-gather. Ranges are non-empty, disjoint,
+    /// and cover `[0, rows)` exactly, so a consumer can stream the result
+    /// out (e.g. the coordinator's per-segment acks) without waiting for
+    /// the tail of the collective. Returns wire bytes sent by this rank.
+    pub fn allreduce_seg_with<F>(
+        &mut self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+        segments: usize,
+        mut on_final: F,
+    ) -> u64
+    where
+        F: FnMut(usize, usize, &[f32]),
+    {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
+        assert!(segments >= 1, "segments must be >= 1");
         if self.n == 1 || data.is_empty() {
+            if !data.is_empty() {
+                on_final(0, rows, data);
+            }
             return 0;
         }
         let n = self.n;
         let r = self.rank;
         let before = self.sent_bytes;
 
-        // --- reduce-scatter: after n-1 steps rank r owns segment (r+1)%n.
+        // --- reduce-scatter: after n-1 steps rank r owns chunk (r+1)%n.
+        let mut noop = |_: usize, _: usize, _: &[f32]| {};
         for s in 0..n - 1 {
             let send_i = (r + n - s) % n;
             let recv_i = (r + n - s - 1) % n;
-            let (a, b) = seg_range(rows, n, send_i);
-            self.send_segment(&data[a * cols..b * cols], b - a, cols, quant);
-            let (a, b) = seg_range(rows, n, recv_i);
-            // accumulate in place — int8 wire dequantizes straight into
-            // the accumulator (no intermediate vec, §Perf)
-            self.recv_apply(&mut data[a * cols..b * cols], b - a, cols, true);
+            let send_rows = seg_range(rows, n, send_i);
+            let recv_rows = seg_range(rows, n, recv_i);
+            self.stream_step(data, cols, send_rows, recv_rows, segments, true, quant, &mut noop);
         }
 
-        // --- all-gather: broadcast the reduced segments around the ring.
+        // This rank's chunk is now fully reduced — stream it out first.
+        let own = (r + 1) % n;
+        let (oa, ob) = seg_range(rows, n, own);
+        if ob > oa {
+            on_final(oa, ob, &data[oa * cols..ob * cols]);
+        }
+
+        // --- all-gather: broadcast the reduced chunks around the ring;
+        // every received sub-message is final.
         for s in 0..n - 1 {
             let send_i = (r + 1 + n - s) % n;
             let recv_i = (r + n - s) % n;
-            let (a, b) = seg_range(rows, n, send_i);
-            self.send_segment(&data[a * cols..b * cols], b - a, cols, quant);
-            let (a, b) = seg_range(rows, n, recv_i);
-            self.recv_apply(&mut data[a * cols..b * cols], b - a, cols, false);
+            let send_rows = seg_range(rows, n, send_i);
+            let recv_rows = seg_range(rows, n, recv_i);
+            self.stream_step(
+                data, cols, send_rows, recv_rows, segments, false, quant, &mut on_final,
+            );
         }
         self.sent_bytes - before
+    }
+
+    /// One ring step with double-buffered sub-message streaming: send the
+    /// `send_rows` chunk as up to `segments` sub-messages while receiving
+    /// (and reducing with `add`, or overwriting without) the `recv_rows`
+    /// chunk, keeping one message in flight ahead of the reduction.
+    /// `on_recv` fires for every applied sub-range. Empty chunks (rows <
+    /// ring size) transfer nothing — both sides derive the sub-message
+    /// count from the same chunk shape, so the ring stays in lockstep.
+    #[allow(clippy::too_many_arguments)]
+    fn stream_step<F>(
+        &mut self,
+        data: &mut [f32],
+        cols: usize,
+        send_rows: (usize, usize),
+        recv_rows: (usize, usize),
+        segments: usize,
+        add: bool,
+        quant: CommQuant,
+        on_recv: &mut F,
+    ) where
+        F: FnMut(usize, usize, &[f32]),
+    {
+        let (sa, sb) = send_rows;
+        let (ra, rb) = recv_rows;
+        let ns = segments.min(sb - sa);
+        let nr = segments.min(rb - ra);
+        for k in 0..ns.max(nr + 1) {
+            if k < ns {
+                let (a, b) = seg_range(sb - sa, ns, k);
+                let (s0, s1) = (sa + a, sa + b);
+                self.send_segment(&data[s0 * cols..s1 * cols], s1 - s0, cols, quant);
+            }
+            if k >= 1 && k - 1 < nr {
+                let (a, b) = seg_range(rb - ra, nr, k - 1);
+                let (r0, r1) = (ra + a, ra + b);
+                self.recv_apply(&mut data[r0 * cols..r1 * cols], r1 - r0, cols, add);
+                on_recv(r0, r1, &data[r0 * cols..r1 * cols]);
+            }
+        }
     }
 
     fn send_segment(&mut self, seg: &[f32], rows: usize, cols: usize, quant: CommQuant) {
         let wire = match quant {
             CommQuant::Int8 => {
-                let q = quantize_rows(seg, rows, cols);
-                Wire::I8 { rows, cols, scales: q.scales, data: q.data }
+                let mut scales = self.pool.take_f32();
+                let mut data = self.pool.take_i8();
+                quantize_rows_into(seg, rows, cols, &mut scales, &mut data);
+                Wire::I8 { rows, cols, scales, data }
             }
             // fp16 wire is modeled as f32 on CPU (same algorithm; the
             // byte accounting for fp16 lives in the simulator).
-            CommQuant::Fp16 | CommQuant::F32 => Wire::F32(seg.to_vec()),
+            CommQuant::Fp16 | CommQuant::F32 => {
+                let mut buf = self.pool.take_f32();
+                buf.extend_from_slice(seg);
+                Wire::F32(buf)
+            }
         };
-        self.sent_bytes += wire.bytes() as u64;
-        if let Some(t) = self.throttle {
-            t.pace(wire.bytes());
-        }
-        self.tx_next.send(wire).expect("ring peer hung up");
+        let nbytes = wire.bytes();
+        self.sent_bytes += nbytes as u64;
+        self.sent_msgs += 1;
+        // Asynchronous-DMA link model: stamp the arrival deadline and
+        // return; the receiver waits it out. Sending never blocks, so
+        // this thread's next reduction overlaps the transfer.
+        let arrive_at = match self.throttle {
+            Some(t) => {
+                let now = Instant::now();
+                let start = match self.link_busy {
+                    Some(busy) if busy > now => busy,
+                    _ => now,
+                };
+                let arrive = start + Duration::from_secs_f64(t.wire_s(nbytes));
+                self.link_busy = Some(arrive);
+                Some(arrive)
+            }
+            None => None,
+        };
+        self.tx_next.send(Packet { arrive_at, wire }).expect("ring peer hung up");
     }
 
-    /// Receive the next segment and either accumulate (`add = true`,
+    /// Receive the next sub-message and either accumulate (`add = true`,
     /// reduce-scatter) or overwrite (`add = false`, all-gather) in place.
+    /// Arrived buffers are recycled into this rank's pool.
     fn recv_apply(&mut self, out: &mut [f32], rows: usize, cols: usize, add: bool) {
-        match self.rx_prev.recv().expect("ring peer hung up") {
+        let pkt = self.rx_prev.recv().expect("ring peer hung up");
+        if let Some(at) = pkt.arrive_at {
+            let now = Instant::now();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+        }
+        match pkt.wire {
             Wire::F32(v) => {
                 debug_assert_eq!(v.len(), rows * cols);
                 if add {
-                    for (o, x) in out.iter_mut().zip(v) {
-                        *o += x;
+                    for (o, x) in out.iter_mut().zip(&v) {
+                        *o += *x;
                     }
                 } else {
                     out.copy_from_slice(&v);
                 }
+                self.pool.put_f32(v);
             }
             Wire::I8 { rows: qr, cols: qc, scales, data } => {
                 debug_assert_eq!((qr, qc), (rows, cols));
@@ -184,8 +399,21 @@ impl RingHandle {
                 } else {
                     crate::quant::dequantize_into(&q, out);
                 }
+                self.pool.put_f32(q.scales);
+                self.pool.put_i8(q.data);
             }
         }
+    }
+
+    /// Hand a spent f32 buffer back to this rank's pool (used by the
+    /// coordinator's comm thread to recycle job payloads).
+    pub fn recycle_f32(&mut self, v: Vec<f32>) {
+        self.pool.put_f32(v);
+    }
+
+    /// (allocs, reuses) counters of this rank's buffer pool.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        (self.pool.allocs, self.pool.reuses)
     }
 }
 
@@ -242,6 +470,35 @@ mod tests {
     }
 
     #[test]
+    fn prop_seg_range_partitions_exactly() {
+        // Satellite: segments partition rows exactly — no overlap, no gap
+        // — for rows < n and rows ≫ n alike, and sizes differ by ≤ 1.
+        Prop::new(71).cases(300).run("seg_range partitions", |rng| {
+            let rows = rng.range(0, 2000);
+            let n = rng.range(1, 40);
+            let mut covered = 0;
+            let mut min_len = usize::MAX;
+            let mut max_len = 0usize;
+            for i in 0..n {
+                let (a, b) = seg_range(rows, n, i);
+                if a != covered || b < a {
+                    return Err(format!("rows={rows} n={n} i={i}: range ({a},{b})"));
+                }
+                min_len = min_len.min(b - a);
+                max_len = max_len.max(b - a);
+                covered = b;
+            }
+            if covered != rows {
+                return Err(format!("rows={rows} n={n}: covered {covered}"));
+            }
+            if max_len - min_len > 1 {
+                return Err(format!("rows={rows} n={n}: skew {min_len}..{max_len}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn f32_allreduce_exact() {
         for n in [1usize, 2, 3, 4, 8] {
             let mut rng = Rng::new(100 + n as u64);
@@ -277,6 +534,35 @@ mod tests {
         });
         for r in 1..n {
             assert_eq!(results[0], results[r], "rank {r} differs from rank 0");
+        }
+    }
+
+    #[test]
+    fn segmented_matches_gold_all_quants() {
+        for quant in [CommQuant::F32, CommQuant::Int8] {
+            for segments in [1usize, 2, 3, 8] {
+                let n = 3;
+                let (rows, cols) = (10, 6);
+                let mut rng = Rng::new(500 + segments as u64);
+                let parts: Vec<Vec<f32>> =
+                    (0..n).map(|_| rng.normal_vec(rows * cols, 1.0)).collect();
+                let want = gold_sum(&parts);
+                let amax = want.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let tol = if quant == CommQuant::Int8 { amax * 0.05 } else { 1e-4 };
+                let results = run_on_ring(n, |r, h| {
+                    let mut d = parts[r].clone();
+                    h.allreduce_seg(&mut d, rows, cols, quant, segments);
+                    d
+                });
+                for got in &results {
+                    for (g, w) in got.iter().zip(&want) {
+                        assert!(
+                            (g - w).abs() <= tol,
+                            "quant={quant:?} segments={segments}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
         }
     }
 
@@ -323,6 +609,23 @@ mod tests {
     }
 
     #[test]
+    fn segmentation_moves_same_bytes() {
+        // Sub-message streaming changes granularity, not volume.
+        let n = 4;
+        let (rows, cols) = (64, 32);
+        let data = vec![0.5f32; rows * cols];
+        let mono = run_on_ring(n, |_, h| {
+            let mut d = data.clone();
+            h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, 1)
+        });
+        let seg = run_on_ring(n, |_, h| {
+            let mut d = data.clone();
+            h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, 8)
+        });
+        assert_eq!(mono, seg, "wire bytes must not depend on segmentation");
+    }
+
+    #[test]
     fn single_rank_is_identity() {
         let mut h = ring(1).pop().unwrap();
         let mut data = vec![1.0, 2.0, 3.0, 4.0];
@@ -350,17 +653,97 @@ mod tests {
     }
 
     #[test]
+    fn pool_recycles_buffers_across_allreduces() {
+        // Buffers circulate the ring: after a warmup lap the pool serves
+        // every send, so repeated collectives stop allocating.
+        let n = 4;
+        let (rows, cols) = (16, 8);
+        let stats = run_on_ring(n, |r, h| {
+            let mut d = vec![r as f32; rows * cols];
+            h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, 2);
+            let (allocs_warm, _) = h.pool_stats();
+            for _ in 0..8 {
+                h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, 2);
+            }
+            let (allocs, reuses) = h.pool_stats();
+            (allocs_warm, allocs, reuses)
+        });
+        for (allocs_warm, allocs, reuses) in stats {
+            assert!(reuses > 0, "pool never reused a buffer");
+            // Steady state: at most one extra lap of allocations beyond
+            // the warmup round (receivers may briefly lag senders).
+            assert!(
+                allocs <= allocs_warm * 2 + 2,
+                "allocations keep growing: warm={allocs_warm} total={allocs}"
+            );
+        }
+    }
+
+    #[test]
+    fn on_final_ranges_cover_rows_exactly() {
+        for n in [1usize, 2, 3, 4] {
+            for segments in [1usize, 3] {
+                let (rows, cols) = (11, 5);
+                let covered = run_on_ring(n, |r, h| {
+                    let mut d = vec![r as f32 + 1.0; rows * cols];
+                    let mut seen = vec![0u32; rows];
+                    h.allreduce_seg_with(
+                        &mut d,
+                        rows,
+                        cols,
+                        CommQuant::F32,
+                        segments,
+                        |a, b, vals| {
+                            assert_eq!(vals.len(), (b - a) * cols);
+                            assert!(b > a, "empty on_final range");
+                            for row in &mut seen[a..b] {
+                                *row += 1;
+                            }
+                        },
+                    );
+                    (d, seen)
+                });
+                let want: f32 = (1..=n).map(|x| x as f32).sum();
+                for (d, seen) in covered {
+                    assert!(seen.iter().all(|&c| c == 1), "n={n} segs={segments}: {seen:?}");
+                    assert!(d.iter().all(|&x| x == want));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn on_final_values_match_result() {
+        let n = 3;
+        let (rows, cols) = (9, 4);
+        let mut rng = Rng::new(77);
+        let parts: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(rows * cols, 1.0)).collect();
+        let results = run_on_ring(n, |r, h| {
+            let mut d = parts[r].clone();
+            let mut streamed = vec![f32::NAN; rows * cols];
+            h.allreduce_seg_with(&mut d, rows, cols, CommQuant::F32, 2, |a, _b, vals| {
+                streamed[a * cols..a * cols + vals.len()].copy_from_slice(vals);
+            });
+            (d, streamed)
+        });
+        for (d, streamed) in results {
+            assert_eq!(d, streamed, "streamed rows differ from final result");
+        }
+    }
+
+    #[test]
     fn prop_f32_allreduce_matches_gold() {
         Prop::new(41).cases(30).run("ring == serial sum", |rng| {
             let n = rng.range(2, 6);
             let rows = rng.range(1, 20);
             let cols = rng.range(1, 20);
+            let segments = rng.range(1, 6);
             let parts: Vec<Vec<f32>> =
                 (0..n).map(|_| rng.normal_vec(rows * cols, 2.0)).collect();
             let want = gold_sum(&parts);
             let results = run_on_ring(n, |r, h| {
                 let mut d = parts[r].clone();
-                h.allreduce(&mut d, rows, cols, CommQuant::F32);
+                h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, segments);
                 d
             });
             for got in &results {

@@ -125,6 +125,12 @@ pub struct EngineConfig {
     pub comm_quant: CommQuant,
     /// Segments for the computation-dominates mitigation (1 = off).
     pub gemm_segments: usize,
+    /// Row-segments each engine collective is streamed in (1 = one
+    /// monolithic message per ring hop). The engine-side twin of the
+    /// simulator's `Coster::ar_s(t, segments)` knob: higher values let
+    /// the ring overlap transfer with reduction and ack partial results
+    /// early, at the cost of more per-message latency (α).
+    pub comm_segments: usize,
     /// Tensor-parallel degree for the real CPU engine.
     pub tp: usize,
     /// Max chunk length the engine schedules (must exist in artifacts).
@@ -151,6 +157,7 @@ impl Default for EngineConfig {
             split: SplitPolicy::AttnBalanced,
             comm_quant: CommQuant::F32,
             gemm_segments: DEFAULT_GEMM_SEGMENTS,
+            comm_segments: 1,
             tp: 2,
             max_chunk: 64,
             max_batch: 8,
@@ -247,6 +254,9 @@ impl EngineConfig {
                 "engine.gemm_segments" => {
                     cfg.gemm_segments = v.parse().map_err(|_| format!("bad gemm_segments {v:?}"))?
                 }
+                "engine.comm_segments" => {
+                    cfg.comm_segments = v.parse().map_err(|_| format!("bad comm_segments {v:?}"))?
+                }
                 "engine.tp" => cfg.tp = v.parse().map_err(|_| format!("bad tp {v:?}"))?,
                 "engine.max_chunk" => {
                     cfg.max_chunk = v.parse().map_err(|_| format!("bad max_chunk {v:?}"))?
@@ -270,6 +280,9 @@ impl EngineConfig {
         }
         if cfg.gemm_segments == 0 {
             return Err("gemm_segments must be >= 1".into());
+        }
+        if cfg.comm_segments == 0 {
+            return Err("comm_segments must be >= 1".into());
         }
         Ok(cfg)
     }
@@ -307,6 +320,7 @@ mod tests {
             split = ratio:0.6
             tp = 4
             comm_quant = int8
+            comm_segments = 4
         "#;
         let map = parse_config_str(text).unwrap();
         let cfg = EngineConfig::from_map(&map).unwrap();
@@ -314,6 +328,7 @@ mod tests {
         assert_eq!(cfg.split, SplitPolicy::Ratio(0.6));
         assert_eq!(cfg.tp, 4);
         assert_eq!(cfg.comm_quant, CommQuant::Int8);
+        assert_eq!(cfg.comm_segments, 4);
     }
 
     #[test]
@@ -327,6 +342,8 @@ mod tests {
         let map = parse_config_str("[engine]\ntp = four").unwrap();
         assert!(EngineConfig::from_map(&map).is_err());
         let map = parse_config_str("[engine]\ngemm_segments = 0").unwrap();
+        assert!(EngineConfig::from_map(&map).is_err());
+        let map = parse_config_str("[engine]\ncomm_segments = 0").unwrap();
         assert!(EngineConfig::from_map(&map).is_err());
     }
 

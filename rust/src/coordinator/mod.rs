@@ -5,7 +5,7 @@
 //! ```text
 //!   leader (Engine)  ──jobs──▶  rank r: COMPUTE thread (PJRT client,
 //!        ▲                         compiled stages, KV caches)
-//!        │ logits                      │ partials      ▲ reduced
+//!        │ logits                      │ partials      ▲ reduced segments
 //!        └────────── rank 0 ◀──        ▼               │
 //!                                  rank r: COMM thread (ring all-reduce)
 //! ```
@@ -19,11 +19,21 @@
 //! the same work but blocks on every collective before continuing —
 //! exactly pipeline (a).
 //!
+//! Segment streaming (DESIGN.md §§4,6): each `CommJob` carries the
+//! config's `comm_segments` knob — the engine-side twin of the
+//! simulator's `Coster::ar_s(t, segments)`. The comm thread streams the
+//! collective at that granularity and acks each row-segment the moment
+//! it is final, so the compute thread applies the residual for segment 0
+//! while the tail of the collective is still on the ring. Ack payloads
+//! are recycled back to the comm thread — the job path allocates nothing
+//! in steady state.
+//!
 //! Python is long gone by the time this runs: stages were AOT-lowered to
 //! HLO text by `make artifacts` and are compiled per worker at startup.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -35,12 +45,19 @@ use crate::metrics::{EngineMetrics, Timer};
 use crate::runtime::{Arg, DevTensor, Executable, Manifest, Tensor, WorkerRuntime};
 
 /// Jobs broadcast from the leader to every rank (identical stream).
+/// Bulky payloads are `Arc`-shared so the per-rank clone is a refcount
+/// bump, not a buffer copy (§Perf).
 #[derive(Clone, Debug)]
 enum Job {
     /// Prefill a sequence occupying `slot`. `tokens` is the (padded)
     /// prompt; `chunks` its tiling; `logits_row` the true-last-token row
     /// within the final chunk.
-    Prefill { slot: usize, tokens: Vec<i32>, chunks: Vec<ChunkJob>, logits_row: usize },
+    Prefill {
+        slot: usize,
+        tokens: Arc<Vec<i32>>,
+        chunks: Arc<Vec<ChunkJob>>,
+        logits_row: usize,
+    },
     /// One decode step: token at absolute position `offset`.
     Decode { slot: usize, token: i32, offset: usize },
     /// Free a slot's caches.
@@ -55,11 +72,21 @@ enum Reply {
     Released,
 }
 
-/// Work handed from a compute thread to its comm thread.
+/// Work handed from a compute thread to its comm thread: one partial to
+/// all-reduce, streamed back as `segments`-granular acks.
 struct CommJob {
     data: Vec<f32>,
     rows: usize,
     cols: usize,
+    segments: usize,
+}
+
+/// One finalized row-range of a reduced partial, streamed back from the
+/// comm thread while the collective's tail is still in flight.
+struct SegAck {
+    row_start: usize,
+    rows: usize,
+    data: Vec<f32>,
 }
 
 /// Per-worker performance counters (returned at shutdown).
@@ -67,11 +94,16 @@ struct CommJob {
 pub struct WorkerStats {
     pub rank: usize,
     pub compute_ms: f64,
-    /// Time the compute thread spent blocked waiting for reduced results.
+    /// Time the compute thread spent blocked waiting for reduced results
+    /// — the *exposed* (un-overlapped) communication time.
     pub stall_ms: f64,
     pub comm_ms: f64,
     pub wire_bytes: u64,
+    /// Wire messages sent by the ring (grows with `comm_segments`).
+    pub wire_msgs: u64,
     pub allreduces: u64,
+    /// Per-segment acks exchanged between the comm and compute threads.
+    pub seg_acks: u64,
 }
 
 impl WorkerStats {
@@ -143,6 +175,8 @@ struct ComputeWorker {
     strategy: Strategy,
     geo_layers: usize,
     d_model: usize,
+    /// Row-segments per collective (config `comm_segments`).
+    comm_segments: usize,
     // compiled stages keyed by chunk length
     embed: BTreeMap<usize, Executable>,
     attn: BTreeMap<usize, Executable>,
@@ -158,7 +192,9 @@ struct ComputeWorker {
     kv_shape: Vec<usize>,
     // comm plumbing
     to_comm: Sender<CommJob>,
-    from_comm: Receiver<(Vec<f32>, u64)>,
+    from_comm: Receiver<SegAck>,
+    /// Returns spent ack buffers to the comm thread for reuse.
+    recycle_tx: Sender<Vec<f32>>,
     stats: WorkerStats,
 }
 
@@ -180,7 +216,8 @@ impl ComputeWorker {
         cfg: &EngineConfig,
         manifest: Manifest,
         to_comm: Sender<CommJob>,
-        from_comm: Receiver<(Vec<f32>, u64)>,
+        from_comm: Receiver<SegAck>,
+        recycle_tx: Sender<Vec<f32>>,
     ) -> Result<Self> {
         let tp = cfg.tp;
         let rt = WorkerRuntime::new(manifest)?;
@@ -189,7 +226,7 @@ impl ComputeWorker {
         let mut attn = BTreeMap::new();
         let mut mlp = BTreeMap::new();
         let mut logits = BTreeMap::new();
-        for &t in &rt.manifest.chunk_lens.clone() {
+        for &t in &rt.manifest.chunk_lens {
             if t > cfg.max_chunk && t != 1 {
                 continue;
             }
@@ -241,6 +278,7 @@ impl ComputeWorker {
             strategy: cfg.strategy,
             geo_layers: geo.n_layers,
             d_model: geo.d_model,
+            comm_segments: cfg.comm_segments.max(1),
             embed,
             attn,
             mlp,
@@ -253,6 +291,7 @@ impl ComputeWorker {
             kv_shape,
             to_comm,
             from_comm,
+            recycle_tx,
             stats: WorkerStats { rank, ..Default::default() },
         })
     }
@@ -268,22 +307,39 @@ impl ComputeWorker {
         }
     }
 
-    /// Submit a partial for all-reduce.
+    /// Submit a partial for all-reduce; the reduced rows stream back as
+    /// per-segment acks consumed by [`ComputeWorker::recv_reduced_apply`].
     fn submit(&mut self, data: Vec<f32>, rows: usize) {
         let cols = self.d_model;
         self.stats.allreduces += 1;
         self.to_comm
-            .send(CommJob { data, rows, cols })
+            .send(CommJob { data, rows, cols, segments: self.comm_segments })
             .expect("comm thread hung up");
     }
 
-    /// Block until the next reduced result arrives (FIFO).
-    fn recv_reduced(&mut self) -> Vec<f32> {
-        let t = Timer::start();
-        let (data, bytes) = self.from_comm.recv().expect("comm thread hung up");
-        self.stats.stall_ms += t.elapsed_ms();
-        self.stats.wire_bytes += bytes;
-        data
+    /// Consume the next reduced result (FIFO) and add it into `x` — the
+    /// residual connection — row-segment by row-segment as acks land.
+    /// Segment 0 is applied while the collective's tail is still on the
+    /// ring; only time actually blocked counts as stall (exposed comm).
+    fn recv_reduced_apply(&mut self, x: &mut Tensor) {
+        let cols = self.d_model;
+        let rows = x.data.len() / cols;
+        let mut got = 0;
+        while got < rows {
+            let t = Timer::start();
+            let ack = self.from_comm.recv().expect("comm thread hung up");
+            self.stats.stall_ms += t.elapsed_ms();
+            self.stats.seg_acks += 1;
+            let lo = ack.row_start * cols;
+            let hi = lo + ack.rows * cols;
+            debug_assert!(hi <= x.data.len(), "ack outside tensor");
+            for (o, v) in x.data[lo..hi].iter_mut().zip(&ack.data) {
+                *o += *v;
+            }
+            got += ack.rows;
+            // Return the buffer for reuse; ignore failure at shutdown.
+            self.recycle_tx.send(ack.data).ok();
+        }
     }
 
     fn run_embed(&mut self, tokens: &[i32]) -> Result<Tensor> {
@@ -300,11 +356,10 @@ impl ComputeWorker {
         let exe = self.attn.get(&t).ok_or_else(|| anyhow!("no attn_t{t}"))?;
         let w = &self.layer_w[layer];
         // Move the caches out instead of cloning them (§Perf): the stage
-        // returns the updated caches, which we put back below.
-        let (k_cache, v_cache) = std::mem::replace(
-            &mut self.caches.get_mut(&slot).unwrap()[layer],
-            (Tensor::zeros(vec![0]), Tensor::zeros(vec![0])),
-        );
+        // returns the updated caches, which we put back below. `take`
+        // leaves an unallocated placeholder, not a zero-filled tensor.
+        let (k_cache, v_cache) =
+            std::mem::take(&mut self.caches.get_mut(&slot).unwrap()[layer]);
         let out = exe.run(&[
             Arg::F32(x),
             Arg::Dev(&w.ln1),
@@ -348,14 +403,6 @@ impl ComputeWorker {
         Ok(out.into_iter().next().unwrap())
     }
 
-    /// Residual add: x += reduced.
-    fn add_residual(x: &mut Tensor, reduced: &[f32]) {
-        debug_assert_eq!(x.data.len(), reduced.len());
-        for (a, b) in x.data.iter_mut().zip(reduced) {
-            *a += b;
-        }
-    }
-
     /// Prefill one sequence with the ISO pipelined schedule (or blocking
     /// serial when `strategy != Iso`). Returns last-chunk logits (rank 0).
     fn prefill(
@@ -382,7 +429,15 @@ impl ComputeWorker {
             let last_idx = chunks.iter().position(|c| c.last).expect("no last chunk");
             let logits = self.run_logits(&xs[last_idx])?;
             let vocab = logits.shape[1];
-            let row = logits.data[logits_row * vocab..(logits_row + 1) * vocab].to_vec();
+            // Extract the true-last-token row in place — truncate + drain
+            // memmove within the existing allocation instead of `to_vec`
+            // copying into a fresh one (§Perf).
+            let mut row = logits.data;
+            row.truncate((logits_row + 1) * vocab);
+            row.drain(..logits_row * vocab);
+            // Don't pin the whole chunk×vocab allocation inside the
+            // returned PrefillOut for its lifetime.
+            row.shrink_to_fit();
             Ok(Some(row))
         } else {
             Ok(None)
@@ -406,22 +461,19 @@ impl ComputeWorker {
             for i in 0..k {
                 if l > 0 {
                     // consume chunk i's MLP all-reduce from layer l-1
-                    let reduced = self.recv_reduced();
-                    Self::add_residual(&mut xs[i], &reduced);
+                    self.recv_reduced_apply(&mut xs[i]);
                 }
                 let partial = self.run_attn(slot, l, &xs[i], chunks[i].offset)?;
                 self.submit(partial.data, chunks[i].len);
             }
             for i in 0..k {
-                let reduced = self.recv_reduced();
-                Self::add_residual(&mut xs[i], &reduced);
+                self.recv_reduced_apply(&mut xs[i]);
                 let partial = self.run_mlp(l, &xs[i])?;
                 self.submit(partial.data, chunks[i].len);
             }
         }
         for x in xs.iter_mut() {
-            let reduced = self.recv_reduced();
-            Self::add_residual(x, &reduced);
+            self.recv_reduced_apply(x);
         }
         Ok(())
     }
@@ -437,12 +489,10 @@ impl ComputeWorker {
             for l in 0..self.geo_layers {
                 let partial = self.run_attn(slot, l, &xs[i], chunks[i].offset)?;
                 self.submit(partial.data, chunks[i].len);
-                let reduced = self.recv_reduced();
-                Self::add_residual(&mut xs[i], &reduced);
+                self.recv_reduced_apply(&mut xs[i]);
                 let partial = self.run_mlp(l, &xs[i])?;
                 self.submit(partial.data, chunks[i].len);
-                let reduced = self.recv_reduced();
-                Self::add_residual(&mut xs[i], &reduced);
+                self.recv_reduced_apply(&mut xs[i]);
             }
         }
         Ok(())
@@ -456,12 +506,10 @@ impl ComputeWorker {
         for l in 0..self.geo_layers {
             let partial = self.run_attn(slot, l, &x, offset)?;
             self.submit(partial.data, 1);
-            let reduced = self.recv_reduced();
-            Self::add_residual(&mut x, &reduced);
+            self.recv_reduced_apply(&mut x);
             let partial = self.run_mlp(l, &x)?;
             self.submit(partial.data, 1);
-            let reduced = self.recv_reduced();
-            Self::add_residual(&mut x, &reduced);
+            self.recv_reduced_apply(&mut x);
         }
         if self.rank == 0 {
             Ok(Some(self.run_logits(&x)?.data))
@@ -475,28 +523,80 @@ impl ComputeWorker {
     }
 }
 
-/// Comm-thread main loop: drain all-reduce jobs through the ring.
+/// Comm-thread main loop: drain all-reduce jobs through the ring,
+/// streaming per-segment acks so the compute thread starts on segment 0
+/// without waiting for the tail. Ack buffers come back through `recycled`
+/// and wire buffers live in the ring handle's pool — steady state
+/// allocates nothing.
 fn comm_main(
     mut handle: RingHandle,
     quant: CommQuant,
     jobs: Receiver<CommJob>,
-    results: Sender<(Vec<f32>, u64)>,
+    acks: Sender<SegAck>,
+    recycled: Receiver<Vec<f32>>,
 ) -> WorkerStats {
     let mut stats = WorkerStats { rank: handle.rank, ..Default::default() };
-    while let Ok(mut job) = jobs.recv() {
+    // Buffers for streamed ack payloads, refilled by the compute thread.
+    let mut ack_pool: Vec<Vec<f32>> = Vec::new();
+    while let Ok(job) = jobs.recv() {
+        while let Ok(buf) = recycled.try_recv() {
+            if ack_pool.len() < 64 {
+                ack_pool.push(buf);
+            } else {
+                handle.recycle_f32(buf);
+            }
+        }
+        let CommJob { mut data, rows, cols, segments } = job;
         let t = Timer::start();
-        let bytes = handle.allreduce(&mut job.data, job.rows, job.cols, quant);
+        let mut hung_up = false;
+        let bytes = if segments <= 1 {
+            // Single segment: hand the whole payload over, no copy.
+            let b = handle.allreduce_seg(&mut data, rows, cols, quant, 1);
+            hung_up = acks.send(SegAck { row_start: 0, rows, data }).is_err();
+            b
+        } else {
+            let acks_ref = &acks;
+            let recycled_ref = &recycled;
+            let ack_pool_ref = &mut ack_pool;
+            let hung_up_ref = &mut hung_up;
+            let b = handle.allreduce_seg_with(
+                &mut data,
+                rows,
+                cols,
+                quant,
+                segments,
+                |row_start, row_end, vals| {
+                    // Pool first, then buffers the compute thread has
+                    // already returned mid-collective, then allocate.
+                    let mut buf = ack_pool_ref
+                        .pop()
+                        .or_else(|| recycled_ref.try_recv().ok())
+                        .unwrap_or_default();
+                    buf.clear();
+                    buf.extend_from_slice(vals);
+                    let ack = SegAck { row_start, rows: row_end - row_start, data: buf };
+                    if acks_ref.send(ack).is_err() {
+                        *hung_up_ref = true;
+                    }
+                },
+            );
+            // The job payload stays on this side; feed it to the wire pool.
+            handle.recycle_f32(data);
+            b
+        };
         stats.comm_ms += t.elapsed_ms();
         stats.wire_bytes += bytes;
         stats.allreduces += 1;
-        if results.send((job.data, bytes)).is_err() {
+        if hung_up {
             break; // compute thread gone (shutdown)
         }
     }
+    stats.wire_msgs = handle.sent_msgs;
     stats
 }
 
 /// Compute-thread main loop.
+#[allow(clippy::too_many_arguments)]
 fn compute_main(
     rank: usize,
     cfg: EngineConfig,
@@ -504,9 +604,10 @@ fn compute_main(
     jobs: Receiver<Job>,
     reply: Option<Sender<Reply>>,
     to_comm: Sender<CommJob>,
-    from_comm: Receiver<(Vec<f32>, u64)>,
+    from_comm: Receiver<SegAck>,
+    recycle_tx: Sender<Vec<f32>>,
 ) -> Result<WorkerStats> {
-    let mut w = ComputeWorker::build(rank, &cfg, manifest, to_comm, from_comm)
+    let mut w = ComputeWorker::build(rank, &cfg, manifest, to_comm, from_comm, recycle_tx)
         .with_context(|| format!("building worker {rank}"))?;
     while let Ok(job) = jobs.recv() {
         match job {
@@ -555,6 +656,9 @@ impl Engine {
     /// Start the engine: spawn `cfg.tp` worker pairs, compile artifacts,
     /// load weights. Everything heavyweight happens here, once.
     pub fn start(cfg: EngineConfig) -> Result<Engine> {
+        if cfg.comm_segments == 0 {
+            bail!("comm_segments must be >= 1");
+        }
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         if !manifest.tp_degrees.contains(&cfg.tp) {
             bail!("tp={} not in artifacts (have {:?})", cfg.tp, manifest.tp_degrees);
@@ -579,7 +683,8 @@ impl Engine {
         for (rank, mut ring_handle) in rings.into_iter().enumerate() {
             let (job_tx, job_rx) = channel();
             let (to_comm, comm_rx) = channel();
-            let (res_tx, from_comm) = channel();
+            let (ack_tx, from_comm) = channel();
+            let (recycle_tx, recycle_rx) = channel();
             let quant = cfg.comm_quant;
             if let Some(mbps) = cfg.link_mbps {
                 ring_handle.throttle = Some(crate::collective::Throttle {
@@ -590,7 +695,7 @@ impl Engine {
             comm_joins.push(
                 std::thread::Builder::new()
                     .name(format!("iso-comm-{rank}"))
-                    .spawn(move || comm_main(ring_handle, quant, comm_rx, res_tx))
+                    .spawn(move || comm_main(ring_handle, quant, comm_rx, ack_tx, recycle_rx))
                     .expect("spawn comm thread"),
             );
             let reply = if rank == 0 { Some(reply_tx.clone()) } else { None };
@@ -600,7 +705,10 @@ impl Engine {
                 std::thread::Builder::new()
                     .name(format!("iso-compute-{rank}"))
                     .spawn(move || {
-                        compute_main(rank, cfg_c, manifest_c, job_rx, reply, to_comm, from_comm)
+                        compute_main(
+                            rank, cfg_c, manifest_c, job_rx, reply, to_comm, from_comm,
+                            recycle_tx,
+                        )
                     })
                     .expect("spawn compute thread"),
             );
@@ -621,6 +729,8 @@ impl Engine {
         })
     }
 
+    /// Send one job to every rank. Bulky payloads are `Arc`-shared, so
+    /// the per-rank clone is cheap.
     fn broadcast(&self, job: Job) {
         for tx in &self.job_txs {
             tx.send(job.clone()).expect("worker hung up");
@@ -689,19 +799,20 @@ impl Engine {
             bail!("internal: true last token not in final chunk");
         }
         let logits_row = true_last - last.offset;
+        let n_chunks = chunks.len() as u64;
 
         let timer = Timer::start();
         self.broadcast(Job::Prefill {
             slot,
-            tokens: padded,
-            chunks: chunks.clone(),
+            tokens: Arc::new(padded),
+            chunks: Arc::new(chunks),
             logits_row,
         });
         let logits = self.recv_logits()?;
         let ttft = timer.elapsed_ms();
 
         self.metrics.ttft_ms.record(ttft);
-        self.metrics.prefill_chunks += chunks.len() as u64;
+        self.metrics.prefill_chunks += n_chunks;
         self.metrics.generated_tokens += 1;
         let first_token = argmax(&logits);
         Ok(PrefillOut { first_token, ttft_ms: ttft, logits })
@@ -836,12 +947,19 @@ impl Engine {
             w.comm_ms = comm.comm_ms;
             w.allreduces = comm.allreduces;
             w.wire_bytes = comm.wire_bytes;
+            w.wire_msgs = comm.wire_msgs;
         }
-        let mut metrics = self.metrics.clone();
+        // Fold worker counters into the final metrics without cloning the
+        // histograms (§Perf: `metrics` can hold thousands of samples).
+        let mut metrics = std::mem::take(&mut self.metrics);
         metrics.allreduces = workers.iter().map(|w| w.allreduces).sum();
         metrics.comm_bytes = workers.iter().map(|w| w.wire_bytes).sum();
-        metrics.overlapped_ms = workers.iter().map(|w| w.overlapped_ms()).sum::<f64>()
-            / workers.len().max(1) as f64;
+        metrics.comm_msgs = workers.iter().map(|w| w.wire_msgs).sum();
+        metrics.seg_acks = workers.iter().map(|w| w.seg_acks).sum();
+        let n_workers = workers.len().max(1) as f64;
+        metrics.overlapped_ms =
+            workers.iter().map(|w| w.overlapped_ms()).sum::<f64>() / n_workers;
+        metrics.exposed_ms = workers.iter().map(|w| w.stall_ms).sum::<f64>() / n_workers;
         Ok(EngineReport { metrics, workers })
     }
 }
@@ -873,5 +991,26 @@ mod tests {
         assert!((s.overlap_efficiency() - 0.8).abs() < 1e-12);
         let no_comm = WorkerStats::default();
         assert_eq!(no_comm.overlap_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn broadcast_jobs_share_payloads() {
+        // Arc payloads: cloning a Job must not copy the token buffer.
+        let tokens = Arc::new((0..1024).collect::<Vec<i32>>());
+        let chunks = Arc::new(Vec::<ChunkJob>::new());
+        let job = Job::Prefill {
+            slot: 0,
+            tokens: Arc::clone(&tokens),
+            chunks: Arc::clone(&chunks),
+            logits_row: 0,
+        };
+        let copy = job.clone();
+        match (&job, &copy) {
+            (Job::Prefill { tokens: a, .. }, Job::Prefill { tokens: b, .. }) => {
+                assert!(Arc::ptr_eq(a, b), "clone must share the token buffer");
+                assert_eq!(Arc::strong_count(&tokens), 3);
+            }
+            _ => unreachable!(),
+        }
     }
 }

@@ -115,10 +115,18 @@ pub struct EngineMetrics {
     pub allreduces: u64,
     /// Bytes moved by collectives (post-quantization wire bytes).
     pub comm_bytes: u64,
+    /// Wire messages sent by the rings; grows with `comm_segments`
+    /// (per-segment wire accounting: bytes/messages ≈ segment size).
+    pub comm_msgs: u64,
+    /// Per-segment acks streamed from comm to compute threads.
+    pub seg_acks: u64,
     /// Total generated tokens.
     pub generated_tokens: u64,
     /// Wall time the comm stream overlapped with compute (ms, ISO only).
     pub overlapped_ms: f64,
+    /// Comm time *not* hidden behind compute (mean per-rank stall, ms) —
+    /// the quantity segmented streaming drives down.
+    pub exposed_ms: f64,
 }
 
 impl EngineMetrics {
@@ -131,12 +139,16 @@ impl EngineMetrics {
             s.push('\n');
         }
         s.push_str(&format!(
-            "prefill_chunks={} allreduces={} comm_bytes={} generated={} overlapped_ms={:.2}",
+            "prefill_chunks={} allreduces={} comm_bytes={} comm_msgs={} seg_acks={} \
+             generated={} overlapped_ms={:.2} exposed_ms={:.2}",
             self.prefill_chunks,
             self.allreduces,
             self.comm_bytes,
+            self.comm_msgs,
+            self.seg_acks,
             self.generated_tokens,
-            self.overlapped_ms
+            self.overlapped_ms,
+            self.exposed_ms
         ));
         s
     }

@@ -35,9 +35,29 @@ fn round_ties_even(x: f32) -> f32 {
 
 /// Quantize `rows × cols` row-major f32 into int8 with per-row scales.
 pub fn quantize_rows(x: &[f32], rows: usize, cols: usize) -> QuantizedRows {
+    let mut scales = Vec::new();
+    let mut data = Vec::new();
+    quantize_rows_into(x, rows, cols, &mut scales, &mut data);
+    QuantizedRows { rows, cols, scales, data }
+}
+
+/// Quantize into caller-provided buffers (cleared first) — the wire hot
+/// path (`collective::BufferPool`): no allocation once the buffers have
+/// grown to the working-set size. Scales are per-row, so the result for a
+/// row does not depend on how rows are grouped into calls — quantizing a
+/// payload segment-by-segment is bit-identical to quantizing it whole.
+pub fn quantize_rows_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    scales: &mut Vec<f32>,
+    data: &mut Vec<i8>,
+) {
     assert_eq!(x.len(), rows * cols, "shape mismatch");
-    let mut scales = Vec::with_capacity(rows);
-    let mut data = vec![0i8; rows * cols];
+    scales.clear();
+    scales.reserve(rows);
+    data.clear();
+    data.resize(rows * cols, 0);
     for r in 0..rows {
         let row = &x[r * cols..(r + 1) * cols];
         let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
@@ -50,7 +70,6 @@ pub fn quantize_rows(x: &[f32], rows: usize, cols: usize) -> QuantizedRows {
             }
         }
     }
-    QuantizedRows { rows, cols, scales, data }
 }
 
 /// Dequantize back to f32 (lossy inverse of `quantize_rows`).
@@ -151,6 +170,35 @@ mod tests {
         let f32_bytes = 128 * 256 * 4;
         assert_eq!(q.wire_bytes(), 128 * 4 + 128 * 256);
         assert!((q.wire_bytes() as f64) < 0.27 * f32_bytes as f64);
+    }
+
+    #[test]
+    fn quantize_into_clears_stale_buffers_and_matches() {
+        let mut rng = Rng::new(21);
+        let x = rng.normal_vec(6 * 10, 1.5);
+        let q = quantize_rows(&x, 6, 10);
+        let mut scales = vec![9.0f32; 3]; // stale contents must be cleared
+        let mut data = vec![5i8; 100];
+        quantize_rows_into(&x, 6, 10, &mut scales, &mut data);
+        assert_eq!(scales, q.scales);
+        assert_eq!(data, q.data);
+    }
+
+    #[test]
+    fn quantize_segmentwise_matches_whole() {
+        // Per-row scales ⇒ grouping rows into segments cannot change the
+        // wire bytes (the collective's bit-identity invariant).
+        let mut rng = Rng::new(23);
+        let (rows, cols) = (13, 8);
+        let x = rng.normal_vec(rows * cols, 2.0);
+        let whole = quantize_rows(&x, rows, cols);
+        let split = 5; // uneven on purpose
+        let head = quantize_rows(&x[..split * cols], split, cols);
+        let tail = quantize_rows(&x[split * cols..], rows - split, cols);
+        assert_eq!(&whole.scales[..split], &head.scales[..]);
+        assert_eq!(&whole.scales[split..], &tail.scales[..]);
+        assert_eq!(&whole.data[..split * cols], &head.data[..]);
+        assert_eq!(&whole.data[split * cols..], &tail.data[..]);
     }
 
     #[test]

@@ -113,6 +113,60 @@ pub fn timeline_json(tl: &Timeline) -> Json {
     root
 }
 
+/// One measured case for the machine-readable perf snapshot
+/// (`BENCH_PR1.json` and successors) that seeds the perf trajectory
+/// across PRs (EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct PerfRecord {
+    pub case: String,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// Free-form numeric annotations (segments, exposed_ms, wire bytes…).
+    pub extra: Vec<(String, f64)>,
+}
+
+impl PerfRecord {
+    pub fn new(case: &str, mean_ms: f64, p50_ms: f64, p95_ms: f64) -> PerfRecord {
+        PerfRecord { case: case.to_string(), mean_ms, p50_ms, p95_ms, extra: Vec::new() }
+    }
+
+    pub fn with(mut self, key: &str, value: f64) -> PerfRecord {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("case", self.case.as_str())
+            .set("mean_ms", self.mean_ms)
+            .set("p50_ms", self.p50_ms)
+            .set("p95_ms", self.p95_ms);
+        for (k, v) in &self.extra {
+            o.set(k, *v);
+        }
+        o
+    }
+}
+
+/// Merge `records` into the JSON snapshot at `path` under section
+/// `bench`, creating or extending the file. Each bench target owns one
+/// section, so the collective and e2e benches share one `BENCH_PR1.json`.
+pub fn append_perf_records(
+    path: &str,
+    bench: &str,
+    records: &[PerfRecord],
+) -> std::io::Result<()> {
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or_else(Json::obj);
+    let arr: Vec<Json> = records.iter().map(|r| r.to_json()).collect();
+    root.set(bench, Json::Arr(arr));
+    std::fs::write(path, root.to_string())
+}
+
 /// ASCII Gantt of the first `layers` layers of a timeline — the Figure-1
 /// schematic, regenerated from the simulator.
 pub fn gantt(tl: &Timeline, width: usize, until_s: f64) -> String {
@@ -200,6 +254,33 @@ mod tests {
         assert!(g.contains("COMPUTE"));
         assert!(g.contains("COMM"));
         assert!(g.contains('#') || g.contains('%'));
+    }
+
+    #[test]
+    fn perf_snapshot_merges_sections() {
+        let dir = std::env::temp_dir().join("iso_perf_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+
+        let a = vec![PerfRecord::new("tp2 seg1", 10.0, 9.5, 12.0).with("segments", 1.0)];
+        append_perf_records(path, "e2e_engine", &a).unwrap();
+        let b = vec![
+            PerfRecord::new("4r f32 seg4", 1.0, 1.0, 1.2).with("segments", 4.0),
+            PerfRecord::new("4r f32 seg8", 0.9, 0.9, 1.1).with("segments", 8.0),
+        ];
+        append_perf_records(path, "collective", &b).unwrap();
+
+        let parsed = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let e2e = parsed.get("e2e_engine").and_then(Json::as_arr).unwrap();
+        assert_eq!(e2e.len(), 1);
+        assert_eq!(e2e[0].get("case").and_then(Json::as_str), Some("tp2 seg1"));
+        assert_eq!(e2e[0].get("segments").and_then(Json::as_f64), Some(1.0));
+        let col = parsed.get("collective").and_then(Json::as_arr).unwrap();
+        assert_eq!(col.len(), 2);
+        assert_eq!(col[1].get("mean_ms").and_then(Json::as_f64), Some(0.9));
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -254,6 +254,16 @@ pub struct Tensor {
     pub data: Vec<f32>,
 }
 
+/// The default tensor is an **unallocated placeholder** (empty shape,
+/// empty data) used by `std::mem::take` when moving caches in and out of
+/// stages (§Perf: no per-call `Tensor::zeros` allocation). It is not a
+/// valid operand; it only ever exists between a take and the put-back.
+impl Default for Tensor {
+    fn default() -> Tensor {
+        Tensor { shape: Vec::new(), data: Vec::new() }
+    }
+}
+
 impl Tensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");

@@ -1,0 +1,242 @@
+//! Segmented-collective contracts (PR-1 tentpole acceptance):
+//!
+//! * `allreduce_seg` is **bit-identical** to the unsegmented path for
+//!   `CommQuant::F32` across rank counts and segment counts — the ring's
+//!   chunk↔rank mapping (and so the per-element accumulation order) does
+//!   not depend on sub-message granularity;
+//! * the int8 wire keeps its per-row round-trip accuracy bound under
+//!   segmentation, and is itself bit-identical across segment counts;
+//! * `seg_range` partitions rows exactly (rows < n and rows ≫ n);
+//! * `allreduce_seg_with` streams final row-ranges that cover the result
+//!   exactly once with values matching the converged buffer;
+//! * wire-buffer pooling reaches an allocation-free steady state.
+
+use iso::collective::{ring, run_on_ring, seg_range, Throttle};
+use iso::config::CommQuant;
+use iso::quant::quantize_rows;
+use iso::util::Rng;
+
+fn gold_sum(parts: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = vec![0.0f32; parts[0].len()];
+    for p in parts {
+        for (o, x) in out.iter_mut().zip(p) {
+            *o += x;
+        }
+    }
+    out
+}
+
+fn parts_for(n: usize, rows: usize, cols: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_vec(rows * cols, 1.5)).collect()
+}
+
+fn allreduce_all_ranks(
+    parts: &[Vec<f32>],
+    rows: usize,
+    cols: usize,
+    quant: CommQuant,
+    segments: usize,
+) -> Vec<Vec<f32>> {
+    run_on_ring(parts.len(), |r, h| {
+        let mut d = parts[r].clone();
+        h.allreduce_seg(&mut d, rows, cols, quant, segments);
+        d
+    })
+}
+
+#[test]
+fn segmented_f32_bit_identical_to_unsegmented() {
+    // The acceptance criterion: for F32 wire the segmented result equals
+    // the serial (segments=1) all-reduce bit-for-bit, for every rank
+    // count and segment count, including rows not divisible by either.
+    for n in [1usize, 2, 3, 4] {
+        for (rows, cols) in [(13usize, 7usize), (1, 16), (64, 8)] {
+            let parts = parts_for(n, rows, cols, 42 + n as u64);
+            let baseline = allreduce_all_ranks(&parts, rows, cols, CommQuant::F32, 1);
+            for segments in [1usize, 3, 8] {
+                let seg = allreduce_all_ranks(&parts, rows, cols, CommQuant::F32, segments);
+                for r in 0..n {
+                    let a: Vec<u32> = baseline[r].iter().map(|v| v.to_bits()).collect();
+                    let b: Vec<u32> = seg[r].iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        a, b,
+                        "n={n} rows={rows} cols={cols} segments={segments} rank={r}: \
+                         segmented result differs bitwise"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn segmented_int8_bit_identical_and_accurate() {
+    // Per-row scales make int8 quantization independent of how rows are
+    // grouped into wire messages, so even the lossy path is bit-stable
+    // under segmentation — and stays within the round-trip error bound.
+    let n = 4;
+    let (rows, cols) = (19, 24);
+    let parts = parts_for(n, rows, cols, 7);
+    let want = gold_sum(&parts);
+    let baseline = allreduce_all_ranks(&parts, rows, cols, CommQuant::Int8, 1);
+    for segments in [1usize, 3, 8] {
+        let seg = allreduce_all_ranks(&parts, rows, cols, CommQuant::Int8, segments);
+        assert_eq!(baseline, seg, "int8 wire changed under segments={segments}");
+        // Accuracy: ~2(n-1) quantized hops; bound loosely like the
+        // paper's wire-compression error budget.
+        let amax = want.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let tol = amax * 0.05;
+        for got in &seg {
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= tol,
+                    "segments={segments}: {g} vs {w} (tol {tol})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_roundtrip_error_bound_is_per_row_under_segmentation() {
+    // One quantize/dequantize round trip of a segment obeys the same
+    // half-step-per-row bound as quantizing the whole payload: the wire
+    // codec's accuracy does not degrade when payloads are split.
+    let mut rng = Rng::new(11);
+    let (rows, cols) = (16, 32);
+    let x = rng.normal_vec(rows * cols, 2.0);
+    let whole = quantize_rows(&x, rows, cols);
+    for split in [1usize, 5, 8, 15] {
+        let head = quantize_rows(&x[..split * cols], split, cols);
+        let tail = quantize_rows(&x[split * cols..], rows - split, cols);
+        for r in 0..rows {
+            let (seg_scale, seg_data) = if r < split {
+                (head.scales[r], &head.data[r * cols..(r + 1) * cols])
+            } else {
+                let rr = r - split;
+                (tail.scales[rr], &tail.data[rr * cols..(rr + 1) * cols])
+            };
+            assert_eq!(seg_scale, whole.scales[r], "split={split} row={r}: scale");
+            assert_eq!(
+                seg_data,
+                &whole.data[r * cols..(r + 1) * cols],
+                "split={split} row={r}: payload"
+            );
+            let bound = seg_scale * 0.5 + 1e-6;
+            for c in 0..cols {
+                let back = seg_data[c] as f32 * seg_scale;
+                let err = (x[r * cols + c] - back).abs();
+                assert!(err <= bound, "split={split} r={r} c={c}: err {err} > {bound}");
+            }
+        }
+    }
+}
+
+#[test]
+fn seg_range_partitions_rows_exactly() {
+    // rows < n (trailing empties), rows == n, rows ≫ n.
+    for (rows, n) in [(3usize, 8usize), (8, 8), (1000, 7), (0, 4), (17, 4)] {
+        let mut covered = 0;
+        for i in 0..n {
+            let (a, b) = seg_range(rows, n, i);
+            assert_eq!(a, covered, "rows={rows} n={n} i={i}: gap/overlap");
+            assert!(b >= a);
+            covered = b;
+        }
+        assert_eq!(covered, rows, "rows={rows} n={n}: not a partition");
+    }
+}
+
+#[test]
+fn streamed_ranges_cover_result_exactly_once() {
+    for n in [1usize, 2, 4] {
+        for segments in [1usize, 3, 8] {
+            let (rows, cols) = (14, 6);
+            let parts = parts_for(n, rows, cols, 99);
+            let outs = run_on_ring(n, |r, h| {
+                let mut d = parts[r].clone();
+                let mut hits = vec![0u32; rows];
+                let mut streamed = vec![0.0f32; rows * cols];
+                h.allreduce_seg_with(&mut d, rows, cols, CommQuant::F32, segments, |a, b, v| {
+                    assert!(b > a && b <= rows, "bad range ({a},{b})");
+                    assert_eq!(v.len(), (b - a) * cols);
+                    for hit in &mut hits[a..b] {
+                        *hit += 1;
+                    }
+                    streamed[a * cols..b * cols].copy_from_slice(v);
+                });
+                (d, hits, streamed)
+            });
+            for (d, hits, streamed) in outs {
+                assert!(hits.iter().all(|&h| h == 1), "n={n} seg={segments}: {hits:?}");
+                assert_eq!(d, streamed, "streamed values must equal the final result");
+            }
+        }
+    }
+}
+
+#[test]
+fn throttled_segmented_allreduce_matches_unthrottled() {
+    // The virtual-time link model changes pacing, never values or bytes.
+    let n = 3;
+    let (rows, cols) = (12, 8);
+    let parts = parts_for(n, rows, cols, 5);
+    let plain = allreduce_all_ranks(&parts, rows, cols, CommQuant::F32, 4);
+    let throttled = run_on_ring(n, |r, h| {
+        // Generous bandwidth so the test stays fast; tiny α.
+        h.throttle = Some(Throttle { alpha_s: 1e-6, bytes_per_s: 500e6 });
+        let mut d = parts[r].clone();
+        let bytes = h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, 4);
+        (d, bytes)
+    });
+    let plain_bytes = run_on_ring(n, |r, h| {
+        let mut d = parts[r].clone();
+        h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, 4)
+    });
+    for (r, (d, bytes)) in throttled.iter().enumerate() {
+        assert_eq!(d, &plain[r], "throttle changed values");
+        assert_eq!(*bytes, plain_bytes[r], "throttle changed byte accounting");
+    }
+}
+
+#[test]
+fn pool_stops_allocating_in_steady_state() {
+    let n = 4;
+    let (rows, cols) = (32, 16);
+    let stats = run_on_ring(n, |r, h| {
+        let mut d = vec![(r + 1) as f32; rows * cols];
+        // Warmup laps let buffers circulate the ring into every pool.
+        for _ in 0..3 {
+            h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, 4);
+        }
+        let (allocs_warm, _) = h.pool_stats();
+        for _ in 0..10 {
+            h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, 4);
+        }
+        let (allocs, reuses) = h.pool_stats();
+        (allocs_warm, allocs, reuses)
+    });
+    for (allocs_warm, allocs, reuses) in stats {
+        assert!(reuses > 0, "pool never reused a buffer");
+        assert!(
+            allocs - allocs_warm <= allocs_warm,
+            "steady state still allocating: warm={allocs_warm} after={allocs}"
+        );
+    }
+}
+
+#[test]
+fn single_rank_streams_whole_payload_immediately() {
+    let mut h = ring(1).pop().unwrap();
+    let mut d = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+    let mut calls = Vec::new();
+    let sent = h.allreduce_seg_with(&mut d, 3, 2, CommQuant::F32, 4, |a, b, v| {
+        calls.push((a, b, v.to_vec()));
+    });
+    assert_eq!(sent, 0);
+    assert_eq!(calls.len(), 1);
+    assert_eq!(calls[0].0, 0);
+    assert_eq!(calls[0].1, 3);
+    assert_eq!(calls[0].2, d);
+}

@@ -1,0 +1,232 @@
+//! Vendored minimal `anyhow` (DESIGN.md §5: the offline build pulls no
+//! registry crates). Implements exactly the subset the `iso` crate uses —
+//! `Error`, `Result`, `anyhow!`, `bail!`, and the `Context` extension
+//! trait — with the same observable formatting contract as the real
+//! crate: `{}` prints the outermost context, `{:#}` prints the whole
+//! chain joined by `": "`, and `{:?}` prints a `Caused by:` list.
+//!
+//! Drop-in: replace the `[dependencies] anyhow` path entry with the
+//! registry crate and nothing in `iso` changes.
+
+use std::fmt;
+
+/// An error chain: context messages wrapped around a root cause.
+/// Stored innermost-first; the last entry is the outermost context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message (the `anyhow!` macro).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap this error in an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.push(c.to_string());
+        self
+    }
+
+    fn from_std<E: std::error::Error>(e: E) -> Error {
+        // Flatten the source chain so `{:#}` shows root causes.
+        let mut outermost_first = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            outermost_first.push(s.to_string());
+            src = s.source();
+        }
+        outermost_first.reverse();
+        Error { chain: outermost_first }
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // "{:#}": outermost context first, then causes, one line.
+            for (i, c) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{c}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.chain.last().expect("non-empty chain"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.last().expect("non-empty chain"))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: a blanket From over std errors. `Error` itself
+// deliberately does not implement `std::error::Error`, which keeps this
+// impl coherent with core's reflexive `From`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::from_std(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with `Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[doc(hidden)]
+pub mod ext {
+    use super::Error;
+
+    /// Sealed adapter: anything that can become an `Error`. The blanket
+    /// impl covers std errors; the specific impl covers `Error` itself
+    /// (coherent because `Error` is local and not a `std::error::Error`).
+    pub trait IntoAnyhow: Sized {
+        fn into_anyhow(self) -> Error;
+    }
+
+    impl<E> IntoAnyhow for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_anyhow(self) -> Error {
+            Error::from_std(self)
+        }
+    }
+
+    impl IntoAnyhow for Error {
+        fn into_anyhow(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` (any error convertible to `Error`) and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::IntoAnyhow,
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_anyhow().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading manifest").unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.contains("reading manifest"), "{s}");
+        assert!(s.contains("no such file"), "{s}");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_stacks() {
+        let base: Result<()> = Err(Error::msg("inner"));
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: usize) -> Result<()> {
+            if x > 2 {
+                bail!("x too big: {x}");
+            }
+            Err(anyhow!("plain {}", "arg"))
+        }
+        assert_eq!(format!("{}", f(3).unwrap_err()), "x too big: 3");
+        assert_eq!(format!("{}", f(1).unwrap_err()), "plain arg");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

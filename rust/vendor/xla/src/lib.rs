@@ -1,0 +1,227 @@
+//! Stub of the `xla-rs` PJRT API surface used by `iso::runtime`
+//! (DESIGN.md §5). The offline build has no `xla_extension` shared
+//! library, so this crate provides the same types and signatures with
+//! host-side `Literal` arithmetic implemented for real and every
+//! PJRT entry point returning a descriptive error.
+//!
+//! The engine degrades gracefully: `Manifest::load` fails before any
+//! PJRT call when no artifacts are present, so the simulator, the
+//! collective layer, and every pure-rust test run unmodified. To run
+//! the real engine, point the `xla` dependency in `rust/Cargo.toml`
+//! at an `xla-rs` checkout with `xla_extension` installed — the call
+//! sites compile against either.
+
+use std::fmt;
+
+/// Stub error: carries which PJRT entry point was reached.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "{what}: iso was built with the stub `xla` backend (no xla_extension); \
+             point rust/Cargo.toml's `xla` dependency at xla-rs to run the real engine"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a `Literal` can hold (f32 and i32 are all iso uses).
+pub trait Element: Copy {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Option<&[Self]>;
+}
+
+impl Element for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[f32]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[i32]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side literal: dims + typed payload. Fully functional.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: Element>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: Element>(x: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![x]) }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Copy the payload out as a typed vec.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data)
+            .map(|v| v.to_vec())
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error("to_tuple: not a tuple literal".into())),
+        }
+    }
+
+    /// The literal's dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: loading always fails).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT CPU client (stub: construction always fails).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_is_rank0() {
+        let l = Literal::scalar(7i32);
+        assert!(l.dims().is_empty());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn pjrt_stubs_report_missing_backend() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub `xla` backend"));
+    }
+}
