@@ -1,14 +1,16 @@
 //! BENCH — the real engine end-to-end: serial vs ISO TTFT on the tiny
-//! model executed through PJRT + ring collectives, plus decode latency
-//! and the PR-1 segment-streaming sweep. This is the L3 hot-path
+//! model executed through PJRT + ring collectives, plus decode latency,
+//! the PR-1 segment-streaming sweep, and the PR-2 mixed-batching sweep
+//! (decode-batch width × prefill:decode mix). This is the L3 hot-path
 //! benchmark the §Perf pass optimizes.
 //!
 //! Appends machine-readable sections to `BENCH_PR1.json` (override with
-//! `ISO_PERF_SNAPSHOT`): the engine's measured segments ∈ {1,2,4,8}
-//! sweep next to the simulator's `ar_s(t, segments)` pipelined-tile
-//! prediction, so the sim-vs-engine trend direction is recorded per PR.
+//! `ISO_PERF_SNAPSHOT`) and `BENCH_PR2.json` (`ISO_PERF_SNAPSHOT_PR2`):
+//! each engine sweep is recorded next to the simulator's prediction, so
+//! the sim-vs-engine trend direction is recorded per PR.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts` for the engine sections; the simulator
+//! sections always run.
 
 use iso::config::{CommQuant, EngineConfig, SimExperiment, SplitPolicy, Strategy};
 use iso::coordinator::Engine;
@@ -16,8 +18,9 @@ use iso::hw::NodeProfile;
 use iso::model::ModelSpec;
 use iso::report::{append_perf_records, PerfRecord};
 use iso::runtime::Manifest;
-use iso::sched::Coster;
+use iso::sched::{mixed_iteration_s, Coster, MixedIteration};
 use iso::util::bench::{bench, section};
+use iso::workload::{LenDist, TraceGen};
 
 fn cfg(strategy: Strategy, tp: usize, quant: CommQuant, link_mbps: Option<f64>) -> EngineConfig {
     EngineConfig {
@@ -35,6 +38,112 @@ fn snapshot_path() -> String {
     std::env::var("ISO_PERF_SNAPSHOT").unwrap_or_else(|_| "../BENCH_PR1.json".into())
 }
 
+fn pr2_snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT_PR2").unwrap_or_else(|_| "../BENCH_PR2.json".into())
+}
+
+/// Simulator side of the PR-2 sweep: per-token mixed-iteration time vs
+/// decode-batch width, fused vs per-sequence, decode-only and composed
+/// with a prefill. The recorded direction — per-token time falling as the
+/// lane widens, fused beating per-sequence — is what the engine sweep
+/// below must reproduce.
+fn sim_mixed_sweep(path: &str) {
+    let node = NodeProfile::rtx4090(4);
+    let model = ModelSpec::mha_30b();
+    section("simulator: mixed iteration vs decode_batch (4090-4, 30b, ctx=2048)");
+    let mut records = Vec::new();
+    for b in [1usize, 2, 4, 8, 16] {
+        let mk = |prefill: usize, fused: bool| MixedIteration {
+            prefill_tokens: prefill,
+            decode_batch: b,
+            decode_ctx: 2048,
+            fused,
+        };
+        let s = |m: &MixedIteration| {
+            mixed_iteration_s(&node, &model, SplitPolicy::AttnBalanced, m, 1, true)
+        };
+        let fused_ms = s(&mk(0, true)) * 1e3;
+        let unfused_ms = s(&mk(0, false)) * 1e3;
+        let mixed_ms = s(&mk(4096, true)) * 1e3;
+        println!(
+            "  b={b}: decode-only fused {:.3}ms ({:.3}/tok) per-seq {:.3}ms, \
+             + 4k prefill {:.3}ms",
+            fused_ms,
+            fused_ms / b as f64,
+            unfused_ms,
+            mixed_ms
+        );
+        records.push(
+            PerfRecord::new(&format!("sim mixed b{b}"), mixed_ms, mixed_ms, mixed_ms)
+                .with("decode_batch", b as f64)
+                .with("fused_per_tok_ms", fused_ms / b as f64)
+                .with("unfused_per_tok_ms", unfused_ms / b as f64)
+                .with("mixed_iter_ms", mixed_ms),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "sim_mixed", &records) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
+/// Engine side of the PR-2 sweep: `serve_trace` throughput and exposed
+/// comm per decoded token across decode-batch widths and two
+/// prefill:decode mixes, plus the legacy sequential loop as baseline.
+fn engine_mixed_sweep(path: &str) -> anyhow::Result<()> {
+    let mut records = Vec::new();
+    for (mix_name, n_req, prompt_len, decode_steps) in
+        [("pf-heavy", 6usize, 96usize, 4usize), ("dec-heavy", 8, 32, 16)]
+    {
+        section(&format!(
+            "engine: serve_trace {mix_name} ({n_req} reqs, prompt {prompt_len}, decode {decode_steps}; tp=2 pcie-emu)"
+        ));
+        // decode_batch = 0 encodes the sequential (mixed-off) baseline.
+        for db in [0usize, 1, 2, 4, 8] {
+            let mut c = cfg(Strategy::Iso, 2, CommQuant::F32, Some(40.0));
+            c.link_alpha_us = 5.0;
+            c.max_batch = 8;
+            c.mixed_iterations = db > 0;
+            c.decode_batch = db.max(1);
+            let mut engine = Engine::start(c)?;
+            let reqs = TraceGen::new(5, 512, LenDist::Fixed(prompt_len))
+                .decode_steps(decode_steps)
+                .generate(n_req);
+            let mut trace = engine.serve_trace(&reqs)?;
+            let report = engine.shutdown()?;
+            let m = report.metrics;
+            let label = if db == 0 { "sequential".into() } else { format!("mixed db{db}") };
+            let tok_s = trace.throughput_tok_s();
+            let tbt_p50 = if trace.tbt_ms.is_empty() { 0.0 } else { trace.tbt_ms.p50() };
+            let occ = if trace.occupancy.is_empty() { 0.0 } else { trace.occupancy.mean() };
+            println!(
+                "  {label:<12} {tok_s:>7.1} tok/s  exposed {:.4}ms/tok  tbt p50 {tbt_p50:.2}ms  \
+                 occupancy mean {occ:.1}  fused_ars {}",
+                m.exposed_ms_per_token(),
+                m.fused_allreduces
+            );
+            records.push(
+                PerfRecord::new(
+                    &format!("{mix_name} {label}"),
+                    trace.wall_s * 1e3,
+                    trace.wall_s * 1e3,
+                    trace.wall_s * 1e3,
+                )
+                .with("decode_batch", db as f64)
+                .with("tok_s", tok_s)
+                .with("exposed_ms_per_tok", m.exposed_ms_per_token())
+                .with("tbt_p50_ms", tbt_p50)
+                .with("fused_allreduces", m.fused_allreduces as f64),
+            );
+        }
+    }
+    if let Err(e) = append_perf_records(path, "e2e_engine_mixed", &records) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("  wrote mixed-batching sweep to {path}");
+    }
+    Ok(())
+}
+
 /// Simulator prediction for the exposed (un-hidden) time of one
 /// segment-streamed all-reduce: the first comm tile is always exposed;
 /// each later tile hides up to one compute tile behind it (paper §3.2,
@@ -49,6 +158,11 @@ fn sim_exposed_ar_s(c: &Coster, t: usize, segments: usize) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let path = snapshot_path();
+    let pr2_path = pr2_snapshot_path();
+
+    // --- PR-2: simulator-predicted mixed-batching direction (no
+    // artifacts needed).
+    sim_mixed_sweep(&pr2_path);
 
     // --- simulator side of the segment sweep (no artifacts needed).
     let sim_exp = SimExperiment::new(
@@ -157,6 +271,10 @@ fn main() -> anyhow::Result<()> {
         engine.generate(&short, 8).unwrap();
     });
     engine.shutdown()?;
+
+    // --- PR-2 tentpole: mixed-batching sweep (decode-batch width ×
+    // prefill:decode mix), sequential loop as baseline.
+    engine_mixed_sweep(&pr2_path)?;
 
     Ok(())
 }

@@ -1,5 +1,6 @@
-//! Continuous batching: request queue, admission, and the chunked-prefill
-//! batch composer that feeds the coordinator.
+//! Continuous batching: request queue, admission, the chunked-prefill
+//! planner, and the iteration-level mixed-batch composer that feeds the
+//! coordinator.
 //!
 //! The scheduler follows SARATHI-style chunked prefill (paper §2.1): every
 //! engine iteration executes one *chunk* of one or more sequences. Under
@@ -7,10 +8,19 @@
 //! of the *same* sequence so the coordinator can ping-pong their
 //! compute/communication (paper §3.1); under the serial strategy it emits
 //! one chunk at a time.
+//!
+//! Mixed iterations (DESIGN.md §9): [`MixedPlanner`] composes each engine
+//! iteration from (a) the ISO chunk set of the head-of-line sequence
+//! still needing prefill and (b) a **fused decode lane** — one decode
+//! token for up to `decode_batch` live sequences, rotated for fairness —
+//! so decode collectives batch into one B-row all-reduce per layer-stage
+//! and decode compute slides into the prefill's communication windows
+//! (paper Fig 1c composed with Fig 1d).
 
 use std::collections::VecDeque;
 
 use crate::config::{SplitPolicy, Strategy};
+use crate::split::SplitContext;
 use crate::workload::Request;
 
 /// Scheduler state of one live sequence.
@@ -66,19 +76,30 @@ pub struct ChunkJob {
 
 /// The prefill plan for one sequence under a strategy: a list of chunk
 /// jobs whose lengths tile the prompt with compiled chunk sizes.
+///
+/// When a calibrated [`SplitContext`] is supplied, the balanced policies
+/// solve `split::choose_split` against it — the same bisection the
+/// simulator and benches use — so all three agree on the split point.
+/// Without one, the old closed-form 0.55 head fraction stands in.
 pub fn plan_prefill(
     seq: u64,
     prompt_len: usize,
     strategy: Strategy,
     split: SplitPolicy,
     chunk_sizes: &[usize],
+    ctx: Option<&SplitContext>,
 ) -> Vec<ChunkJob> {
     assert!(!chunk_sizes.is_empty());
     let mut sizes: Vec<usize> = chunk_sizes.to_vec();
     sizes.sort_unstable();
 
+    // Prompts shorter than two tiles cannot form two lanes — the old
+    // rounding would clamp into an inverted range and panic. Serial
+    // single-lane fallback (one lane ⇒ nothing to overlap anyway).
+    let splittable = prompt_len >= 2 * sizes[0];
+
     match strategy {
-        Strategy::Iso => {
+        Strategy::Iso if splittable => {
             // Split the sequence into two micro-batches (lanes), then tile
             // each lane with compiled chunk sizes. Lane 1 may only start a
             // given layer after lane 0 — enforced by the coordinator; here
@@ -88,15 +109,12 @@ pub fn plan_prefill(
                 SplitPolicy::Ratio(r) => {
                     ((prompt_len as f64 * r).round() as usize).clamp(1, prompt_len - 1)
                 }
-                // Engine-side balanced split: causal attention makes the
-                // tail heavier, so give the head slightly more tokens
-                // (cheap closed-form of split::choose_split's bisection:
-                // t0 s.t. t0^2/2 == t^2/2 - t0^2/2 ... i.e. t0 = t/sqrt2
-                // on the attention term; temper toward even for the
-                // position-free GEMM share).
-                SplitPolicy::AttnBalanced | SplitPolicy::AdaptiveAttnMlp => {
-                    (prompt_len as f64 * 0.55).round() as usize
-                }
+                SplitPolicy::AttnBalanced | SplitPolicy::AdaptiveAttnMlp => match ctx {
+                    Some(c) => {
+                        crate::split::choose_split(split, &c.node, &c.model, prompt_len).t0
+                    }
+                    None => (prompt_len as f64 * 0.55).round() as usize,
+                },
             };
             let t0 = round_to_tiles(t0.clamp(1, prompt_len - 1), &sizes, prompt_len);
             let mut jobs = tile(seq, 0, t0, 0, &sizes);
@@ -141,6 +159,126 @@ fn round_to_tiles(t0: usize, sizes: &[usize], total: usize) -> usize {
     let g = sizes[0]; // smallest compiled chunk
     let rounded = ((t0 + g / 2) / g * g).clamp(g, total - g);
     rounded
+}
+
+/// One decode-lane entry of a mixed iteration: feed `token` (the
+/// sequence's latest emission) to the slot's KV state at absolute
+/// position `offset`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeSlot {
+    pub slot: usize,
+    pub token: i32,
+    pub offset: usize,
+}
+
+/// The prefill half of a [`StepPlan`].
+#[derive(Clone, Debug)]
+pub struct PrefillPlan {
+    pub slot: usize,
+    /// Padded prompt length the chunks tile exactly.
+    pub prompt_len: usize,
+    pub chunks: Vec<ChunkJob>,
+}
+
+/// One engine iteration under the mixed scheduler: at most one
+/// head-of-line prefill's ISO chunk set plus a fused decode micro-batch.
+#[derive(Clone, Debug, Default)]
+pub struct StepPlan {
+    pub prefill: Option<PrefillPlan>,
+    pub decode: Vec<DecodeSlot>,
+}
+
+impl StepPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_none() && self.decode.is_empty()
+    }
+
+    /// Tokens this iteration advances (prefill tokens + decode lane rows).
+    pub fn tokens(&self) -> usize {
+        self.prefill.as_ref().map_or(0, |p| p.prompt_len) + self.decode.len()
+    }
+}
+
+/// Scheduler-visible state of one live sequence, as the leader loop
+/// tracks it between iterations.
+#[derive(Clone, Debug)]
+pub struct LaneSeq {
+    pub slot: usize,
+    /// Padded prompt length (tiles exactly into compiled chunk sizes).
+    pub prompt_len: usize,
+    pub prefilled: bool,
+    /// Latest emitted token (valid once `prefilled`).
+    pub last_token: i32,
+    /// Absolute position `last_token` will occupy — the next decode
+    /// attention offset.
+    pub offset: usize,
+    /// Decode steps still owed; 0 retires the sequence from the lane.
+    pub decode_left: usize,
+}
+
+impl LaneSeq {
+    /// Eligible for the decode lane this iteration.
+    pub fn decoding(&self, max_seq: usize) -> bool {
+        self.prefilled && self.decode_left > 0 && self.offset < max_seq
+    }
+}
+
+/// Iteration-level mixed-batch composer (DESIGN.md §9). Each `plan` call
+/// emits one [`StepPlan`]: the first un-prefilled sequence's chunk set
+/// (one prefill per iteration keeps TTFT bounded while the lane streams)
+/// plus up to `decode_batch` decode rows, selected round-robin so a lane
+/// wider than the cap shares iterations fairly.
+#[derive(Clone, Debug)]
+pub struct MixedPlanner {
+    pub strategy: Strategy,
+    pub split: SplitPolicy,
+    pub chunk_sizes: Vec<usize>,
+    pub decode_batch: usize,
+    pub max_seq: usize,
+    cursor: usize,
+}
+
+impl MixedPlanner {
+    pub fn new(
+        strategy: Strategy,
+        split: SplitPolicy,
+        chunk_sizes: Vec<usize>,
+        decode_batch: usize,
+        max_seq: usize,
+    ) -> Self {
+        assert!(decode_batch >= 1, "decode_batch must be >= 1");
+        assert!(!chunk_sizes.is_empty());
+        MixedPlanner { strategy, split, chunk_sizes, decode_batch, max_seq, cursor: 0 }
+    }
+
+    /// Compose the next iteration from the live set.
+    pub fn plan(&mut self, live: &[LaneSeq], ctx: Option<&SplitContext>) -> StepPlan {
+        let prefill = live.iter().find(|s| !s.prefilled).map(|s| PrefillPlan {
+            slot: s.slot,
+            prompt_len: s.prompt_len,
+            chunks: plan_prefill(
+                s.slot as u64,
+                s.prompt_len,
+                self.strategy,
+                self.split,
+                &self.chunk_sizes,
+                ctx,
+            ),
+        });
+        let eligible: Vec<&LaneSeq> =
+            live.iter().filter(|s| s.decoding(self.max_seq)).collect();
+        let width = eligible.len().min(self.decode_batch);
+        let mut decode = Vec::with_capacity(width);
+        if width > 0 {
+            let start = self.cursor % eligible.len();
+            for j in 0..width {
+                let s = eligible[(start + j) % eligible.len()];
+                decode.push(DecodeSlot { slot: s.slot, token: s.last_token, offset: s.offset });
+            }
+            self.cursor = self.cursor.wrapping_add(width);
+        }
+        StepPlan { prefill, decode }
+    }
 }
 
 /// FIFO admission queue with a live-sequence cap.
@@ -194,7 +332,7 @@ mod tests {
 
     #[test]
     fn serial_plan_tiles_whole_prompt() {
-        let jobs = plan_prefill(1, 96, Strategy::Serial, SplitPolicy::Even, SIZES);
+        let jobs = plan_prefill(1, 96, Strategy::Serial, SplitPolicy::Even, SIZES, None);
         let total: usize = jobs.iter().map(|j| j.len).sum();
         assert_eq!(total, 96);
         assert_eq!(jobs[0].offset, 0);
@@ -210,7 +348,7 @@ mod tests {
 
     #[test]
     fn iso_plan_has_two_lanes_contiguous() {
-        let jobs = plan_prefill(1, 128, Strategy::Iso, SplitPolicy::Even, SIZES);
+        let jobs = plan_prefill(1, 128, Strategy::Iso, SplitPolicy::Even, SIZES, None);
         let lane0: usize = jobs.iter().filter(|j| j.lane == 0).map(|j| j.len).sum();
         let lane1: usize = jobs.iter().filter(|j| j.lane == 1).map(|j| j.len).sum();
         assert_eq!(lane0 + lane1, 128);
@@ -222,14 +360,14 @@ mod tests {
 
     #[test]
     fn iso_balanced_gives_head_more_tokens() {
-        let jobs = plan_prefill(1, 128, Strategy::Iso, SplitPolicy::AttnBalanced, SIZES);
+        let jobs = plan_prefill(1, 128, Strategy::Iso, SplitPolicy::AttnBalanced, SIZES, None);
         let lane0: usize = jobs.iter().filter(|j| j.lane == 0).map(|j| j.len).sum();
         assert!(lane0 > 48 && lane0 < 128, "lane0 = {lane0}");
     }
 
     #[test]
     fn ratio_split_respects_tiles() {
-        let jobs = plan_prefill(1, 128, Strategy::Iso, SplitPolicy::Ratio(0.6), SIZES);
+        let jobs = plan_prefill(1, 128, Strategy::Iso, SplitPolicy::Ratio(0.6), SIZES, None);
         let lane0: usize = jobs.iter().filter(|j| j.lane == 0).map(|j| j.len).sum();
         assert_eq!(lane0 % 16, 0);
         assert!(lane0 >= 16 && lane0 <= 112);
@@ -240,7 +378,7 @@ mod tests {
         Prop::new(57).cases(200).run("prefill plan tiles prompt", |rng| {
             let len = rng.range(2, 40) * 16; // padded prompts
             let strat = if rng.f64() < 0.5 { Strategy::Iso } else { Strategy::Serial };
-            let jobs = plan_prefill(7, len, strat, SplitPolicy::Even, SIZES);
+            let jobs = plan_prefill(7, len, strat, SplitPolicy::Even, SIZES, None);
             let total: usize = jobs.iter().map(|j| j.len).sum();
             if total != len {
                 return Err(format!("tiled {total} != {len}"));
@@ -301,5 +439,214 @@ mod tests {
     #[should_panic]
     fn complete_without_live_panics() {
         Admission::new(1).complete();
+    }
+
+    #[test]
+    fn iso_short_prompt_falls_back_to_single_lane() {
+        // Regression: prompt_len < 2 × smallest chunk used to hit
+        // `clamp(g, total - g)` with an inverted range and panic.
+        let jobs = plan_prefill(1, 16, Strategy::Iso, SplitPolicy::Even, SIZES, None);
+        assert_eq!(jobs.iter().map(|j| j.len).sum::<usize>(), 16);
+        assert!(jobs.iter().all(|j| j.lane == 0), "short prompt must be single-lane");
+        assert_eq!(jobs.iter().filter(|j| j.last).count(), 1);
+        for policy in [
+            SplitPolicy::Even,
+            SplitPolicy::Ratio(0.9),
+            SplitPolicy::AttnBalanced,
+            SplitPolicy::AdaptiveAttnMlp,
+        ] {
+            let jobs = plan_prefill(1, 16, Strategy::Iso, policy, SIZES, None);
+            assert_eq!(jobs.iter().map(|j| j.len).sum::<usize>(), 16, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_split_agrees_with_cost_model_when_ctx_given() {
+        // Satellite: no more hardcoded 0.55 — with a calibrated context
+        // the engine-side plan lands on choose_split's t0 (tile-rounded).
+        use crate::hw::NodeProfile;
+        use crate::model::ModelSpec;
+        use crate::split::{choose_split, SplitContext};
+        let ctx = SplitContext::new(NodeProfile::a800(4), ModelSpec::gqa_70b());
+        for len in [128usize, 512, 4096] {
+            let jobs =
+                plan_prefill(1, len, Strategy::Iso, SplitPolicy::AttnBalanced, SIZES, Some(&ctx));
+            let lane0: usize = jobs.iter().filter(|j| j.lane == 0).map(|j| j.len).sum();
+            let want = choose_split(SplitPolicy::AttnBalanced, &ctx.node, &ctx.model, len).t0;
+            let g = SIZES[0];
+            let want_rounded = ((want + g / 2) / g * g).clamp(g, len - g);
+            assert_eq!(lane0, want_rounded, "len={len}");
+        }
+    }
+
+    #[test]
+    fn prop_iso_never_panics_on_padded_prompts() {
+        Prop::new(91).cases(300).run("iso plan total lengths", |rng| {
+            // Anything the engine can pad to: multiples of the smallest
+            // chunk, including a single tile.
+            let len = rng.range(1, 30) * 16;
+            for policy in [SplitPolicy::Even, SplitPolicy::AttnBalanced] {
+                let jobs = plan_prefill(3, len, Strategy::Iso, policy, SIZES, None);
+                let total: usize = jobs.iter().map(|j| j.len).sum();
+                if total != len {
+                    return Err(format!("len={len}: tiled {total}"));
+                }
+                if jobs.iter().filter(|j| j.last).count() != 1 {
+                    return Err(format!("len={len}: last count"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    fn lane_seq(slot: usize, prefilled: bool, offset: usize, left: usize) -> LaneSeq {
+        LaneSeq {
+            slot,
+            prompt_len: 64,
+            prefilled,
+            last_token: slot as i32 + 100,
+            offset,
+            decode_left: left,
+        }
+    }
+
+    #[test]
+    fn planner_composes_head_of_line_prefill_and_lane() {
+        let mut p = MixedPlanner::new(Strategy::Iso, SplitPolicy::Even, SIZES.to_vec(), 8, 256);
+        let live = vec![
+            lane_seq(0, true, 64, 3),
+            lane_seq(1, false, 0, 3),
+            lane_seq(2, true, 70, 1),
+            lane_seq(3, false, 0, 3), // second un-prefilled seq must wait
+        ];
+        let plan = p.plan(&live, None);
+        let pf = plan.prefill.expect("head-of-line prefill");
+        assert_eq!(pf.slot, 1);
+        assert_eq!(pf.chunks.iter().map(|c| c.len).sum::<usize>(), 64);
+        assert_eq!(plan.decode.len(), 2);
+        let slots: Vec<usize> = plan.decode.iter().map(|d| d.slot).collect();
+        assert!(slots.contains(&0) && slots.contains(&2));
+        // lane offsets come straight from sequence state
+        for d in &plan.decode {
+            let s = live.iter().find(|s| s.slot == d.slot).unwrap();
+            assert_eq!(d.offset, s.offset);
+            assert_eq!(d.token, s.last_token);
+        }
+        // a prefilling sequence is never also in the lane
+        assert!(plan.decode.iter().all(|d| d.slot != pf.slot));
+    }
+
+    #[test]
+    fn planner_caps_and_rotates_lane() {
+        let mut p = MixedPlanner::new(Strategy::Iso, SplitPolicy::Even, SIZES.to_vec(), 2, 256);
+        let live: Vec<LaneSeq> = (0..5).map(|s| lane_seq(s, true, 64, 10)).collect();
+        let mut seen = [0usize; 5];
+        for _ in 0..10 {
+            let plan = p.plan(&live, None);
+            assert!(plan.prefill.is_none());
+            assert_eq!(plan.decode.len(), 2, "lane must be capped at decode_batch");
+            for d in &plan.decode {
+                seen[d.slot] += 1;
+            }
+        }
+        // Rotation shares the 20 lane rows across all 5 sequences.
+        assert_eq!(seen.iter().sum::<usize>(), 20);
+        assert!(seen.iter().all(|&c| c == 4), "unfair rotation: {seen:?}");
+    }
+
+    #[test]
+    fn planner_skips_finished_and_overlong_sequences() {
+        let mut p = MixedPlanner::new(Strategy::Iso, SplitPolicy::Even, SIZES.to_vec(), 8, 128);
+        let live = vec![
+            lane_seq(0, true, 64, 0),   // out of decode budget
+            lane_seq(1, true, 128, 5),  // at max_seq
+            lane_seq(2, true, 100, 5),  // eligible
+        ];
+        let plan = p.plan(&live, None);
+        assert_eq!(plan.decode.len(), 1);
+        assert_eq!(plan.decode[0].slot, 2);
+        assert!(!plan.is_empty());
+        let empty = p.plan(&[], None);
+        assert!(empty.is_empty());
+        assert_eq!(empty.tokens(), 0);
+    }
+
+    #[test]
+    fn prop_step_plan_conserves_tokens_and_kv_order() {
+        // Satellite: every StepPlan conserves tokens (the prefill chunk
+        // set tiles the padded prompt exactly; the lane advances exactly
+        // one token per entry) and respects the KV ordering constraint
+        // (chunk offsets contiguous, lane 1 strictly after lane 0, decode
+        // offsets taken verbatim from sequence state, no slot in both
+        // halves of the iteration).
+        Prop::new(97).cases(200).run("step plan invariants", |rng| {
+            let mut planner = MixedPlanner::new(
+                Strategy::Iso,
+                SplitPolicy::Even,
+                SIZES.to_vec(),
+                rng.range(1, 6),
+                256,
+            );
+            let n = rng.range(1, 10);
+            let live: Vec<LaneSeq> = (0..n)
+                .map(|s| LaneSeq {
+                    slot: s,
+                    prompt_len: rng.range(1, 12) * 16,
+                    prefilled: rng.f64() < 0.7,
+                    last_token: rng.range(0, 512) as i32,
+                    offset: rng.range(1, 256),
+                    decode_left: rng.range(0, 5),
+                })
+                .collect();
+            let plan = planner.plan(&live, None);
+            if plan.decode.len() > planner.decode_batch {
+                return Err(format!("lane {} over cap", plan.decode.len()));
+            }
+            if let Some(pf) = &plan.prefill {
+                let total: usize = pf.chunks.iter().map(|c| c.len).sum();
+                if total != pf.prompt_len {
+                    return Err(format!("prefill tiles {total} != {}", pf.prompt_len));
+                }
+                // KV order: lane-0 chunks contiguous from 0, lane-1 after.
+                let mut pos = 0;
+                for lane in [0usize, 1] {
+                    for c in pf.chunks.iter().filter(|c| c.lane == lane) {
+                        if c.offset != pos {
+                            return Err(format!("lane{lane} gap at {pos}"));
+                        }
+                        pos += c.len;
+                    }
+                }
+                if plan.decode.iter().any(|d| d.slot == pf.slot) {
+                    return Err("slot both prefilling and decoding".into());
+                }
+                if live.iter().find(|s| s.slot == pf.slot).map(|s| s.prefilled) != Some(false)
+                {
+                    return Err("prefill picked an already-prefilled seq".into());
+                }
+            }
+            let mut lane_slots = Vec::new();
+            for d in &plan.decode {
+                let s = live.iter().find(|s| s.slot == d.slot).ok_or("unknown lane slot")?;
+                if !s.decoding(planner.max_seq) {
+                    return Err(format!("ineligible slot {} in lane", d.slot));
+                }
+                if d.offset != s.offset || d.token != s.last_token {
+                    return Err(format!("lane entry desynced from seq state: {d:?}"));
+                }
+                lane_slots.push(d.slot);
+            }
+            lane_slots.sort_unstable();
+            lane_slots.dedup();
+            if lane_slots.len() != plan.decode.len() {
+                return Err("duplicate slot in lane".into());
+            }
+            if plan.tokens()
+                != plan.prefill.as_ref().map_or(0, |p| p.prompt_len) + plan.decode.len()
+            {
+                return Err("token accounting".into());
+            }
+            Ok(())
+        });
     }
 }

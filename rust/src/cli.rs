@@ -74,6 +74,8 @@ COMMANDS:
               --tp N --strategy iso|serial --requests N --prompt-len N
               --decode N --comm-quant f32|int8 --split even|ratio:X|balanced
               --rate R (req/s Poisson arrivals → continuous batching)
+              --decode-batch N (fused decode lane width per iteration)
+              --mixed true|false (iteration-level mixed batching; default on)
               --config FILE (e.g. configs/engine-iso.conf; flags override)
   table1      print the paper's Table 1 from the calibrated simulator
               --strategy iso|gemm-overlap|request-overlap  --csv FILE

@@ -137,6 +137,20 @@ pub struct EngineConfig {
     pub max_chunk: usize,
     /// Max concurrent sequences in a batch.
     pub max_batch: usize,
+    /// Width cap of the fused decode lane in a mixed iteration (≥ 1):
+    /// up to this many live sequences decode one token each per
+    /// iteration, sharing one B-row all-reduce per layer-stage.
+    pub decode_batch: usize,
+    /// Iteration-level mixed scheduling in `serve_trace` (DESIGN.md §9):
+    /// each iteration composes the head-of-line prefill's ISO chunks with
+    /// the fused decode lane. `false` = legacy per-request loop (prefill
+    /// then round-robin single-token decodes) for A/B comparison.
+    pub mixed_iterations: bool,
+    /// Run the decode lane's MLP as one B-row GEMM when that width is
+    /// compiled. Escape hatch: disable if a backend's B-row kernel is not
+    /// bit-stable against per-row execution (lane *collectives* stay
+    /// fused either way).
+    pub lane_gemm: bool,
     /// Decode steps to run per request after prefill (0 = prefill only).
     pub decode_steps: usize,
     /// Artifact directory for the real engine.
@@ -161,6 +175,9 @@ impl Default for EngineConfig {
             tp: 2,
             max_chunk: 64,
             max_batch: 8,
+            decode_batch: 8,
+            mixed_iterations: true,
+            lane_gemm: true,
             decode_steps: 0,
             artifacts_dir: "artifacts".into(),
             link_mbps: None,
@@ -233,6 +250,15 @@ pub fn parse_config_str(text: &str) -> Result<BTreeMap<String, String>, String> 
     Ok(out)
 }
 
+/// The accepted boolean spellings for config keys and CLI flags alike.
+pub fn parse_bool(v: &str, key: &str) -> Result<bool, String> {
+    match v {
+        "true" | "on" | "1" => Ok(true),
+        "false" | "off" | "0" => Ok(false),
+        _ => Err(format!("bad {key} {v:?}")),
+    }
+}
+
 impl EngineConfig {
     /// Build from parsed `section.key` pairs; unknown keys are errors so
     /// typos don't silently fall back to defaults.
@@ -264,6 +290,14 @@ impl EngineConfig {
                 "engine.max_batch" => {
                     cfg.max_batch = v.parse().map_err(|_| format!("bad max_batch {v:?}"))?
                 }
+                "engine.decode_batch" => {
+                    cfg.decode_batch =
+                        v.parse().map_err(|_| format!("bad decode_batch {v:?}"))?
+                }
+                "engine.mixed_iterations" => {
+                    cfg.mixed_iterations = parse_bool(v, "mixed_iterations")?
+                }
+                "engine.lane_gemm" => cfg.lane_gemm = parse_bool(v, "lane_gemm")?,
                 "engine.decode_steps" => {
                     cfg.decode_steps = v.parse().map_err(|_| format!("bad decode_steps {v:?}"))?
                 }
@@ -283,6 +317,9 @@ impl EngineConfig {
         }
         if cfg.comm_segments == 0 {
             return Err("comm_segments must be >= 1".into());
+        }
+        if cfg.decode_batch == 0 {
+            return Err("decode_batch must be >= 1".into());
         }
         Ok(cfg)
     }
@@ -321,6 +358,8 @@ mod tests {
             tp = 4
             comm_quant = int8
             comm_segments = 4
+            decode_batch = 4
+            mixed_iterations = false
         "#;
         let map = parse_config_str(text).unwrap();
         let cfg = EngineConfig::from_map(&map).unwrap();
@@ -329,6 +368,22 @@ mod tests {
         assert_eq!(cfg.tp, 4);
         assert_eq!(cfg.comm_quant, CommQuant::Int8);
         assert_eq!(cfg.comm_segments, 4);
+        assert_eq!(cfg.decode_batch, 4);
+        assert!(!cfg.mixed_iterations);
+    }
+
+    #[test]
+    fn mixed_batching_defaults_and_validation() {
+        let cfg = EngineConfig::default();
+        assert!(cfg.mixed_iterations);
+        assert!(cfg.lane_gemm);
+        assert_eq!(cfg.decode_batch, 8);
+        let map = parse_config_str("[engine]\ndecode_batch = 0").unwrap();
+        assert!(EngineConfig::from_map(&map).is_err());
+        let map = parse_config_str("[engine]\nmixed_iterations = maybe").unwrap();
+        assert!(EngineConfig::from_map(&map).is_err());
+        let map = parse_config_str("[engine]\nlane_gemm = off").unwrap();
+        assert!(!EngineConfig::from_map(&map).unwrap().lane_gemm);
     }
 
     #[test]

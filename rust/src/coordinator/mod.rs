@@ -28,37 +28,57 @@
 //! are recycled back to the comm thread — the job path allocates nothing
 //! in steady state.
 //!
+//! Mixed iterations (DESIGN.md §9): `serve_trace` no longer runs one
+//! request at a time. Each leader iteration broadcasts a `Job::Step`
+//! composing the head-of-line prefill's ISO chunks with a **fused decode
+//! lane** — one token for up to `decode_batch` live sequences. The lane's
+//! attention runs per slot (offsets differ) but its partials concatenate
+//! into one B-row `CommJob` per layer-stage (B× fewer collectives via
+//! `RingHandle::allreduce_rows_fused`, bit-identical to per-sequence
+//! decode), and its MLP runs as one B-row GEMM when that width is
+//! compiled. The interleave puts lane compute in the windows where the
+//! prefill's collectives are on the ring and vice versa (paper Fig 1c
+//! composed with Fig 1d).
+//!
 //! Python is long gone by the time this runs: stages were AOT-lowered to
 //! HLO text by `make artifacts` and are compiled per worker at startup.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::batch::{plan_prefill, ChunkJob};
+use crate::batch::{plan_prefill, ChunkJob, DecodeSlot, LaneSeq, MixedPlanner};
 use crate::collective::{ring, RingHandle};
 use crate::config::{CommQuant, EngineConfig, Strategy};
 use crate::metrics::{EngineMetrics, Timer};
 use crate::runtime::{Arg, DevTensor, Executable, Manifest, Tensor, WorkerRuntime};
+use crate::split::SplitContext;
+
+/// The prefill half of a `Job::Step` (leader-planned, `Arc`-shared).
+#[derive(Debug)]
+struct StepPrefill {
+    slot: usize,
+    /// Padded prompt the chunks tile exactly.
+    tokens: Vec<i32>,
+    chunks: Vec<ChunkJob>,
+    /// True-last-token row within the final chunk.
+    logits_row: usize,
+}
 
 /// Jobs broadcast from the leader to every rank (identical stream).
 /// Bulky payloads are `Arc`-shared so the per-rank clone is a refcount
 /// bump, not a buffer copy (§Perf).
 #[derive(Clone, Debug)]
 enum Job {
-    /// Prefill a sequence occupying `slot`. `tokens` is the (padded)
-    /// prompt; `chunks` its tiling; `logits_row` the true-last-token row
-    /// within the final chunk.
-    Prefill {
-        slot: usize,
-        tokens: Arc<Vec<i32>>,
-        chunks: Arc<Vec<ChunkJob>>,
-        logits_row: usize,
-    },
-    /// One decode step: token at absolute position `offset`.
+    /// One mixed iteration: at most one prefill plus a fused decode lane
+    /// (either half may be absent, not both).
+    Step { prefill: Option<Arc<StepPrefill>>, decode: Arc<Vec<DecodeSlot>> },
+    /// One legacy per-sequence decode step: token at absolute position
+    /// `offset` (kept for `generate`, the sequential serving loop, and
+    /// the fused-vs-per-sequence equivalence tests).
     Decode { slot: usize, token: i32, offset: usize },
     /// Free a slot's caches.
     Release { slot: usize },
@@ -68,18 +88,28 @@ enum Job {
 /// Replies from rank 0 only.
 #[derive(Clone, Debug)]
 enum Reply {
+    /// Mixed-iteration result: prefill logits row (if a prefill ran) and
+    /// one logits vector per decode lane entry, in lane order.
+    Step { prefill: Option<Vec<f32>>, decode: Vec<Vec<f32>> },
     Logits(Vec<f32>),
     Released,
 }
 
 /// Work handed from a compute thread to its comm thread: one partial to
-/// all-reduce, streamed back as `segments`-granular acks.
+/// all-reduce, streamed back as `segments`-granular acks. `fused` marks a
+/// decode-lane batch reduced rank-ordered (`allreduce_rows_fused`) so the
+/// result is bit-identical to per-row collectives.
 struct CommJob {
     data: Vec<f32>,
     rows: usize,
     cols: usize,
     segments: usize,
+    fused: bool,
 }
+
+/// Rank-0 logits produced by one worker-side step: the prefill's
+/// true-last-token row (if any) and one vector per decode lane entry.
+type StepLogits = (Option<Vec<f32>>, Option<Vec<Vec<f32>>>);
 
 /// One finalized row-range of a reduced partial, streamed back from the
 /// comm thread while the collective's tail is still in flight.
@@ -102,6 +132,8 @@ pub struct WorkerStats {
     /// Wire messages sent by the ring (grows with `comm_segments`).
     pub wire_msgs: u64,
     pub allreduces: u64,
+    /// Fused B-row decode-lane collectives (subset of `allreduces`).
+    pub fused_allreduces: u64,
     /// Per-segment acks exchanged between the comm and compute threads.
     pub seg_acks: u64,
 }
@@ -151,9 +183,20 @@ pub struct TraceReport {
     pub ttft_ms: crate::metrics::Histogram,
     /// Request completion latency from arrival.
     pub e2e_ms: crate::metrics::Histogram,
+    /// Time between consecutive tokens of a sequence (ms per decoded
+    /// token) — steady under the mixed scheduler, bursty round-robin
+    /// under the legacy loop.
+    pub tbt_ms: crate::metrics::Histogram,
+    /// Per-iteration batch occupancy (prefill chunks + decode lane rows).
+    pub occupancy: crate::metrics::Histogram,
+    /// Engine iterations the trace took.
+    pub iterations: u64,
     pub completed: u64,
     pub generated: u64,
     pub wall_s: f64,
+    /// `(request id, emitted tokens)` per completed request — lets tests
+    /// and benches assert scheduling changes never change the tokens.
+    pub completions: Vec<(u64, Vec<i32>)>,
 }
 
 impl TraceReport {
@@ -177,6 +220,8 @@ struct ComputeWorker {
     d_model: usize,
     /// Row-segments per collective (config `comm_segments`).
     comm_segments: usize,
+    /// B-row lane-MLP GEMM fusion (config `lane_gemm`).
+    lane_gemm: bool,
     // compiled stages keyed by chunk length
     embed: BTreeMap<usize, Executable>,
     attn: BTreeMap<usize, Executable>,
@@ -195,6 +240,10 @@ struct ComputeWorker {
     from_comm: Receiver<SegAck>,
     /// Returns spent ack buffers to the comm thread for reuse.
     recycle_tx: Sender<Vec<f32>>,
+    /// Small compute-side buffer pool closing the fused-lane cycle
+    /// (§Perf): a fused submit payload comes back as the ack payload, so
+    /// the lane reuses buffers instead of allocating per layer-stage.
+    scratch: Vec<Vec<f32>>,
     stats: WorkerStats,
 }
 
@@ -279,6 +328,7 @@ impl ComputeWorker {
             geo_layers: geo.n_layers,
             d_model: geo.d_model,
             comm_segments: cfg.comm_segments.max(1),
+            lane_gemm: cfg.lane_gemm,
             embed,
             attn,
             mlp,
@@ -292,6 +342,7 @@ impl ComputeWorker {
             to_comm,
             from_comm,
             recycle_tx,
+            scratch: Vec::new(),
             stats: WorkerStats { rank, ..Default::default() },
         })
     }
@@ -313,7 +364,17 @@ impl ComputeWorker {
         let cols = self.d_model;
         self.stats.allreduces += 1;
         self.to_comm
-            .send(CommJob { data, rows, cols, segments: self.comm_segments })
+            .send(CommJob { data, rows, cols, segments: self.comm_segments, fused: false })
+            .expect("comm thread hung up");
+    }
+
+    /// Submit a fused decode-lane batch: one rank-ordered B-row
+    /// collective whose result is bit-identical to B per-row collectives.
+    fn submit_fused(&mut self, data: Vec<f32>, rows: usize) {
+        let cols = self.d_model;
+        self.stats.allreduces += 1;
+        self.to_comm
+            .send(CommJob { data, rows, cols, segments: 1, fused: true })
             .expect("comm thread hung up");
     }
 
@@ -337,9 +398,23 @@ impl ComputeWorker {
                 *o += *v;
             }
             got += ack.rows;
-            // Return the buffer for reuse; ignore failure at shutdown.
-            self.recycle_tx.send(ack.data).ok();
+            // Return the buffer for reuse: a few stay compute-side for
+            // the fused lane's submits, the rest refill the comm thread's
+            // ack pool. Ignore send failure at shutdown.
+            if self.scratch.len() < 4 {
+                self.scratch.push(ack.data);
+            } else {
+                self.recycle_tx.send(ack.data).ok();
+            }
         }
+    }
+
+    /// A zeroed `len`-element buffer from the scratch pool (or fresh).
+    fn take_scratch(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.scratch.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
     }
 
     fn run_embed(&mut self, tokens: &[i32]) -> Result<Tensor> {
@@ -427,21 +502,26 @@ impl ComputeWorker {
 
         if self.rank == 0 {
             let last_idx = chunks.iter().position(|c| c.last).expect("no last chunk");
-            let logits = self.run_logits(&xs[last_idx])?;
-            let vocab = logits.shape[1];
-            // Extract the true-last-token row in place — truncate + drain
-            // memmove within the existing allocation instead of `to_vec`
-            // copying into a fresh one (§Perf).
-            let mut row = logits.data;
-            row.truncate((logits_row + 1) * vocab);
-            row.drain(..logits_row * vocab);
-            // Don't pin the whole chunk×vocab allocation inside the
-            // returned PrefillOut for its lifetime.
-            row.shrink_to_fit();
-            Ok(Some(row))
+            Ok(Some(self.logits_row_of(&xs[last_idx], logits_row)?))
         } else {
             Ok(None)
         }
+    }
+
+    /// Rank-0 logits for row `logits_row` of chunk activations `x`.
+    fn logits_row_of(&mut self, x: &Tensor, logits_row: usize) -> Result<Vec<f32>> {
+        let logits = self.run_logits(x)?;
+        let vocab = logits.shape[1];
+        // Extract the true-last-token row in place — truncate + drain
+        // memmove within the existing allocation instead of `to_vec`
+        // copying into a fresh one (§Perf).
+        let mut row = logits.data;
+        row.truncate((logits_row + 1) * vocab);
+        row.drain(..logits_row * vocab);
+        // Don't pin the whole chunk×vocab allocation inside the returned
+        // PrefillOut for its lifetime.
+        row.shrink_to_fit();
+        Ok(row)
     }
 
     /// Fig 1(d): per layer, compute every chunk's attention back-to-back
@@ -518,6 +598,177 @@ impl ComputeWorker {
         }
     }
 
+    /// Embed the decode lane's tokens into one `B × d_model` activation.
+    fn embed_lane(&mut self, lane: &[DecodeSlot]) -> Result<Tensor> {
+        let d = self.d_model;
+        let mut x = Tensor::zeros(vec![lane.len(), d]);
+        for (j, s) in lane.iter().enumerate() {
+            self.ensure_slot(s.slot);
+            let e = self.run_embed(&[s.token])?;
+            x.data[j * d..(j + 1) * d].copy_from_slice(&e.data);
+        }
+        Ok(x)
+    }
+
+    /// Lane attention for one layer: per-slot t=1 attention (each row has
+    /// its own cache and offset), partials concatenated into **one**
+    /// fused B-row collective. `row` is a reusable 1×d scratch tensor.
+    fn lane_attn_submit(
+        &mut self,
+        layer: usize,
+        lane: &[DecodeSlot],
+        x_lane: &Tensor,
+        row: &mut Tensor,
+    ) -> Result<()> {
+        let d = self.d_model;
+        let mut fused = self.take_scratch(lane.len() * d);
+        for (j, s) in lane.iter().enumerate() {
+            row.data.copy_from_slice(&x_lane.data[j * d..(j + 1) * d]);
+            let p = self.run_attn(s.slot, layer, &*row, s.offset)?;
+            fused[j * d..(j + 1) * d].copy_from_slice(&p.data);
+        }
+        self.submit_fused(fused, lane.len());
+        Ok(())
+    }
+
+    /// Lane MLP for one layer: position-free, so it runs as **one B-row
+    /// GEMM** when a stage of exactly that width is compiled; otherwise
+    /// per-row launches. Either way the partials go out as one fused
+    /// collective.
+    fn lane_mlp_submit(&mut self, layer: usize, x_lane: &Tensor, row: &mut Tensor) -> Result<()> {
+        let d = self.d_model;
+        let b = x_lane.shape[0];
+        if b > 1 && self.lane_gemm && self.mlp.contains_key(&b) {
+            let p = self.run_mlp(layer, x_lane)?;
+            self.submit_fused(p.data, b);
+        } else {
+            let mut fused = self.take_scratch(b * d);
+            for j in 0..b {
+                row.data.copy_from_slice(&x_lane.data[j * d..(j + 1) * d]);
+                let p = self.run_mlp(layer, &*row)?;
+                fused[j * d..(j + 1) * d].copy_from_slice(&p.data);
+            }
+            self.submit_fused(fused, b);
+        }
+        Ok(())
+    }
+
+    /// Rank-0 logits for every lane row.
+    fn lane_logits(&mut self, x_lane: &Tensor, row: &mut Tensor) -> Result<Vec<Vec<f32>>> {
+        let d = self.d_model;
+        let b = x_lane.shape[0];
+        let mut out = Vec::with_capacity(b);
+        for j in 0..b {
+            row.data.copy_from_slice(&x_lane.data[j * d..(j + 1) * d]);
+            out.push(self.run_logits(&*row)?.data);
+        }
+        Ok(out)
+    }
+
+    /// Fused decode-only step: the whole lane advances one token with
+    /// `2 × n_layers` collectives total instead of `B × 2 × n_layers` —
+    /// bit-identical to B independent [`ComputeWorker::decode`] steps.
+    fn decode_fused(&mut self, lane: &[DecodeSlot]) -> Result<Option<Vec<Vec<f32>>>> {
+        debug_assert!(!lane.is_empty());
+        let mut x_lane = self.embed_lane(lane)?;
+        let mut row = Tensor::zeros(vec![1, self.d_model]);
+        for l in 0..self.geo_layers {
+            self.lane_attn_submit(l, lane, &x_lane, &mut row)?;
+            self.recv_reduced_apply(&mut x_lane);
+            self.lane_mlp_submit(l, &x_lane, &mut row)?;
+            self.recv_reduced_apply(&mut x_lane);
+        }
+        if self.rank == 0 {
+            Ok(Some(self.lane_logits(&x_lane, &mut row)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// The mixed iteration (Fig 1c ∘ 1d): the prefill chunks run the ISO
+    /// pipeline while the decode lane's compute slides into the windows
+    /// where the prefill's collectives are on the ring, and the lane's
+    /// fused collectives fly under prefill compute. Submission and
+    /// consumption orders are FIFO-matched per layer:
+    /// `[P_attn×k, D_attn, P_mlp×k, D_mlp]`.
+    fn step_mixed(
+        &mut self,
+        p: &StepPrefill,
+        lane: &[DecodeSlot],
+    ) -> Result<StepLogits> {
+        self.ensure_slot(p.slot);
+        let k = p.chunks.len();
+        let mut xs: Vec<Tensor> = p
+            .chunks
+            .iter()
+            .map(|c| self.run_embed(&p.tokens[c.offset..c.offset + c.len]))
+            .collect::<Result<_>>()?;
+        let mut x_lane = self.embed_lane(lane)?;
+        let mut row = Tensor::zeros(vec![1, self.d_model]);
+
+        for l in 0..self.geo_layers {
+            // Prefill chunk attentions launch first so their collectives
+            // are on the ring while the lane computes.
+            for i in 0..k {
+                if l > 0 {
+                    self.recv_reduced_apply(&mut xs[i]);
+                }
+                let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
+                self.submit(partial.data, p.chunks[i].len);
+            }
+            if l > 0 {
+                self.recv_reduced_apply(&mut x_lane);
+            }
+            self.lane_attn_submit(l, lane, &x_lane, &mut row)?;
+            for i in 0..k {
+                self.recv_reduced_apply(&mut xs[i]);
+                let partial = self.run_mlp(l, &xs[i])?;
+                self.submit(partial.data, p.chunks[i].len);
+            }
+            self.recv_reduced_apply(&mut x_lane);
+            self.lane_mlp_submit(l, &x_lane, &mut row)?;
+        }
+        for x in xs.iter_mut() {
+            self.recv_reduced_apply(x);
+        }
+        self.recv_reduced_apply(&mut x_lane);
+
+        if self.rank == 0 {
+            let last_idx = p.chunks.iter().position(|c| c.last).expect("no last chunk");
+            let prefill_logits = self.logits_row_of(&xs[last_idx], p.logits_row)?;
+            let decode_logits = self.lane_logits(&x_lane, &mut row)?;
+            Ok((Some(prefill_logits), Some(decode_logits)))
+        } else {
+            Ok((None, None))
+        }
+    }
+
+    /// Dispatch one `Job::Step`.
+    fn exec_step(
+        &mut self,
+        prefill: Option<&StepPrefill>,
+        lane: &[DecodeSlot],
+    ) -> Result<StepLogits> {
+        match (prefill, lane.is_empty()) {
+            (Some(p), true) => {
+                let logits = self.prefill(p.slot, &p.tokens, &p.chunks, p.logits_row)?;
+                Ok((logits, if self.rank == 0 { Some(Vec::new()) } else { None }))
+            }
+            (None, false) => Ok((None, self.decode_fused(lane)?)),
+            (Some(p), false) => {
+                if self.strategy == Strategy::Iso {
+                    self.step_mixed(p, lane)
+                } else {
+                    // Serial baseline: prefill blocks, then the fused lane
+                    // — collective fusion without overlap.
+                    let logits = self.prefill(p.slot, &p.tokens, &p.chunks, p.logits_row)?;
+                    Ok((logits, self.decode_fused(lane)?))
+                }
+            }
+            (None, true) => Ok((None, if self.rank == 0 { Some(Vec::new()) } else { None })),
+        }
+    }
+
     fn release(&mut self, slot: usize) {
         self.caches.remove(&slot);
     }
@@ -546,10 +797,17 @@ fn comm_main(
                 handle.recycle_f32(buf);
             }
         }
-        let CommJob { mut data, rows, cols, segments } = job;
+        let CommJob { mut data, rows, cols, segments, fused } = job;
         let t = Timer::start();
         let mut hung_up = false;
-        let bytes = if segments <= 1 {
+        let bytes = if fused {
+            // Decode lane: rank-ordered fused-rows reduce, bit-identical
+            // to per-row collectives; one ack for the whole lane.
+            let b = handle.allreduce_rows_fused(&mut data, rows, cols, quant);
+            stats.fused_allreduces += 1;
+            hung_up = acks.send(SegAck { row_start: 0, rows, data }).is_err();
+            b
+        } else if segments <= 1 {
             // Single segment: hand the whole payload over, no copy.
             let b = handle.allreduce_seg(&mut data, rows, cols, quant, 1);
             hung_up = acks.send(SegAck { row_start: 0, rows, data }).is_err();
@@ -611,10 +869,15 @@ fn compute_main(
         .with_context(|| format!("building worker {rank}"))?;
     while let Ok(job) = jobs.recv() {
         match job {
-            Job::Prefill { slot, tokens, chunks, logits_row } => {
-                let logits = w.prefill(slot, &tokens, &chunks, logits_row)?;
-                if let (Some(tx), Some(row)) = (&reply, logits) {
-                    tx.send(Reply::Logits(row)).ok();
+            Job::Step { prefill, decode } => {
+                let (prefill_logits, decode_logits) =
+                    w.exec_step(prefill.as_deref(), &decode)?;
+                if let Some(tx) = &reply {
+                    tx.send(Reply::Step {
+                        prefill: prefill_logits,
+                        decode: decode_logits.unwrap_or_default(),
+                    })
+                    .ok();
                 }
             }
             Job::Decode { slot, token, offset } => {
@@ -650,6 +913,22 @@ pub struct Engine {
     pub metrics: EngineMetrics,
     free_slots: Vec<usize>,
     smallest_chunk: usize,
+    /// Prefill chunk sizes the artifacts compile (sorted, > 1).
+    chunk_sizes: Vec<usize>,
+    /// Calibrated context for `split::choose_split` (satellite: the
+    /// engine's balanced split agrees with the simulator's bisection).
+    split_ctx: SplitContext,
+}
+
+/// Result of one mixed iteration ([`Engine::step`]).
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    /// Prefill result, if the iteration carried one.
+    pub prefill: Option<PrefillOut>,
+    /// Greedy next token per decode lane entry, in lane order.
+    pub decode_tokens: Vec<i32>,
+    /// Full logits per decode lane entry, in lane order.
+    pub decode_logits: Vec<Vec<f32>>,
 }
 
 impl Engine {
@@ -658,6 +937,9 @@ impl Engine {
     pub fn start(cfg: EngineConfig) -> Result<Engine> {
         if cfg.comm_segments == 0 {
             bail!("comm_segments must be >= 1");
+        }
+        if cfg.decode_batch == 0 {
+            bail!("decode_batch must be >= 1");
         }
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         if !manifest.tp_degrees.contains(&cfg.tp) {
@@ -716,6 +998,7 @@ impl Engine {
         }
 
         let free_slots = (0..cfg.max_batch).rev().collect();
+        let split_ctx = SplitContext::engine(&cfg);
         Ok(Engine {
             cfg,
             manifest,
@@ -726,6 +1009,8 @@ impl Engine {
             metrics: EngineMetrics::default(),
             free_slots,
             smallest_chunk,
+            chunk_sizes: prefill_chunks,
+            split_ctx,
         })
     }
 
@@ -756,17 +1041,19 @@ impl Engine {
 
     /// Prefill one prompt; returns the first generated token and TTFT.
     pub fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
-        let slot = self.acquire_slot()?;
+        let slot = self.alloc_slot()?;
         let out = self.prefill_in_slot(slot, prompt);
-        self.release_slot(slot)?;
+        self.free_slot(slot)?;
         out
     }
 
-    fn acquire_slot(&mut self) -> Result<usize> {
+    /// Claim a sequence slot for iteration-level driving ([`Engine::step`]).
+    pub fn alloc_slot(&mut self) -> Result<usize> {
         self.free_slots.pop().ok_or_else(|| anyhow!("no free sequence slots"))
     }
 
-    fn release_slot(&mut self, slot: usize) -> Result<()> {
+    /// Release a slot's KV caches on every rank and return it to the pool.
+    pub fn free_slot(&mut self, slot: usize) -> Result<()> {
         self.broadcast(Job::Release { slot });
         match self.reply_rx.recv() {
             Ok(Reply::Released) => {}
@@ -776,7 +1063,9 @@ impl Engine {
         Ok(())
     }
 
-    fn prefill_in_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<PrefillOut> {
+    /// Plan the prefill half of a step: pad, validate, tile (via the
+    /// calibrated split context), locate the true-last-token logits row.
+    fn plan_step_prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<StepPrefill> {
         if prompt.is_empty() {
             bail!("empty prompt");
         }
@@ -784,43 +1073,131 @@ impl Engine {
         if padded.len() > self.manifest.config.max_seq {
             bail!("prompt {} exceeds max_seq {}", padded.len(), self.manifest.config.max_seq);
         }
-        let sizes: Vec<usize> = self
-            .manifest
-            .chunk_lens
-            .iter()
-            .copied()
-            .filter(|&t| t > 1 && t <= self.cfg.max_chunk)
-            .collect();
-        let chunks =
-            plan_prefill(slot as u64, padded.len(), self.cfg.strategy, self.cfg.split, &sizes);
+        let chunks = plan_prefill(
+            slot as u64,
+            padded.len(),
+            self.cfg.strategy,
+            self.cfg.split,
+            &self.chunk_sizes,
+            Some(&self.split_ctx),
+        );
         let last = chunks.iter().find(|c| c.last).unwrap();
         let true_last = prompt.len() - 1;
         if true_last < last.offset {
             bail!("internal: true last token not in final chunk");
         }
         let logits_row = true_last - last.offset;
-        let n_chunks = chunks.len() as u64;
+        Ok(StepPrefill { slot, tokens: padded, chunks, logits_row })
+    }
 
+    /// One mixed iteration (DESIGN.md §9): at most one prefill plus a
+    /// fused decode lane over engine-managed slots. Lane entries advance
+    /// independent sequences one token each, sharing one B-row collective
+    /// per layer-stage.
+    pub fn step(
+        &mut self,
+        prefill: Option<(usize, &[i32])>,
+        decode: &[DecodeSlot],
+    ) -> Result<StepOut> {
+        let planned = match prefill {
+            Some((slot, prompt)) => Some(Arc::new(self.plan_step_prefill(slot, prompt)?)),
+            None => None,
+        };
+        if planned.is_none() && decode.is_empty() {
+            bail!("empty step: no prefill and no decode lane");
+        }
+        let max_seq = self.manifest.config.max_seq;
+        if let Some(d) = decode.iter().find(|d| d.offset >= max_seq) {
+            bail!("lane slot {} offset {} exceeds max_seq {max_seq}", d.slot, d.offset);
+        }
+        let slot_cap = self.cfg.max_batch;
+        let bad_slot = planned
+            .as_ref()
+            .map(|p| p.slot)
+            .into_iter()
+            .chain(decode.iter().map(|d| d.slot))
+            .find(|&s| s >= slot_cap);
+        if let Some(s) = bad_slot {
+            bail!("slot {s} outside the engine's slot range (max_batch {slot_cap})");
+        }
+        if let (Some(p), false) = (&planned, decode.is_empty()) {
+            if decode.iter().any(|d| d.slot == p.slot) {
+                bail!("slot {} cannot prefill and decode in one step", p.slot);
+            }
+        }
+        let mut slots: Vec<usize> = decode.iter().map(|d| d.slot).collect();
+        slots.sort_unstable();
+        if let Some(w) = slots.windows(2).find(|w| w[0] == w[1]) {
+            bail!("slot {} appears twice in the decode lane", w[0]);
+        }
+        self.run_step(planned, decode, true)
+    }
+
+    /// `count_iteration` separates genuine mixed iterations (the public
+    /// `step` API and the mixed serving loop) from request-level callers
+    /// routed through the same job (`prefill_in_slot`), so the
+    /// `iterations`/`iter_occupancy` metrics stay meaningful in the
+    /// sequential A/B baseline.
+    fn run_step(
+        &mut self,
+        prefill: Option<Arc<StepPrefill>>,
+        decode: &[DecodeSlot],
+        count_iteration: bool,
+    ) -> Result<StepOut> {
+        let n_chunks = prefill.as_ref().map_or(0, |p| p.chunks.len());
         let timer = Timer::start();
-        self.broadcast(Job::Prefill {
-            slot,
-            tokens: Arc::new(padded),
-            chunks: Arc::new(chunks),
-            logits_row,
+        self.broadcast(Job::Step {
+            prefill: prefill.clone(),
+            decode: Arc::new(decode.to_vec()),
         });
-        let logits = self.recv_logits()?;
-        let ttft = timer.elapsed_ms();
+        let (prefill_logits, decode_logits) = match self.reply_rx.recv() {
+            Ok(Reply::Step { prefill, decode }) => (prefill, decode),
+            Ok(other) => bail!("unexpected step reply {other:?}"),
+            Err(_) => bail!("rank0 worker died — check earlier errors"),
+        };
+        let elapsed = timer.elapsed_ms();
 
-        self.metrics.ttft_ms.record(ttft);
-        self.metrics.prefill_chunks += n_chunks;
-        self.metrics.generated_tokens += 1;
-        let first_token = argmax(&logits);
-        Ok(PrefillOut { first_token, ttft_ms: ttft, logits })
+        if count_iteration {
+            self.metrics.iterations += 1;
+            self.metrics.iter_occupancy.record((n_chunks + decode.len()) as f64);
+        }
+        self.metrics.generated_tokens += decode.len() as u64;
+        self.metrics.fused_decode_tokens += decode.len() as u64;
+
+        let prefill_out = match (prefill, prefill_logits) {
+            (Some(p), Some(logits)) => {
+                self.metrics.ttft_ms.record(elapsed);
+                self.metrics.prefill_chunks += p.chunks.len() as u64;
+                self.metrics.generated_tokens += 1;
+                let first_token = argmax(&logits);
+                Some(PrefillOut { first_token, ttft_ms: elapsed, logits })
+            }
+            (None, _) => None,
+            (Some(_), None) => bail!("step carried a prefill but no logits came back"),
+        };
+        if decode_logits.len() != decode.len() {
+            bail!("lane logits {} != lane width {}", decode_logits.len(), decode.len());
+        }
+        let decode_tokens = decode_logits.iter().map(|l| argmax(l)).collect();
+        Ok(StepOut { prefill: prefill_out, decode_tokens, decode_logits })
+    }
+
+    fn prefill_in_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<PrefillOut> {
+        let planned = Arc::new(self.plan_step_prefill(slot, prompt)?);
+        let out = self.run_step(Some(planned), &[], false)?;
+        out.prefill.ok_or_else(|| anyhow!("prefill step returned no result"))
+    }
+
+    /// One legacy per-sequence decode step on an engine-managed slot —
+    /// the un-fused baseline the decode lane is tested bit-identical to.
+    pub fn decode_one(&mut self, slot: usize, token: i32, offset: usize) -> Result<Vec<f32>> {
+        self.broadcast(Job::Decode { slot, token, offset });
+        self.recv_logits()
     }
 
     /// Prefill + `steps` greedy decode steps.
     pub fn generate(&mut self, prompt: &[i32], steps: usize) -> Result<GenOut> {
-        let slot = self.acquire_slot()?;
+        let slot = self.alloc_slot()?;
         let result = (|| {
             let pre = self.prefill_in_slot(slot, prompt)?;
             let mut tokens = vec![pre.first_token];
@@ -828,8 +1205,7 @@ impl Engine {
             let mut offset = prompt.len();
             for _ in 0..steps.min(self.manifest.config.max_seq - offset) {
                 let t = Timer::start();
-                self.broadcast(Job::Decode { slot, token: *tokens.last().unwrap(), offset });
-                let logits = self.recv_logits()?;
+                let logits = self.decode_one(slot, *tokens.last().unwrap(), offset)?;
                 decode_ms.push(t.elapsed_ms());
                 self.metrics.decode_ms.record(*decode_ms.last().unwrap());
                 self.metrics.generated_tokens += 1;
@@ -838,33 +1214,199 @@ impl Engine {
             }
             Ok(GenOut { tokens, ttft_ms: pre.ttft_ms, decode_ms })
         })();
-        self.release_slot(slot)?;
+        self.free_slot(slot)?;
         result
     }
 
-    /// Serve a full trace with continuous batching: admission up to
-    /// `max_batch` live sequences, arrival-time pacing, prefill per
-    /// request, then round-robin single-token decode across live
-    /// sequences (step-granular continuous batching). Returns per-request
-    /// latency accounting.
+    /// Serve a full trace with continuous batching. Under
+    /// `cfg.mixed_iterations` (the default) this is the iteration-level
+    /// mixed scheduler (DESIGN.md §9): every iteration broadcasts one
+    /// `Job::Step` composing the head-of-line prefill's ISO chunks with a
+    /// fused decode lane of up to `decode_batch` live sequences, so
+    /// decode collectives batch B× and decode compute hides behind
+    /// prefill communication. With it off, the legacy per-request loop
+    /// runs for A/B comparison. Both emit identical tokens.
     pub fn serve_trace(&mut self, reqs: &[crate::workload::Request]) -> Result<TraceReport> {
-        use std::collections::VecDeque;
+        if !self.cfg.mixed_iterations {
+            return self.serve_trace_sequential(reqs);
+        }
 
+        /// Leader bookkeeping per live request, around the planner's
+        /// scheduler-visible [`LaneSeq`].
+        struct Live {
+            lane: LaneSeq,
+            id: u64,
+            prompt: Vec<i32>,
+            tokens: Vec<i32>,
+            arrival_s: f64,
+            /// Engine-clock ms of the last emitted token (drives TBT).
+            last_emit_ms: f64,
+        }
+
+        let mut pending = sort_by_arrival(reqs);
+        let mut planner = MixedPlanner::new(
+            self.cfg.strategy,
+            self.cfg.split,
+            self.chunk_sizes.clone(),
+            self.cfg.decode_batch,
+            self.manifest.config.max_seq,
+        );
+        let mut live: Vec<Live> = Vec::new();
+        let mut report = TraceReport::default();
+        let clock = Timer::start();
+
+        while !pending.is_empty() || !live.is_empty() {
+            let now_s = clock.elapsed_ms() / 1e3;
+
+            // Admission: claim a slot per arrived request; the prefill
+            // itself is scheduled into a later iteration.
+            while let Some(next) = pending.front() {
+                if next.arrival_s > now_s && !live.is_empty() {
+                    break; // not arrived yet; keep the live set moving
+                }
+                if self.free_slots.is_empty() {
+                    break;
+                }
+                if next.arrival_s > now_s {
+                    // idle engine: sleep until the next arrival
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        next.arrival_s - now_s,
+                    ));
+                }
+                let r = pending.pop_front().unwrap();
+                let padded_len =
+                    crate::workload::pad_to_chunk(r.prompt.len().max(2), self.smallest_chunk);
+                if r.prompt.is_empty() || padded_len > self.manifest.config.max_seq {
+                    bail!(
+                        "request {}: prompt len {} unservable (max_seq {})",
+                        r.id,
+                        r.prompt.len(),
+                        self.manifest.config.max_seq
+                    );
+                }
+                let slot = self.alloc_slot()?;
+                live.push(Live {
+                    lane: LaneSeq {
+                        slot,
+                        prompt_len: padded_len,
+                        prefilled: false,
+                        last_token: 0,
+                        offset: 0,
+                        decode_left: r.decode_steps,
+                    },
+                    id: r.id,
+                    prompt: r.prompt.clone(),
+                    tokens: Vec::new(),
+                    arrival_s: r.arrival_s,
+                    last_emit_ms: 0.0,
+                });
+            }
+
+            // Retire finished sequences before composing the iteration.
+            // Order-preserving removal: `live` stays in admission order so
+            // the head-of-line prefill really is the first-admitted
+            // sequence (a swap_remove here would starve early arrivals).
+            let max_seq = self.manifest.config.max_seq;
+            let mut i = 0;
+            while i < live.len() {
+                let l = &live[i];
+                if l.lane.prefilled && !l.lane.decoding(max_seq) {
+                    let l = live.remove(i);
+                    report.e2e_ms.record(clock.elapsed_ms() - l.arrival_s * 1e3);
+                    report.completed += 1;
+                    report.generated += l.tokens.len() as u64;
+                    report.completions.push((l.id, l.tokens));
+                    self.free_slot(l.lane.slot)?;
+                    continue;
+                }
+                i += 1;
+            }
+            if live.is_empty() {
+                continue; // next lap admits (and sleeps for) the next arrival
+            }
+
+            // Compose and execute one mixed iteration. The planner's
+            // chunk set is used as-is; only padding and the logits row
+            // are derived here — no second planning pass.
+            let lane_view: Vec<LaneSeq> = live.iter().map(|l| l.lane.clone()).collect();
+            let plan = planner.plan(&lane_view, Some(&self.split_ctx));
+            let prefill_job = match &plan.prefill {
+                Some(pf) => {
+                    let l =
+                        live.iter().find(|l| l.lane.slot == pf.slot).expect("planned slot");
+                    let last = pf.chunks.iter().find(|c| c.last).expect("plan has last chunk");
+                    let true_last = l.prompt.len() - 1;
+                    if true_last < last.offset {
+                        bail!("internal: true last token not in final chunk");
+                    }
+                    let mut tokens = l.prompt.clone();
+                    tokens.resize(pf.prompt_len, 0);
+                    Some(Arc::new(StepPrefill {
+                        slot: pf.slot,
+                        tokens,
+                        chunks: pf.chunks.clone(),
+                        logits_row: true_last - last.offset,
+                    }))
+                }
+                None => None,
+            };
+            let out = self.run_step(prefill_job, &plan.decode, true)?;
+            let now_ms = clock.elapsed_ms();
+            report.iterations += 1;
+            let occupancy =
+                plan.prefill.as_ref().map_or(0, |p| p.chunks.len()) + plan.decode.len();
+            report.occupancy.record(occupancy as f64);
+
+            if let (Some(pf), Some(pre)) = (&plan.prefill, &out.prefill) {
+                let l = live
+                    .iter_mut()
+                    .find(|l| l.lane.slot == pf.slot)
+                    .expect("prefilled slot is live");
+                l.lane.prefilled = true;
+                l.lane.last_token = pre.first_token;
+                l.lane.offset = l.prompt.len();
+                l.tokens.push(pre.first_token);
+                l.last_emit_ms = now_ms;
+                report.ttft_ms.record(now_ms - l.arrival_s * 1e3);
+            }
+            for (j, d) in plan.decode.iter().enumerate() {
+                let l = live
+                    .iter_mut()
+                    .find(|l| l.lane.slot == d.slot)
+                    .expect("lane slot is live");
+                let token = out.decode_tokens[j];
+                l.lane.last_token = token;
+                l.lane.offset += 1;
+                l.lane.decode_left -= 1;
+                l.tokens.push(token);
+                let tbt = now_ms - l.last_emit_ms;
+                l.last_emit_ms = now_ms;
+                report.tbt_ms.record(tbt);
+                self.metrics.tbt_ms.record(tbt);
+            }
+        }
+        report.wall_s = clock.elapsed_ms() / 1e3;
+        Ok(report)
+    }
+
+    /// The pre-mixed-batching serving loop: inline prefill at admission,
+    /// then one blocking `Job::Decode` per live sequence per round.
+    /// Retained as the A/B baseline (`mixed_iterations = false`).
+    fn serve_trace_sequential(
+        &mut self,
+        reqs: &[crate::workload::Request],
+    ) -> Result<TraceReport> {
         struct Live {
             slot: usize,
-            #[allow(dead_code)] // kept for tracing/debug output
             id: u64,
             tokens: Vec<i32>,
             prompt_len: usize,
             decode_left: usize,
             arrival_s: f64,
+            last_emit_ms: f64,
         }
 
-        let mut pending: VecDeque<&crate::workload::Request> = {
-            let mut v: Vec<&crate::workload::Request> = reqs.iter().collect();
-            v.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-            v.into_iter().collect()
-        };
+        let mut pending = sort_by_arrival(reqs);
         let mut live: Vec<Live> = Vec::new();
         let mut report = TraceReport::default();
         let clock = Timer::start();
@@ -887,7 +1429,7 @@ impl Engine {
                     ));
                 }
                 let r = pending.pop_front().unwrap();
-                let slot = self.acquire_slot()?;
+                let slot = self.alloc_slot()?;
                 let out = self.prefill_in_slot(slot, &r.prompt)?;
                 report
                     .ttft_ms
@@ -899,6 +1441,7 @@ impl Engine {
                     prompt_len: r.prompt.len(),
                     decode_left: r.decode_steps,
                     arrival_s: r.arrival_s,
+                    last_emit_ms: clock.elapsed_ms(),
                 });
             }
 
@@ -916,19 +1459,23 @@ impl Engine {
                         .record(clock.elapsed_ms() - l.arrival_s * 1e3);
                     report.completed += 1;
                     report.generated += l.tokens.len() as u64;
-                    self.release_slot(l.slot)?;
+                    report.completions.push((l.id, l.tokens));
+                    self.free_slot(l.slot)?;
                     continue;
                 }
                 let token = *l.tokens.last().unwrap();
                 let slot = l.slot;
-                self.broadcast(Job::Decode { slot, token, offset });
-                let logits = self.recv_logits()?;
+                let logits = self.decode_one(slot, token, offset)?;
+                let now_ms = clock.elapsed_ms();
                 let l = &mut live[i];
                 l.tokens.push(argmax(&logits));
                 l.decode_left -= 1;
+                report.tbt_ms.record(now_ms - l.last_emit_ms);
+                l.last_emit_ms = now_ms;
                 self.metrics.generated_tokens += 1;
                 i += 1;
             }
+            report.iterations += 1;
         }
         report.wall_s = clock.elapsed_ms() / 1e3;
         Ok(report)
@@ -946,6 +1493,7 @@ impl Engine {
             let comm = j.join().map_err(|_| anyhow!("comm thread panicked"))?;
             w.comm_ms = comm.comm_ms;
             w.allreduces = comm.allreduces;
+            w.fused_allreduces = comm.fused_allreduces;
             w.wire_bytes = comm.wire_bytes;
             w.wire_msgs = comm.wire_msgs;
         }
@@ -956,12 +1504,20 @@ impl Engine {
         metrics.comm_bytes = workers.iter().map(|w| w.wire_bytes).sum();
         metrics.comm_msgs = workers.iter().map(|w| w.wire_msgs).sum();
         metrics.seg_acks = workers.iter().map(|w| w.seg_acks).sum();
+        metrics.fused_allreduces = workers.iter().map(|w| w.fused_allreduces).sum();
         let n_workers = workers.len().max(1) as f64;
         metrics.overlapped_ms =
             workers.iter().map(|w| w.overlapped_ms()).sum::<f64>() / n_workers;
         metrics.exposed_ms = workers.iter().map(|w| w.stall_ms).sum::<f64>() / n_workers;
         Ok(EngineReport { metrics, workers })
     }
+}
+
+/// Requests ordered by arrival time, ready for FIFO admission.
+fn sort_by_arrival(reqs: &[crate::workload::Request]) -> VecDeque<&crate::workload::Request> {
+    let mut v: Vec<&crate::workload::Request> = reqs.iter().collect();
+    v.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    v.into_iter().collect()
 }
 
 fn argmax(v: &[f32]) -> i32 {
@@ -995,22 +1551,35 @@ mod tests {
 
     #[test]
     fn broadcast_jobs_share_payloads() {
-        // Arc payloads: cloning a Job must not copy the token buffer.
-        let tokens = Arc::new((0..1024).collect::<Vec<i32>>());
-        let chunks = Arc::new(Vec::<ChunkJob>::new());
-        let job = Job::Prefill {
+        // Arc payloads: cloning a Job must not copy the prefill or lane.
+        let prefill = Arc::new(StepPrefill {
             slot: 0,
-            tokens: Arc::clone(&tokens),
-            chunks: Arc::clone(&chunks),
+            tokens: (0..1024).collect(),
+            chunks: Vec::new(),
             logits_row: 0,
-        };
+        });
+        let decode = Arc::new(vec![DecodeSlot { slot: 1, token: 7, offset: 3 }; 8]);
+        let job = Job::Step { prefill: Some(Arc::clone(&prefill)), decode: Arc::clone(&decode) };
         let copy = job.clone();
         match (&job, &copy) {
-            (Job::Prefill { tokens: a, .. }, Job::Prefill { tokens: b, .. }) => {
-                assert!(Arc::ptr_eq(a, b), "clone must share the token buffer");
-                assert_eq!(Arc::strong_count(&tokens), 3);
+            (
+                Job::Step { prefill: Some(a), decode: da },
+                Job::Step { prefill: Some(b), decode: db },
+            ) => {
+                assert!(Arc::ptr_eq(a, b), "clone must share the prefill payload");
+                assert!(Arc::ptr_eq(da, db), "clone must share the lane");
+                assert_eq!(Arc::strong_count(&prefill), 3);
             }
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn trace_report_new_fields_default_empty() {
+        let t = TraceReport::default();
+        assert_eq!(t.iterations, 0);
+        assert!(t.tbt_ms.is_empty() && t.occupancy.is_empty());
+        assert!(t.completions.is_empty());
+        assert_eq!(t.throughput_tok_s(), 0.0);
     }
 }

@@ -202,6 +202,35 @@ impl NodeProfile {
         Ok(p)
     }
 
+    /// The CPU engine testbed itself (DESIGN.md §2): XLA-CPU f32 GEMM
+    /// throughput with its (much earlier) small-m efficiency knee, and the
+    /// ring's throttled α/β when the engine emulates a PCIe-class link.
+    /// This is what threads `split::choose_split` into
+    /// `batch::plan_prefill`, so the engine's balanced ISO split comes
+    /// from the same calibrated bisection the simulator and benches use
+    /// instead of a hardcoded ratio.
+    pub fn cpu_engine(threads: usize, link_mbps: Option<f64>, link_alpha_us: f64) -> Self {
+        assert!(threads >= 1);
+        NodeProfile {
+            device: DeviceProfile {
+                name: "cpu-engine".into(),
+                peak_flops: 8e9, // per-worker f32 XLA-CPU GEMM on the tiny model
+                peak_eff: 0.6,
+                m_half: 12.0,
+                launch_s: 25e-6,
+                // Comm runs on a separate OS thread, not on shared SMs.
+                contention: 1.0,
+            },
+            link: LinkProfile {
+                alpha_s: link_alpha_us * 1e-6,
+                // Unthrottled shared-memory channels move ~GB/s.
+                link_bytes_per_s: link_mbps.map_or(2.0e9, |m| m * 1e6),
+            },
+            cards: threads,
+            int8_wire_default: false,
+        }
+    }
+
     /// All-reduce wall time for `bytes` of fp16 activations, with optional
     /// int8 wire quantization (halves payload, adds per-row scales ≈ +2%).
     pub fn allreduce_s(&self, fp16_bytes: usize, int8_wire: bool) -> f64 {

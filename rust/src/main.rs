@@ -61,13 +61,25 @@ fn serve(cli: &Cli) -> Result<()> {
     if let Some(s) = cli.get("split") {
         cfg.split = SplitPolicy::parse(s).ok_or_else(|| anyhow!("bad --split {s:?}"))?;
     }
+    if cli.has("decode-batch") {
+        cfg.decode_batch = cli.usize_or("decode-batch", cfg.decode_batch).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(m) = cli.get("mixed") {
+        cfg.mixed_iterations =
+            iso::config::parse_bool(m, "--mixed").map_err(|e| anyhow!(e))?;
+    }
     let n_requests = cli.usize_or("requests", 8).map_err(|e| anyhow!(e))?;
     let prompt_len = cli.usize_or("prompt-len", 128).map_err(|e| anyhow!(e))?;
     let decode = cli.usize_or("decode", 0).map_err(|e| anyhow!(e))?;
 
     println!(
-        "engine: tp={} strategy={} comm_quant={:?} artifacts={}",
-        cfg.tp, cfg.strategy, cfg.comm_quant, cfg.artifacts_dir
+        "engine: tp={} strategy={} comm_quant={:?} mixed={} decode_batch={} artifacts={}",
+        cfg.tp,
+        cfg.strategy,
+        cfg.comm_quant,
+        cfg.mixed_iterations,
+        cfg.decode_batch,
+        cfg.artifacts_dir
     );
     let mut engine = Engine::start(cfg)?;
     let vocab = engine.manifest.config.vocab;
@@ -88,12 +100,19 @@ fn serve(cli: &Cli) -> Result<()> {
         let trace = engine.serve_trace(&reqs)?;
         let mut t = trace.clone();
         println!(
-            "completed {} requests, {:.0} tok/s; {}",
+            "completed {} requests in {} iterations, {:.0} tok/s; {}",
             trace.completed,
+            trace.iterations,
             trace.throughput_tok_s(),
             t.ttft_ms.summary("ttft_from_arrival_ms"),
         );
         println!("{}", t.e2e_ms.summary("e2e_ms"));
+        if !t.tbt_ms.is_empty() {
+            println!("{}", t.tbt_ms.summary("tbt_ms"));
+        }
+        if !t.occupancy.is_empty() {
+            println!("{}", t.occupancy.summary("iter_occupancy"));
+        }
     } else {
         for r in &reqs {
             let out = engine.generate(&r.prompt, r.decode_steps)?;

@@ -109,6 +109,21 @@ pub struct EngineMetrics {
     pub ttft_ms: Histogram,
     /// Per-decode-step latency (ms).
     pub decode_ms: Histogram,
+    /// Time between consecutive tokens of a sequence under the mixed
+    /// scheduler (ms per decoded token) — the serving-side latency the
+    /// decode lane trades against batching.
+    pub tbt_ms: Histogram,
+    /// Per-iteration batch occupancy: prefill chunks + decode lane rows
+    /// composed into each `Job::Step`.
+    pub iter_occupancy: Histogram,
+    /// Mixed iterations the leader executed.
+    pub iterations: u64,
+    /// Tokens decoded through the fused lane (vs. legacy per-sequence
+    /// `Job::Decode` steps, which record into `decode_ms`).
+    pub fused_decode_tokens: u64,
+    /// Fused B-row lane collectives (one per layer-stage per iteration
+    /// with a non-empty lane).
+    pub fused_allreduces: u64,
     /// Prefill chunks executed.
     pub prefill_chunks: u64,
     /// All-reduce invocations.
@@ -130,12 +145,30 @@ pub struct EngineMetrics {
 }
 
 impl EngineMetrics {
+    /// Exposed (un-hidden) communication per generated token (ms/tok) —
+    /// the quantity decode-collective fusion drives down as the lane
+    /// widens.
+    pub fn exposed_ms_per_token(&self) -> f64 {
+        if self.generated_tokens == 0 {
+            return 0.0;
+        }
+        self.exposed_ms / self.generated_tokens as f64
+    }
+
     pub fn report(&mut self) -> String {
         let mut s = String::new();
         s.push_str(&self.ttft_ms.summary("ttft_ms"));
         s.push('\n');
         if !self.decode_ms.is_empty() {
             s.push_str(&self.decode_ms.summary("decode_ms"));
+            s.push('\n');
+        }
+        if !self.tbt_ms.is_empty() {
+            s.push_str(&self.tbt_ms.summary("tbt_ms"));
+            s.push('\n');
+        }
+        if !self.iter_occupancy.is_empty() {
+            s.push_str(&self.iter_occupancy.summary("iter_occupancy"));
             s.push('\n');
         }
         s.push_str(&format!(
@@ -149,6 +182,14 @@ impl EngineMetrics {
             self.generated_tokens,
             self.overlapped_ms,
             self.exposed_ms
+        ));
+        s.push_str(&format!(
+            "\niterations={} fused_decode_tokens={} fused_allreduces={} \
+             exposed_ms_per_tok={:.4}",
+            self.iterations,
+            self.fused_decode_tokens,
+            self.fused_allreduces,
+            self.exposed_ms_per_token()
         ));
         s
     }
@@ -215,5 +256,25 @@ mod tests {
         let r = m.report();
         assert!(r.contains("prefill_chunks=4"));
         assert!(r.contains("allreduces=16"));
+        assert!(r.contains("iterations=0"));
+    }
+
+    #[test]
+    fn exposed_per_token_and_mixed_counters() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.exposed_ms_per_token(), 0.0); // no tokens, no NaN
+        m.generated_tokens = 40;
+        m.exposed_ms = 10.0;
+        assert!((m.exposed_ms_per_token() - 0.25).abs() < 1e-12);
+        m.tbt_ms.record(3.0);
+        m.iter_occupancy.record(9.0);
+        m.iterations = 7;
+        m.fused_decode_tokens = 32;
+        m.fused_allreduces = 56;
+        let r = m.report();
+        assert!(r.contains("tbt_ms"));
+        assert!(r.contains("iter_occupancy"));
+        assert!(r.contains("fused_decode_tokens=32"));
+        assert!(r.contains("exposed_ms_per_tok=0.25"));
     }
 }

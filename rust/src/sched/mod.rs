@@ -93,6 +93,30 @@ impl Coster {
     pub fn mlp_block_s(&self, t: usize) -> f64 {
         self.gate_up_s(t) + self.down_seg_s(t, 1)
     }
+
+    /// One decode row's attention block over a KV context of `ctx`
+    /// tokens. Decode attention is per-sequence in both the fused and
+    /// per-sequence schedules — each row reads its own cache at its own
+    /// offset — so the lane costs `batch ×` this.
+    pub fn decode_attn_s(&self, ctx: usize) -> f64 {
+        self.qkv_s(1) + self.attn_core_s(1, ctx) + self.o_proj_seg_s(1, 1)
+    }
+
+    /// The fused decode-lane collective, costed as the engine executes it
+    /// (`collective::allreduce_rows_fused`): rank-ordered reduce +
+    /// broadcast, 2(R−1) messages each carrying the **full** B-row
+    /// payload — no 1/R chunking (that's the bit-identity trade). α
+    /// amortizes B×; the bandwidth term does not shrink with R.
+    pub fn fused_ar_s(&self, b: usize) -> f64 {
+        let r = self.node.cards;
+        if r <= 1 || b == 0 {
+            return 0.0;
+        }
+        let bytes = (b * self.model.d_model * self.model.act_bytes) as f64;
+        let wire = if self.int8_wire { bytes * 0.51 } else { bytes };
+        2.0 * (r as f64 - 1.0)
+            * (self.node.link.alpha_s + wire / self.node.link.link_bytes_per_s)
+    }
 }
 
 /// Push a compute block as `segments` chained launches; returns the id of
@@ -311,6 +335,213 @@ fn build_two_chunk(c: &Coster, split: &Split, segments: usize, intra_sequence: b
     g
 }
 
+/// One iteration of the mixed scheduler (DESIGN.md §9): the head-of-line
+/// prefill's two ISO chunks composed with a decode micro-batch.
+#[derive(Clone, Copy, Debug)]
+pub struct MixedIteration {
+    /// Prefill tokens carried this iteration (0 = decode-only).
+    pub prefill_tokens: usize,
+    /// Decode lane width: sequences decoding one token each.
+    pub decode_batch: usize,
+    /// KV context length each decode row attends over.
+    pub decode_ctx: usize,
+    /// `true`: the lane shares one B-row collective per layer-stage and
+    /// its MLP runs as one B-row GEMM. `false`: the legacy per-sequence
+    /// schedule — B blocking single-row collectives and t=1 GEMMs.
+    pub fused: bool,
+}
+
+/// Lower one mixed iteration to an op graph. The decode lane (chunk tag
+/// 2) is dependency-free of the prefill chunks, so the simulator lets
+/// the lane's compute run inside the prefill's communication windows and
+/// the lane's collectives hide behind prefill compute — the engine's
+/// `step_mixed` interleave (Fig 1c composed with Fig 1d).
+pub fn build_mixed(
+    c: &Coster,
+    split: Option<&Split>,
+    mix: &MixedIteration,
+    segments: usize,
+) -> OpGraph {
+    assert_ne!(
+        mix.prefill_tokens, 1,
+        "a 1-token prefill cannot be costed; use 0 (decode-only) or >= 2"
+    );
+    assert_eq!(
+        split.is_some(),
+        mix.prefill_tokens >= 2,
+        "split must accompany a prefill of >= 2 tokens"
+    );
+    if let Some(s) = split {
+        assert_eq!(s.total(), mix.prefill_tokens, "split must cover the prefill");
+    }
+    assert!(mix.decode_batch >= 1 || split.is_some(), "empty iteration");
+    let mut g = OpGraph::new();
+    let b = mix.decode_batch;
+    let ctx = mix.decode_ctx;
+
+    let mut prev0: Vec<usize> = vec![];
+    let mut prev1: Vec<usize> = vec![];
+    let mut prev_d: Vec<usize> = vec![];
+    for l in 0..c.model.n_layers {
+        // --- prefill: the same two-chunk ISO skeleton as build_iso.
+        if let Some(split) = split {
+            let (t0, t1) = (split.t0, split.t1);
+            let qkv0 = push_segmented(
+                &mut g,
+                &format!("L{l}.qkv0"),
+                c.qkv_s(t0) / segments as f64,
+                segments,
+                &prev0,
+                0,
+            );
+            let core0 = push_segmented(
+                &mut g,
+                &format!("L{l}.attn0"),
+                (c.attn_core_s(t0, 0) + c.o_proj_seg_s(t0, 1)) / segments as f64,
+                segments,
+                &[qkv0],
+                0,
+            );
+            let ar_a0 =
+                g.push(format!("L{l}.ar_attn0"), OpKind::Comm, c.ar_s(t0, 1), &[core0], 0);
+            let qkv1 = push_segmented(
+                &mut g,
+                &format!("L{l}.qkv1"),
+                c.qkv_s(t1) / segments as f64,
+                segments,
+                &prev1,
+                1,
+            );
+            let core1 = push_segmented(
+                &mut g,
+                &format!("L{l}.attn1"),
+                (c.attn_core_s(t1, t0) + c.o_proj_seg_s(t1, 1)) / segments as f64,
+                segments,
+                &[qkv1, qkv0],
+                1,
+            );
+            let ar_a1 =
+                g.push(format!("L{l}.ar_attn1"), OpKind::Comm, c.ar_s(t1, 1), &[core1], 1);
+            let (m0, m1) = (split.mlp_t0, split.mlp_t1);
+            let mlp0 = push_segmented(
+                &mut g,
+                &format!("L{l}.mlp0"),
+                c.mlp_block_s(m0) / segments as f64,
+                segments,
+                &[ar_a0],
+                0,
+            );
+            let ar_m0 =
+                g.push(format!("L{l}.ar_mlp0"), OpKind::Comm, c.ar_s(m0, 1), &[mlp0], 0);
+            let mlp1 = push_segmented(
+                &mut g,
+                &format!("L{l}.mlp1"),
+                c.mlp_block_s(m1) / segments as f64,
+                segments,
+                &[ar_a1],
+                1,
+            );
+            let ar_m1 =
+                g.push(format!("L{l}.ar_mlp1"), OpKind::Comm, c.ar_s(m1, 1), &[mlp1], 1);
+            prev0 = vec![ar_m0];
+            prev1 = vec![ar_m1];
+        }
+
+        // --- decode lane.
+        if b > 0 {
+            if mix.fused {
+                // Per-row attention compute, one B-row collective, one
+                // B-row MLP GEMM (position-free), one more collective.
+                let attn = g.push(
+                    format!("L{l}.dec_attn"),
+                    OpKind::Compute,
+                    b as f64 * c.decode_attn_s(ctx),
+                    &prev_d,
+                    2,
+                );
+                let ar_a = g.push(
+                    format!("L{l}.dec_ar_attn"),
+                    OpKind::Comm,
+                    c.fused_ar_s(b),
+                    &[attn],
+                    2,
+                );
+                let mlp = g.push(
+                    format!("L{l}.dec_mlp"),
+                    OpKind::Compute,
+                    c.mlp_block_s(b),
+                    &[ar_a],
+                    2,
+                );
+                let ar_m = g.push(
+                    format!("L{l}.dec_ar_mlp"),
+                    OpKind::Comm,
+                    c.fused_ar_s(b),
+                    &[mlp],
+                    2,
+                );
+                prev_d = vec![ar_m];
+            } else {
+                // Legacy round-robin: each sequence's layer is a blocking
+                // attn → AR → mlp → AR chain, sequences back-to-back.
+                for j in 0..b {
+                    let attn = g.push(
+                        format!("L{l}.dec{j}.attn"),
+                        OpKind::Compute,
+                        c.decode_attn_s(ctx),
+                        &prev_d,
+                        2,
+                    );
+                    let ar_a = g.push(
+                        format!("L{l}.dec{j}.ar_attn"),
+                        OpKind::Comm,
+                        c.ar_s(1, 1),
+                        &[attn],
+                        2,
+                    );
+                    let mlp = g.push(
+                        format!("L{l}.dec{j}.mlp"),
+                        OpKind::Compute,
+                        c.mlp_block_s(1),
+                        &[ar_a],
+                        2,
+                    );
+                    let ar_m = g.push(
+                        format!("L{l}.dec{j}.ar_mlp"),
+                        OpKind::Comm,
+                        c.ar_s(1, 1),
+                        &[mlp],
+                        2,
+                    );
+                    prev_d = vec![ar_m];
+                }
+            }
+        }
+    }
+    g
+}
+
+/// Makespan of one mixed iteration on a node — what the PR-2 bench
+/// records next to the engine's measured sweep so both predict the same
+/// direction as `decode_batch` grows.
+pub fn mixed_iteration_s(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    policy: crate::config::SplitPolicy,
+    mix: &MixedIteration,
+    segments: usize,
+    int8_wire: bool,
+) -> f64 {
+    let c = Coster { node: node.clone(), model: model.clone(), int8_wire };
+    let split = if mix.prefill_tokens >= 2 {
+        Some(choose_split(policy, node, model, mix.prefill_tokens))
+    } else {
+        None
+    };
+    let g = build_mixed(&c, split.as_ref(), mix, segments);
+    simulate(&g, node.device.contention).makespan_s
+}
+
 /// Lower an experiment to its op graph.
 pub fn build(exp: &SimExperiment) -> OpGraph {
     let c = Coster::new(exp);
@@ -506,6 +737,79 @@ mod tests {
         e.int8_wire = true;
         let int8 = reduction_vs_serial(&e);
         assert!(int8 > fp16, "int8 wire gain {int8} !> fp16 {fp16}");
+    }
+
+    fn mix(prefill: usize, b: usize, fused: bool) -> MixedIteration {
+        MixedIteration { prefill_tokens: prefill, decode_batch: b, decode_ctx: 2048, fused }
+    }
+
+    fn mixed_s(m: &MixedIteration) -> f64 {
+        mixed_iteration_s(
+            &NodeProfile::rtx4090(4),
+            &ModelSpec::mha_30b(),
+            crate::config::SplitPolicy::AttnBalanced,
+            m,
+            1,
+            true,
+        )
+    }
+
+    #[test]
+    fn fused_decode_lane_beats_per_sequence() {
+        // The batched-decode direction: one B-row collective per stage
+        // and a B-row MLP GEMM beat B blocking single-row rounds.
+        let fused = mixed_s(&mix(0, 8, true));
+        let unfused = mixed_s(&mix(0, 8, false));
+        assert!(
+            fused < 0.6 * unfused,
+            "fused lane {fused} should be well under per-seq {unfused}"
+        );
+    }
+
+    #[test]
+    fn fused_decode_per_token_improves_with_batch() {
+        // α-amortization + the GEMM efficiency curve: per-token iteration
+        // time must fall monotonically as the lane widens.
+        let per_tok = |b: usize| mixed_s(&mix(0, b, true)) / b as f64;
+        let (t1, t4, t16) = (per_tok(1), per_tok(4), per_tok(16));
+        assert!(t4 < t1, "b=4 per-token {t4} !< b=1 {t1}");
+        assert!(t16 < t4, "b=16 per-token {t16} !< b=4 {t4}");
+    }
+
+    #[test]
+    fn mixed_iteration_hides_decode_comm_behind_prefill() {
+        // Composing the lane with a prefill must beat running the two
+        // iterations back-to-back: decode comm slides into prefill
+        // compute windows and vice versa.
+        let together = mixed_s(&mix(4096, 8, true));
+        let apart = mixed_s(&mix(4096, 0, true)) + mixed_s(&mix(0, 8, true));
+        assert!(
+            together < apart,
+            "mixed {together} should beat separate phases {apart}"
+        );
+    }
+
+    #[test]
+    fn mixed_graphs_execute_fully() {
+        let node = NodeProfile::a800(4);
+        let model = ModelSpec::gqa_70b();
+        let c = Coster { node: node.clone(), model: model.clone(), int8_wire: false };
+        for m in [mix(4096, 8, true), mix(4096, 0, true), mix(0, 3, false), mix(0, 1, true)] {
+            let split = if m.prefill_tokens >= 2 {
+                Some(choose_split(
+                    crate::config::SplitPolicy::Even,
+                    &node,
+                    &model,
+                    m.prefill_tokens,
+                ))
+            } else {
+                None
+            };
+            let g = build_mixed(&c, split.as_ref(), &m, 2);
+            let tl = simulate(&g, node.device.contention);
+            assert_eq!(tl.spans.len(), g.ops.len(), "{m:?}");
+            assert!(tl.makespan_s > 0.0);
+        }
     }
 
     #[test]

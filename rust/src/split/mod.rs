@@ -11,6 +11,33 @@ use crate::config::SplitPolicy;
 use crate::hw::NodeProfile;
 use crate::model::ModelSpec;
 
+/// Calibrated context threaded from the engine/bench config into
+/// `batch::plan_prefill`, so the engine-side split point comes from the
+/// same `choose_split` bisection the simulator uses instead of a
+/// hardcoded ratio (the old `0.55` closed form survives only as the
+/// fallback when no profile is supplied).
+#[derive(Clone, Debug)]
+pub struct SplitContext {
+    pub node: NodeProfile,
+    pub model: ModelSpec,
+}
+
+impl SplitContext {
+    pub fn new(node: NodeProfile, model: ModelSpec) -> Self {
+        SplitContext { node, model }
+    }
+
+    /// The real CPU engine's own calibrated testbed: its worker count,
+    /// its (optionally throttled) ring link, and the tiny model it
+    /// actually executes.
+    pub fn engine(cfg: &crate::config::EngineConfig) -> Self {
+        SplitContext {
+            node: NodeProfile::cpu_engine(cfg.tp, cfg.link_mbps, cfg.link_alpha_us),
+            model: ModelSpec::tiny_gqa(),
+        }
+    }
+}
+
 /// The token counts assigned to the two micro-batches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Split {
@@ -216,6 +243,19 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn engine_split_context_uses_cpu_profile() {
+        let cfg = crate::config::EngineConfig::default();
+        let ctx = SplitContext::engine(&cfg);
+        assert_eq!(ctx.node.device.name, "cpu-engine");
+        assert_eq!(ctx.node.cards, cfg.tp);
+        assert_eq!(ctx.model.name, "tiny-gqa");
+        // The balanced bisection is solvable against it.
+        let s = choose_split(SplitPolicy::AttnBalanced, &ctx.node, &ctx.model, 128);
+        assert_eq!(s.total(), 128);
+        assert!(s.t0 >= 1 && s.t1 >= 1);
     }
 
     #[test]

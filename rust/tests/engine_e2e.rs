@@ -4,6 +4,7 @@
 //!
 //! Requires `make artifacts`.
 
+use iso::batch::DecodeSlot;
 use iso::config::{CommQuant, EngineConfig, SplitPolicy, Strategy};
 use iso::coordinator::Engine;
 use iso::runtime::Manifest;
@@ -287,6 +288,145 @@ fn decode_works_with_comm_segments() {
     let g2 = e2.generate(&prompt, 4).unwrap();
     e2.shutdown().unwrap();
     assert_eq!(g1.tokens, g2.tokens, "segmented decode diverged");
+}
+
+/// Drive `steps` decode rounds over `prompts` on two engines — per-sequence
+/// `decode_one` vs the fused lane — asserting bit-identical logits at every
+/// round for every sequence.
+fn assert_fused_decode_equivalence(prompts: &[Vec<i32>], steps: usize) {
+    let b = prompts.len();
+    let mut c = cfg(Strategy::Iso, 2);
+    c.max_batch = b;
+    c.decode_batch = b;
+
+    let mut seq_eng = Engine::start(c.clone()).unwrap();
+    let mut lane_eng = Engine::start(c).unwrap();
+
+    // Prefill every sequence on both engines (same path on both).
+    let mut seq_state = Vec::new(); // (slot, token, offset) on seq_eng
+    let mut lane = Vec::new();
+    for p in prompts {
+        let slot_a = seq_eng.alloc_slot().unwrap();
+        let a = seq_eng.step(Some((slot_a, p)), &[]).unwrap().prefill.unwrap();
+        let slot_b = lane_eng.alloc_slot().unwrap();
+        let bout = lane_eng.step(Some((slot_b, p)), &[]).unwrap().prefill.unwrap();
+        assert_eq!(a.logits, bout.logits, "prefill logits diverged before decode");
+        seq_state.push((slot_a, a.first_token, p.len()));
+        lane.push(DecodeSlot { slot: slot_b, token: bout.first_token, offset: p.len() });
+    }
+
+    for round in 0..steps {
+        let out = lane_eng.step(None, &lane).unwrap();
+        assert_eq!(out.decode_logits.len(), b);
+        for j in 0..b {
+            let (slot, token, offset) = seq_state[j];
+            let logits = seq_eng.decode_one(slot, token, offset).unwrap();
+            assert_eq!(
+                logits, out.decode_logits[j],
+                "round {round} seq {j}: fused lane logits != per-sequence decode"
+            );
+            seq_state[j] = (slot, out.decode_tokens[j], offset + 1);
+            lane[j].token = out.decode_tokens[j];
+            lane[j].offset += 1;
+        }
+    }
+    let rep = lane_eng.shutdown().unwrap();
+    // One fused collective per layer-stage per iteration, on every rank.
+    assert!(
+        rep.metrics.fused_allreduces > 0,
+        "fused path never exercised the fused collective"
+    );
+    seq_eng.shutdown().unwrap();
+}
+
+#[test]
+fn fused_decode_bit_identical_to_per_sequence() {
+    // B=3: no compiled t=3 MLP stage, so the lane takes the per-row MLP
+    // path while still fusing the collectives.
+    if !have_artifacts() {
+        return;
+    }
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|s| (0..32).map(|i| ((i * 7 + s * 13) % 512) as i32).collect())
+        .collect();
+    assert_fused_decode_equivalence(&prompts, 4);
+}
+
+#[test]
+fn fused_decode_gemm_path_bit_identical() {
+    // B=16 matches a compiled chunk width, so the lane MLP runs as one
+    // 16-row GEMM; the tiny prompts also exercise the short-prompt
+    // single-lane ISO fallback end-to-end.
+    if !have_artifacts() {
+        return;
+    }
+    let prompts: Vec<Vec<i32>> = (0..16)
+        .map(|s| (0..16).map(|i| ((i * 11 + s * 3) % 512) as i32).collect())
+        .collect();
+    assert_fused_decode_equivalence(&prompts, 2);
+}
+
+#[test]
+fn mixed_trace_matches_sequential_tokens() {
+    // The tentpole scheduling change must not change a single token:
+    // the same trace served mixed and sequentially completes with
+    // identical per-request token streams.
+    if !have_artifacts() {
+        return;
+    }
+    use iso::workload::{LenDist, TraceGen};
+    let mut c = cfg(Strategy::Iso, 2);
+    c.max_batch = 3;
+    c.decode_batch = 2;
+    c.mixed_iterations = true;
+    let mut cs = c.clone();
+    cs.mixed_iterations = false;
+
+    let reqs = TraceGen::new(21, 512, LenDist::Uniform(20, 60))
+        .decode_steps(4)
+        .rate(100.0)
+        .generate(6);
+
+    let mut mixed = Engine::start(c).unwrap();
+    let tm = mixed.serve_trace(&reqs).unwrap();
+    mixed.shutdown().unwrap();
+    let mut seq = Engine::start(cs).unwrap();
+    let ts = seq.serve_trace(&reqs).unwrap();
+    seq.shutdown().unwrap();
+
+    assert_eq!(tm.completed, 6);
+    assert_eq!(ts.completed, 6);
+    let sort = |mut v: Vec<(u64, Vec<i32>)>| {
+        v.sort_by_key(|(id, _)| *id);
+        v
+    };
+    assert_eq!(
+        sort(tm.completions.clone()),
+        sort(ts.completions.clone()),
+        "mixed scheduling changed emitted tokens"
+    );
+    // Mixed-iteration accounting is live.
+    assert!(tm.iterations > 0);
+    assert!(!tm.occupancy.is_empty());
+    assert!(!tm.tbt_ms.is_empty());
+    assert_eq!(tm.generated, 6 * 5); // first token + 4 decode steps each
+}
+
+#[test]
+fn short_prompt_iso_prefill_matches_serial() {
+    // Regression for the round_to_tiles panic: a prompt shorter than two
+    // tiles prefills via the single-lane fallback and matches serial.
+    if !have_artifacts() {
+        return;
+    }
+    let prompt: Vec<i32> = (0..9).map(|i| (i * 29 % 512) as i32).collect();
+    let mut iso = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
+    let a = iso.prefill(&prompt).unwrap();
+    iso.shutdown().unwrap();
+    let mut ser = Engine::start(cfg(Strategy::Serial, 2)).unwrap();
+    let b = ser.prefill(&prompt).unwrap();
+    ser.shutdown().unwrap();
+    assert_eq!(a.logits, b.logits, "short-prompt fallback must equal serial");
 }
 
 #[test]
