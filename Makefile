@@ -3,10 +3,12 @@
 # golden logits land in rust/artifacts, where cargo (cwd = rust/) finds
 # them at "artifacts".
 
-.PHONY: artifacts test bench clean
+.PHONY: artifacts test bench docs check-links clean
 
+# Module invocation: aot.py uses package-relative imports, so it must
+# run as `compile.aot`, not as a bare script.
 artifacts:
-	cd python/compile && python3 aot.py --out ../../rust/artifacts
+	cd python && python3 -m compile.aot --out ../rust/artifacts
 
 test:
 	cd rust && cargo build --release && cargo test -q
@@ -14,6 +16,15 @@ test:
 bench:
 	cd rust && cargo bench --bench collective
 	cd rust && cargo bench --bench e2e_engine
+	cd rust && cargo bench --bench spec_decode
+
+# API docs with the missing_docs gate CI enforces.
+docs:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# README/DESIGN/EXPERIMENTS/ROADMAP links + `DESIGN.md §N` references.
+check-links:
+	python3 scripts/check_md_links.py
 
 clean:
 	rm -rf rust/target rust/artifacts

@@ -1,16 +1,33 @@
-//! BENCH — §6 extension: speculative-decode verify steps under ISO.
+//! BENCH — §6 extension: speculative decoding under ISO.
 //!
-//! The paper conjectures speculative sampling (k draft tokens per decode
-//! step) makes overlap profitable in decode on the comm-heavy 4090-4.
-//! Sweep k and context length on both platforms.
+//! Two halves, snapshotted to `BENCH_PR3.json` (override with
+//! `ISO_PERF_SNAPSHOT_PR3`):
+//!
+//! * **Simulator k-sweep** (always runs): the paper-§6 verify-step
+//!   overlap study, plus the PR-3 engine-matching fused-lane model —
+//!   predicted accepted-token throughput of the real engine's verify
+//!   lane across `k` and acceptance rates.
+//! * **Engine k-sweep** (requires `make artifacts`): `serve_trace` with
+//!   `spec_k ∈ {0, 1, 2, 4}` on a repetitive (draftable) trace —
+//!   measured accepted-token throughput and acceptance rate next to the
+//!   prediction.
 
-use iso::config::{SimExperiment, Strategy};
+use iso::config::{CommQuant, EngineConfig, SimExperiment, SplitPolicy, Strategy};
+use iso::coordinator::Engine;
 use iso::hw::NodeProfile;
 use iso::model::ModelSpec;
+use iso::report::{append_perf_records, PerfRecord};
+use iso::runtime::Manifest;
 use iso::sched::{spec_decode, Coster};
 use iso::util::bench::section;
+use iso::workload::Request;
 
-fn main() {
+fn snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT_PR3").unwrap_or_else(|_| "../BENCH_PR3.json".into())
+}
+
+/// Paper-§6 verify-step table (ISO vs serial inside one verify step).
+fn sim_verify_overlap() {
     for (gpu, cards, model) in [("4090", 4usize, "30b"), ("a800", 4, "70b")] {
         let e = SimExperiment::new(
             NodeProfile::by_name(gpu, cards).unwrap(),
@@ -42,4 +59,110 @@ fn main() {
     }
     println!("paper §6: decode-step overlap only pays once speculative k raises the");
     println!("per-step token count — and earlier on the comm-heavy 4090 than the A800.");
+}
+
+/// PR-3 prediction: the engine-matching fused-lane model's k-sweep.
+fn sim_lane_sweep(path: &str) {
+    let e = SimExperiment::new(
+        NodeProfile::rtx4090(4),
+        ModelSpec::mha_30b(),
+        4096,
+        Strategy::Iso,
+    );
+    let c = Coster::new(&e);
+    let (b, ctx) = (8usize, 2048usize);
+    section("simulator: fused verify lane tokens/s vs k (4090-4, 30b, b=8, ctx=2048)");
+    let mut records = Vec::new();
+    for k in [0usize, 1, 2, 4, 8] {
+        let iter_ms = spec_decode::fused_verify_iteration_s(&c, b, k + 1, ctx) * 1e3;
+        print!("  k={k}: iter {iter_ms:.3}ms;");
+        let mut rec = PerfRecord::new(&format!("sim lane k{k}"), iter_ms, iter_ms, iter_ms)
+            .with("spec_k", k as f64);
+        for accept in [0.0f64, 0.5, 0.8, 0.95] {
+            let tok_s = spec_decode::spec_lane_tokens_per_s(&c, b, k, ctx, accept);
+            print!("  α={accept}: {tok_s:.0} tok/s");
+            rec = rec.with(&format!("tok_s_accept{}", (accept * 100.0) as usize), tok_s);
+        }
+        println!();
+        records.push(rec);
+    }
+    if let Err(e) = append_perf_records(path, "sim_spec_lane", &records) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
+/// Engine measurement: accepted-token throughput across spec_k on a
+/// repetitive trace the n-gram proposer can actually draft.
+fn engine_spec_sweep(path: &str) -> anyhow::Result<()> {
+    if Manifest::load("artifacts").is_err() {
+        eprintln!("SKIP engine spec sweep: run `make artifacts` first");
+        return Ok(());
+    }
+    // Period-4 prompts make self-drafting productive even on the tiny
+    // random-weight model (the continuation after any bigram repeats).
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            id: i,
+            arrival_s: 0.0,
+            prompt: (0..48).map(|j| ((j % 4) + 10 * (i as usize % 3)) as i32).collect(),
+            decode_steps: 24,
+        })
+        .collect();
+
+    section("engine: serve_trace accepted-token throughput vs spec_k (tp=2, pcie-emu)");
+    let mut records = Vec::new();
+    for spec_k in [0usize, 1, 2, 4] {
+        let mut c = EngineConfig {
+            strategy: Strategy::Iso,
+            split: SplitPolicy::Even,
+            comm_quant: CommQuant::F32,
+            tp: 2,
+            max_chunk: 64,
+            max_batch: 8,
+            link_mbps: Some(40.0),
+            ..Default::default()
+        };
+        c.link_alpha_us = 5.0;
+        c.spec_k = spec_k;
+        let mut engine = Engine::start(c)?;
+        let trace = engine.serve_trace(&reqs)?;
+        let report = engine.shutdown()?;
+        let m = report.metrics;
+        let tok_s = trace.throughput_tok_s();
+        println!(
+            "  spec_k={spec_k}: {tok_s:>7.1} tok/s  iterations={}  windows={}  \
+             accept_rate={:.3}  fused_rows={}",
+            trace.iterations,
+            m.spec_windows,
+            m.acceptance_rate(),
+            report.workers.iter().map(|w| w.fused_rows).sum::<u64>()
+        );
+        records.push(
+            PerfRecord::new(
+                &format!("engine spec_k{spec_k}"),
+                trace.wall_s * 1e3,
+                trace.wall_s * 1e3,
+                trace.wall_s * 1e3,
+            )
+            .with("spec_k", spec_k as f64)
+            .with("tok_s", tok_s)
+            .with("iterations", trace.iterations as f64)
+            .with("spec_windows", m.spec_windows as f64)
+            .with("accept_rate", m.acceptance_rate()),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "e2e_engine_spec", &records) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("  wrote spec-decode sweep to {path}");
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let path = snapshot_path();
+    sim_verify_overlap();
+    sim_lane_sweep(&path);
+    engine_spec_sweep(&path)?;
+    Ok(())
 }

@@ -16,6 +16,15 @@
 //! so decode collectives batch into one B-row all-reduce per layer-stage
 //! and decode compute slides into the prefill's communication windows
 //! (paper Fig 1c composed with Fig 1d).
+//!
+//! Speculative decoding (DESIGN.md §10): with `spec_k > 0` every decode
+//! lane entry widens into a *verify window* ([`SpecSlot`]) — the
+//! sequence's last emitted token plus up to `k` draft tokens from a
+//! [`DraftProposer`] — so each iteration advances a sequence by up to
+//! `k + 1` tokens while the lane's collectives stay fused into one
+//! `B·(k+1)`-row all-reduce per layer-stage. Greedy acceptance
+//! ([`accept_count`]) keeps the emitted stream identical to the
+//! non-speculative baseline.
 
 use std::collections::VecDeque;
 
@@ -26,16 +35,22 @@ use crate::workload::Request;
 /// Scheduler state of one live sequence.
 #[derive(Clone, Debug)]
 pub struct SeqState {
+    /// Request id.
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
     /// Tokens already prefixed into the KV cache.
     pub done: usize,
+    /// Decode steps the request asked for.
     pub decode_steps: usize,
+    /// Decode steps already taken.
     pub decoded: usize,
+    /// Arrival time (seconds from trace start).
     pub arrival_s: f64,
 }
 
 impl SeqState {
+    /// Scheduler state for a fresh request (nothing prefilled yet).
     pub fn new(r: &Request) -> Self {
         SeqState {
             id: r.id,
@@ -47,14 +62,17 @@ impl SeqState {
         }
     }
 
+    /// Prompt tokens not yet prefixed into the KV cache.
     pub fn prefill_remaining(&self) -> usize {
         self.prompt.len().saturating_sub(self.done)
     }
 
+    /// Prefill done but decode budget left.
     pub fn in_decode(&self) -> bool {
         self.prefill_remaining() == 0 && self.decoded < self.decode_steps
     }
 
+    /// Both prefill and decode complete.
     pub fn finished(&self) -> bool {
         self.prefill_remaining() == 0 && self.decoded >= self.decode_steps
     }
@@ -63,6 +81,7 @@ impl SeqState {
 /// One schedulable unit of work: a chunk of a sequence's prefill.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ChunkJob {
+    /// Owning sequence id.
     pub seq: u64,
     /// Index of the first token of the chunk within the sequence.
     pub offset: usize,
@@ -166,36 +185,154 @@ fn round_to_tiles(t0: usize, sizes: &[usize], total: usize) -> usize {
 /// position `offset`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DecodeSlot {
+    /// Engine slot whose KV caches the step advances.
     pub slot: usize,
+    /// The sequence's latest emitted token.
     pub token: i32,
+    /// Absolute position `token` will occupy.
     pub offset: usize,
+}
+
+/// One verify window of the speculative decode lane (DESIGN.md §10): the
+/// sequence's last emitted token followed by draft tokens, run as
+/// `tokens.len()` rows at consecutive KV offsets starting at `offset`.
+/// Row `j`'s greedy argmax is the model's next token after consuming
+/// `tokens[..=j]`; [`accept_count`] turns the row argmaxes into the
+/// accepted prefix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpecSlot {
+    /// Engine slot whose KV caches the window advances.
+    pub slot: usize,
+    /// Window inputs: the last emitted token, then the proposer's drafts.
+    pub tokens: Vec<i32>,
+    /// Absolute position of `tokens[0]`.
+    pub offset: usize,
+}
+
+impl SpecSlot {
+    /// Rows the window contributes to the verify micro-batch.
+    pub fn width(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// The draft tokens under verification (everything after the first).
+    pub fn drafts(&self) -> &[i32] {
+        &self.tokens[1..]
+    }
+}
+
+/// Proposes draft tokens for speculative decoding (DESIGN.md §10).
+///
+/// Implementations must be cheap relative to a model step — the point is
+/// to trade a little wasted verify compute for wider, better-overlapping
+/// decode batches. Drafts never change emitted tokens (greedy
+/// verification discards bad ones); they only change how many tokens each
+/// verify step advances.
+pub trait DraftProposer: Send {
+    /// Up to `k` candidate next tokens given the sequence's token history
+    /// (prompt followed by emissions, oldest first). May return fewer.
+    fn propose(&mut self, history: &[i32], k: usize) -> Vec<i32>;
+}
+
+/// Self-drafting n-gram proposer: find the most recent earlier occurrence
+/// of the history's final `n`-gram and propose the tokens that followed
+/// it (prompt-lookup decoding). Falls back to repeating the last token,
+/// so every proposed token is drawn from the history and is therefore a
+/// valid vocab id.
+#[derive(Clone, Debug)]
+pub struct NGramProposer {
+    /// N-gram order to match (≥ 1).
+    pub n: usize,
+}
+
+impl NGramProposer {
+    /// A proposer matching on the trailing `n`-gram.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "n-gram order must be >= 1");
+        NGramProposer { n }
+    }
+}
+
+impl DraftProposer for NGramProposer {
+    fn propose(&mut self, history: &[i32], k: usize) -> Vec<i32> {
+        if history.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let n = self.n.min(history.len());
+        let pat = &history[history.len() - n..];
+        let mut out = Vec::with_capacity(k);
+        // Most recent earlier occurrence of the trailing n-gram.
+        for start in (0..history.len() - n).rev() {
+            if &history[start..start + n] == pat {
+                let mut j = start + n;
+                while out.len() < k && j < history.len() {
+                    out.push(history[j]);
+                    j += 1;
+                }
+                break;
+            }
+        }
+        let last = *history.last().unwrap();
+        while out.len() < k {
+            out.push(last);
+        }
+        out
+    }
+}
+
+/// Greedy speculative acceptance: `rows[j]` is the model's greedy token
+/// after consuming the window's `tokens[..=j]`, `drafts` are
+/// `tokens[1..]` (`rows.len() == drafts.len() + 1`). Returns the length
+/// `a` of the longest prefix with `drafts[j] == rows[j]`; the window then
+/// emits `rows[..=a]` — exactly the tokens the non-speculative greedy
+/// chain would have produced one step at a time.
+pub fn accept_count(drafts: &[i32], rows: &[i32]) -> usize {
+    assert_eq!(rows.len(), drafts.len() + 1, "one row per window token");
+    let mut a = 0;
+    while a < drafts.len() && drafts[a] == rows[a] {
+        a += 1;
+    }
+    a
 }
 
 /// The prefill half of a [`StepPlan`].
 #[derive(Clone, Debug)]
 pub struct PrefillPlan {
+    /// Engine slot being prefilled.
     pub slot: usize,
     /// Padded prompt length the chunks tile exactly.
     pub prompt_len: usize,
+    /// The ISO chunk set tiling the padded prompt.
     pub chunks: Vec<ChunkJob>,
 }
 
 /// One engine iteration under the mixed scheduler: at most one
-/// head-of-line prefill's ISO chunk set plus a fused decode micro-batch.
+/// head-of-line prefill's ISO chunk set plus a fused decode micro-batch —
+/// either one-token [`DecodeSlot`] rows or speculative [`SpecSlot`]
+/// verify windows, never both.
 #[derive(Clone, Debug, Default)]
 pub struct StepPlan {
+    /// Head-of-line prefill, if any sequence still needs one.
     pub prefill: Option<PrefillPlan>,
+    /// One-token decode lane (`spec_k = 0`).
     pub decode: Vec<DecodeSlot>,
+    /// Speculative verify lane (`spec_k > 0`); mutually exclusive with
+    /// `decode`.
+    pub spec: Vec<SpecSlot>,
 }
 
 impl StepPlan {
+    /// True when the iteration carries no work at all.
     pub fn is_empty(&self) -> bool {
-        self.prefill.is_none() && self.decode.is_empty()
+        self.prefill.is_none() && self.decode.is_empty() && self.spec.is_empty()
     }
 
-    /// Tokens this iteration advances (prefill tokens + decode lane rows).
+    /// Tokens this iteration advances (prefill tokens + decode lane rows
+    /// + verify window rows).
     pub fn tokens(&self) -> usize {
-        self.prefill.as_ref().map_or(0, |p| p.prompt_len) + self.decode.len()
+        self.prefill.as_ref().map_or(0, |p| p.prompt_len)
+            + self.decode.len()
+            + self.spec.iter().map(SpecSlot::width).sum::<usize>()
     }
 }
 
@@ -203,9 +340,11 @@ impl StepPlan {
 /// tracks it between iterations.
 #[derive(Clone, Debug)]
 pub struct LaneSeq {
+    /// Engine slot the sequence occupies.
     pub slot: usize,
     /// Padded prompt length (tiles exactly into compiled chunk sizes).
     pub prompt_len: usize,
+    /// Whether the prefill has completed.
     pub prefilled: bool,
     /// Latest emitted token (valid once `prefilled`).
     pub last_token: i32,
@@ -230,15 +369,21 @@ impl LaneSeq {
 /// wider than the cap shares iterations fairly.
 #[derive(Clone, Debug)]
 pub struct MixedPlanner {
+    /// Overlap strategy the prefill chunk sets follow.
     pub strategy: Strategy,
+    /// Split policy for the ISO two-lane prefill plan.
     pub split: SplitPolicy,
+    /// Compiled prefill chunk sizes.
     pub chunk_sizes: Vec<usize>,
+    /// Width cap of the fused decode lane.
     pub decode_batch: usize,
+    /// KV capacity per sequence; lanes retire at this offset.
     pub max_seq: usize,
     cursor: usize,
 }
 
 impl MixedPlanner {
+    /// A planner over the given strategy, split policy and compiled sizes.
     pub fn new(
         strategy: Strategy,
         split: SplitPolicy,
@@ -253,6 +398,23 @@ impl MixedPlanner {
 
     /// Compose the next iteration from the live set.
     pub fn plan(&mut self, live: &[LaneSeq], ctx: Option<&SplitContext>) -> StepPlan {
+        self.plan_spec(live, ctx, 0, &mut |_, _| Vec::new())
+    }
+
+    /// Like [`MixedPlanner::plan`], but with speculative decoding: each
+    /// chosen lane sequence becomes a [`SpecSlot`] verify window of its
+    /// last emitted token plus up to `spec_k` drafts from `drafts(slot,
+    /// k_eff)`. `k_eff` is clamped so the window fits the KV capacity
+    /// (`offset + k_eff < max_seq`) and never verifies past the
+    /// sequence's decode budget (a window emits at most `k_eff + 1`
+    /// tokens). `spec_k = 0` degrades to the plain one-token lane.
+    pub fn plan_spec(
+        &mut self,
+        live: &[LaneSeq],
+        ctx: Option<&SplitContext>,
+        spec_k: usize,
+        drafts: &mut dyn FnMut(usize, usize) -> Vec<i32>,
+    ) -> StepPlan {
         let prefill = live.iter().find(|s| !s.prefilled).map(|s| PrefillPlan {
             slot: s.slot,
             prompt_len: s.prompt_len,
@@ -268,16 +430,39 @@ impl MixedPlanner {
         let eligible: Vec<&LaneSeq> =
             live.iter().filter(|s| s.decoding(self.max_seq)).collect();
         let width = eligible.len().min(self.decode_batch);
-        let mut decode = Vec::with_capacity(width);
+        let mut chosen = Vec::with_capacity(width);
         if width > 0 {
             let start = self.cursor % eligible.len();
             for j in 0..width {
-                let s = eligible[(start + j) % eligible.len()];
-                decode.push(DecodeSlot { slot: s.slot, token: s.last_token, offset: s.offset });
+                chosen.push(eligible[(start + j) % eligible.len()]);
             }
             self.cursor = self.cursor.wrapping_add(width);
         }
-        StepPlan { prefill, decode }
+        let mut plan = StepPlan { prefill, ..Default::default() };
+        if spec_k == 0 {
+            plan.decode = chosen
+                .iter()
+                .map(|s| DecodeSlot { slot: s.slot, token: s.last_token, offset: s.offset })
+                .collect();
+        } else {
+            plan.spec = chosen
+                .iter()
+                .map(|s| {
+                    // `decoding()` guarantees offset < max_seq, so both
+                    // clamps are in range.
+                    let k_eff = spec_k
+                        .min(self.max_seq - 1 - s.offset)
+                        .min(s.decode_left.saturating_sub(1));
+                    let mut tokens = Vec::with_capacity(k_eff + 1);
+                    tokens.push(s.last_token);
+                    let mut d = drafts(s.slot, k_eff);
+                    d.truncate(k_eff);
+                    tokens.extend(d);
+                    SpecSlot { slot: s.slot, tokens, offset: s.offset }
+                })
+                .collect();
+        }
+        plan
     }
 }
 
@@ -285,21 +470,42 @@ impl MixedPlanner {
 #[derive(Debug)]
 pub struct Admission {
     queue: VecDeque<Request>,
+    /// Live-sequence cap.
     pub max_live: usize,
+    /// Sequences currently admitted and not yet completed.
     pub live: usize,
 }
 
 impl Admission {
+    /// An empty queue admitting at most `max_live` concurrent sequences.
     pub fn new(max_live: usize) -> Self {
         Admission { queue: VecDeque::new(), max_live, live: 0 }
     }
 
+    /// Enqueue a request (FIFO).
     pub fn submit(&mut self, r: Request) {
         self.queue.push_back(r);
     }
 
+    /// Requests queued but not yet admitted.
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Requests queued but not yet admitted — the saturation signal
+    /// (alias of [`Admission::pending`], named for the dashboard
+    /// counter). The serving loop records the same arrived-but-unadmitted
+    /// count into `metrics.queue_depth` every iteration.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// How long (seconds) the *oldest* queued request has been waiting at
+    /// engine clock `now_s`, or `None` when the queue is empty. Grows
+    /// without bound when the live cap is saturated — the head-of-line
+    /// companion to [`Admission::queue_depth`].
+    pub fn oldest_wait_s(&self, now_s: f64) -> Option<f64> {
+        self.queue.front().map(|r| (now_s - r.arrival_s).max(0.0))
     }
 
     /// Admit as many requests as capacity allows.
@@ -317,6 +523,7 @@ impl Admission {
         out
     }
 
+    /// Mark one live sequence as finished, freeing admission capacity.
     pub fn complete(&mut self) {
         assert!(self.live > 0, "complete() without a live sequence");
         self.live -= 1;
@@ -439,6 +646,113 @@ mod tests {
     #[should_panic]
     fn complete_without_live_panics() {
         Admission::new(1).complete();
+    }
+
+    #[test]
+    fn admission_exposes_depth_and_oldest_wait() {
+        // Satellite: saturation is observable — depth counts the queue,
+        // oldest-wait tracks the head-of-line request's age.
+        let mut a = Admission::new(1);
+        assert_eq!(a.queue_depth(), 0);
+        assert_eq!(a.oldest_wait_s(5.0), None);
+        for (i, arr) in [(0u64, 1.0f64), (1, 2.0), (2, 3.0)] {
+            a.submit(Request { id: i, arrival_s: arr, prompt: vec![0; 4], decode_steps: 0 });
+        }
+        assert_eq!(a.queue_depth(), 3);
+        assert_eq!(a.oldest_wait_s(4.0), Some(3.0)); // head arrived at t=1
+        assert_eq!(a.admit().len(), 1); // cap 1
+        assert_eq!(a.queue_depth(), 2);
+        assert_eq!(a.oldest_wait_s(4.0), Some(2.0)); // head is now t=2
+        // Clock before arrival clamps to zero rather than going negative.
+        assert_eq!(a.oldest_wait_s(0.0), Some(0.0));
+    }
+
+    #[test]
+    fn ngram_proposer_copies_continuation() {
+        let mut p = NGramProposer::new(2);
+        // history ends in [3, 4]; its earlier occurrence is followed by 5, 6.
+        let h = vec![1, 2, 3, 4, 5, 6, 9, 3, 4];
+        assert_eq!(p.propose(&h, 2), vec![5, 6]);
+        // Asking for more than the continuation pads with the last token.
+        assert_eq!(p.propose(&h, 4), vec![5, 6, 4, 4]);
+        // No earlier occurrence: repeat the last token.
+        let h2 = vec![7, 8];
+        assert_eq!(p.propose(&h2, 3), vec![8, 8, 8]);
+        // Degenerate inputs.
+        assert_eq!(p.propose(&[], 3), Vec::<i32>::new());
+        assert_eq!(p.propose(&h, 0), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn ngram_proposer_only_emits_history_tokens() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(3);
+        let mut p = NGramProposer::new(3);
+        for _ in 0..100 {
+            let h: Vec<i32> =
+                (0..rng.range(1, 60)).map(|_| rng.range(0, 8) as i32).collect();
+            let k = rng.range(0, 9);
+            let d = p.propose(&h, k);
+            assert_eq!(d.len(), k);
+            assert!(d.iter().all(|t| h.contains(t)), "draft outside history");
+        }
+    }
+
+    #[test]
+    fn accept_count_longest_matching_prefix() {
+        assert_eq!(accept_count(&[], &[9]), 0); // no drafts: emit 1 token
+        assert_eq!(accept_count(&[5], &[5, 7]), 1);
+        assert_eq!(accept_count(&[5], &[6, 7]), 0);
+        assert_eq!(accept_count(&[5, 6, 8], &[5, 6, 7, 1]), 2); // stops at first miss
+        assert_eq!(accept_count(&[5, 6, 7], &[5, 6, 7, 1]), 3); // all accepted
+        // A later match after a miss must NOT count.
+        assert_eq!(accept_count(&[1, 2], &[9, 2, 3]), 0);
+    }
+
+    #[test]
+    fn plan_spec_builds_clamped_windows() {
+        let mut p = MixedPlanner::new(Strategy::Iso, SplitPolicy::Even, SIZES.to_vec(), 8, 128);
+        let live = vec![
+            lane_seq(0, true, 64, 10),  // room for a full window
+            lane_seq(1, true, 125, 10), // KV clamp: only 2 drafts fit
+            lane_seq(2, true, 64, 2),   // budget clamp: only 1 draft useful
+            lane_seq(3, false, 0, 5),   // prefilling: not in the lane
+        ];
+        let plan = p.plan_spec(&live, None, 4, &mut |slot, k| {
+            vec![slot as i32 + 50; k + 3] // over-proposes; planner truncates
+        });
+        assert!(plan.prefill.is_some());
+        assert!(plan.decode.is_empty(), "spec lane replaces the decode lane");
+        assert_eq!(plan.spec.len(), 3);
+        for w in &plan.spec {
+            let s = live.iter().find(|s| s.slot == w.slot).unwrap();
+            assert_eq!(w.tokens[0], s.last_token);
+            assert_eq!(w.offset, s.offset);
+            // Window fits the KV capacity and never outruns the budget.
+            assert!(w.offset + w.width() <= 128);
+            assert!(w.width() <= s.decode_left.saturating_sub(1) + 1);
+            assert_eq!(w.drafts().len() + 1, w.width());
+        }
+        let by_slot =
+            |s: usize| plan.spec.iter().find(|w| w.slot == s).unwrap().width();
+        assert_eq!(by_slot(0), 5); // full k=4 window
+        assert_eq!(by_slot(1), 3); // clamped by max_seq: 125 + 2 = 127
+        assert_eq!(by_slot(2), 2); // clamped by decode budget
+        // Token accounting covers the window rows.
+        assert_eq!(plan.tokens(), 64 + 5 + 3 + 2);
+    }
+
+    #[test]
+    fn plan_spec_zero_k_equals_plain_plan() {
+        let live: Vec<LaneSeq> = (0..4).map(|s| lane_seq(s, true, 64, 10)).collect();
+        let mut a = MixedPlanner::new(Strategy::Iso, SplitPolicy::Even, SIZES.to_vec(), 2, 256);
+        let mut b = a.clone();
+        for _ in 0..6 {
+            let pa = a.plan(&live, None);
+            let pb = b.plan_spec(&live, None, 0, &mut |_, _| vec![1, 2, 3]);
+            assert_eq!(pa.decode, pb.decode, "k=0 must match the plain lane");
+            assert!(pb.spec.is_empty());
+        }
     }
 
     #[test]

@@ -5,8 +5,11 @@ use std::collections::BTreeMap;
 /// Parsed command line: subcommand, `--key value` flags, bare positionals.
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
+    /// The subcommand (first argument).
     pub command: String,
+    /// `--key value` / `--key=value` flags; bare `--flag` stores `"true"`.
     pub flags: BTreeMap<String, String>,
+    /// Non-flag arguments, in order.
     pub positional: Vec<String>,
 }
 
@@ -38,19 +41,23 @@ impl Cli {
         Ok(cli)
     }
 
+    /// Parse the process arguments (skipping argv\[0\]).
     pub fn from_env() -> Result<Cli, String> {
         let args: Vec<String> = std::env::args().skip(1).collect();
         Cli::parse(&args)
     }
 
+    /// The value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
     }
 
+    /// The value of `--key`, or `default`.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// `--key` parsed as usize, or `default` when absent.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
         match self.get(key) {
             None => Ok(default),
@@ -58,11 +65,13 @@ impl Cli {
         }
     }
 
+    /// Whether `--key` was given at all.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 }
 
+/// Top-level help text (`iso-serve help`).
 pub const USAGE: &str = "\
 iso-serve — ISO (Intra-Sequence Overlap) LLM serving engine + paper-eval simulator
 
@@ -76,6 +85,9 @@ COMMANDS:
               --rate R (req/s Poisson arrivals → continuous batching)
               --decode-batch N (fused decode lane width per iteration)
               --mixed true|false (iteration-level mixed batching; default on)
+              --spec-k N (speculative decoding: drafts verified per lane
+                sequence per iteration; 0 = off)
+              --spec-ngram N (self-draft n-gram order; default 2)
               --config FILE (e.g. configs/engine-iso.conf; flags override)
   table1      print the paper's Table 1 from the calibrated simulator
               --strategy iso|gemm-overlap|request-overlap  --csv FILE

@@ -69,6 +69,7 @@ impl BufferPool {
     /// Free-list cap; beyond this, returned buffers are dropped.
     const MAX_FREE: usize = 64;
 
+    /// An empty f32 buffer, pooled when available.
     pub fn take_f32(&mut self) -> Vec<f32> {
         match self.f32_free.pop() {
             Some(v) => {
@@ -82,6 +83,7 @@ impl BufferPool {
         }
     }
 
+    /// Return an f32 buffer to the pool (dropped past the cap).
     pub fn put_f32(&mut self, mut v: Vec<f32>) {
         if self.f32_free.len() < Self::MAX_FREE {
             v.clear();
@@ -89,6 +91,7 @@ impl BufferPool {
         }
     }
 
+    /// An empty i8 buffer, pooled when available.
     pub fn take_i8(&mut self) -> Vec<i8> {
         match self.i8_free.pop() {
             Some(v) => {
@@ -102,6 +105,7 @@ impl BufferPool {
         }
     }
 
+    /// Return an i8 buffer to the pool (dropped past the cap).
     pub fn put_i8(&mut self, mut v: Vec<i8>) {
         if self.i8_free.len() < Self::MAX_FREE {
             v.clear();
@@ -140,7 +144,9 @@ impl Throttle {
 
 /// A rank's handle into the ring; moved into its worker thread.
 pub struct RingHandle {
+    /// This rank's position in the ring.
     pub rank: usize,
+    /// Ring size (TP degree).
     pub n: usize,
     tx_next: Sender<Packet>,
     rx_prev: Receiver<Packet>,

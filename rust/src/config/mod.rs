@@ -33,10 +33,12 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Every strategy, in the paper's Fig-1 order.
     pub fn all() -> [Strategy; 4] {
         [Strategy::Serial, Strategy::GemmOverlap, Strategy::RequestOverlap, Strategy::Iso]
     }
 
+    /// Parse a CLI/config spelling (`iso`, `serial`, `gemm-overlap`, …).
     pub fn parse(s: &str) -> Option<Strategy> {
         match s.to_ascii_lowercase().as_str() {
             "serial" => Some(Strategy::Serial),
@@ -75,6 +77,7 @@ pub enum SplitPolicy {
 }
 
 impl SplitPolicy {
+    /// Parse a CLI/config spelling (`even`, `balanced`, `ratio:0.6`, …).
     pub fn parse(s: &str) -> Option<SplitPolicy> {
         let ls = s.to_ascii_lowercase();
         match ls.as_str() {
@@ -102,6 +105,7 @@ pub enum CommQuant {
 }
 
 impl CommQuant {
+    /// Parse a CLI/config spelling (`f32`, `fp16`, `int8`).
     pub fn parse(s: &str) -> Option<CommQuant> {
         match s.to_ascii_lowercase().as_str() {
             "fp16" | "f16" => Some(CommQuant::Fp16),
@@ -120,8 +124,11 @@ pub const DEFAULT_GEMM_SEGMENTS: usize = 4;
 /// Full engine configuration.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
+    /// Overlap strategy (paper Fig 1 a–d).
     pub strategy: Strategy,
+    /// ISO intra-sequence split policy.
     pub split: SplitPolicy,
+    /// Wire format of the ring collectives.
     pub comm_quant: CommQuant,
     /// Segments for the computation-dominates mitigation (1 = off).
     pub gemm_segments: usize,
@@ -151,6 +158,16 @@ pub struct EngineConfig {
     /// bit-stable against per-row execution (lane *collectives* stay
     /// fused either way).
     pub lane_gemm: bool,
+    /// Speculative decoding (DESIGN.md §10): draft tokens verified per
+    /// lane sequence per iteration. `0` = off (the one-token decode
+    /// lane); `k > 0` widens each lane entry into a `k + 1`-row verify
+    /// window whose collectives stay fused, so a decode iteration can
+    /// advance a sequence by up to `k + 1` tokens. Greedy verification
+    /// keeps emitted tokens identical to `spec_k = 0`.
+    pub spec_k: usize,
+    /// N-gram order of the built-in self-draft proposer
+    /// (`batch::NGramProposer`); only read when `spec_k > 0`.
+    pub spec_ngram: usize,
     /// Decode steps to run per request after prefill (0 = prefill only).
     pub decode_steps: usize,
     /// Artifact directory for the real engine.
@@ -178,6 +195,8 @@ impl Default for EngineConfig {
             decode_batch: 8,
             mixed_iterations: true,
             lane_gemm: true,
+            spec_k: 0,
+            spec_ngram: 2,
             decode_steps: 0,
             artifacts_dir: "artifacts".into(),
             link_mbps: None,
@@ -189,16 +208,24 @@ impl Default for EngineConfig {
 /// A fully-specified simulator experiment (one Table-1 cell).
 #[derive(Clone, Debug)]
 pub struct SimExperiment {
+    /// Modeled node (device × cards × interconnect).
     pub node: NodeProfile,
+    /// Modeled transformer geometry.
     pub model: ModelSpec,
+    /// Prefill prompt length.
     pub prompt_len: usize,
+    /// Overlap strategy under test.
     pub strategy: Strategy,
+    /// ISO split policy.
     pub split: SplitPolicy,
+    /// Whether collectives quantize to int8 on the wire.
     pub int8_wire: bool,
+    /// Launches the pre-collective GEMMs are segmented into.
     pub gemm_segments: usize,
 }
 
 impl SimExperiment {
+    /// An experiment with the node's default wire format and balanced split.
     pub fn new(node: NodeProfile, model: ModelSpec, prompt_len: usize, strategy: Strategy) -> Self {
         let int8_wire = node.int8_wire_default;
         SimExperiment {
@@ -298,6 +325,12 @@ impl EngineConfig {
                     cfg.mixed_iterations = parse_bool(v, "mixed_iterations")?
                 }
                 "engine.lane_gemm" => cfg.lane_gemm = parse_bool(v, "lane_gemm")?,
+                "engine.spec_k" => {
+                    cfg.spec_k = v.parse().map_err(|_| format!("bad spec_k {v:?}"))?
+                }
+                "engine.spec_ngram" => {
+                    cfg.spec_ngram = v.parse().map_err(|_| format!("bad spec_ngram {v:?}"))?
+                }
                 "engine.decode_steps" => {
                     cfg.decode_steps = v.parse().map_err(|_| format!("bad decode_steps {v:?}"))?
                 }
@@ -320,6 +353,9 @@ impl EngineConfig {
         }
         if cfg.decode_batch == 0 {
             return Err("decode_batch must be >= 1".into());
+        }
+        if cfg.spec_ngram == 0 {
+            return Err("spec_ngram must be >= 1".into());
         }
         Ok(cfg)
     }
@@ -384,6 +420,21 @@ mod tests {
         assert!(EngineConfig::from_map(&map).is_err());
         let map = parse_config_str("[engine]\nlane_gemm = off").unwrap();
         assert!(!EngineConfig::from_map(&map).unwrap().lane_gemm);
+    }
+
+    #[test]
+    fn spec_decode_knobs_parse_and_validate() {
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.spec_k, 0, "speculation must be opt-in");
+        assert_eq!(cfg.spec_ngram, 2);
+        let map = parse_config_str("[engine]\nspec_k = 4\nspec_ngram = 3").unwrap();
+        let cfg = EngineConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.spec_k, 4);
+        assert_eq!(cfg.spec_ngram, 3);
+        let bad = parse_config_str("[engine]\nspec_ngram = 0").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+        let bad = parse_config_str("[engine]\nspec_k = many").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
     }
 
     #[test]

@@ -40,6 +40,18 @@
 //! prefill's collectives are on the ring and vice versa (paper Fig 1c
 //! composed with Fig 1d).
 //!
+//! Speculative decoding (DESIGN.md §10): with `spec_k > 0` the decode
+//! half of each iteration becomes a **verify lane** — every lane sequence
+//! contributes a `k+1`-row window (last emitted token + `k` self-drafted
+//! candidates), attention runs per row at consecutive KV offsets (so the
+//! window's causal chain is exact), and the whole lane's partials
+//! concatenate into one `B·(k+1)`-row `allreduce_rows_fused` per
+//! layer-stage. The leader accepts the longest matching greedy prefix
+//! (`batch::accept_count`) and rolls the rejected suffix back by
+//! `KvManager::truncate`, so the emitted stream is token-identical to the
+//! non-speculative engine while each iteration advances up to `k + 1`
+//! tokens per sequence.
+//!
 //! Python is long gone by the time this runs: stages were AOT-lowered to
 //! HLO text by `make artifacts` and are compiled per worker at startup.
 
@@ -50,9 +62,13 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::batch::{plan_prefill, ChunkJob, DecodeSlot, LaneSeq, MixedPlanner};
+use crate::batch::{
+    accept_count, plan_prefill, ChunkJob, DecodeSlot, DraftProposer, LaneSeq, MixedPlanner,
+    NGramProposer, SpecSlot,
+};
 use crate::collective::{ring, RingHandle};
 use crate::config::{CommQuant, EngineConfig, Strategy};
+use crate::kv::KvManager;
 use crate::metrics::{EngineMetrics, Timer};
 use crate::runtime::{Arg, DevTensor, Executable, Manifest, Tensor, WorkerRuntime};
 use crate::split::SplitContext;
@@ -73,9 +89,14 @@ struct StepPrefill {
 /// bump, not a buffer copy (§Perf).
 #[derive(Clone, Debug)]
 enum Job {
-    /// One mixed iteration: at most one prefill plus a fused decode lane
-    /// (either half may be absent, not both).
-    Step { prefill: Option<Arc<StepPrefill>>, decode: Arc<Vec<DecodeSlot>> },
+    /// One mixed iteration: at most one prefill plus a fused lane —
+    /// either one-token decode rows or speculative verify windows, never
+    /// both (not every half may be absent at once).
+    Step {
+        prefill: Option<Arc<StepPrefill>>,
+        decode: Arc<Vec<DecodeSlot>>,
+        spec: Arc<Vec<SpecSlot>>,
+    },
     /// One legacy per-sequence decode step: token at absolute position
     /// `offset` (kept for `generate`, the sequential serving loop, and
     /// the fused-vs-per-sequence equivalence tests).
@@ -122,18 +143,27 @@ struct SegAck {
 /// Per-worker performance counters (returned at shutdown).
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStats {
+    /// TP rank the counters belong to.
     pub rank: usize,
+    /// Time spent inside compiled stages.
     pub compute_ms: f64,
     /// Time the compute thread spent blocked waiting for reduced results
     /// — the *exposed* (un-overlapped) communication time.
     pub stall_ms: f64,
+    /// Wall time the comm thread spent inside collectives.
     pub comm_ms: f64,
+    /// Post-quantization bytes this rank put on the wire.
     pub wire_bytes: u64,
     /// Wire messages sent by the ring (grows with `comm_segments`).
     pub wire_msgs: u64,
+    /// All-reduce invocations.
     pub allreduces: u64,
-    /// Fused B-row decode-lane collectives (subset of `allreduces`).
+    /// Fused B-row lane collectives (subset of `allreduces`).
     pub fused_allreduces: u64,
+    /// Total rows through fused lane collectives — with
+    /// `fused_allreduces` this gives the mean verify-window width the
+    /// spec-decode lane actually achieved (DESIGN.md §10).
+    pub fused_rows: u64,
     /// Per-segment acks exchanged between the comm and compute threads.
     pub seg_acks: u64,
 }
@@ -156,23 +186,31 @@ impl WorkerStats {
 /// Result of one prefill.
 #[derive(Clone, Debug)]
 pub struct PrefillOut {
+    /// Greedy first token.
     pub first_token: i32,
+    /// Time to first token (engine-relative, ms).
     pub ttft_ms: f64,
+    /// Full logits of the prompt's true last token.
     pub logits: Vec<f32>,
 }
 
 /// Result of a full generate call.
 #[derive(Clone, Debug)]
 pub struct GenOut {
+    /// Emitted tokens (first token + decode steps).
     pub tokens: Vec<i32>,
+    /// Time to first token (ms).
     pub ttft_ms: f64,
+    /// Per-decode-step latency (ms).
     pub decode_ms: Vec<f64>,
 }
 
 /// Final engine report.
 #[derive(Clone, Debug)]
 pub struct EngineReport {
+    /// Leader-side counters and histograms.
     pub metrics: EngineMetrics,
+    /// Per-rank compute/comm counters.
     pub workers: Vec<WorkerStats>,
 }
 
@@ -191,8 +229,11 @@ pub struct TraceReport {
     pub occupancy: crate::metrics::Histogram,
     /// Engine iterations the trace took.
     pub iterations: u64,
+    /// Requests completed.
     pub completed: u64,
+    /// Tokens emitted across all requests.
     pub generated: u64,
+    /// Trace wall time (seconds).
     pub wall_s: f64,
     /// `(request id, emitted tokens)` per completed request — lets tests
     /// and benches assert scheduling changes never change the tokens.
@@ -200,6 +241,7 @@ pub struct TraceReport {
 }
 
 impl TraceReport {
+    /// Emitted tokens per second of trace wall time.
     pub fn throughput_tok_s(&self) -> f64 {
         if self.wall_s <= 0.0 {
             return 0.0;
@@ -685,6 +727,128 @@ impl ComputeWorker {
         }
     }
 
+    /// Embed a speculative verify lane into one `ΣW × d_model`
+    /// activation, window rows in lane order.
+    fn embed_spec(&mut self, lane: &[SpecSlot]) -> Result<Tensor> {
+        let d = self.d_model;
+        let rows: usize = lane.iter().map(SpecSlot::width).sum();
+        let mut x = Tensor::zeros(vec![rows, d]);
+        let mut r = 0;
+        for w in lane {
+            self.ensure_slot(w.slot);
+            for &t in &w.tokens {
+                let e = self.run_embed(&[t])?;
+                x.data[r * d..(r + 1) * d].copy_from_slice(&e.data);
+                r += 1;
+            }
+        }
+        Ok(x)
+    }
+
+    /// Verify-lane attention for one layer: each window's rows run t=1
+    /// attention at consecutive offsets — row `j` writes its K/V at
+    /// `offset + j` before attending, so within a window the causal chain
+    /// over the draft tokens is exact — and every row's partial
+    /// concatenates into **one** fused `ΣW`-row collective, the wide-lane
+    /// reuse of `allreduce_rows_fused` (DESIGN.md §10).
+    fn spec_attn_submit(
+        &mut self,
+        layer: usize,
+        lane: &[SpecSlot],
+        x_lane: &Tensor,
+        row: &mut Tensor,
+    ) -> Result<()> {
+        let d = self.d_model;
+        let rows = x_lane.shape[0];
+        let mut fused = self.take_scratch(rows * d);
+        let mut r = 0;
+        for w in lane {
+            for j in 0..w.tokens.len() {
+                row.data.copy_from_slice(&x_lane.data[r * d..(r + 1) * d]);
+                let p = self.run_attn(w.slot, layer, &*row, w.offset + j)?;
+                fused[r * d..(r + 1) * d].copy_from_slice(&p.data);
+                r += 1;
+            }
+        }
+        self.submit_fused(fused, rows);
+        Ok(())
+    }
+
+    /// Speculative verify step over the whole lane: `2 × n_layers` fused
+    /// collectives total, each `ΣW` rows wide. Per-row execution makes
+    /// every row's logits bit-identical to the chain of single-token
+    /// [`ComputeWorker::decode`] steps over the same token prefix, which
+    /// is what lets greedy acceptance guarantee baseline-identical
+    /// emissions. Returns one logits vector per lane row (rank 0).
+    fn verify_fused(&mut self, lane: &[SpecSlot]) -> Result<Option<Vec<Vec<f32>>>> {
+        debug_assert!(!lane.is_empty());
+        let mut x_lane = self.embed_spec(lane)?;
+        let mut row = Tensor::zeros(vec![1, self.d_model]);
+        for l in 0..self.geo_layers {
+            self.spec_attn_submit(l, lane, &x_lane, &mut row)?;
+            self.recv_reduced_apply(&mut x_lane);
+            self.lane_mlp_submit(l, &x_lane, &mut row)?;
+            self.recv_reduced_apply(&mut x_lane);
+        }
+        if self.rank == 0 {
+            Ok(Some(self.lane_logits(&x_lane, &mut row)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// The speculative mixed iteration: same interleave as
+    /// [`ComputeWorker::step_mixed`] — prefill chunk attentions launch
+    /// first so their collectives fly while the verify lane computes, and
+    /// the lane's wide fused collectives hide behind prefill compute —
+    /// with the decode lane replaced by verify windows. FIFO order per
+    /// layer: `[P_attn×k, V_attn, P_mlp×k, V_mlp]`.
+    fn step_mixed_spec(&mut self, p: &StepPrefill, lane: &[SpecSlot]) -> Result<StepLogits> {
+        self.ensure_slot(p.slot);
+        let k = p.chunks.len();
+        let mut xs: Vec<Tensor> = p
+            .chunks
+            .iter()
+            .map(|c| self.run_embed(&p.tokens[c.offset..c.offset + c.len]))
+            .collect::<Result<_>>()?;
+        let mut x_lane = self.embed_spec(lane)?;
+        let mut row = Tensor::zeros(vec![1, self.d_model]);
+
+        for l in 0..self.geo_layers {
+            for i in 0..k {
+                if l > 0 {
+                    self.recv_reduced_apply(&mut xs[i]);
+                }
+                let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
+                self.submit(partial.data, p.chunks[i].len);
+            }
+            if l > 0 {
+                self.recv_reduced_apply(&mut x_lane);
+            }
+            self.spec_attn_submit(l, lane, &x_lane, &mut row)?;
+            for i in 0..k {
+                self.recv_reduced_apply(&mut xs[i]);
+                let partial = self.run_mlp(l, &xs[i])?;
+                self.submit(partial.data, p.chunks[i].len);
+            }
+            self.recv_reduced_apply(&mut x_lane);
+            self.lane_mlp_submit(l, &x_lane, &mut row)?;
+        }
+        for x in xs.iter_mut() {
+            self.recv_reduced_apply(x);
+        }
+        self.recv_reduced_apply(&mut x_lane);
+
+        if self.rank == 0 {
+            let last_idx = p.chunks.iter().position(|c| c.last).expect("no last chunk");
+            let prefill_logits = self.logits_row_of(&xs[last_idx], p.logits_row)?;
+            let lane_logits = self.lane_logits(&x_lane, &mut row)?;
+            Ok((Some(prefill_logits), Some(lane_logits)))
+        } else {
+            Ok((None, None))
+        }
+    }
+
     /// The mixed iteration (Fig 1c ∘ 1d): the prefill chunks run the ISO
     /// pipeline while the decode lane's compute slides into the windows
     /// where the prefill's collectives are on the ring, and the lane's
@@ -743,12 +907,29 @@ impl ComputeWorker {
         }
     }
 
-    /// Dispatch one `Job::Step`.
+    /// Dispatch one `Job::Step`. The decode and spec lanes are mutually
+    /// exclusive (the leader never sends both).
     fn exec_step(
         &mut self,
         prefill: Option<&StepPrefill>,
         lane: &[DecodeSlot],
+        spec: &[SpecSlot],
     ) -> Result<StepLogits> {
+        if !lane.is_empty() && !spec.is_empty() {
+            bail!("a step cannot carry both a decode lane and a verify lane");
+        }
+        if !spec.is_empty() {
+            return match prefill {
+                None => Ok((None, self.verify_fused(spec)?)),
+                Some(p) if self.strategy == Strategy::Iso => self.step_mixed_spec(p, spec),
+                Some(p) => {
+                    // Serial baseline: prefill blocks, then the fused
+                    // verify lane — wide collectives without overlap.
+                    let logits = self.prefill(p.slot, &p.tokens, &p.chunks, p.logits_row)?;
+                    Ok((logits, self.verify_fused(spec)?))
+                }
+            };
+        }
         match (prefill, lane.is_empty()) {
             (Some(p), true) => {
                 let logits = self.prefill(p.slot, &p.tokens, &p.chunks, p.logits_row)?;
@@ -805,6 +986,7 @@ fn comm_main(
             // to per-row collectives; one ack for the whole lane.
             let b = handle.allreduce_rows_fused(&mut data, rows, cols, quant);
             stats.fused_allreduces += 1;
+            stats.fused_rows += rows as u64;
             hung_up = acks.send(SegAck { row_start: 0, rows, data }).is_err();
             b
         } else if segments <= 1 {
@@ -869,9 +1051,9 @@ fn compute_main(
         .with_context(|| format!("building worker {rank}"))?;
     while let Ok(job) = jobs.recv() {
         match job {
-            Job::Step { prefill, decode } => {
+            Job::Step { prefill, decode, spec } => {
                 let (prefill_logits, decode_logits) =
-                    w.exec_step(prefill.as_deref(), &decode)?;
+                    w.exec_step(prefill.as_deref(), &decode, &spec)?;
                 if let Some(tx) = &reply {
                     tx.send(Reply::Step {
                         prefill: prefill_logits,
@@ -905,11 +1087,13 @@ fn compute_main(
 /// The leader: owns the worker threads and the request-facing API.
 pub struct Engine {
     cfg: EngineConfig,
+    /// The loaded artifact manifest (model geometry, compiled sizes).
     pub manifest: Manifest,
     job_txs: Vec<Sender<Job>>,
     reply_rx: Receiver<Reply>,
     compute_joins: Vec<JoinHandle<Result<WorkerStats>>>,
     comm_joins: Vec<JoinHandle<WorkerStats>>,
+    /// Live engine counters (folded with worker stats at shutdown).
     pub metrics: EngineMetrics,
     free_slots: Vec<usize>,
     smallest_chunk: usize,
@@ -931,6 +1115,26 @@ pub struct StepOut {
     pub decode_logits: Vec<Vec<f32>>,
 }
 
+/// Result of one speculative iteration ([`Engine::step_spec`]): per
+/// verify window, the greedy row tokens, the accepted-draft count, and
+/// the tokens the window actually emits (`accepted + 1` greedy tokens —
+/// exactly what the non-speculative chain would have produced).
+#[derive(Clone, Debug)]
+pub struct SpecStepOut {
+    /// Prefill result, if the iteration carried one.
+    pub prefill: Option<PrefillOut>,
+    /// Per window: the model's greedy token for every row.
+    pub row_tokens: Vec<Vec<i32>>,
+    /// Per window, per row: the full logits vector — what the
+    /// equivalence tests pin bit-identical to a chain of single-token
+    /// decodes over the same inputs.
+    pub row_logits: Vec<Vec<Vec<f32>>>,
+    /// Per window: accepted draft tokens (longest matching prefix).
+    pub accepted: Vec<usize>,
+    /// Per window: emitted tokens (`row_tokens[..=accepted]`).
+    pub emitted: Vec<Vec<i32>>,
+}
+
 impl Engine {
     /// Start the engine: spawn `cfg.tp` worker pairs, compile artifacts,
     /// load weights. Everything heavyweight happens here, once.
@@ -940,6 +1144,9 @@ impl Engine {
         }
         if cfg.decode_batch == 0 {
             bail!("decode_batch must be >= 1");
+        }
+        if cfg.spec_ngram == 0 {
+            bail!("spec_ngram must be >= 1");
         }
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         if !manifest.tp_degrees.contains(&cfg.tp) {
@@ -1110,27 +1317,102 @@ impl Engine {
         if let Some(d) = decode.iter().find(|d| d.offset >= max_seq) {
             bail!("lane slot {} offset {} exceeds max_seq {max_seq}", d.slot, d.offset);
         }
-        let slot_cap = self.cfg.max_batch;
-        let bad_slot = planned
-            .as_ref()
-            .map(|p| p.slot)
-            .into_iter()
-            .chain(decode.iter().map(|d| d.slot))
-            .find(|&s| s >= slot_cap);
-        if let Some(s) = bad_slot {
-            bail!("slot {s} outside the engine's slot range (max_batch {slot_cap})");
+        self.check_lane_slots(planned.as_deref(), decode.iter().map(|d| d.slot))?;
+        self.run_step(planned, decode, &[], true)
+    }
+
+    /// One speculative mixed iteration (DESIGN.md §10): at most one
+    /// prefill plus a fused verify lane. Each [`SpecSlot`] window runs
+    /// `tokens.len()` rows at consecutive KV offsets through one wide
+    /// collective per layer-stage; the result reports, per window, the
+    /// greedy row tokens, the accepted-draft count, and the emitted
+    /// tokens. KV rollback of rejected rows is implicit in the engine's
+    /// dense caches (later windows overwrite before reading); callers
+    /// tracking a paged [`KvManager`] mirror the acceptance with
+    /// `truncate`, as `serve_trace` does.
+    pub fn step_spec(
+        &mut self,
+        prefill: Option<(usize, &[i32])>,
+        spec: &[SpecSlot],
+    ) -> Result<SpecStepOut> {
+        let planned = match prefill {
+            Some((slot, prompt)) => Some(Arc::new(self.plan_step_prefill(slot, prompt)?)),
+            None => None,
+        };
+        if planned.is_none() && spec.is_empty() {
+            bail!("empty step: no prefill and no verify lane");
         }
-        if let (Some(p), false) = (&planned, decode.is_empty()) {
-            if decode.iter().any(|d| d.slot == p.slot) {
+        let max_seq = self.manifest.config.max_seq;
+        for w in spec {
+            if w.tokens.is_empty() {
+                bail!("slot {}: empty verify window", w.slot);
+            }
+            if w.offset + w.width() > max_seq {
+                bail!(
+                    "slot {}: verify window [{}, {}) exceeds max_seq {max_seq}",
+                    w.slot,
+                    w.offset,
+                    w.offset + w.width()
+                );
+            }
+        }
+        self.check_lane_slots(planned.as_deref(), spec.iter().map(|w| w.slot))?;
+        let out = self.run_step(planned, &[], spec, true)?;
+        Ok(self.apply_spec_out(spec, out))
+    }
+
+    /// Slice a spec step's flat row results back into windows, apply
+    /// greedy acceptance, and record the speculation metrics. Shared by
+    /// [`Engine::step_spec`] and the serving loop.
+    fn apply_spec_out(&mut self, spec: &[SpecSlot], out: StepOut) -> SpecStepOut {
+        let mut row_tokens = Vec::with_capacity(spec.len());
+        let mut row_logits = Vec::with_capacity(spec.len());
+        let mut accepted = Vec::with_capacity(spec.len());
+        let mut emitted = Vec::with_capacity(spec.len());
+        let mut logits_iter = out.decode_logits.into_iter();
+        let mut r = 0;
+        for w in spec {
+            let rows = &out.decode_tokens[r..r + w.width()];
+            r += w.width();
+            let a = accept_count(w.drafts(), rows);
+            self.metrics.spec_windows += 1;
+            self.metrics.spec_drafted += w.drafts().len() as u64;
+            self.metrics.spec_accepted += a as u64;
+            self.metrics.spec_accept_hist.record(a as f64);
+            self.metrics.generated_tokens += (a + 1) as u64;
+            row_tokens.push(rows.to_vec());
+            row_logits.push(logits_iter.by_ref().take(w.width()).collect());
+            accepted.push(a);
+            emitted.push(rows[..a + 1].to_vec());
+        }
+        SpecStepOut { prefill: out.prefill, row_tokens, row_logits, accepted, emitted }
+    }
+
+    /// Shared slot validation for the decode/verify lanes: slots in
+    /// range, no duplicates, and no slot both prefilling and in the lane.
+    fn check_lane_slots(
+        &self,
+        prefill: Option<&StepPrefill>,
+        lane: impl Iterator<Item = usize>,
+    ) -> Result<()> {
+        let slot_cap = self.cfg.max_batch;
+        let mut slots: Vec<usize> = lane.collect();
+        if let Some(p) = prefill {
+            if p.slot >= slot_cap {
+                bail!("slot {} outside the engine's slot range (max_batch {slot_cap})", p.slot);
+            }
+            if slots.contains(&p.slot) {
                 bail!("slot {} cannot prefill and decode in one step", p.slot);
             }
         }
-        let mut slots: Vec<usize> = decode.iter().map(|d| d.slot).collect();
+        if let Some(&s) = slots.iter().find(|&&s| s >= slot_cap) {
+            bail!("slot {s} outside the engine's slot range (max_batch {slot_cap})");
+        }
         slots.sort_unstable();
         if let Some(w) = slots.windows(2).find(|w| w[0] == w[1]) {
             bail!("slot {} appears twice in the decode lane", w[0]);
         }
-        self.run_step(planned, decode, true)
+        Ok(())
     }
 
     /// `count_iteration` separates genuine mixed iterations (the public
@@ -1142,13 +1424,16 @@ impl Engine {
         &mut self,
         prefill: Option<Arc<StepPrefill>>,
         decode: &[DecodeSlot],
+        spec: &[SpecSlot],
         count_iteration: bool,
     ) -> Result<StepOut> {
         let n_chunks = prefill.as_ref().map_or(0, |p| p.chunks.len());
+        let spec_rows: usize = spec.iter().map(SpecSlot::width).sum();
         let timer = Timer::start();
         self.broadcast(Job::Step {
             prefill: prefill.clone(),
             decode: Arc::new(decode.to_vec()),
+            spec: Arc::new(spec.to_vec()),
         });
         let (prefill_logits, decode_logits) = match self.reply_rx.recv() {
             Ok(Reply::Step { prefill, decode }) => (prefill, decode),
@@ -1159,8 +1444,13 @@ impl Engine {
 
         if count_iteration {
             self.metrics.iterations += 1;
-            self.metrics.iter_occupancy.record((n_chunks + decode.len()) as f64);
+            self.metrics
+                .iter_occupancy
+                .record((n_chunks + decode.len() + spec_rows) as f64);
         }
+        // Plain lane rows are one emitted token each; verify-lane
+        // emissions depend on acceptance and are counted by the caller
+        // (`apply_spec_out`).
         self.metrics.generated_tokens += decode.len() as u64;
         self.metrics.fused_decode_tokens += decode.len() as u64;
 
@@ -1175,8 +1465,9 @@ impl Engine {
             (None, _) => None,
             (Some(_), None) => bail!("step carried a prefill but no logits came back"),
         };
-        if decode_logits.len() != decode.len() {
-            bail!("lane logits {} != lane width {}", decode_logits.len(), decode.len());
+        let expected_rows = decode.len() + spec_rows;
+        if decode_logits.len() != expected_rows {
+            bail!("lane logits {} != lane rows {expected_rows}", decode_logits.len());
         }
         let decode_tokens = decode_logits.iter().map(|l| argmax(l)).collect();
         Ok(StepOut { prefill: prefill_out, decode_tokens, decode_logits })
@@ -1184,7 +1475,7 @@ impl Engine {
 
     fn prefill_in_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<PrefillOut> {
         let planned = Arc::new(self.plan_step_prefill(slot, prompt)?);
-        let out = self.run_step(Some(planned), &[], false)?;
+        let out = self.run_step(Some(planned), &[], &[], false)?;
         out.prefill.ok_or_else(|| anyhow!("prefill step returned no result"))
     }
 
@@ -1224,8 +1515,12 @@ impl Engine {
     /// `Job::Step` composing the head-of-line prefill's ISO chunks with a
     /// fused decode lane of up to `decode_batch` live sequences, so
     /// decode collectives batch B× and decode compute hides behind
-    /// prefill communication. With it off, the legacy per-request loop
-    /// runs for A/B comparison. Both emit identical tokens.
+    /// prefill communication. With `cfg.spec_k > 0` the decode lane
+    /// speculates (DESIGN.md §10): each lane sequence verifies `spec_k`
+    /// self-drafted tokens per iteration and a paged [`KvManager`]
+    /// mirrors the accept/rollback motion. With mixed iterations off, the
+    /// legacy per-request loop runs for A/B comparison. All modes emit
+    /// identical tokens.
     pub fn serve_trace(&mut self, reqs: &[crate::workload::Request]) -> Result<TraceReport> {
         if !self.cfg.mixed_iterations {
             return self.serve_trace_sequential(reqs);
@@ -1251,6 +1546,18 @@ impl Engine {
             self.cfg.decode_batch,
             self.manifest.config.max_seq,
         );
+        let spec_k = self.cfg.spec_k;
+        let mut proposer = NGramProposer::new(self.cfg.spec_ngram);
+        // Paged KV accounting mirroring the workers' dense caches: one
+        // sequence per slot, logical (unpadded) lengths, verify windows
+        // appended optimistically and truncated to the accepted prefix.
+        // Sized per sequence: every sequence may need a partial last
+        // block, so round max_seq up to a block multiple *before*
+        // multiplying by the batch size.
+        let kv_block = 16usize;
+        let kv_cap =
+            self.cfg.max_batch * self.manifest.config.max_seq.div_ceil(kv_block) * kv_block;
+        let mut kvm = KvManager::new(kv_cap, kv_block);
         let mut live: Vec<Live> = Vec::new();
         let mut report = TraceReport::default();
         let clock = Timer::start();
@@ -1285,6 +1592,7 @@ impl Engine {
                     );
                 }
                 let slot = self.alloc_slot()?;
+                kvm.add_seq(slot as u64);
                 live.push(Live {
                     lane: LaneSeq {
                         slot,
@@ -1316,6 +1624,7 @@ impl Engine {
                     report.completed += 1;
                     report.generated += l.tokens.len() as u64;
                     report.completions.push((l.id, l.tokens));
+                    kvm.release(l.lane.slot as u64)?;
                     self.free_slot(l.lane.slot)?;
                     continue;
                 }
@@ -1325,11 +1634,44 @@ impl Engine {
                 continue; // next lap admits (and sleeps for) the next arrival
             }
 
+            // Saturation sample (satellite), once per executed iteration:
+            // arrived-but-unadmitted requests only — `pending` also holds
+            // the trace's *future* arrivals, which are not queueing. Same
+            // semantics as `batch::Admission::{queue_depth, oldest_wait_s}`.
+            let sample_s = clock.elapsed_ms() / 1e3;
+            let arrived =
+                pending.iter().take_while(|r| r.arrival_s <= sample_s).count();
+            self.metrics.queue_depth.record(arrived as f64);
+            if let Some(front) = pending.front() {
+                if front.arrival_s <= sample_s {
+                    self.metrics.queue_wait_ms.record((sample_s - front.arrival_s) * 1e3);
+                }
+            }
+
             // Compose and execute one mixed iteration. The planner's
             // chunk set is used as-is; only padding and the logits row
             // are derived here — no second planning pass.
             let lane_view: Vec<LaneSeq> = live.iter().map(|l| l.lane.clone()).collect();
-            let plan = planner.plan(&lane_view, Some(&self.split_ctx));
+            let plan = if spec_k > 0 {
+                // Self-draft from the sequence's own history (prompt +
+                // emissions) — the proposer sees exactly what a separate
+                // draft model would.
+                let live_ref = &live;
+                let mut draft = |slot: usize, k: usize| {
+                    let l = live_ref
+                        .iter()
+                        .find(|l| l.lane.slot == slot)
+                        .expect("drafting for a slot that is not live");
+                    let mut history =
+                        Vec::with_capacity(l.prompt.len() + l.tokens.len());
+                    history.extend_from_slice(&l.prompt);
+                    history.extend_from_slice(&l.tokens);
+                    proposer.propose(&history, k)
+                };
+                planner.plan_spec(&lane_view, Some(&self.split_ctx), spec_k, &mut draft)
+            } else {
+                planner.plan(&lane_view, Some(&self.split_ctx))
+            };
             let prefill_job = match &plan.prefill {
                 Some(pf) => {
                     let l =
@@ -1350,14 +1692,16 @@ impl Engine {
                 }
                 None => None,
             };
-            let out = self.run_step(prefill_job, &plan.decode, true)?;
+            let mut out = self.run_step(prefill_job, &plan.decode, &plan.spec, true)?;
             let now_ms = clock.elapsed_ms();
             report.iterations += 1;
-            let occupancy =
-                plan.prefill.as_ref().map_or(0, |p| p.chunks.len()) + plan.decode.len();
+            let occupancy = plan.prefill.as_ref().map_or(0, |p| p.chunks.len())
+                + plan.decode.len()
+                + plan.spec.iter().map(SpecSlot::width).sum::<usize>();
             report.occupancy.record(occupancy as f64);
 
-            if let (Some(pf), Some(pre)) = (&plan.prefill, &out.prefill) {
+            let prefill_result = out.prefill.take();
+            if let (Some(pf), Some(pre)) = (&plan.prefill, &prefill_result) {
                 let l = live
                     .iter_mut()
                     .find(|l| l.lane.slot == pf.slot)
@@ -1367,6 +1711,8 @@ impl Engine {
                 l.lane.offset = l.prompt.len();
                 l.tokens.push(pre.first_token);
                 l.last_emit_ms = now_ms;
+                // The paged mirror tracks logical (unpadded) lengths.
+                kvm.append(pf.slot as u64, l.prompt.len())?;
                 report.ttft_ms.record(now_ms - l.arrival_s * 1e3);
             }
             for (j, d) in plan.decode.iter().enumerate() {
@@ -1379,10 +1725,43 @@ impl Engine {
                 l.lane.offset += 1;
                 l.lane.decode_left -= 1;
                 l.tokens.push(token);
+                kvm.append(d.slot as u64, 1)?;
                 let tbt = now_ms - l.last_emit_ms;
                 l.last_emit_ms = now_ms;
                 report.tbt_ms.record(tbt);
                 self.metrics.tbt_ms.record(tbt);
+            }
+            if !plan.spec.is_empty() {
+                // Verify lane: accept the longest matching greedy prefix
+                // per window, advance the sequence by all accepted
+                // emissions at once, and roll the paged mirror back to
+                // the accepted length (append k+1, truncate to take).
+                let sout = self.apply_spec_out(&plan.spec, out);
+                for (w, em) in plan.spec.iter().zip(sout.emitted.iter()) {
+                    let l = live
+                        .iter_mut()
+                        .find(|l| l.lane.slot == w.slot)
+                        .expect("lane slot is live");
+                    kvm.append(w.slot as u64, w.width())?;
+                    let take = em.len().min(l.lane.decode_left);
+                    kvm.truncate(w.slot as u64, w.offset + take)?;
+                    for &tok in &em[..take] {
+                        l.tokens.push(tok);
+                    }
+                    l.lane.last_token = *l.tokens.last().unwrap();
+                    l.lane.offset += take;
+                    l.lane.decode_left -= take;
+                    // One iteration emitted `take` tokens for this
+                    // sequence; spread the wall time across them so TBT
+                    // stays comparable with the one-token lane.
+                    let tbt = (now_ms - l.last_emit_ms) / take as f64;
+                    for _ in 0..take {
+                        report.tbt_ms.record(tbt);
+                        self.metrics.tbt_ms.record(tbt);
+                    }
+                    l.last_emit_ms = now_ms;
+                }
+                debug_assert!(kvm.check_invariants().is_ok());
             }
         }
         report.wall_s = clock.elapsed_ms() / 1e3;
@@ -1494,6 +1873,7 @@ impl Engine {
             w.comm_ms = comm.comm_ms;
             w.allreduces = comm.allreduces;
             w.fused_allreduces = comm.fused_allreduces;
+            w.fused_rows = comm.fused_rows;
             w.wire_bytes = comm.wire_bytes;
             w.wire_msgs = comm.wire_msgs;
         }
@@ -1559,15 +1939,24 @@ mod tests {
             logits_row: 0,
         });
         let decode = Arc::new(vec![DecodeSlot { slot: 1, token: 7, offset: 3 }; 8]);
-        let job = Job::Step { prefill: Some(Arc::clone(&prefill)), decode: Arc::clone(&decode) };
+        let spec = Arc::new(vec![
+            SpecSlot { slot: 2, tokens: vec![7, 8, 9], offset: 3 };
+            4
+        ]);
+        let job = Job::Step {
+            prefill: Some(Arc::clone(&prefill)),
+            decode: Arc::clone(&decode),
+            spec: Arc::clone(&spec),
+        };
         let copy = job.clone();
         match (&job, &copy) {
             (
-                Job::Step { prefill: Some(a), decode: da },
-                Job::Step { prefill: Some(b), decode: db },
+                Job::Step { prefill: Some(a), decode: da, spec: sa },
+                Job::Step { prefill: Some(b), decode: db, spec: sb },
             ) => {
                 assert!(Arc::ptr_eq(a, b), "clone must share the prefill payload");
                 assert!(Arc::ptr_eq(da, db), "clone must share the lane");
+                assert!(Arc::ptr_eq(sa, sb), "clone must share the verify lane");
                 assert_eq!(Arc::strong_count(&prefill), 3);
             }
             _ => unreachable!(),

@@ -45,6 +45,7 @@ impl LinkProfile {
 /// One GPU model's compute profile.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeviceProfile {
+    /// Preset name (`rtx4090`, `a800`, `cpu-engine`, or custom).
     pub name: String,
     /// Peak dense GEMM throughput in FLOP/s for the serving dtype
     /// (int8 tensor ops per the paper's quant setup).
@@ -78,8 +79,11 @@ impl DeviceProfile {
 /// A full node: device + interconnect + card count.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NodeProfile {
+    /// Per-card compute profile.
     pub device: DeviceProfile,
+    /// Ring interconnect profile.
     pub link: LinkProfile,
+    /// Cards in the TP group.
     pub cards: usize,
     /// Whether the wire supports the int8 comm-quant path (paper: used on
     /// 4090, not on A800).
@@ -135,6 +139,7 @@ impl NodeProfile {
         }
     }
 
+    /// Preset lookup (`4090` / `a800`).
     pub fn by_name(name: &str, cards: usize) -> Option<Self> {
         match name {
             "4090" | "rtx4090" => Some(Self::rtx4090(cards)),

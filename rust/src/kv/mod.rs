@@ -7,19 +7,68 @@
 //! appends, and free-list invariants. Chunked prefill appends one chunk's
 //! worth of positions at a time, which is exactly what ISO's intra-sequence
 //! micro-batches do.
+//!
+//! Speculative decoding (DESIGN.md §10) adds the rollback motion: a verify
+//! window *appends* `k + 1` positions optimistically, then *truncates* back
+//! to the accepted prefix — [`KvManager::truncate`] returns the blocks of
+//! the rejected suffix to the free list without disturbing the accepted
+//! prefix's block table.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 /// Allocation error.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum KvError {
-    #[error("out of KV blocks (need {need}, free {free})")]
-    OutOfBlocks { need: usize, free: usize },
-    #[error("unknown sequence {0}")]
+    /// The free list cannot satisfy an allocation.
+    OutOfBlocks {
+        /// Blocks the request needed.
+        need: usize,
+        /// Blocks that were free.
+        free: usize,
+    },
+    /// The sequence id is not registered.
     UnknownSeq(u64),
-    #[error("sequence {seq} over capacity: {len} + {add} > {cap}")]
-    OverCapacity { seq: u64, len: usize, add: usize, cap: usize },
+    /// An append would push the sequence past a fixed capacity.
+    OverCapacity {
+        /// Offending sequence id.
+        seq: u64,
+        /// Its current token length.
+        len: usize,
+        /// Tokens the append asked for.
+        add: usize,
+        /// The capacity that would be exceeded.
+        cap: usize,
+    },
+    /// A truncate asked for a length beyond the current one.
+    BadTruncate {
+        /// Offending sequence id.
+        seq: u64,
+        /// Its current token length.
+        len: usize,
+        /// The (longer) length the caller asked to truncate to.
+        to: usize,
+    },
 }
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvError::OutOfBlocks { need, free } => {
+                write!(f, "out of KV blocks (need {need}, free {free})")
+            }
+            KvError::UnknownSeq(s) => write!(f, "unknown sequence {s}"),
+            KvError::OverCapacity { seq, len, add, cap } => {
+                write!(f, "sequence {seq} over capacity: {len} + {add} > {cap}")
+            }
+            KvError::BadTruncate { seq, len, to } => {
+                write!(f, "sequence {seq}: cannot truncate len {len} up to {to}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 /// Block-granular KV allocator for a fixed-capacity cache region.
 #[derive(Debug)]
@@ -50,22 +99,27 @@ impl KvManager {
         }
     }
 
+    /// Blocks currently on the free list.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Total blocks managed (free + owned).
     pub fn total_blocks(&self) -> usize {
         self.n_blocks
     }
 
+    /// Total token capacity across all blocks.
     pub fn capacity_tokens(&self) -> usize {
         self.n_blocks * self.block_tokens
     }
 
+    /// Current token length of `seq`, if registered.
     pub fn seq_len(&self, seq: u64) -> Option<usize> {
         self.seqs.get(&seq).map(|e| e.len)
     }
 
+    /// Number of registered sequences.
     pub fn live_seqs(&self) -> usize {
         self.seqs.len()
     }
@@ -106,6 +160,25 @@ impl KvManager {
         let start = e.len;
         e.len += tokens;
         Ok(start)
+    }
+
+    /// Shrink `seq` to `new_len` tokens, returning the blocks of the cut
+    /// suffix to the free list — the speculative-decode rollback
+    /// (DESIGN.md §10): a verify window appends `k + 1` positions
+    /// optimistically and truncates back to the accepted prefix. Growing
+    /// (`new_len > len`) is a [`KvError::BadTruncate`]; use
+    /// [`KvManager::append`].
+    pub fn truncate(&mut self, seq: u64, new_len: usize) -> Result<(), KvError> {
+        let e = self.seqs.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        if new_len > e.len {
+            return Err(KvError::BadTruncate { seq, len: e.len, to: new_len });
+        }
+        let keep_blocks = new_len.div_ceil(self.block_tokens);
+        while e.blocks.len() > keep_blocks {
+            self.free.push(e.blocks.pop().unwrap());
+        }
+        e.len = new_len;
+        Ok(())
     }
 
     /// Release a sequence's blocks back to the free list.
@@ -153,14 +226,20 @@ impl KvManager {
 /// coordinator uses to scatter a chunk's K/V at its absolute offset.
 #[derive(Clone, Debug)]
 pub struct DenseKv {
+    /// KV heads in this rank's shard.
     pub n_kv_heads: usize,
+    /// Positions the region holds.
     pub max_seq: usize,
+    /// Per-head feature dimension.
     pub head_dim: usize,
+    /// Key buffer, `[n_kv_heads, max_seq, head_dim]` row-major.
     pub k: Vec<f32>,
+    /// Value buffer, same layout as `k`.
     pub v: Vec<f32>,
 }
 
 impl DenseKv {
+    /// A zero-filled region of the given geometry.
     pub fn new(n_kv_heads: usize, max_seq: usize, head_dim: usize) -> Self {
         let n = n_kv_heads * max_seq * head_dim;
         DenseKv { n_kv_heads, max_seq, head_dim, k: vec![0.0; n], v: vec![0.0; n] }
@@ -288,6 +367,100 @@ mod tests {
                 }
                 kv.check_invariants()?;
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncate_frees_suffix_blocks_exactly() {
+        let mut kv = KvManager::new(256, 16);
+        kv.add_seq(1);
+        kv.append(1, 40).unwrap(); // 3 blocks (48 slots)
+        assert_eq!(kv.block_table(1).unwrap().len(), 3);
+        // Cut inside the second block: the third block frees, the second stays.
+        kv.truncate(1, 20).unwrap();
+        assert_eq!(kv.seq_len(1), Some(20));
+        assert_eq!(kv.block_table(1).unwrap().len(), 2);
+        assert_eq!(kv.free_blocks(), 16 - 2);
+        kv.check_invariants().unwrap();
+        // Truncate to a block boundary and to zero.
+        kv.truncate(1, 16).unwrap();
+        assert_eq!(kv.block_table(1).unwrap().len(), 1);
+        kv.truncate(1, 0).unwrap();
+        assert_eq!(kv.block_table(1).unwrap().len(), 0);
+        assert_eq!(kv.free_blocks(), 16);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncate_rejects_growth_and_unknown_seq() {
+        let mut kv = KvManager::new(64, 16);
+        kv.add_seq(1);
+        kv.append(1, 10).unwrap();
+        assert_eq!(
+            kv.truncate(1, 11),
+            Err(KvError::BadTruncate { seq: 1, len: 10, to: 11 })
+        );
+        assert_eq!(kv.truncate(9, 0), Err(KvError::UnknownSeq(9)));
+        // No-op truncate to the current length is fine.
+        kv.truncate(1, 10).unwrap();
+        assert_eq!(kv.seq_len(1), Some(10));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_speculative_append_truncate_conserves_blocks() {
+        // Satellite (DESIGN.md §10): the verify-window motion — append
+        // k+1 positions, accept a random prefix, truncate the rest —
+        // never leaks or double-frees a block, and the block table always
+        // covers exactly ceil(len / block_tokens) blocks.
+        Prop::new(67).cases(200).run("kv speculative append/truncate", |rng: &mut Rng| {
+            let block = 16;
+            let mut kv = KvManager::new(1024, block);
+            let n_seqs = rng.range(1, 5) as u64;
+            for s in 0..n_seqs {
+                kv.add_seq(s);
+                // Random prefill.
+                let prefill = rng.range(1, 80);
+                if kv.can_append(s, prefill) {
+                    kv.append(s, prefill).map_err(|e| e.to_string())?;
+                }
+            }
+            for _ in 0..120 {
+                let s = rng.below(n_seqs);
+                let k = rng.range(0, 9); // drafts per window
+                let window = k + 1;
+                let len = kv.seq_len(s).unwrap();
+                if !kv.can_append(s, window) {
+                    continue;
+                }
+                let start = kv.append(s, window).map_err(|e| e.to_string())?;
+                if start != len {
+                    return Err(format!("append at {start}, expected {len}"));
+                }
+                // Random acceptance: keep 1..=window of the appended rows.
+                let take = rng.range(1, window + 1);
+                kv.truncate(s, len + take).map_err(|e| e.to_string())?;
+                if kv.seq_len(s) != Some(len + take) {
+                    return Err("truncate set the wrong length".into());
+                }
+                let blocks = kv.block_table(s).unwrap().len();
+                let want = (len + take).div_ceil(block);
+                if blocks != want {
+                    return Err(format!(
+                        "len {} held {blocks} blocks, want {want}",
+                        len + take
+                    ));
+                }
+                kv.check_invariants()?;
+            }
+            for s in 0..n_seqs {
+                kv.release(s).map_err(|e| e.to_string())?;
+            }
+            if kv.free_blocks() != kv.total_blocks() {
+                return Err("release after spec traffic leaked blocks".into());
+            }
+            kv.check_invariants()?;
             Ok(())
         });
     }

@@ -24,6 +24,11 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
+// Docs are a first-class artifact of this crate: every public item must
+// say what it is. CI runs `cargo doc --no-deps` with `-D warnings`, so a
+// missing doc fails the build there.
+#![warn(missing_docs)]
+
 pub mod batch;
 pub mod cli;
 pub mod collective;

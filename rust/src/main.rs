@@ -68,17 +68,25 @@ fn serve(cli: &Cli) -> Result<()> {
         cfg.mixed_iterations =
             iso::config::parse_bool(m, "--mixed").map_err(|e| anyhow!(e))?;
     }
+    if cli.has("spec-k") {
+        cfg.spec_k = cli.usize_or("spec-k", cfg.spec_k).map_err(|e| anyhow!(e))?;
+    }
+    if cli.has("spec-ngram") {
+        cfg.spec_ngram = cli.usize_or("spec-ngram", cfg.spec_ngram).map_err(|e| anyhow!(e))?;
+    }
     let n_requests = cli.usize_or("requests", 8).map_err(|e| anyhow!(e))?;
     let prompt_len = cli.usize_or("prompt-len", 128).map_err(|e| anyhow!(e))?;
     let decode = cli.usize_or("decode", 0).map_err(|e| anyhow!(e))?;
 
     println!(
-        "engine: tp={} strategy={} comm_quant={:?} mixed={} decode_batch={} artifacts={}",
+        "engine: tp={} strategy={} comm_quant={:?} mixed={} decode_batch={} spec_k={} \
+         artifacts={}",
         cfg.tp,
         cfg.strategy,
         cfg.comm_quant,
         cfg.mixed_iterations,
         cfg.decode_batch,
+        cfg.spec_k,
         cfg.artifacts_dir
     );
     let mut engine = Engine::start(cfg)?;

@@ -10,14 +10,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
 
+    /// Time since [`Timer::start`].
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Time since [`Timer::start`] in milliseconds.
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed().as_secs_f64() * 1e3
     }
@@ -33,23 +36,28 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add one sample.
     pub fn record(&mut self, v: f64) {
         self.samples.push(v);
         self.sorted = false;
     }
 
+    /// Samples recorded so far.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True when no samples have been recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -57,10 +65,12 @@ impl Histogram {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Smallest sample (+∞ when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (−∞ when empty).
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -78,16 +88,20 @@ impl Histogram {
         self.samples[rank - 1]
     }
 
+    /// Median.
     pub fn p50(&mut self) -> f64 {
         self.percentile(0.50)
     }
+    /// 95th percentile.
     pub fn p95(&mut self) -> f64 {
         self.percentile(0.95)
     }
+    /// 99th percentile.
     pub fn p99(&mut self) -> f64 {
         self.percentile(0.99)
     }
 
+    /// One-line `n/mean/p50/p95/p99/min/max` summary for reports.
     pub fn summary(&mut self, label: &str) -> String {
         format!(
             "{label}: n={} mean={:.3} p50={:.3} p95={:.3} p99={:.3} min={:.3} max={:.3}",
@@ -142,6 +156,24 @@ pub struct EngineMetrics {
     /// Comm time *not* hidden behind compute (mean per-rank stall, ms) —
     /// the quantity segmented streaming drives down.
     pub exposed_ms: f64,
+    /// Speculative verify windows executed (DESIGN.md §10).
+    pub spec_windows: u64,
+    /// Draft tokens proposed into verify windows.
+    pub spec_drafted: u64,
+    /// Draft tokens accepted by greedy verification (never counts past a
+    /// sequence's decode budget).
+    pub spec_accepted: u64,
+    /// Accepted drafts per verify window — the paper-§6 acceptance curve
+    /// the k-sweep bench snapshots.
+    pub spec_accept_hist: Histogram,
+    /// Arrived-but-unadmitted requests, sampled once per serving
+    /// iteration — the saturation signal. The serving loop samples its
+    /// own pending queue; `batch::Admission::queue_depth` exposes the
+    /// same signal for queue-fed deployments.
+    pub queue_depth: Histogram,
+    /// Head-of-line queue wait (ms), sampled once per serving iteration;
+    /// the `batch::Admission::oldest_wait_s` signal.
+    pub queue_wait_ms: Histogram,
 }
 
 impl EngineMetrics {
@@ -155,6 +187,16 @@ impl EngineMetrics {
         self.exposed_ms / self.generated_tokens as f64
     }
 
+    /// Fraction of drafted tokens accepted by greedy verification
+    /// (0.0 when no speculation ran).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_drafted as f64
+    }
+
+    /// Multi-line human-readable dump of every populated counter.
     pub fn report(&mut self) -> String {
         let mut s = String::new();
         s.push_str(&self.ttft_ms.summary("ttft_ms"));
@@ -191,6 +233,23 @@ impl EngineMetrics {
             self.fused_allreduces,
             self.exposed_ms_per_token()
         ));
+        if self.spec_windows > 0 {
+            s.push_str(&format!(
+                "\nspec_windows={} spec_drafted={} spec_accepted={} accept_rate={:.3}",
+                self.spec_windows,
+                self.spec_drafted,
+                self.spec_accepted,
+                self.acceptance_rate()
+            ));
+            s.push('\n');
+            s.push_str(&self.spec_accept_hist.summary("spec_accept_per_window"));
+        }
+        if !self.queue_depth.is_empty() {
+            s.push('\n');
+            s.push_str(&self.queue_depth.summary("queue_depth"));
+            s.push('\n');
+            s.push_str(&self.queue_wait_ms.summary("queue_wait_ms"));
+        }
         s
     }
 }
@@ -276,5 +335,25 @@ mod tests {
         assert!(r.contains("iter_occupancy"));
         assert!(r.contains("fused_decode_tokens=32"));
         assert!(r.contains("exposed_ms_per_tok=0.25"));
+    }
+
+    #[test]
+    fn spec_and_queue_counters_report() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.acceptance_rate(), 0.0); // no drafts, no NaN
+        assert!(!m.report().contains("spec_windows"), "absent until used");
+        m.spec_windows = 5;
+        m.spec_drafted = 20;
+        m.spec_accepted = 12;
+        m.spec_accept_hist.record(3.0);
+        m.queue_depth.record(4.0);
+        m.queue_wait_ms.record(7.5);
+        assert!((m.acceptance_rate() - 0.6).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("spec_windows=5"));
+        assert!(r.contains("accept_rate=0.600"));
+        assert!(r.contains("spec_accept_per_window"));
+        assert!(r.contains("queue_depth"));
+        assert!(r.contains("queue_wait_ms"));
     }
 }

@@ -8,13 +8,21 @@
 /// Transformer geometry (single model replica; TP divides it by `cards`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelSpec {
+    /// Spec name (`30b-mha`, `70b-gqa`, `tiny-gqa`).
     pub name: String,
+    /// Residual width.
     pub d_model: usize,
+    /// Query heads.
     pub n_heads: usize,
+    /// KV heads (GQA shrinks this).
     pub n_kv_heads: usize,
+    /// Per-head feature dimension.
     pub head_dim: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Vocabulary size.
     pub vocab: usize,
     /// bytes per activation element on the wire *before* any comm quant
     /// (fp16 = 2, matching the paper's activation dtype).
@@ -68,6 +76,7 @@ impl ModelSpec {
         }
     }
 
+    /// Spec lookup (`30b` / `70b` / `tiny`).
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "30b" | "30b-mha" => Some(Self::mha_30b()),
@@ -77,10 +86,12 @@ impl ModelSpec {
         }
     }
 
+    /// Query projection width (`n_heads × head_dim`).
     pub fn q_dim(&self) -> usize {
         self.n_heads * self.head_dim
     }
 
+    /// KV projection width (`n_kv_heads × head_dim`).
     pub fn kv_dim(&self) -> usize {
         self.n_kv_heads * self.head_dim
     }
@@ -106,8 +117,9 @@ impl ModelSpec {
 /// per-device work (the sim does).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LayerChunkCost {
-    /// qkv + o_proj + gate/up/down GEMM flops (2*m*n*k convention).
+    /// qkv + o_proj GEMM flops (2*m*n*k convention).
     pub gemm_flops_attn: f64,
+    /// gate/up/down GEMM flops.
     pub gemm_flops_mlp: f64,
     /// attention score+value flops (quadratic part, causal).
     pub attn_flops: f64,

@@ -13,9 +13,13 @@
 /// Quantized rows: `scales.len() == rows`, `data.len() == rows * cols`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QuantizedRows {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Per-row dequantization scales.
     pub scales: Vec<f32>,
+    /// int8 payload, row-major.
     pub data: Vec<i8>,
 }
 

@@ -11,8 +11,11 @@ use crate::util::Json;
 /// One row of the Table-1 grid.
 #[derive(Clone, Debug)]
 pub struct Table1Row {
+    /// GPU preset name.
     pub gpu: String,
+    /// Cards in the TP group.
     pub cards: usize,
+    /// Model spec name.
     pub model: String,
     /// (prompt_len, reduction) pairs; reduction is the fractional decrease
     /// of prefill duration vs the serial baseline (paper's percentages).
@@ -118,19 +121,25 @@ pub fn timeline_json(tl: &Timeline) -> Json {
 /// across PRs (EXPERIMENTS.md).
 #[derive(Clone, Debug)]
 pub struct PerfRecord {
+    /// Case label (unique within a section).
     pub case: String,
+    /// Mean wall time (ms).
     pub mean_ms: f64,
+    /// Median wall time (ms).
     pub p50_ms: f64,
+    /// 95th-percentile wall time (ms).
     pub p95_ms: f64,
     /// Free-form numeric annotations (segments, exposed_ms, wire bytes…).
     pub extra: Vec<(String, f64)>,
 }
 
 impl PerfRecord {
+    /// A record from the three timing aggregates.
     pub fn new(case: &str, mean_ms: f64, p50_ms: f64, p95_ms: f64) -> PerfRecord {
         PerfRecord { case: case.to_string(), mean_ms, p50_ms, p95_ms, extra: Vec::new() }
     }
 
+    /// Attach a numeric annotation (builder style).
     pub fn with(mut self, key: &str, value: f64) -> PerfRecord {
         self.extra.push((key.to_string(), value));
         self

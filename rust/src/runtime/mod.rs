@@ -23,64 +23,99 @@ use crate::util::Json;
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Geometry of the tiny model the artifacts implement.
     pub config: ModelGeometry,
+    /// Chunk lengths with compiled stages.
     pub chunk_lens: Vec<usize>,
+    /// TP degrees with sharded weights/stages.
     pub tp_degrees: Vec<usize>,
+    /// Every compiled HLO module.
     pub modules: Vec<ModuleSpec>,
     /// tp degree → weight entries.
     pub weights: BTreeMap<usize, Vec<WeightSpec>>,
+    /// Golden-reference files for end-to-end tests.
     pub golden: GoldenSpec,
 }
 
 /// Tiny-model geometry (mirrors python `TinyConfig`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ModelGeometry {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual width.
     pub d_model: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Query heads.
     pub n_heads: usize,
+    /// KV heads (GQA).
     pub n_kv_heads: usize,
+    /// Per-head feature dimension.
     pub head_dim: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
+    /// KV-cache capacity in tokens.
     pub max_seq: usize,
 }
 
+/// One compiled HLO module's manifest entry.
 #[derive(Clone, Debug)]
 pub struct ModuleSpec {
+    /// Manifest key, e.g. `attn_tp2_t64`.
     pub name: String,
+    /// HLO text file relative to the artifact dir.
     pub file: String,
+    /// Stage kind (`embed` / `attn` / `mlp` / `logits`).
     pub stage: String,
+    /// TP degree the module was lowered for.
     pub tp: usize,
+    /// Chunk length the module was lowered for.
     pub t: usize,
+    /// Positional input specs.
     pub inputs: Vec<TensorSpec>,
+    /// Tuple output specs.
     pub outputs: Vec<TensorSpec>,
 }
 
+/// Shape + dtype of one stage operand.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Dimensions, row-major.
     pub shape: Vec<usize>,
+    /// Element type (`f32` or `i32`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// One exported weight tensor's manifest entry.
 #[derive(Clone, Debug)]
 pub struct WeightSpec {
+    /// Manifest key, e.g. `layer0.rank1.wq`.
     pub name: String,
+    /// Dimensions, row-major.
     pub shape: Vec<usize>,
+    /// Raw little-endian f32 file relative to the artifact dir.
     pub file: String,
 }
 
+/// Golden-reference pointers for the end-to-end tests.
 #[derive(Clone, Debug)]
 pub struct GoldenSpec {
+    /// Prompt token file (raw i32).
     pub tokens_file: String,
+    /// Full-model reference logits file (raw f32).
     pub logits_file: String,
+    /// Length of the golden prompt.
     pub prompt_len: usize,
+    /// Shape of the reference logits.
     pub logits_shape: Vec<usize>,
 }
 
@@ -108,6 +143,7 @@ fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
 }
 
 impl Manifest {
+    /// Parse `manifest.json` under `dir` (the `make artifacts` output).
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -209,6 +245,7 @@ impl Manifest {
         Ok(Manifest { dir, config: geo, chunk_lens, tp_degrees, modules, weights, golden })
     }
 
+    /// Look up a module entry by manifest name.
     pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
         self.modules
             .iter()
@@ -250,7 +287,9 @@ impl Manifest {
 /// Host-side tensor (f32, row-major) moving in/out of PJRT.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimensions, row-major.
     pub shape: Vec<usize>,
+    /// Elements, row-major.
     pub data: Vec<f32>,
 }
 
@@ -265,11 +304,13 @@ impl Default for Tensor {
 }
 
 impl Tensor {
+    /// A tensor from parts; panics if `shape` does not cover `data`.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape, data }
     }
 
+    /// A zero-filled tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
@@ -285,11 +326,13 @@ impl Tensor {
 /// at engine start instead of on every stage call (§Perf: the conversion
 /// was ~500 KB of copies per layer call before this cache).
 pub struct DevTensor {
+    /// Dimensions, row-major.
     pub shape: Vec<usize>,
     lit: xla::Literal,
 }
 
 impl DevTensor {
+    /// Convert a host tensor once, for reuse across stage calls.
     pub fn from_tensor(t: &Tensor) -> Result<DevTensor> {
         Ok(DevTensor { shape: t.shape.clone(), lit: t.to_literal()? })
     }
@@ -297,16 +340,20 @@ impl DevTensor {
 
 /// One compiled stage on one worker's client.
 pub struct Executable {
+    /// The manifest entry the executable was compiled from.
     pub spec: ModuleSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// Inputs a stage can take.
 pub enum Arg<'a> {
+    /// Host f32 tensor (activations).
     F32(&'a Tensor),
     /// Pre-converted literal (cached weights) — zero conversion cost.
     Dev(&'a DevTensor),
+    /// Host i32 vector (token ids).
     I32(&'a [i32]),
+    /// Scalar i32 (offsets).
     Scalar(i32),
 }
 
@@ -418,10 +465,12 @@ impl Executable {
 /// Construct *inside* the worker thread (the client is thread-affine).
 pub struct WorkerRuntime {
     client: xla::PjRtClient,
+    /// The manifest the runtime compiles from.
     pub manifest: Manifest,
 }
 
 impl WorkerRuntime {
+    /// A runtime with a fresh CPU PJRT client (call on the worker thread).
     pub fn new(manifest: Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
         Ok(WorkerRuntime { client, manifest })

@@ -20,12 +20,16 @@ use crate::split::{choose_split, Split};
 /// device's share (total work / cards); collectives use the ring model.
 #[derive(Clone, Debug)]
 pub struct Coster {
+    /// Node being modeled.
     pub node: NodeProfile,
+    /// Transformer geometry being modeled.
     pub model: ModelSpec,
+    /// Whether collectives quantize to int8 on the wire.
     pub int8_wire: bool,
 }
 
 impl Coster {
+    /// The coster of one simulator experiment.
     pub fn new(exp: &SimExperiment) -> Self {
         Coster { node: exp.node.clone(), model: exp.model.clone(), int8_wire: exp.int8_wire }
     }

@@ -18,7 +18,9 @@ use std::collections::BinaryHeap;
 /// Which stream executes the op.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OpKind {
+    /// Runs on the compute stream (kernels).
     Compute,
+    /// Runs on the communication stream (collectives).
     Comm,
 }
 
@@ -27,7 +29,9 @@ pub enum OpKind {
 pub struct Op {
     /// Stable id == index in `OpGraph::ops`.
     pub id: usize,
+    /// Human-readable label (drives the Gantt renderer).
     pub label: String,
+    /// Which stream executes the op.
     pub kind: OpKind,
     /// Uncontended duration in seconds.
     pub duration_s: f64,
@@ -41,10 +45,12 @@ pub struct Op {
 /// A complete schedule lowered from one prefill (sched::*).
 #[derive(Clone, Debug, Default)]
 pub struct OpGraph {
+    /// Ops in insertion (id) order.
     pub ops: Vec<Op>,
 }
 
 impl OpGraph {
+    /// An empty graph.
     pub fn new() -> Self {
         Self::default()
     }
@@ -67,6 +73,7 @@ impl OpGraph {
         id
     }
 
+    /// Sum of uncontended durations on one stream.
     pub fn total_work(&self, kind: OpKind) -> f64 {
         self.ops.iter().filter(|o| o.kind == kind).map(|o| o.duration_s).sum()
     }
@@ -75,11 +82,17 @@ impl OpGraph {
 /// One executed span on a stream.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Span {
+    /// The executed op's id.
     pub op_id: usize,
+    /// The op's label.
     pub label: String,
+    /// Stream the span ran on.
     pub kind: OpKind,
+    /// The op's micro-batch / chunk tag.
     pub chunk: usize,
+    /// Start time (seconds).
     pub start_s: f64,
+    /// End time (seconds).
     pub end_s: f64,
     /// True if this compute span paid the SM-contention tax.
     pub contended: bool,
@@ -88,7 +101,9 @@ pub struct Span {
 /// Simulation result.
 #[derive(Clone, Debug, Default)]
 pub struct Timeline {
+    /// Executed spans, in completion order.
     pub spans: Vec<Span>,
+    /// Wall time of the whole schedule (seconds).
     pub makespan_s: f64,
 }
 

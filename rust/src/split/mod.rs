@@ -18,11 +18,14 @@ use crate::model::ModelSpec;
 /// fallback when no profile is supplied).
 #[derive(Clone, Debug)]
 pub struct SplitContext {
+    /// Calibrated node profile.
     pub node: NodeProfile,
+    /// Model geometry being served.
     pub model: ModelSpec,
 }
 
 impl SplitContext {
+    /// A context from explicit parts.
     pub fn new(node: NodeProfile, model: ModelSpec) -> Self {
         SplitContext { node, model }
     }
@@ -47,10 +50,12 @@ pub struct Split {
     pub t1: usize,
     /// Tokens in the MLP micro-batches (== t0/t1 unless AdaptiveAttnMlp).
     pub mlp_t0: usize,
+    /// Tokens in MLP micro-batch 1.
     pub mlp_t1: usize,
 }
 
 impl Split {
+    /// Total tokens across both chunks.
     pub fn total(&self) -> usize {
         self.t0 + self.t1
     }

@@ -8,10 +8,15 @@ use std::time::Instant;
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case label.
     pub name: String,
+    /// Timed iterations.
     pub samples: usize,
+    /// Mean wall time (ms).
     pub mean_ms: f64,
+    /// Median wall time (ms).
     pub p50_ms: f64,
+    /// 95th-percentile wall time (ms).
     pub p95_ms: f64,
 }
 

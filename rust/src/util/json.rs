@@ -7,19 +7,27 @@ use std::fmt;
 /// A JSON value. `Object` uses a BTreeMap so output is deterministic.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys → deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert `key = val` (panics on non-objects); chainable.
     pub fn set(&mut self, key: &str, val: impl Into<Json>) -> &mut Self {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), val.into());
@@ -29,6 +37,7 @@ impl Json {
         self
     }
 
+    /// Object field lookup.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -45,6 +54,7 @@ impl Json {
         Some(cur)
     }
 
+    /// This value as a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -52,10 +62,12 @@ impl Json {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// This value as a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -63,6 +75,7 @@ impl Json {
         }
     }
 
+    /// This value as an array slice.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),

@@ -6,16 +6,19 @@
 
 use super::rng::Rng;
 
+/// A property-test run: a seed and a case count.
 pub struct Prop {
     seed: u64,
     cases: usize,
 }
 
 impl Prop {
+    /// A 256-case property run derived from `seed`.
     pub fn new(seed: u64) -> Self {
         Prop { seed, cases: 256 }
     }
 
+    /// Override the number of cases.
     pub fn cases(mut self, n: usize) -> Self {
         self.cases = n;
         self

@@ -13,6 +13,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A generator seeded with `seed` (every seed is valid).
     pub fn new(seed: u64) -> Self {
         Rng { state: seed }
     }

@@ -11,6 +11,7 @@ use crate::util::Rng;
 /// One inference request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
+    /// Request id (unique within a trace).
     pub id: u64,
     /// Arrival time in seconds from trace start.
     pub arrival_s: f64,
@@ -32,6 +33,7 @@ pub enum LenDist {
 }
 
 impl LenDist {
+    /// Draw one prompt length.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         match *self {
             LenDist::Fixed(n) => n,
@@ -53,24 +55,31 @@ impl LenDist {
 /// Trace generator.
 #[derive(Clone, Debug)]
 pub struct TraceGen {
+    /// Deterministic source of lengths/tokens/arrivals.
     pub rng: Rng,
+    /// Vocabulary to draw prompt tokens from.
     pub vocab: usize,
+    /// Prompt-length distribution.
     pub lens: LenDist,
     /// Mean arrival rate (requests/second); 0 = all arrive at t=0.
     pub rate: f64,
+    /// Decode steps attached to every request.
     pub decode_steps: usize,
 }
 
 impl TraceGen {
+    /// A generator over `vocab` with the given length distribution.
     pub fn new(seed: u64, vocab: usize, lens: LenDist) -> Self {
         TraceGen { rng: Rng::new(seed), vocab, lens, rate: 0.0, decode_steps: 0 }
     }
 
+    /// Set the Poisson arrival rate (builder style).
     pub fn rate(mut self, r: f64) -> Self {
         self.rate = r;
         self
     }
 
+    /// Set decode steps per request (builder style).
     pub fn decode_steps(mut self, n: usize) -> Self {
         self.decode_steps = n;
         self

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo's documentation set.
+
+Checks, offline by default:
+  * inline links `[text](target)` in the checked files: relative targets
+    must exist on disk (anchors into .md targets must match a heading);
+    http(s) targets are syntax-checked (HEAD-requested only with
+    CHECK_EXTERNAL=1);
+  * `DESIGN.md §N` cross-references — in the checked files AND in rust
+    sources/benches/tests — must name a real `## §N` section of
+    DESIGN.md.
+
+Exit code 0 = clean, 1 = broken references (each printed).
+Run from the repo root: `python3 scripts/check_md_links.py`.
+"""
+
+import os
+import re
+import sys
+
+CHECKED_MD = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md"]
+RUST_DIRS = ["rust/src", "rust/benches", "rust/tests", "examples"]
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+SECTION_REF_RE = re.compile(r"DESIGN\.md\s+§§?([0-9]+(?:[-–,]\s*[0-9]+)*)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def heading_anchor(text):
+    """GitHub-style anchor slug for a heading."""
+    slug = text.strip().lower()
+    slug = re.sub(r"[^\w\s-]", "", slug, flags=re.UNICODE)
+    slug = re.sub(r"\s+", "-", slug)
+    return slug
+
+
+def design_sections(root):
+    path = os.path.join(root, "DESIGN.md")
+    if not os.path.exists(path):
+        return set()
+    text = open(path, encoding="utf-8").read()
+    return set(int(m) for m in re.findall(r"^##\s+§(\d+)\b", text, re.M))
+
+
+def expand_ref_numbers(spec):
+    """'1-8' / '4, 6' / '9' → the referenced section numbers."""
+    nums = []
+    for part in re.split(r"[,]", spec):
+        part = part.strip()
+        m = re.match(r"^(\d+)\s*[-–]\s*(\d+)$", part)
+        if m:
+            nums.extend(range(int(m.group(1)), int(m.group(2)) + 1))
+        elif part:
+            nums.append(int(part))
+    return nums
+
+
+def check_inline_links(root, md, errors):
+    path = os.path.join(root, md)
+    text = open(path, encoding="utf-8").read()
+    for lineno, line in enumerate(text.split("\n"), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://")):
+                if not re.match(r"^https?://[\w.-]+(/\S*)?$", target):
+                    errors.append(f"{md}:{lineno}: malformed URL {target!r}")
+                elif os.environ.get("CHECK_EXTERNAL") == "1":
+                    import urllib.request
+
+                    req = urllib.request.Request(target, method="HEAD")
+                    try:
+                        urllib.request.urlopen(req, timeout=10)
+                    except Exception as e:  # noqa: BLE001 - report, don't crash
+                        errors.append(f"{md}:{lineno}: unreachable {target} ({e})")
+                continue
+            if target.startswith("mailto:"):
+                continue
+            rel, _, anchor = target.partition("#")
+            if rel:
+                dest = os.path.normpath(os.path.join(root, os.path.dirname(md), rel))
+                if not os.path.exists(dest):
+                    errors.append(f"{md}:{lineno}: missing file {rel!r}")
+                    continue
+            else:
+                dest = path
+            if anchor and dest.endswith(".md"):
+                headings = HEADING_RE.findall(open(dest, encoding="utf-8").read())
+                anchors = {heading_anchor(h) for h in headings}
+                if anchor not in anchors:
+                    errors.append(f"{md}:{lineno}: missing anchor #{anchor} in {rel or md}")
+
+
+def check_section_refs(root, sections, errors):
+    files = [os.path.join(root, md) for md in CHECKED_MD if os.path.exists(os.path.join(root, md))]
+    for d in RUST_DIRS:
+        full = os.path.join(root, d)
+        for dirpath, _, names in os.walk(full):
+            for n in names:
+                if n.endswith(".rs"):
+                    files.append(os.path.join(dirpath, n))
+    for f in files:
+        text = open(f, encoding="utf-8").read()
+        rel = os.path.relpath(f, root)
+        for lineno, line in enumerate(text.split("\n"), 1):
+            for spec in SECTION_REF_RE.findall(line):
+                for n in expand_ref_numbers(spec):
+                    if n not in sections:
+                        errors.append(
+                            f"{rel}:{lineno}: DESIGN.md §{n} does not exist "
+                            f"(have §{{{', '.join(map(str, sorted(sections)))}}})"
+                        )
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    errors = []
+    sections = design_sections(root)
+    if not sections:
+        errors.append("DESIGN.md has no `## §N` sections (or is missing)")
+    for md in CHECKED_MD:
+        if not os.path.exists(os.path.join(root, md)):
+            errors.append(f"checked file missing: {md}")
+            continue
+        check_inline_links(root, md, errors)
+    check_section_refs(root, sections, errors)
+    if errors:
+        print(f"FAIL: {len(errors)} broken reference(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"OK: {', '.join(CHECKED_MD)} + rust sources "
+          f"(DESIGN.md sections: §{min(sections)}–§{max(sections)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
