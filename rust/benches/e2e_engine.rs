@@ -5,9 +5,11 @@
 //! benchmark the §Perf pass optimizes.
 //!
 //! Appends machine-readable sections to `BENCH_PR1.json` (override with
-//! `ISO_PERF_SNAPSHOT`) and `BENCH_PR2.json` (`ISO_PERF_SNAPSHOT_PR2`):
-//! each engine sweep is recorded next to the simulator's prediction, so
-//! the sim-vs-engine trend direction is recorded per PR.
+//! `ISO_PERF_SNAPSHOT`), `BENCH_PR2.json` (`ISO_PERF_SNAPSHOT_PR2`), and
+//! `BENCH_PR4.json` (`ISO_PERF_SNAPSHOT_PR4`, the PP×TP sweep CI gates
+//! against `BENCH_BASELINE.json`): each engine sweep is recorded next to
+//! the simulator's prediction, so the sim-vs-engine trend direction is
+//! recorded per PR.
 //!
 //! Requires `make artifacts` for the engine sections; the simulator
 //! sections always run.
@@ -18,7 +20,10 @@ use iso::hw::NodeProfile;
 use iso::model::ModelSpec;
 use iso::report::{append_perf_records, PerfRecord};
 use iso::runtime::Manifest;
-use iso::sched::{mixed_iteration_s, Coster, MixedIteration};
+use iso::sched::{
+    mixed_iteration_s, pp_best_config, pp_bubble_fraction, pp_iteration_s, Coster,
+    MixedIteration,
+};
 use iso::util::bench::{bench, section};
 use iso::workload::{LenDist, TraceGen};
 
@@ -40,6 +45,156 @@ fn snapshot_path() -> String {
 
 fn pr2_snapshot_path() -> String {
     std::env::var("ISO_PERF_SNAPSHOT_PR2").unwrap_or_else(|_| "../BENCH_PR2.json".into())
+}
+
+fn pr4_snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT_PR4").unwrap_or_else(|_| "../BENCH_PR4.json".into())
+}
+
+/// The PP×TP factorizations of a 4-device node that the deterministic
+/// (CI-gated) simulator sweep exercises.
+const PP_CONFIGS: [(usize, usize); 3] = [(1, 4), (2, 2), (4, 1)];
+
+/// The engine sweep's candidate set: the 4-device factorizations plus
+/// the cheaper 2-device ones, so the measured sweep also covers the
+/// small-world regime. The predicted-vs-measured comparison runs over
+/// exactly this list.
+const ENGINE_PP_CONFIGS: [(usize, usize); 5] = [(1, 2), (2, 1), (1, 4), (2, 2), (4, 1)];
+
+/// Simulator side of the PR-4 sweep (no artifacts needed, fully
+/// deterministic — this section is what `scripts/check_bench_regression.py`
+/// gates against `BENCH_BASELINE.json` in CI): predicted prefill time of
+/// a 4096-token prompt in 4 micro-batch chunks on a modeled 4-card 4090
+/// node, factored as 1×4 / 2×2 / 4×1 (pp × tp). Deeper pipelines shrink
+/// every all-reduce ring but pay fill/drain bubbles and p2p hops — the
+/// recorded `pred_prefill_tok_s` / `pred_exposed_ms_per_tok` directions
+/// are the ones the engine sweep below must reproduce.
+fn sim_pp_sweep(path: &str) {
+    let node = NodeProfile::rtx4090(4);
+    let model = ModelSpec::mha_30b();
+    let (prompt, chunks) = (4096usize, 4usize);
+    let p2p = node.link;
+    section("simulator: PP×TP factorization of a 4-card 4090 (30b, t=4096, 4 chunks)");
+    let mut records = Vec::new();
+    for (pp, tp) in PP_CONFIGS {
+        let s = pp_iteration_s(&node, &model, prompt, chunks, pp, tp, &p2p, true);
+        // Blocking model: every ring all-reduce is exposed; per-token
+        // exposure falls as the per-stage ring shrinks.
+        let t = prompt / chunks;
+        let wire = (t * model.d_model * model.act_bytes) as f64 * iso::hw::INT8_WIRE_FACTOR;
+        let ar_layer = 2.0 * node.link.ring_allreduce_s(wire, tp);
+        let exposed_ms_per_tok = model.n_layers as f64 * ar_layer / t as f64 * 1e3;
+        let pred_ms = s * 1e3;
+        println!(
+            "  pp{pp}×tp{tp}: {pred_ms:9.2}ms  {:8.0} tok/s  exposed {:.4}ms/tok  bubble {:.2}",
+            prompt as f64 / s,
+            exposed_ms_per_tok,
+            pp_bubble_fraction(pp, chunks)
+        );
+        records.push(
+            PerfRecord::new(&format!("sim pp{pp} tp{tp}"), pred_ms, pred_ms, pred_ms)
+                .with("pp", pp as f64)
+                .with("tp", tp as f64)
+                .with("pred_prefill_tok_s", prompt as f64 / s)
+                .with("pred_exposed_ms_per_tok", exposed_ms_per_tok)
+                .with("bubble_frac", pp_bubble_fraction(pp, chunks)),
+        );
+    }
+    let best = pp_best_config(&node, &model, prompt, chunks, &PP_CONFIGS, &p2p, true);
+    println!("  → predicted fastest factorization: pp{}×tp{}", best.0, best.1);
+    if let Err(e) = append_perf_records(path, "sim_pp", &records) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
+/// Engine side of the PR-4 sweep: measured prefill across PP×TP
+/// factorizations on the throttled link, recorded next to the cost
+/// model's predicted fastest config so the sweep direction is pinned per
+/// PR (EXPERIMENTS.md).
+fn engine_pp_sweep(path: &str) -> anyhow::Result<()> {
+    let prompt: Vec<i32> = (0..128).map(|i| ((i * 31) % 512) as i32).collect();
+    section("engine: prefill PP×TP sweep (tiny model, pcie-emu 40 MB/s, α=5µs)");
+    let mut records = Vec::new();
+    let mut measured_best: Option<(f64, (usize, usize))> = None;
+    for (pp, tp) in ENGINE_PP_CONFIGS {
+        let mut c = cfg(Strategy::Iso, tp, CommQuant::F32, Some(40.0));
+        c.link_alpha_us = 5.0;
+        c.pp_stages = pp;
+        let mut engine = Engine::start(c)?;
+        engine.prefill(&prompt)?; // warmup
+        let r = bench(&format!("pp{pp}×tp{tp} iso pcie-emu"), 1, 6, || {
+            engine.prefill(&prompt).unwrap();
+        });
+        let report = engine.shutdown()?;
+        let m = report.metrics;
+        let tok_s = 128.0 / (r.mean_ms / 1e3);
+        println!(
+            "    {tok_s:7.0} tok/s  exposed {:.4}ms/tok  p2p {}B in {} msgs",
+            m.exposed_ms_per_token(),
+            m.p2p_bytes,
+            m.p2p_msgs
+        );
+        records.push(
+            PerfRecord::new(&format!("engine pp{pp} tp{tp}"), r.mean_ms, r.p50_ms, r.p95_ms)
+                .with("pp", pp as f64)
+                .with("tp", tp as f64)
+                .with("prefill_tok_s", tok_s)
+                .with("exposed_ms_per_tok", m.exposed_ms_per_token())
+                .with("p2p_bytes", m.p2p_bytes as f64),
+        );
+        let improved = match measured_best {
+            None => true,
+            Some((best_ms, _)) => r.mean_ms < best_ms,
+        };
+        if improved {
+            measured_best = Some((r.mean_ms, (pp, tp)));
+        }
+    }
+    // Predicted direction from the engine's own calibrated profile, the
+    // exact layer-to-stage assignment, the chunk plan each config
+    // actually runs (`plan_prefill_pp` with that config's micro-batch
+    // depth), and ISO's pair-granular forwarding: the engine wavefronts
+    // chunk *pairs* between stages (DESIGN.md §11), so the model's
+    // micro-batch count is ceil(chunks / 2).
+    let node = NodeProfile::cpu_engine(1, Some(40.0), 5.0);
+    let model = ModelSpec::tiny_gqa();
+    let p2p = node.link;
+    let predict = |pp: usize, tp: usize| {
+        // The engine's own depth rule: an ISO pipeline asks for two
+        // chunks per stage (pairs are the wavefront unit).
+        let depth = if pp > 1 { 2 * pp } else { 1 };
+        let chunks = iso::batch::plan_prefill_pp(
+            0,
+            128,
+            Strategy::Iso,
+            SplitPolicy::Even,
+            &[16, 32, 64],
+            None,
+            depth,
+        )
+        .len();
+        let units = chunks.div_ceil(2).max(1);
+        pp_iteration_s(&node, &model, 128, units, pp, tp, &p2p, false)
+    };
+    let pred = *ENGINE_PP_CONFIGS
+        .iter()
+        .min_by(|a, b| predict(a.0, a.1).partial_cmp(&predict(b.0, b.1)).unwrap())
+        .unwrap();
+    let meas = measured_best.unwrap().1;
+    println!(
+        "  → predicted fastest pp{}×tp{}, measured fastest pp{}×tp{}{}",
+        pred.0,
+        pred.1,
+        meas.0,
+        meas.1,
+        if pred == meas { " (directions agree)" } else { " (DIVERGED — investigate)" }
+    );
+    if let Err(e) = append_perf_records(path, "e2e_engine_pp", &records) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("  wrote PP×TP sweep to {path}");
+    }
+    Ok(())
 }
 
 /// Simulator side of the PR-2 sweep: per-token mixed-iteration time vs
@@ -159,10 +314,15 @@ fn sim_exposed_ar_s(c: &Coster, t: usize, segments: usize) -> f64 {
 fn main() -> anyhow::Result<()> {
     let path = snapshot_path();
     let pr2_path = pr2_snapshot_path();
+    let pr4_path = pr4_snapshot_path();
 
     // --- PR-2: simulator-predicted mixed-batching direction (no
     // artifacts needed).
     sim_mixed_sweep(&pr2_path);
+
+    // --- PR-4: simulator-predicted PP×TP factorization direction (no
+    // artifacts needed; gated against BENCH_BASELINE.json in CI).
+    sim_pp_sweep(&pr4_path);
 
     // --- simulator side of the segment sweep (no artifacts needed).
     let sim_exp = SimExperiment::new(
@@ -275,6 +435,9 @@ fn main() -> anyhow::Result<()> {
     // --- PR-2 tentpole: mixed-batching sweep (decode-batch width ×
     // prefill:decode mix), sequential loop as baseline.
     engine_mixed_sweep(&pr2_path)?;
+
+    // --- PR-4 tentpole: PP×TP factorization sweep on the real engine.
+    engine_pp_sweep(&pr4_path)?;
 
     Ok(())
 }

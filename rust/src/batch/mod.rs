@@ -108,10 +108,50 @@ pub fn plan_prefill(
     chunk_sizes: &[usize],
     ctx: Option<&SplitContext>,
 ) -> Vec<ChunkJob> {
+    plan_prefill_pp(seq, prompt_len, strategy, split, chunk_sizes, ctx, 1)
+}
+
+/// [`plan_prefill`] with the chunk count coupled to the pipeline's
+/// micro-batch depth (DESIGN.md §11): the chunk set is the unit that
+/// fills pipeline bubbles, so a `pp_stages`-deep engine wants at least
+/// `min_chunks` chunks in flight. When the default (largest-tile-first)
+/// tiling yields fewer, the planner drops the largest compiled sizes and
+/// re-tiles finer until the plan reaches `min_chunks` chunks or bottoms
+/// out at the smallest compiled tile. Token totals, lane contiguity, and
+/// the single `last` marker are preserved in every branch (same tiling
+/// code, restricted size set).
+pub fn plan_prefill_pp(
+    seq: u64,
+    prompt_len: usize,
+    strategy: Strategy,
+    split: SplitPolicy,
+    chunk_sizes: &[usize],
+    ctx: Option<&SplitContext>,
+    min_chunks: usize,
+) -> Vec<ChunkJob> {
     assert!(!chunk_sizes.is_empty());
     let mut sizes: Vec<usize> = chunk_sizes.to_vec();
     sizes.sort_unstable();
+    let min_chunks = min_chunks.max(1);
+    loop {
+        let jobs = plan_prefill_sized(seq, prompt_len, strategy, split, &sizes, ctx);
+        if jobs.len() >= min_chunks || sizes.len() == 1 {
+            return jobs;
+        }
+        sizes.pop(); // drop the largest tile, re-tile finer
+    }
+}
 
+/// The tiling body shared by [`plan_prefill`]/[`plan_prefill_pp`];
+/// `sizes` must be sorted ascending.
+fn plan_prefill_sized(
+    seq: u64,
+    prompt_len: usize,
+    strategy: Strategy,
+    split: SplitPolicy,
+    sizes: &[usize],
+    ctx: Option<&SplitContext>,
+) -> Vec<ChunkJob> {
     // Prompts shorter than two tiles cannot form two lanes — the old
     // rounding would clamp into an inverted range and panic. Serial
     // single-lane fallback (one lane ⇒ nothing to overlap anyway).
@@ -135,16 +175,16 @@ pub fn plan_prefill(
                     None => (prompt_len as f64 * 0.55).round() as usize,
                 },
             };
-            let t0 = round_to_tiles(t0.clamp(1, prompt_len - 1), &sizes, prompt_len);
-            let mut jobs = tile(seq, 0, t0, 0, &sizes);
-            jobs.extend(tile(seq, t0, prompt_len - t0, 1, &sizes));
+            let t0 = round_to_tiles(t0.clamp(1, prompt_len - 1), sizes, prompt_len);
+            let mut jobs = tile(seq, 0, t0, 0, sizes);
+            jobs.extend(tile(seq, t0, prompt_len - t0, 1, sizes));
             if let Some(j) = jobs.last_mut() {
                 j.last = true;
             }
             jobs
         }
         _ => {
-            let mut jobs = tile(seq, 0, prompt_len, 0, &sizes);
+            let mut jobs = tile(seq, 0, prompt_len, 0, sizes);
             if let Some(j) = jobs.last_mut() {
                 j.last = true;
             }
@@ -379,6 +419,9 @@ pub struct MixedPlanner {
     pub decode_batch: usize,
     /// KV capacity per sequence; lanes retire at this offset.
     pub max_seq: usize,
+    /// Minimum prefill chunks per plan (pipeline micro-batch depth,
+    /// DESIGN.md §11); 1 = the single-stage default.
+    pub min_chunks: usize,
     cursor: usize,
 }
 
@@ -393,7 +436,24 @@ impl MixedPlanner {
     ) -> Self {
         assert!(decode_batch >= 1, "decode_batch must be >= 1");
         assert!(!chunk_sizes.is_empty());
-        MixedPlanner { strategy, split, chunk_sizes, decode_batch, max_seq, cursor: 0 }
+        MixedPlanner {
+            strategy,
+            split,
+            chunk_sizes,
+            decode_batch,
+            max_seq,
+            min_chunks: 1,
+            cursor: 0,
+        }
+    }
+
+    /// Couple the chunk count to the pipeline's micro-batch depth
+    /// (builder style): prefill plans will carry at least `min_chunks`
+    /// chunks when the prompt allows, so a `pp_stages`-deep engine keeps
+    /// every stage fed (DESIGN.md §11).
+    pub fn with_min_chunks(mut self, min_chunks: usize) -> Self {
+        self.min_chunks = min_chunks.max(1);
+        self
     }
 
     /// Compose the next iteration from the live set.
@@ -418,13 +478,14 @@ impl MixedPlanner {
         let prefill = live.iter().find(|s| !s.prefilled).map(|s| PrefillPlan {
             slot: s.slot,
             prompt_len: s.prompt_len,
-            chunks: plan_prefill(
+            chunks: plan_prefill_pp(
                 s.slot as u64,
                 s.prompt_len,
                 self.strategy,
                 self.split,
                 &self.chunk_sizes,
                 ctx,
+                self.min_chunks,
             ),
         });
         let eligible: Vec<&LaneSeq> =
@@ -752,6 +813,72 @@ mod tests {
             let pb = b.plan_spec(&live, None, 0, &mut |_, _| vec![1, 2, 3]);
             assert_eq!(pa.decode, pb.decode, "k=0 must match the plain lane");
             assert!(pb.spec.is_empty());
+        }
+    }
+
+    #[test]
+    fn plan_prefill_pp_meets_micro_batch_depth() {
+        // Satellite (PR 4): with pp stages the chunk set is the pipeline
+        // micro-batch unit, so the planner re-tiles finer until at least
+        // `min_chunks` chunks are in flight (or the smallest tile caps it).
+        for strategy in [Strategy::Iso, Strategy::Serial] {
+            let one =
+                plan_prefill_pp(1, 128, strategy, SplitPolicy::Even, SIZES, None, 1);
+            for min_chunks in [2usize, 3, 4, 6] {
+                let jobs = plan_prefill_pp(
+                    1,
+                    128,
+                    strategy,
+                    SplitPolicy::Even,
+                    SIZES,
+                    None,
+                    min_chunks,
+                );
+                assert!(
+                    jobs.len() >= min_chunks.min(128 / 16),
+                    "{strategy:?} min_chunks={min_chunks}: got {} chunks",
+                    jobs.len()
+                );
+                assert!(jobs.len() >= one.len(), "finer tiling cannot shrink the plan");
+                // All invariants of the base planner hold.
+                assert_eq!(jobs.iter().map(|j| j.len).sum::<usize>(), 128);
+                assert_eq!(jobs.iter().filter(|j| j.last).count(), 1);
+                let mut pos = 0;
+                for lane in [0usize, 1] {
+                    for j in jobs.iter().filter(|j| j.lane == lane) {
+                        assert_eq!(j.offset, pos, "{strategy:?} lane{lane} gap");
+                        pos += j.len;
+                    }
+                }
+            }
+        }
+        // Depth beyond what the smallest tile allows caps gracefully.
+        let jobs =
+            plan_prefill_pp(1, 32, Strategy::Iso, SplitPolicy::Even, SIZES, None, 99);
+        assert_eq!(jobs.len(), 2); // 32 tokens / 16-token smallest tile
+        assert_eq!(jobs.iter().map(|j| j.len).sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn planner_min_chunks_threads_into_plans() {
+        let mut p = MixedPlanner::new(Strategy::Iso, SplitPolicy::Even, SIZES.to_vec(), 8, 256)
+            .with_min_chunks(4);
+        assert_eq!(p.min_chunks, 4);
+        let live = vec![lane_seq_unprefilled(0, 128)];
+        let plan = p.plan(&live, None);
+        let pf = plan.prefill.expect("prefill planned");
+        assert!(pf.chunks.len() >= 4, "pipeline depth ignored: {}", pf.chunks.len());
+        assert_eq!(pf.chunks.iter().map(|c| c.len).sum::<usize>(), 128);
+    }
+
+    fn lane_seq_unprefilled(slot: usize, prompt_len: usize) -> LaneSeq {
+        LaneSeq {
+            slot,
+            prompt_len,
+            prefilled: false,
+            last_token: 0,
+            offset: 0,
+            decode_left: 4,
         }
     }
 

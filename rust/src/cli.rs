@@ -80,7 +80,11 @@ USAGE:
 
 COMMANDS:
   serve       run the real engine on a synthetic trace
-              --tp N --strategy iso|serial --requests N --prompt-len N
+              --tp N (tensor-parallel width per stage)
+              --pp-stages N (pipeline stages; layers split contiguously,
+                stages chained by bit-exact p2p activation handoffs;
+                ISO chunks double as pipeline micro-batches)
+              --strategy iso|serial --requests N --prompt-len N
               --decode N --comm-quant f32|int8 --split even|ratio:X|balanced
               --rate R (req/s Poisson arrivals → continuous batching)
               --decode-batch N (fused decode lane width per iteration)

@@ -469,6 +469,143 @@ impl RingHandle {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Pipeline-stage point-to-point transport (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// One inter-stage activation message: a `rows × cols` f32 tensor moved
+/// verbatim (no quantization — stage handoffs are **bit-exact** by
+/// construction; see DESIGN.md §11).
+struct P2pPacket {
+    /// Modeled arrival deadline under [`Throttle`] (None = memory speed).
+    arrive_at: Option<Instant>,
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+/// A rank's endpoint on the inter-stage activation chain (DESIGN.md §11).
+///
+/// Pipeline parallelism connects stage `s`'s TP rank `r` to stage
+/// `s + 1`'s rank `r`: after a stage's final MLP all-reduce every TP rank
+/// holds the identical (replicated) activation, so each rank forwards its
+/// own copy to its same-index peer downstream — rank-ordered and
+/// **bit-exact** (f32 moved verbatim, no re-reduction, no quantization).
+///
+/// Transfers are zero-copy: [`StagePort::send_next`] moves the
+/// activation's own buffer onto the wire and the receiver adopts it as
+/// the chunk's live activation tensor, so the p2p path allocates nothing
+/// beyond what compute already produced (this supersedes the ring's
+/// [`BufferPool`] recycling — there is no copy to pool). The link uses
+/// the same asynchronous-DMA [`Throttle`] model as the ring: the sender
+/// stamps an arrival deadline and returns; the receiver sleeps it out, so
+/// upstream compute genuinely overlaps the inter-stage wire time.
+pub struct StagePort {
+    /// This port's stage index.
+    pub stage: usize,
+    /// Total pipeline stages.
+    pub stages: usize,
+    tx_next: Option<Sender<P2pPacket>>,
+    rx_prev: Option<Receiver<P2pPacket>>,
+    /// Optional emulated link speed (same model as the ring's).
+    pub throttle: Option<Throttle>,
+    /// When this port's outgoing link frees up (throttled mode).
+    link_busy: Option<Instant>,
+    /// Activation bytes this port has sent downstream.
+    pub sent_bytes: u64,
+    /// Activation messages this port has sent downstream.
+    pub sent_msgs: u64,
+}
+
+impl StagePort {
+    /// A port with no neighbors (the `pp_stages = 1` degenerate chain).
+    pub fn solo() -> StagePort {
+        StagePort {
+            stage: 0,
+            stages: 1,
+            tx_next: None,
+            rx_prev: None,
+            throttle: None,
+            link_busy: None,
+            sent_bytes: 0,
+            sent_msgs: 0,
+        }
+    }
+
+    /// Whether an upstream stage feeds this port.
+    pub fn has_prev(&self) -> bool {
+        self.rx_prev.is_some()
+    }
+
+    /// Whether a downstream stage consumes this port's sends.
+    pub fn has_next(&self) -> bool {
+        self.tx_next.is_some()
+    }
+
+    /// Send a `rows × cols` activation to the next stage, transferring
+    /// ownership of the buffer (zero-copy, bit-exact). Never blocks: the
+    /// arrival deadline is stamped and the transfer "flies" while this
+    /// rank computes its next chunk.
+    pub fn send_next(&mut self, data: Vec<f32>, rows: usize, cols: usize) {
+        assert_eq!(data.len(), rows * cols, "stage send shape mismatch");
+        let tx = self.tx_next.as_ref().expect("send_next on the last stage");
+        let nbytes = data.len() * 4;
+        self.sent_bytes += nbytes as u64;
+        self.sent_msgs += 1;
+        let arrive_at = match self.throttle {
+            Some(t) => {
+                let now = Instant::now();
+                let start = match self.link_busy {
+                    Some(busy) if busy > now => busy,
+                    _ => now,
+                };
+                let arrive = start + Duration::from_secs_f64(t.wire_s(nbytes));
+                self.link_busy = Some(arrive);
+                Some(arrive)
+            }
+            None => None,
+        };
+        tx.send(P2pPacket { arrive_at, rows, cols, data }).expect("stage peer hung up");
+    }
+
+    /// Blocking receive of the next upstream activation, in sender order
+    /// (the chain is a FIFO channel). Sleeps until the modeled arrival
+    /// deadline, then hands the buffer over verbatim.
+    pub fn recv_prev(&mut self) -> (usize, usize, Vec<f32>) {
+        let rx = self.rx_prev.as_ref().expect("recv_prev on stage 0");
+        let pkt = rx.recv().expect("stage peer hung up");
+        if let Some(at) = pkt.arrive_at {
+            let now = Instant::now();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+        }
+        (pkt.rows, pkt.cols, pkt.data)
+    }
+}
+
+/// Build the stage-to-stage chains of a `stages × tp` grid: the returned
+/// ports are indexed `[stage][tp_rank]`, with stage `s` rank `r` wired to
+/// stage `s + 1` rank `r`. A 1-stage grid has no channels at all.
+pub fn stage_grid(stages: usize, tp: usize) -> Vec<Vec<StagePort>> {
+    assert!(stages >= 1 && tp >= 1);
+    let mut grid: Vec<Vec<StagePort>> = (0..stages)
+        .map(|s| {
+            (0..tp)
+                .map(|_| StagePort { stage: s, stages, ..StagePort::solo() })
+                .collect()
+        })
+        .collect();
+    for s in 0..stages.saturating_sub(1) {
+        for r in 0..tp {
+            let (tx, rx) = channel();
+            grid[s][r].tx_next = Some(tx);
+            grid[s + 1][r].rx_prev = Some(rx);
+        }
+    }
+    grid
+}
+
 /// Convenience: run `f(rank, handle)` on `n` scoped threads over a fresh
 /// ring and return the per-rank results in rank order.
 pub fn run_on_ring<T: Send>(
@@ -877,6 +1014,106 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn stage_grid_wires_a_linear_chain() {
+        let grid = stage_grid(3, 2);
+        assert_eq!(grid.len(), 3);
+        for (s, row) in grid.iter().enumerate() {
+            assert_eq!(row.len(), 2);
+            for p in row {
+                assert_eq!((p.stage, p.stages), (s, 3));
+                assert_eq!(p.has_prev(), s > 0);
+                assert_eq!(p.has_next(), s < 2);
+            }
+        }
+        let solo = stage_grid(1, 4);
+        assert!(solo[0].iter().all(|p| !p.has_prev() && !p.has_next()));
+    }
+
+    #[test]
+    fn stage_port_transfers_bit_exact_in_order() {
+        // Two tensors sent down a 2-stage chain arrive FIFO and bitwise
+        // identical — the DESIGN.md §11 handoff invariant.
+        let mut grid = stage_grid(2, 1);
+        let mut tail = grid.pop().unwrap().pop().unwrap();
+        let mut head = grid.pop().unwrap().pop().unwrap();
+        let mut rng = Rng::new(11);
+        let a = rng.normal_vec(6 * 5, 3.0);
+        let b = rng.normal_vec(2 * 5, 3.0);
+        head.send_next(a.clone(), 6, 5);
+        head.send_next(b.clone(), 2, 5);
+        let (r0, c0, got_a) = tail.recv_prev();
+        let (r1, c1, got_b) = tail.recv_prev();
+        assert_eq!((r0, c0), (6, 5));
+        assert_eq!((r1, c1), (2, 5));
+        assert_eq!(got_a, a, "first tensor corrupted in flight");
+        assert_eq!(got_b, b, "second tensor corrupted in flight");
+        assert_eq!(head.sent_msgs, 2);
+        assert_eq!(head.sent_bytes, ((6 * 5 + 2 * 5) * 4) as u64);
+    }
+
+    #[test]
+    fn prop_stage_chain_round_trips_bit_exactly() {
+        // Satellite (PR 4): arbitrary activation tensors forwarded hop by
+        // hop through an arbitrary-depth stage chain come out bit-exact.
+        Prop::new(83).cases(60).run("stage chain bit-exact", |rng| {
+            let stages = rng.range(2, 5);
+            let rows = rng.range(1, 20);
+            let cols = rng.range(1, 20);
+            let data = rng.normal_vec(rows * cols, 2.0);
+            let grid = stage_grid(stages, 1);
+            let mut ports: Vec<StagePort> =
+                grid.into_iter().map(|mut row| row.pop().unwrap()).collect();
+            let sent = data.clone();
+            let out = std::thread::scope(|scope| {
+                let mut joins = Vec::new();
+                for (s, p) in ports.iter_mut().enumerate() {
+                    let sent = &sent;
+                    joins.push(scope.spawn(move || {
+                        if s == 0 {
+                            p.send_next(sent.clone(), rows, cols);
+                            None
+                        } else {
+                            let (r, c, d) = p.recv_prev();
+                            assert_eq!((r, c), (rows, cols));
+                            if p.has_next() {
+                                p.send_next(d, r, c);
+                                None
+                            } else {
+                                Some(d)
+                            }
+                        }
+                    }));
+                }
+                joins.into_iter().filter_map(|j| j.join().unwrap()).next()
+            });
+            match out {
+                Some(d) if d == sent => Ok(()),
+                Some(_) => Err(format!("stages={stages}: bits changed in flight")),
+                None => Err("chain produced no output".into()),
+            }
+        });
+    }
+
+    #[test]
+    fn stage_port_throttle_delays_arrival() {
+        // The async-DMA model: a throttled hop's payload is unavailable
+        // before its modeled deadline, but the send itself returns
+        // immediately (transfer overlaps upstream compute).
+        let mut grid = stage_grid(2, 1);
+        let mut tail = grid.pop().unwrap().pop().unwrap();
+        let mut head = grid.pop().unwrap().pop().unwrap();
+        head.throttle = Some(Throttle { alpha_s: 0.02, bytes_per_s: 1e12 });
+        let t0 = Instant::now();
+        head.send_next(vec![1.0; 64], 8, 8);
+        let send_elapsed = t0.elapsed();
+        let (_, _, d) = tail.recv_prev();
+        let recv_elapsed = t0.elapsed();
+        assert!(send_elapsed < Duration::from_millis(15), "send must not block");
+        assert!(recv_elapsed >= Duration::from_millis(15), "arrival beat the deadline");
+        assert_eq!(d, vec![1.0; 64]);
     }
 
     #[test]

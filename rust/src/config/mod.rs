@@ -138,8 +138,17 @@ pub struct EngineConfig {
     /// the ring overlap transfer with reduction and ack partial results
     /// early, at the cost of more per-message latency (α).
     pub comm_segments: usize,
-    /// Tensor-parallel degree for the real CPU engine.
+    /// Tensor-parallel degree for the real CPU engine. With pipeline
+    /// stages this is the TP width *per stage*; the engine spawns
+    /// `pp_stages × tp` worker pairs in total.
     pub tp: usize,
+    /// Pipeline-parallel stage count (DESIGN.md §11). `1` = the classic
+    /// single-stage TP engine. With `pp_stages > 1` the model's layers
+    /// are partitioned into contiguous stage groups (balanced via
+    /// `seg_range`), each stage internally tensor-parallel over its own
+    /// ring, stages connected by bit-exact point-to-point activation
+    /// handoffs; ISO's sequence chunks double as pipeline micro-batches.
+    pub pp_stages: usize,
     /// Max chunk length the engine schedules (must exist in artifacts).
     pub max_chunk: usize,
     /// Max concurrent sequences in a batch.
@@ -190,6 +199,7 @@ impl Default for EngineConfig {
             gemm_segments: DEFAULT_GEMM_SEGMENTS,
             comm_segments: 1,
             tp: 2,
+            pp_stages: 1,
             max_chunk: 64,
             max_batch: 8,
             decode_batch: 8,
@@ -311,6 +321,9 @@ impl EngineConfig {
                     cfg.comm_segments = v.parse().map_err(|_| format!("bad comm_segments {v:?}"))?
                 }
                 "engine.tp" => cfg.tp = v.parse().map_err(|_| format!("bad tp {v:?}"))?,
+                "engine.pp_stages" => {
+                    cfg.pp_stages = v.parse().map_err(|_| format!("bad pp_stages {v:?}"))?
+                }
                 "engine.max_chunk" => {
                     cfg.max_chunk = v.parse().map_err(|_| format!("bad max_chunk {v:?}"))?
                 }
@@ -356,6 +369,9 @@ impl EngineConfig {
         }
         if cfg.spec_ngram == 0 {
             return Err("spec_ngram must be >= 1".into());
+        }
+        if cfg.pp_stages == 0 {
+            return Err("pp_stages must be >= 1".into());
         }
         Ok(cfg)
     }
@@ -434,6 +450,18 @@ mod tests {
         let bad = parse_config_str("[engine]\nspec_ngram = 0").unwrap();
         assert!(EngineConfig::from_map(&bad).is_err());
         let bad = parse_config_str("[engine]\nspec_k = many").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+    }
+
+    #[test]
+    fn pp_stages_parses_and_validates() {
+        assert_eq!(EngineConfig::default().pp_stages, 1, "PP must be opt-in");
+        let map = parse_config_str("[engine]\npp_stages = 2\ntp = 2").unwrap();
+        let cfg = EngineConfig::from_map(&map).unwrap();
+        assert_eq!((cfg.pp_stages, cfg.tp), (2, 2));
+        let bad = parse_config_str("[engine]\npp_stages = 0").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+        let bad = parse_config_str("[engine]\npp_stages = two").unwrap();
         assert!(EngineConfig::from_map(&bad).is_err());
     }
 

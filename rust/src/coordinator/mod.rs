@@ -1,17 +1,29 @@
-//! The serving engine: leader + N tensor-parallel worker pairs.
+//! The serving engine: leader + a `pp_stages × tp` grid of worker pairs.
 //!
-//! Topology (one process, mirroring the paper's one-node TP deployment):
+//! Topology (one process; `pp_stages = 1` is the paper's one-node TP
+//! deployment, `pp_stages > 1` the 2D pipeline×tensor deployment of
+//! DESIGN.md §11):
 //!
 //! ```text
-//!   leader (Engine)  ──jobs──▶  rank r: COMPUTE thread (PJRT client,
-//!        ▲                         compiled stages, KV caches)
-//!        │ logits                      │ partials      ▲ reduced segments
-//!        └────────── rank 0 ◀──        ▼               │
-//!                                  rank r: COMM thread (ring all-reduce)
+//!   leader (Engine) ──jobs──▶ every rank        stage s, rank r:
+//!        ▲                                        COMPUTE thread ─┐partials
+//!        │ logits                                      ▲ p2p      ▼
+//!        └── stage P−1, rank 0 ◀──               COMM thread (stage ring)
+//!                                 stage s−1 ──────┘ activations
 //! ```
 //!
-//! Every rank executes the identical job stream; the ring synchronizes
-//! them. Each rank is a *pair* of threads — compute and communication —
+//! Every rank receives the identical job stream; each executes only its
+//! stage's contiguous layer slice ([`stage_layer_range`]) and owns only
+//! that slice's KV caches. Within a stage the TP ring synchronizes the
+//! ranks; between stages, rank `r` hands the post-all-reduce (replicated,
+//! therefore bit-exact) activation to stage `s + 1`'s rank `r` over a
+//! point-to-point [`StagePort`] — ISO's sequence chunks double as the
+//! pipeline micro-batches, so chunk *i* computes on stage *s* while chunk
+//! *i − 1*'s activation is on the inter-stage wire and chunk *i + 1*'s
+//! all-reduce drains on the stage ring. Logits come from the last stage's
+//! rank 0, which holds the leader's reply channel.
+//!
+//! Each rank is a *pair* of threads — compute and communication —
 //! the CPU analogue of a GPU's compute stream + NCCL stream. ISO's overlap
 //! is real here: while the comm thread blocks in the ring all-reduce of
 //! chunk 0's partials, the compute thread executes chunk 1's attention
@@ -63,10 +75,10 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::batch::{
-    accept_count, plan_prefill, ChunkJob, DecodeSlot, DraftProposer, LaneSeq, MixedPlanner,
+    accept_count, plan_prefill_pp, ChunkJob, DecodeSlot, DraftProposer, LaneSeq, MixedPlanner,
     NGramProposer, SpecSlot,
 };
-use crate::collective::{ring, RingHandle};
+use crate::collective::{ring, seg_range, stage_grid, RingHandle, StagePort};
 use crate::config::{CommQuant, EngineConfig, Strategy};
 use crate::kv::KvManager;
 use crate::metrics::{EngineMetrics, Timer};
@@ -140,11 +152,24 @@ struct SegAck {
     data: Vec<f32>,
 }
 
+/// Contiguous layer range `[lo, hi)` owned by pipeline stage `stage` of
+/// `pp_stages` (DESIGN.md §11): the balanced contiguous partition of
+/// `seg_range` — the first `n_layers % pp_stages` stages take one extra
+/// layer, so every stage owns at least one layer whenever
+/// `pp_stages <= n_layers`. This single function is the engine's whole
+/// layer-to-stage assignment; the cost model (`sched::pp_iteration_s`)
+/// and the benches use it too, so predictions and execution agree.
+pub fn stage_layer_range(n_layers: usize, pp_stages: usize, stage: usize) -> (usize, usize) {
+    seg_range(n_layers, pp_stages, stage)
+}
+
 /// Per-worker performance counters (returned at shutdown).
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStats {
-    /// TP rank the counters belong to.
+    /// Global rank the counters belong to (`stage × tp + tp_rank`).
     pub rank: usize,
+    /// Pipeline stage the rank belongs to (0 when `pp_stages = 1`).
+    pub stage: usize,
     /// Time spent inside compiled stages.
     pub compute_ms: f64,
     /// Time the compute thread spent blocked waiting for reduced results
@@ -166,6 +191,13 @@ pub struct WorkerStats {
     pub fused_rows: u64,
     /// Per-segment acks exchanged between the comm and compute threads.
     pub seg_acks: u64,
+    /// Activation bytes this rank sent to the next pipeline stage.
+    pub p2p_bytes: u64,
+    /// Activation messages this rank sent to the next pipeline stage.
+    pub p2p_msgs: u64,
+    /// Time the compute thread spent blocked waiting on the previous
+    /// stage's activations — the rank's share of the pipeline bubble.
+    pub p2p_stall_ms: f64,
 }
 
 impl WorkerStats {
@@ -210,8 +242,12 @@ pub struct GenOut {
 pub struct EngineReport {
     /// Leader-side counters and histograms.
     pub metrics: EngineMetrics,
-    /// Per-rank compute/comm counters.
+    /// Per-rank compute/comm counters, in global-rank order (stage-major).
     pub workers: Vec<WorkerStats>,
+    /// Pipeline stages the engine ran with (1 = flat TP).
+    pub pp_stages: usize,
+    /// Tensor-parallel width per stage.
+    pub tp: usize,
 }
 
 /// Accounting from `Engine::serve_trace` (continuous batching).
@@ -256,10 +292,21 @@ impl TraceReport {
 
 /// Everything a rank's compute thread owns.
 struct ComputeWorker {
-    rank: usize,
+    /// Pipeline stage this rank belongs to.
+    stage: usize,
+    /// Total pipeline stages.
+    stages: usize,
+    /// This rank holds the leader's reply channel (last stage, TP rank 0)
+    /// and is therefore the one that compiles and runs the logits stage.
+    is_reply: bool,
     strategy: Strategy,
-    geo_layers: usize,
+    /// Layers owned by this stage (the stage's contiguous slice; equals
+    /// the whole model when `pp_stages = 1`). All layer indices below are
+    /// stage-local.
+    local_layers: usize,
     d_model: usize,
+    /// Point-to-point activation port to the neighboring stages.
+    port: StagePort,
     /// Row-segments per collective (config `comm_segments`).
     comm_segments: usize,
     /// B-row lane-MLP GEMM fusion (config `lane_gemm`).
@@ -306,13 +353,19 @@ impl ComputeWorker {
         rank: usize,
         cfg: &EngineConfig,
         manifest: Manifest,
+        port: StagePort,
         to_comm: Sender<CommJob>,
         from_comm: Receiver<SegAck>,
         recycle_tx: Sender<Vec<f32>>,
     ) -> Result<Self> {
         let tp = cfg.tp;
+        let stages = cfg.pp_stages;
+        let stage = rank / tp;
+        let tp_rank = rank % tp;
+        let is_reply = stage == stages - 1 && tp_rank == 0;
         let rt = WorkerRuntime::new(manifest)?;
         let geo = rt.manifest.config;
+        let (layer_lo, layer_hi) = stage_layer_range(geo.n_layers, stages, stage);
         let mut embed = BTreeMap::new();
         let mut attn = BTreeMap::new();
         let mut mlp = BTreeMap::new();
@@ -321,10 +374,14 @@ impl ComputeWorker {
             if t > cfg.max_chunk && t != 1 {
                 continue;
             }
-            embed.insert(t, rt.compile(&format!("embed_t{t}"))?);
+            if stage == 0 {
+                // Only the first stage embeds tokens; later stages adopt
+                // the previous stage's activations over the p2p port.
+                embed.insert(t, rt.compile(&format!("embed_t{t}"))?);
+            }
             attn.insert(t, rt.compile(&format!("attn_tp{tp}_t{t}"))?);
             mlp.insert(t, rt.compile(&format!("mlp_tp{tp}_t{t}"))?);
-            if rank == 0 {
+            if is_reply {
                 logits.insert(t, rt.compile(&format!("logits_t{t}"))?);
             }
         }
@@ -342,10 +399,15 @@ impl ComputeWorker {
             exe.warmup()?;
         }
 
-        let mut layer_w = Vec::with_capacity(geo.n_layers);
-        for l in 0..geo.n_layers {
+        // Per-stage weight ownership: only this stage's layer slice is
+        // loaded (the point of pipeline sharding). Weight shards are
+        // indexed by the within-stage TP rank.
+        let mut layer_w = Vec::with_capacity(layer_hi - layer_lo);
+        for l in layer_lo..layer_hi {
             let w = |n: &str| -> Result<DevTensor> {
-                DevTensor::from_tensor(&rt.load_weight(tp, &format!("layer{l}.rank{rank}.{n}"))?)
+                DevTensor::from_tensor(
+                    &rt.load_weight(tp, &format!("layer{l}.rank{tp_rank}.{n}"))?,
+                )
             };
             layer_w.push(LayerWeights {
                 ln1: w("ln1")?,
@@ -365,10 +427,13 @@ impl ComputeWorker {
         let kv_shape = vec![geo.n_kv_heads / tp, geo.max_seq, geo.head_dim];
 
         Ok(ComputeWorker {
-            rank,
+            stage,
+            stages,
+            is_reply,
             strategy: cfg.strategy,
-            geo_layers: geo.n_layers,
+            local_layers: layer_hi - layer_lo,
             d_model: geo.d_model,
+            port,
             comm_segments: cfg.comm_segments.max(1),
             lane_gemm: cfg.lane_gemm,
             embed,
@@ -385,18 +450,58 @@ impl ComputeWorker {
             from_comm,
             recycle_tx,
             scratch: Vec::new(),
-            stats: WorkerStats { rank, ..Default::default() },
+            stats: WorkerStats { rank, stage, ..Default::default() },
         })
     }
 
+    /// Per-stage KV ownership (DESIGN.md §11): a slot's caches on this
+    /// rank cover only the stage's own layer slice.
     fn ensure_slot(&mut self, slot: usize) {
         if !self.caches.contains_key(&slot) {
-            let per_layer = (0..self.geo_layers)
+            let per_layer = (0..self.local_layers)
                 .map(|_| {
                     (Tensor::zeros(self.kv_shape.clone()), Tensor::zeros(self.kv_shape.clone()))
                 })
                 .collect();
             self.caches.insert(slot, per_layer);
+        }
+    }
+
+    /// Whether this rank sits on the pipeline's last stage (the stage
+    /// that produces logits instead of forwarding activations).
+    fn is_last_stage(&self) -> bool {
+        self.stage == self.stages - 1
+    }
+
+    /// Blocking receive of the previous stage's next activation (FIFO
+    /// order matches the upstream send order). The wait is the pipeline
+    /// bubble this rank observes; it is accounted separately from
+    /// all-reduce stalls.
+    fn recv_stage(&mut self, rows: usize) -> Result<Tensor> {
+        let t = Timer::start();
+        let (r, c, data) = self.port.recv_prev();
+        self.stats.p2p_stall_ms += t.elapsed_ms();
+        if r != rows || c != self.d_model {
+            bail!("stage handoff shape mismatch: got {r}x{c}, want {rows}x{}", self.d_model);
+        }
+        Ok(Tensor { shape: vec![r, c], data })
+    }
+
+    /// Hand a finalized activation to the next stage (zero-copy, bit
+    /// exact; never blocks — the transfer overlaps this rank's next
+    /// chunk).
+    fn send_stage(&mut self, x: Tensor) {
+        let rows = x.shape[0];
+        self.port.send_next(x.data, rows, self.d_model);
+    }
+
+    /// A chunk's input activation: embedded on stage 0, received from the
+    /// previous stage otherwise.
+    fn chunk_in(&mut self, tokens: &[i32], c: &ChunkJob) -> Result<Tensor> {
+        if self.stage == 0 {
+            self.run_embed(&tokens[c.offset..c.offset + c.len])
+        } else {
+            self.recv_stage(c.len)
         }
     }
 
@@ -521,7 +626,11 @@ impl ComputeWorker {
     }
 
     /// Prefill one sequence with the ISO pipelined schedule (or blocking
-    /// serial when `strategy != Iso`). Returns last-chunk logits (rank 0).
+    /// serial when `strategy != Iso`) over this rank's stage slice.
+    /// Chunk activations arrive from the previous stage (or the embedding
+    /// on stage 0) and stream to the next stage as each finalizes, so the
+    /// chunks double as pipeline micro-batches (DESIGN.md §11). Returns
+    /// last-chunk logits on the reply rank.
     fn prefill(
         &mut self,
         slot: usize,
@@ -530,19 +639,11 @@ impl ComputeWorker {
         logits_row: usize,
     ) -> Result<Option<Vec<f32>>> {
         self.ensure_slot(slot);
-        // Embed every chunk up front (replicated tiny work, like every TP
-        // implementation does).
-        let mut xs: Vec<Tensor> = chunks
-            .iter()
-            .map(|c| self.run_embed(&tokens[c.offset..c.offset + c.len]))
-            .collect::<Result<_>>()?;
-
-        match self.strategy {
-            Strategy::Iso => self.prefill_pipelined(slot, chunks, &mut xs)?,
-            _ => self.prefill_blocking(slot, chunks, &mut xs)?,
-        }
-
-        if self.rank == 0 {
+        let xs = match self.strategy {
+            Strategy::Iso => self.prefill_pipelined(slot, tokens, chunks)?,
+            _ => self.prefill_blocking(slot, tokens, chunks)?,
+        };
+        if self.is_reply {
             let last_idx = chunks.iter().position(|c| c.last).expect("no last chunk");
             Ok(Some(self.logits_row_of(&xs[last_idx], logits_row)?))
         } else {
@@ -566,66 +667,105 @@ impl ComputeWorker {
         Ok(row)
     }
 
-    /// Fig 1(d): per layer, compute every chunk's attention back-to-back
-    /// while earlier chunks' collectives fly; MLPs interleave with the
-    /// attention collectives; next layer starts as soon as *that chunk's*
-    /// MLP collective lands. The KV ordering constraint is honored by
-    /// construction: chunk i's attention executes after chunk i-1's within
-    /// the same thread, and chunks are offset-ordered.
+    /// Fig 1(d) within the stage: per layer, compute every chunk's
+    /// attention back-to-back while earlier chunks' collectives fly; MLPs
+    /// interleave with the attention collectives; next layer starts as
+    /// soon as *that chunk's* MLP collective lands. The KV ordering
+    /// constraint is honored by construction: chunk i's attention
+    /// executes after chunk i-1's within the same thread, and chunks are
+    /// offset-ordered. Pipeline edges are lazy, streaming, and
+    /// **pair-granular**: a single-stage engine keeps the whole chunk set
+    /// in one ISO group (bit-for-bit the pre-PP schedule), while a
+    /// pipeline stage processes the chunks in pairs — each pair runs the
+    /// full layer-major ping-pong (so ISO's two-chunk overlap survives
+    /// inside the pair) and is forwarded downstream the moment its final
+    /// collectives land, before the next pair starts. Chunk *pairs* are
+    /// therefore the wavefront unit: stage s+1 computes pair g while
+    /// stage s computes pair g+1 and pair g+1's all-reduces drain. The
+    /// causal KV constraint holds because pairs execute in chunk order
+    /// within one thread. Returns the chunk activations — placeholders
+    /// for entries already forwarded downstream.
     fn prefill_pipelined(
         &mut self,
         slot: usize,
+        tokens: &[i32],
         chunks: &[ChunkJob],
-        xs: &mut [Tensor],
-    ) -> Result<()> {
+    ) -> Result<Vec<Tensor>> {
         let k = chunks.len();
-        for l in 0..self.geo_layers {
-            for i in 0..k {
-                if l > 0 {
-                    // consume chunk i's MLP all-reduce from layer l-1
-                    self.recv_reduced_apply(&mut xs[i]);
+        let group = if self.stages > 1 { 2 } else { k.max(1) };
+        let mut xs: Vec<Tensor> = Vec::with_capacity(k);
+        let mut g0 = 0;
+        while g0 < k {
+            let g1 = (g0 + group).min(k);
+            for l in 0..self.local_layers {
+                for i in g0..g1 {
+                    if l == 0 {
+                        let x = self.chunk_in(tokens, &chunks[i])?;
+                        xs.push(x);
+                    } else {
+                        // consume chunk i's MLP all-reduce from layer l-1
+                        self.recv_reduced_apply(&mut xs[i]);
+                    }
+                    let partial = self.run_attn(slot, l, &xs[i], chunks[i].offset)?;
+                    self.submit(partial.data, chunks[i].len);
                 }
-                let partial = self.run_attn(slot, l, &xs[i], chunks[i].offset)?;
-                self.submit(partial.data, chunks[i].len);
+                for i in g0..g1 {
+                    self.recv_reduced_apply(&mut xs[i]);
+                    let partial = self.run_mlp(l, &xs[i])?;
+                    self.submit(partial.data, chunks[i].len);
+                }
             }
-            for i in 0..k {
-                self.recv_reduced_apply(&mut xs[i]);
-                let partial = self.run_mlp(l, &xs[i])?;
-                self.submit(partial.data, chunks[i].len);
+            for x in xs.iter_mut().take(g1).skip(g0) {
+                self.recv_reduced_apply(x);
+                if !self.is_last_stage() {
+                    self.send_stage(std::mem::take(x));
+                }
             }
+            g0 = g1;
         }
-        for x in xs.iter_mut() {
-            self.recv_reduced_apply(x);
-        }
-        Ok(())
+        Ok(xs)
     }
 
-    /// Fig 1(a): strict compute → comm → compute → comm.
+    /// Fig 1(a): strict compute → comm → compute → comm, chunk-major.
+    /// Under pipeline stages the chunk-major order forwards each chunk
+    /// the moment its last layer lands, so even the serial baseline
+    /// pipelines across stages (it just never overlaps within one).
     fn prefill_blocking(
         &mut self,
         slot: usize,
+        tokens: &[i32],
         chunks: &[ChunkJob],
-        xs: &mut [Tensor],
-    ) -> Result<()> {
-        for i in 0..chunks.len() {
-            for l in 0..self.geo_layers {
-                let partial = self.run_attn(slot, l, &xs[i], chunks[i].offset)?;
-                self.submit(partial.data, chunks[i].len);
-                self.recv_reduced_apply(&mut xs[i]);
-                let partial = self.run_mlp(l, &xs[i])?;
-                self.submit(partial.data, chunks[i].len);
-                self.recv_reduced_apply(&mut xs[i]);
+    ) -> Result<Vec<Tensor>> {
+        let mut xs: Vec<Tensor> = Vec::with_capacity(chunks.len());
+        for c in chunks {
+            let mut x = self.chunk_in(tokens, c)?;
+            for l in 0..self.local_layers {
+                let partial = self.run_attn(slot, l, &x, c.offset)?;
+                self.submit(partial.data, c.len);
+                self.recv_reduced_apply(&mut x);
+                let partial = self.run_mlp(l, &x)?;
+                self.submit(partial.data, c.len);
+                self.recv_reduced_apply(&mut x);
             }
+            if !self.is_last_stage() {
+                self.send_stage(std::mem::take(&mut x));
+            }
+            xs.push(x);
         }
-        Ok(())
+        Ok(xs)
     }
 
     /// One decode step (t = 1): blocking schedule — the paper finds
-    /// overlap unprofitable in decode (§1, §6) and so do we.
+    /// overlap unprofitable in decode (§1, §6) and so do we. The single
+    /// row flows through the stages like a one-chunk pipeline.
     fn decode(&mut self, slot: usize, token: i32, offset: usize) -> Result<Option<Vec<f32>>> {
         self.ensure_slot(slot);
-        let mut x = self.run_embed(&[token])?;
-        for l in 0..self.geo_layers {
+        let mut x = if self.stage == 0 {
+            self.run_embed(&[token])?
+        } else {
+            self.recv_stage(1)?
+        };
+        for l in 0..self.local_layers {
             let partial = self.run_attn(slot, l, &x, offset)?;
             self.submit(partial.data, 1);
             self.recv_reduced_apply(&mut x);
@@ -633,7 +773,11 @@ impl ComputeWorker {
             self.submit(partial.data, 1);
             self.recv_reduced_apply(&mut x);
         }
-        if self.rank == 0 {
+        if !self.is_last_stage() {
+            self.send_stage(x);
+            return Ok(None);
+        }
+        if self.is_reply {
             Ok(Some(self.run_logits(&x)?.data))
         } else {
             Ok(None)
@@ -665,6 +809,7 @@ impl ComputeWorker {
         let d = self.d_model;
         let mut fused = self.take_scratch(lane.len() * d);
         for (j, s) in lane.iter().enumerate() {
+            self.ensure_slot(s.slot);
             row.data.copy_from_slice(&x_lane.data[j * d..(j + 1) * d]);
             let p = self.run_attn(s.slot, layer, &*row, s.offset)?;
             fused[j * d..(j + 1) * d].copy_from_slice(&p.data);
@@ -708,19 +853,28 @@ impl ComputeWorker {
     }
 
     /// Fused decode-only step: the whole lane advances one token with
-    /// `2 × n_layers` collectives total instead of `B × 2 × n_layers` —
+    /// `2 × local_layers` collectives per stage instead of `B ×` that —
     /// bit-identical to B independent [`ComputeWorker::decode`] steps.
+    /// The lane's single B-row activation flows through the stages.
     fn decode_fused(&mut self, lane: &[DecodeSlot]) -> Result<Option<Vec<Vec<f32>>>> {
         debug_assert!(!lane.is_empty());
-        let mut x_lane = self.embed_lane(lane)?;
+        let mut x_lane = if self.stage == 0 {
+            self.embed_lane(lane)?
+        } else {
+            self.recv_stage(lane.len())?
+        };
         let mut row = Tensor::zeros(vec![1, self.d_model]);
-        for l in 0..self.geo_layers {
+        for l in 0..self.local_layers {
             self.lane_attn_submit(l, lane, &x_lane, &mut row)?;
             self.recv_reduced_apply(&mut x_lane);
             self.lane_mlp_submit(l, &x_lane, &mut row)?;
             self.recv_reduced_apply(&mut x_lane);
         }
-        if self.rank == 0 {
+        if !self.is_last_stage() {
+            self.send_stage(x_lane);
+            return Ok(None);
+        }
+        if self.is_reply {
             Ok(Some(self.lane_logits(&x_lane, &mut row)?))
         } else {
             Ok(None)
@@ -763,6 +917,7 @@ impl ComputeWorker {
         let mut fused = self.take_scratch(rows * d);
         let mut r = 0;
         for w in lane {
+            self.ensure_slot(w.slot);
             for j in 0..w.tokens.len() {
                 row.data.copy_from_slice(&x_lane.data[r * d..(r + 1) * d]);
                 let p = self.run_attn(w.slot, layer, &*row, w.offset + j)?;
@@ -782,15 +937,24 @@ impl ComputeWorker {
     /// emissions. Returns one logits vector per lane row (rank 0).
     fn verify_fused(&mut self, lane: &[SpecSlot]) -> Result<Option<Vec<Vec<f32>>>> {
         debug_assert!(!lane.is_empty());
-        let mut x_lane = self.embed_spec(lane)?;
+        let rows: usize = lane.iter().map(SpecSlot::width).sum();
+        let mut x_lane = if self.stage == 0 {
+            self.embed_spec(lane)?
+        } else {
+            self.recv_stage(rows)?
+        };
         let mut row = Tensor::zeros(vec![1, self.d_model]);
-        for l in 0..self.geo_layers {
+        for l in 0..self.local_layers {
             self.spec_attn_submit(l, lane, &x_lane, &mut row)?;
             self.recv_reduced_apply(&mut x_lane);
             self.lane_mlp_submit(l, &x_lane, &mut row)?;
             self.recv_reduced_apply(&mut x_lane);
         }
-        if self.rank == 0 {
+        if !self.is_last_stage() {
+            self.send_stage(x_lane);
+            return Ok(None);
+        }
+        if self.is_reply {
             Ok(Some(self.lane_logits(&x_lane, &mut row)?))
         } else {
             Ok(None)
@@ -806,21 +970,27 @@ impl ComputeWorker {
     fn step_mixed_spec(&mut self, p: &StepPrefill, lane: &[SpecSlot]) -> Result<StepLogits> {
         self.ensure_slot(p.slot);
         let k = p.chunks.len();
-        let mut xs: Vec<Tensor> = p
-            .chunks
-            .iter()
-            .map(|c| self.run_embed(&p.tokens[c.offset..c.offset + c.len]))
-            .collect::<Result<_>>()?;
-        let mut x_lane = self.embed_spec(lane)?;
+        let lane_rows: usize = lane.iter().map(SpecSlot::width).sum();
+        let mut xs: Vec<Tensor> = Vec::with_capacity(k);
+        let mut x_lane =
+            if self.stage == 0 { self.embed_spec(lane)? } else { Tensor::default() };
         let mut row = Tensor::zeros(vec![1, self.d_model]);
 
-        for l in 0..self.geo_layers {
+        for l in 0..self.local_layers {
             for i in 0..k {
-                if l > 0 {
+                if l == 0 {
+                    let x = self.chunk_in(&p.tokens, &p.chunks[i])?;
+                    xs.push(x);
+                } else {
                     self.recv_reduced_apply(&mut xs[i]);
                 }
                 let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
                 self.submit(partial.data, p.chunks[i].len);
+            }
+            if l == 0 && self.stage > 0 {
+                // Wire order is [chunks…, lane]: the upstream stage
+                // forwards its chunk set first, the lane last.
+                x_lane = self.recv_stage(lane_rows)?;
             }
             if l > 0 {
                 self.recv_reduced_apply(&mut x_lane);
@@ -836,10 +1006,17 @@ impl ComputeWorker {
         }
         for x in xs.iter_mut() {
             self.recv_reduced_apply(x);
+            if !self.is_last_stage() {
+                self.send_stage(std::mem::take(x));
+            }
         }
         self.recv_reduced_apply(&mut x_lane);
+        if !self.is_last_stage() {
+            self.send_stage(x_lane);
+            return Ok((None, None));
+        }
 
-        if self.rank == 0 {
+        if self.is_reply {
             let last_idx = p.chunks.iter().position(|c| c.last).expect("no last chunk");
             let prefill_logits = self.logits_row_of(&xs[last_idx], p.logits_row)?;
             let lane_logits = self.lane_logits(&x_lane, &mut row)?;
@@ -862,23 +1039,28 @@ impl ComputeWorker {
     ) -> Result<StepLogits> {
         self.ensure_slot(p.slot);
         let k = p.chunks.len();
-        let mut xs: Vec<Tensor> = p
-            .chunks
-            .iter()
-            .map(|c| self.run_embed(&p.tokens[c.offset..c.offset + c.len]))
-            .collect::<Result<_>>()?;
-        let mut x_lane = self.embed_lane(lane)?;
+        let mut xs: Vec<Tensor> = Vec::with_capacity(k);
+        let mut x_lane =
+            if self.stage == 0 { self.embed_lane(lane)? } else { Tensor::default() };
         let mut row = Tensor::zeros(vec![1, self.d_model]);
 
-        for l in 0..self.geo_layers {
+        for l in 0..self.local_layers {
             // Prefill chunk attentions launch first so their collectives
             // are on the ring while the lane computes.
             for i in 0..k {
-                if l > 0 {
+                if l == 0 {
+                    let x = self.chunk_in(&p.tokens, &p.chunks[i])?;
+                    xs.push(x);
+                } else {
                     self.recv_reduced_apply(&mut xs[i]);
                 }
                 let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
                 self.submit(partial.data, p.chunks[i].len);
+            }
+            if l == 0 && self.stage > 0 {
+                // Wire order is [chunks…, lane]: the upstream stage
+                // forwards its chunk set first, the lane last.
+                x_lane = self.recv_stage(lane.len())?;
             }
             if l > 0 {
                 self.recv_reduced_apply(&mut x_lane);
@@ -894,10 +1076,17 @@ impl ComputeWorker {
         }
         for x in xs.iter_mut() {
             self.recv_reduced_apply(x);
+            if !self.is_last_stage() {
+                self.send_stage(std::mem::take(x));
+            }
         }
         self.recv_reduced_apply(&mut x_lane);
+        if !self.is_last_stage() {
+            self.send_stage(x_lane);
+            return Ok((None, None));
+        }
 
-        if self.rank == 0 {
+        if self.is_reply {
             let last_idx = p.chunks.iter().position(|c| c.last).expect("no last chunk");
             let prefill_logits = self.logits_row_of(&xs[last_idx], p.logits_row)?;
             let decode_logits = self.lane_logits(&x_lane, &mut row)?;
@@ -933,7 +1122,7 @@ impl ComputeWorker {
         match (prefill, lane.is_empty()) {
             (Some(p), true) => {
                 let logits = self.prefill(p.slot, &p.tokens, &p.chunks, p.logits_row)?;
-                Ok((logits, if self.rank == 0 { Some(Vec::new()) } else { None }))
+                Ok((logits, if self.is_reply { Some(Vec::new()) } else { None }))
             }
             (None, false) => Ok((None, self.decode_fused(lane)?)),
             (Some(p), false) => {
@@ -946,7 +1135,7 @@ impl ComputeWorker {
                     Ok((logits, self.decode_fused(lane)?))
                 }
             }
-            (None, true) => Ok((None, if self.rank == 0 { Some(Vec::new()) } else { None })),
+            (None, true) => Ok((None, if self.is_reply { Some(Vec::new()) } else { None })),
         }
     }
 
@@ -1043,11 +1232,12 @@ fn compute_main(
     manifest: Manifest,
     jobs: Receiver<Job>,
     reply: Option<Sender<Reply>>,
+    port: StagePort,
     to_comm: Sender<CommJob>,
     from_comm: Receiver<SegAck>,
     recycle_tx: Sender<Vec<f32>>,
 ) -> Result<WorkerStats> {
-    let mut w = ComputeWorker::build(rank, &cfg, manifest, to_comm, from_comm, recycle_tx)
+    let mut w = ComputeWorker::build(rank, &cfg, manifest, port, to_comm, from_comm, recycle_tx)
         .with_context(|| format!("building worker {rank}"))?;
     while let Ok(job) = jobs.recv() {
         match job {
@@ -1077,6 +1267,8 @@ fn compute_main(
             Job::Shutdown => break,
         }
     }
+    w.stats.p2p_bytes = w.port.sent_bytes;
+    w.stats.p2p_msgs = w.port.sent_msgs;
     Ok(w.stats)
 }
 
@@ -1148,9 +1340,19 @@ impl Engine {
         if cfg.spec_ngram == 0 {
             bail!("spec_ngram must be >= 1");
         }
+        if cfg.pp_stages == 0 {
+            bail!("pp_stages must be >= 1");
+        }
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         if !manifest.tp_degrees.contains(&cfg.tp) {
             bail!("tp={} not in artifacts (have {:?})", cfg.tp, manifest.tp_degrees);
+        }
+        if cfg.pp_stages > manifest.config.n_layers {
+            bail!(
+                "pp_stages {} exceeds the model's {} layers (every stage needs >= 1)",
+                cfg.pp_stages,
+                manifest.config.n_layers
+            );
         }
         let prefill_chunks: Vec<usize> = manifest
             .chunk_lens
@@ -1163,45 +1365,58 @@ impl Engine {
         }
         let smallest_chunk = *prefill_chunks.iter().min().unwrap();
 
-        let rings = ring(cfg.tp);
+        let pp = cfg.pp_stages;
+        let tp = cfg.tp;
+        let throttle = cfg.link_mbps.map(|mbps| crate::collective::Throttle {
+            alpha_s: cfg.link_alpha_us * 1e-6,
+            bytes_per_s: mbps * 1e6,
+        });
         let (reply_tx, reply_rx) = channel();
         let mut job_txs = Vec::new();
         let mut compute_joins = Vec::new();
         let mut comm_joins = Vec::new();
 
-        for (rank, mut ring_handle) in rings.into_iter().enumerate() {
-            let (job_tx, job_rx) = channel();
-            let (to_comm, comm_rx) = channel();
-            let (ack_tx, from_comm) = channel();
-            let (recycle_tx, recycle_rx) = channel();
-            let quant = cfg.comm_quant;
-            if let Some(mbps) = cfg.link_mbps {
-                ring_handle.throttle = Some(crate::collective::Throttle {
-                    alpha_s: cfg.link_alpha_us * 1e-6,
-                    bytes_per_s: mbps * 1e6,
-                });
+        // One TP ring per stage; stages chained by p2p activation ports
+        // (stage s rank r → stage s+1 rank r). The emulated link speed,
+        // when set, throttles both fabrics.
+        for (stage, ports_s) in stage_grid(pp, tp).into_iter().enumerate() {
+            let rings = ring(tp);
+            for (r, (mut ring_handle, mut port)) in
+                rings.into_iter().zip(ports_s).enumerate()
+            {
+                let rank = stage * tp + r;
+                let (job_tx, job_rx) = channel();
+                let (to_comm, comm_rx) = channel();
+                let (ack_tx, from_comm) = channel();
+                let (recycle_tx, recycle_rx) = channel();
+                let quant = cfg.comm_quant;
+                if let Some(t) = throttle {
+                    ring_handle.throttle = Some(t);
+                    port.throttle = Some(t);
+                }
+                comm_joins.push(
+                    std::thread::Builder::new()
+                        .name(format!("iso-comm-{rank}"))
+                        .spawn(move || comm_main(ring_handle, quant, comm_rx, ack_tx, recycle_rx))
+                        .expect("spawn comm thread"),
+                );
+                let reply =
+                    if stage == pp - 1 && r == 0 { Some(reply_tx.clone()) } else { None };
+                let cfg_c = cfg.clone();
+                let manifest_c = manifest.clone();
+                compute_joins.push(
+                    std::thread::Builder::new()
+                        .name(format!("iso-compute-{rank}"))
+                        .spawn(move || {
+                            compute_main(
+                                rank, cfg_c, manifest_c, job_rx, reply, port, to_comm,
+                                from_comm, recycle_tx,
+                            )
+                        })
+                        .expect("spawn compute thread"),
+                );
+                job_txs.push(job_tx);
             }
-            comm_joins.push(
-                std::thread::Builder::new()
-                    .name(format!("iso-comm-{rank}"))
-                    .spawn(move || comm_main(ring_handle, quant, comm_rx, ack_tx, recycle_rx))
-                    .expect("spawn comm thread"),
-            );
-            let reply = if rank == 0 { Some(reply_tx.clone()) } else { None };
-            let cfg_c = cfg.clone();
-            let manifest_c = manifest.clone();
-            compute_joins.push(
-                std::thread::Builder::new()
-                    .name(format!("iso-compute-{rank}"))
-                    .spawn(move || {
-                        compute_main(
-                            rank, cfg_c, manifest_c, job_rx, reply, to_comm, from_comm,
-                            recycle_tx,
-                        )
-                    })
-                    .expect("spawn compute thread"),
-            );
-            job_txs.push(job_tx);
         }
 
         let free_slots = (0..cfg.max_batch).rev().collect();
@@ -1270,6 +1485,23 @@ impl Engine {
         Ok(())
     }
 
+    /// Chunk count the prefill planner should aim for (DESIGN.md §11).
+    /// The ISO stage schedule wavefronts chunk *pairs* between stages,
+    /// so a `pp`-deep ISO pipeline needs `2 × pp` chunks — one pair per
+    /// stage — to keep every stage fed; chunk-major strategies (the
+    /// serial baseline) wavefront single chunks and need `pp`.
+    /// Single-stage engines keep the pre-PP tiling (depth 1 = largest
+    /// tiles).
+    fn micro_batch_depth(&self) -> usize {
+        if self.cfg.pp_stages <= 1 {
+            1
+        } else if self.cfg.strategy == Strategy::Iso {
+            2 * self.cfg.pp_stages
+        } else {
+            self.cfg.pp_stages
+        }
+    }
+
     /// Plan the prefill half of a step: pad, validate, tile (via the
     /// calibrated split context), locate the true-last-token logits row.
     fn plan_step_prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<StepPrefill> {
@@ -1280,13 +1512,14 @@ impl Engine {
         if padded.len() > self.manifest.config.max_seq {
             bail!("prompt {} exceeds max_seq {}", padded.len(), self.manifest.config.max_seq);
         }
-        let chunks = plan_prefill(
+        let chunks = plan_prefill_pp(
             slot as u64,
             padded.len(),
             self.cfg.strategy,
             self.cfg.split,
             &self.chunk_sizes,
             Some(&self.split_ctx),
+            self.micro_batch_depth(),
         );
         let last = chunks.iter().find(|c| c.last).unwrap();
         let true_last = prompt.len() - 1;
@@ -1545,7 +1778,8 @@ impl Engine {
             self.chunk_sizes.clone(),
             self.cfg.decode_batch,
             self.manifest.config.max_seq,
-        );
+        )
+        .with_min_chunks(self.micro_batch_depth());
         let spec_k = self.cfg.spec_k;
         let mut proposer = NGramProposer::new(self.cfg.spec_ngram);
         // Paged KV accounting mirroring the workers' dense caches: one
@@ -1889,7 +2123,27 @@ impl Engine {
         metrics.overlapped_ms =
             workers.iter().map(|w| w.overlapped_ms()).sum::<f64>() / n_workers;
         metrics.exposed_ms = workers.iter().map(|w| w.stall_ms).sum::<f64>() / n_workers;
-        Ok(EngineReport { metrics, workers })
+        // Pipeline accounting (DESIGN.md §11). Single-stage engines record
+        // nothing here, keeping their reports byte-identical to pre-PP
+        // output.
+        metrics.p2p_bytes = workers.iter().map(|w| w.p2p_bytes).sum();
+        metrics.p2p_msgs = workers.iter().map(|w| w.p2p_msgs).sum();
+        if self.cfg.pp_stages > 1 {
+            for w in &workers {
+                metrics.pp_bubble_ms.record(w.p2p_stall_ms);
+            }
+            for s in 0..self.cfg.pp_stages {
+                let stage_compute: f64 =
+                    workers.iter().filter(|w| w.stage == s).map(|w| w.compute_ms).sum();
+                metrics.stage_compute_ms.record(stage_compute);
+            }
+        }
+        Ok(EngineReport {
+            metrics,
+            workers,
+            pp_stages: self.cfg.pp_stages,
+            tp: self.cfg.tp,
+        })
     }
 }
 
@@ -1927,6 +2181,34 @@ mod tests {
         assert!((s.overlap_efficiency() - 0.8).abs() < 1e-12);
         let no_comm = WorkerStats::default();
         assert_eq!(no_comm.overlap_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn stage_layer_ranges_partition_the_model() {
+        // The layer-to-stage assignment is contiguous, covers every layer
+        // exactly once, and never starves a stage while pp <= n_layers.
+        for n_layers in [4usize, 5, 60] {
+            for pp in 1..=n_layers.min(6) {
+                let mut covered = 0;
+                for s in 0..pp {
+                    let (lo, hi) = stage_layer_range(n_layers, pp, s);
+                    assert_eq!(lo, covered, "layers={n_layers} pp={pp} s={s}");
+                    assert!(hi > lo, "stage {s} owns no layers");
+                    covered = hi;
+                }
+                assert_eq!(covered, n_layers);
+            }
+        }
+        // The tiny engine model: 4 layers over 2 stages = 2 + 2.
+        assert_eq!(stage_layer_range(4, 2, 0), (0, 2));
+        assert_eq!(stage_layer_range(4, 2, 1), (2, 4));
+    }
+
+    #[test]
+    fn worker_stats_pp_fields_default_zero() {
+        let s = WorkerStats::default();
+        assert_eq!((s.stage, s.p2p_bytes, s.p2p_msgs), (0, 0, 0));
+        assert_eq!(s.p2p_stall_ms, 0.0);
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //!     is inflated by `contention_factor` (paper §3.2: 15–20% on A800,
 //!     negligible on 4090).
 
+/// Wire-size factor of int8 comm quantization relative to the fp16
+/// activation payload: half the bytes plus ~2% of per-row scales
+/// (paper §3.2). Shared by the simulator's collective cost models and
+/// the benches so a recalibration is a single-point change.
+pub const INT8_WIRE_FACTOR: f64 = 0.51;
+
 /// Interconnect profile for a ring collective.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LinkProfile {
@@ -240,7 +246,7 @@ impl NodeProfile {
     /// int8 wire quantization (halves payload, adds per-row scales ≈ +2%).
     pub fn allreduce_s(&self, fp16_bytes: usize, int8_wire: bool) -> f64 {
         let wire = if int8_wire {
-            fp16_bytes as f64 * 0.51 // int8 payload + scales
+            fp16_bytes as f64 * INT8_WIRE_FACTOR // int8 payload + scales
         } else {
             fp16_bytes as f64
         };

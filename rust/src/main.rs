@@ -55,6 +55,9 @@ fn serve(cli: &Cli) -> Result<()> {
     if cli.has("tp") {
         cfg.tp = cli.usize_or("tp", cfg.tp).map_err(|e| anyhow!(e))?;
     }
+    if cli.has("pp-stages") {
+        cfg.pp_stages = cli.usize_or("pp-stages", cfg.pp_stages).map_err(|e| anyhow!(e))?;
+    }
     if let Some(q) = cli.get("comm-quant") {
         cfg.comm_quant = CommQuant::parse(q).ok_or_else(|| anyhow!("bad --comm-quant {q:?}"))?;
     }
@@ -79,8 +82,9 @@ fn serve(cli: &Cli) -> Result<()> {
     let decode = cli.usize_or("decode", 0).map_err(|e| anyhow!(e))?;
 
     println!(
-        "engine: tp={} strategy={} comm_quant={:?} mixed={} decode_batch={} spec_k={} \
+        "engine: pp={} tp={} strategy={} comm_quant={:?} mixed={} decode_batch={} spec_k={} \
          artifacts={}",
+        cfg.pp_stages,
         cfg.tp,
         cfg.strategy,
         cfg.comm_quant,
@@ -135,16 +139,12 @@ fn serve(cli: &Cli) -> Result<()> {
     let report = engine.shutdown()?;
     let mut m = report.metrics;
     println!("\n{}", m.report());
-    for w in &report.workers {
-        println!(
-            "rank {}: compute={:.0}ms stall={:.0}ms comm={:.0}ms overlap_eff={:.2}",
-            w.rank,
-            w.compute_ms,
-            w.stall_ms,
-            w.comm_ms,
-            w.overlap_efficiency()
-        );
-    }
+    // Topology-aware rollup: flat per-rank lines for pp=1 (byte-identical
+    // to the legacy report), stage-grouped for pipeline engines.
+    print!(
+        "{}",
+        iso::report::worker_rollup(&report.workers, report.pp_stages, report.tp)
+    );
     Ok(())
 }
 

@@ -174,6 +174,19 @@ pub struct EngineMetrics {
     /// Head-of-line queue wait (ms), sampled once per serving iteration;
     /// the `batch::Admission::oldest_wait_s` signal.
     pub queue_wait_ms: Histogram,
+    /// Activation bytes moved over the inter-stage p2p links
+    /// (DESIGN.md §11); 0 when `pp_stages = 1`.
+    pub p2p_bytes: u64,
+    /// Activation messages over the inter-stage p2p links.
+    pub p2p_msgs: u64,
+    /// Per-rank time blocked waiting on the previous stage's activations
+    /// (one sample per rank at shutdown) — the pipeline-bubble histogram.
+    /// Empty when `pp_stages = 1`.
+    pub pp_bubble_ms: Histogram,
+    /// Per-stage summed compute time (one sample per stage at shutdown) —
+    /// the stage-occupancy histogram; its min/max spread shows layer-
+    /// assignment imbalance. Empty when `pp_stages = 1`.
+    pub stage_compute_ms: Histogram,
 }
 
 impl EngineMetrics {
@@ -249,6 +262,18 @@ impl EngineMetrics {
             s.push_str(&self.queue_depth.summary("queue_depth"));
             s.push('\n');
             s.push_str(&self.queue_wait_ms.summary("queue_wait_ms"));
+        }
+        // Pipeline counters appear only when stages actually ran, so
+        // single-stage reports stay byte-identical to the pre-PP output.
+        if self.p2p_msgs > 0 || !self.pp_bubble_ms.is_empty() {
+            s.push_str(&format!(
+                "\np2p_bytes={} p2p_msgs={}",
+                self.p2p_bytes, self.p2p_msgs
+            ));
+            s.push('\n');
+            s.push_str(&self.pp_bubble_ms.summary("pp_bubble_ms"));
+            s.push('\n');
+            s.push_str(&self.stage_compute_ms.summary("stage_compute_ms"));
         }
         s
     }
@@ -335,6 +360,25 @@ mod tests {
         assert!(r.contains("iter_occupancy"));
         assert!(r.contains("fused_decode_tokens=32"));
         assert!(r.contains("exposed_ms_per_tok=0.25"));
+    }
+
+    #[test]
+    fn pp_counters_absent_until_stages_run() {
+        // Satellite (PR 4): the single-stage report is byte-identical to
+        // the pre-PP format — pipeline lines appear only once p2p moved.
+        let mut m = EngineMetrics::default();
+        let before = m.report();
+        assert!(!before.contains("p2p_bytes"), "pp lines must be opt-in");
+        m.p2p_bytes = 4096;
+        m.p2p_msgs = 8;
+        m.pp_bubble_ms.record(1.5);
+        m.stage_compute_ms.record(10.0);
+        m.stage_compute_ms.record(12.0);
+        let after = m.report();
+        assert!(after.contains("p2p_bytes=4096 p2p_msgs=8"));
+        assert!(after.contains("pp_bubble_ms"));
+        assert!(after.contains("stage_compute_ms"));
+        assert!(after.starts_with(&before), "pp lines must only append");
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! and CSV/JSON dumps for downstream plotting.
 
 use crate::config::{SimExperiment, Strategy};
+use crate::coordinator::WorkerStats;
 use crate::hw::NodeProfile;
 use crate::model::ModelSpec;
 use crate::sched;
@@ -114,6 +115,50 @@ pub fn timeline_json(tl: &Timeline) -> Json {
     let mut root = Json::obj();
     root.set("makespan_us", tl.makespan_s * 1e6).set("spans", Json::Arr(spans));
     root
+}
+
+/// Topology-aware rendering of the per-worker counters (PR-4 satellite).
+///
+/// The engine's workers form a `pp_stages × tp` grid. The flat single-
+/// stage rollup (`pp_stages = 1`) prints one `rank …` line per worker —
+/// **byte-identical** to the pre-pipeline report, pinned by test — while
+/// multi-stage engines group the ranks by stage first, each stage headed
+/// by its summed compute and pipeline-bubble wait, so imbalanced layer
+/// assignments and starved stages are visible at a glance.
+pub fn worker_rollup(workers: &[WorkerStats], pp_stages: usize, tp: usize) -> String {
+    let mut s = String::new();
+    let rank_line = |w: &WorkerStats| {
+        format!(
+            "rank {}: compute={:.0}ms stall={:.0}ms comm={:.0}ms overlap_eff={:.2}\n",
+            w.rank,
+            w.compute_ms,
+            w.stall_ms,
+            w.comm_ms,
+            w.overlap_efficiency()
+        )
+    };
+    if pp_stages <= 1 {
+        for w in workers {
+            s.push_str(&rank_line(w));
+        }
+        return s;
+    }
+    for stage in 0..pp_stages {
+        let ranks: Vec<&WorkerStats> =
+            workers.iter().filter(|w| w.stage == stage).collect();
+        let compute: f64 = ranks.iter().map(|w| w.compute_ms).sum();
+        let bubble: f64 = ranks.iter().map(|w| w.p2p_stall_ms).sum();
+        let p2p: u64 = ranks.iter().map(|w| w.p2p_bytes).sum();
+        s.push_str(&format!(
+            "stage {stage} (tp={tp}): compute={compute:.0}ms bubble_wait={bubble:.0}ms \
+             p2p_sent={p2p}B\n"
+        ));
+        for w in ranks {
+            s.push_str("  ");
+            s.push_str(&rank_line(w));
+        }
+    }
+    s
 }
 
 /// One measured case for the machine-readable perf snapshot
@@ -263,6 +308,58 @@ mod tests {
         assert!(g.contains("COMPUTE"));
         assert!(g.contains("COMM"));
         assert!(g.contains('#') || g.contains('%'));
+    }
+
+    #[test]
+    fn single_stage_rollup_is_byte_identical_to_legacy() {
+        // Satellite (PR 4): the flat-TP rollup must not change by a byte
+        // versus the pre-pipeline per-rank lines.
+        let workers: Vec<WorkerStats> = (0..2)
+            .map(|rank| WorkerStats {
+                rank,
+                compute_ms: 12.4 + rank as f64,
+                stall_ms: 3.6,
+                comm_ms: 10.0,
+                ..Default::default()
+            })
+            .collect();
+        let legacy: String = workers
+            .iter()
+            .map(|w| {
+                format!(
+                    "rank {}: compute={:.0}ms stall={:.0}ms comm={:.0}ms overlap_eff={:.2}\n",
+                    w.rank,
+                    w.compute_ms,
+                    w.stall_ms,
+                    w.comm_ms,
+                    w.overlap_efficiency()
+                )
+            })
+            .collect();
+        assert_eq!(worker_rollup(&workers, 1, 2), legacy);
+    }
+
+    #[test]
+    fn multi_stage_rollup_groups_by_stage_then_rank() {
+        let mk = |rank: usize, stage: usize| WorkerStats {
+            rank,
+            stage,
+            compute_ms: 10.0,
+            p2p_stall_ms: 2.0,
+            p2p_bytes: 100,
+            ..Default::default()
+        };
+        let workers = vec![mk(0, 0), mk(1, 0), mk(2, 1), mk(3, 1)];
+        let s = worker_rollup(&workers, 2, 2);
+        let stage0 = s.find("stage 0").unwrap();
+        let stage1 = s.find("stage 1").unwrap();
+        let rank2 = s.find("rank 2").unwrap();
+        assert!(stage0 < rank2 && rank2 > stage1, "ranks must nest under stages");
+        assert!(s.contains("compute=20ms"), "stage compute must sum its ranks");
+        assert!(s.contains("bubble_wait=4ms"));
+        assert!(s.contains("p2p_sent=200B"));
+        assert!(s.contains("(tp=2)"));
+        assert_eq!(s.matches("rank ").count(), 4);
     }
 
     #[test]

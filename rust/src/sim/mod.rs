@@ -140,6 +140,37 @@ impl Timeline {
     }
 }
 
+/// Exact makespan of a linear pipeline (DESIGN.md §11): `chunks`
+/// micro-batches flow through `stage_s.len()` stages in order, stage `s`
+/// taking `stage_s[s]` seconds per chunk, with `hop_s` seconds of
+/// point-to-point transfer between consecutive stages. Each stage
+/// processes one chunk at a time (chunks FIFO), and a hop overlaps with
+/// both neighbors' compute (the async-DMA link model). This is the
+/// wavefront recurrence
+///
+/// ```text
+/// finish[s][i] = max(finish[s][i-1], finish[s-1][i] + hop) + stage[s]
+/// ```
+///
+/// whose uniform-stage closed form is `(stages + chunks - 1)·T +
+/// (stages - 1)·hop` — the classic fill/drain bubble of
+/// `(stages - 1) / (chunks + stages - 1)`.
+pub fn pipeline_makespan(stage_s: &[f64], hop_s: f64, chunks: usize) -> f64 {
+    assert!(!stage_s.is_empty(), "no stages");
+    assert!(chunks >= 1, "no chunks");
+    assert!(hop_s >= 0.0 && stage_s.iter().all(|&t| t >= 0.0));
+    let mut finish = vec![0.0f64; stage_s.len()];
+    for _ in 0..chunks {
+        let mut arrive = 0.0f64; // chunk ready at stage 0 at t = 0
+        for (s, &t) in stage_s.iter().enumerate() {
+            let start = finish[s].max(arrive);
+            finish[s] = start + t;
+            arrive = finish[s] + hop_s;
+        }
+    }
+    finish[stage_s.len() - 1]
+}
+
 struct Running {
     op: usize,
     start: f64,
@@ -476,6 +507,36 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn pipeline_makespan_single_stage_is_serial() {
+        // One stage = no pipeline: chunks run back to back.
+        assert!((pipeline_makespan(&[2.0], 0.5, 4) - 8.0).abs() < 1e-12);
+        assert!((pipeline_makespan(&[3.0], 0.0, 1) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_makespan_uniform_closed_form() {
+        // (stages + chunks - 1)·T + (stages - 1)·hop, checked by hand:
+        // 2 stages, T=2, hop=0.5, 3 chunks → (2+3-1)·2 + 1·0.5 = 8.5.
+        assert!((pipeline_makespan(&[2.0, 2.0], 0.5, 3) - 8.5).abs() < 1e-12);
+        // 3 stages, T=1, hop=0, 5 chunks → 7.
+        assert!((pipeline_makespan(&[1.0, 1.0, 1.0], 0.0, 5) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_makespan_bottleneck_stage_dominates() {
+        // The slow stage sets the steady-state rate: k chunks through
+        // stages [1, 3] cost 1 + hop + 3k at large k (hand recurrence:
+        // finish1[i] = max(finish1[i-1], i+1+hop) + 3 → 1 + hop + 3k
+        // once the bottleneck saturates).
+        let t = pipeline_makespan(&[1.0, 3.0], 0.0, 10);
+        assert!((t - (1.0 + 30.0)).abs() < 1e-12, "got {t}");
+        // More chunks amortize the fill bubble: per-chunk time falls.
+        let per = |k: usize| pipeline_makespan(&[2.0, 2.0], 0.25, k) / k as f64;
+        assert!(per(8) < per(2));
+        assert!(per(32) < per(8));
     }
 
     #[test]

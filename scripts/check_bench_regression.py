@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Bench-regression gate (PR-4 satellite).
+
+Compares the bench-smoke snapshot (`BENCH_PR4.json`, written by
+`cargo bench --bench e2e_engine`) against the committed
+`BENCH_BASELINE.json` and fails on regression beyond a tolerance band
+(default ±10%).
+
+Semantics:
+  * every section/case present in the BASELINE must exist in the
+    snapshot — a vanished case is a regression (the bench silently
+    stopped measuring it);
+  * metric direction is inferred from its name: `*tok_s*` is
+    higher-is-better, `*_ms*` / `*exposed*` are lower-is-better; other
+    keys (`case`, `pp`, `tp`, `bubble_frac`, …) are identity/context and
+    not gated;
+  * extra sections or cases in the snapshot (e.g. the artifact-gated
+    engine sweeps on a machine with `make artifacts`) are ignored, so
+    the committed baseline only needs the deterministic simulator
+    sections that CI reproduces;
+  * a zero baseline for a lower-is-better metric demands the snapshot
+    stay ~zero (absolute epsilon); for higher-is-better it always
+    passes.
+
+Exit 0 = within tolerance, 1 = regression (each printed). Run from the
+repo root:
+
+    python3 scripts/check_bench_regression.py \
+        --baseline BENCH_BASELINE.json --snapshot BENCH_PR4.json
+
+To refresh the baseline after an intentional perf change, re-run the
+bench and copy the gated sections over (`--update` prints the snapshot's
+gated sections in baseline form).
+"""
+
+import argparse
+import json
+import sys
+
+ABS_EPS = 1e-9
+
+
+def direction(metric):
+    """'higher' / 'lower' / None (not gated) for a metric name."""
+    if "tok_s" in metric:
+        return "higher"
+    if "_ms" in metric or "exposed" in metric:
+        return "lower"
+    return None
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except FileNotFoundError:
+        print(f"REGRESSION: {path} not found")
+        sys.exit(1)
+    except json.JSONDecodeError as e:
+        print(f"REGRESSION: {path} is not valid JSON: {e}")
+        sys.exit(1)
+
+
+def by_case(records):
+    return {r.get("case"): r for r in records if isinstance(r, dict)}
+
+
+def gate(baseline, snapshot, tol):
+    failures = []
+    compared = 0
+    for section, base_records in baseline.items():
+        snap_records = snapshot.get(section)
+        if not isinstance(base_records, list):
+            continue
+        if not isinstance(snap_records, list):
+            failures.append(f"{section}: section missing from snapshot")
+            continue
+        snap_by_case = by_case(snap_records)
+        for base in base_records:
+            case = base.get("case")
+            snap = snap_by_case.get(case)
+            if snap is None:
+                failures.append(f"{section}/{case}: case missing from snapshot")
+                continue
+            for metric, base_val in base.items():
+                d = direction(metric)
+                if d is None or not isinstance(base_val, (int, float)):
+                    continue
+                new_val = snap.get(metric)
+                if not isinstance(new_val, (int, float)):
+                    failures.append(f"{section}/{case}: metric {metric} missing")
+                    continue
+                compared += 1
+                if base_val == 0:
+                    ok = d == "higher" or abs(new_val) <= ABS_EPS
+                    delta = "n/a"
+                elif d == "higher":
+                    ok = new_val >= base_val * (1.0 - tol)
+                    delta = f"{(new_val / base_val - 1.0) * 100:+.1f}%"
+                else:
+                    ok = new_val <= base_val * (1.0 + tol)
+                    delta = f"{(new_val / base_val - 1.0) * 100:+.1f}%"
+                line = (
+                    f"{section}/{case} {metric}: {base_val:.6g} -> "
+                    f"{new_val:.6g} ({delta}, {d}-is-better)"
+                )
+                if ok:
+                    print(f"OK         {line}")
+                else:
+                    failures.append(line)
+    if compared == 0:
+        failures.append(
+            "gate is vacuous: no baseline metric could be compared "
+            "(empty baseline or snapshot sections renamed?)"
+        )
+    return failures
+
+
+def print_update(baseline, snapshot):
+    out = {}
+    for section, base_records in baseline.items():
+        snap_records = snapshot.get(section, [])
+        snap_by_case = by_case(snap_records)
+        rows = []
+        for base in base_records:
+            snap = snap_by_case.get(base.get("case"))
+            if snap is None:
+                continue
+            rows.append(
+                {
+                    k: snap.get(k, v)
+                    for k, v in base.items()
+                }
+            )
+        out[section] = rows
+    print(json.dumps(out, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_BASELINE.json")
+    ap.add_argument("--snapshot", default="BENCH_PR4.json")
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="print the snapshot's gated sections in baseline form and exit",
+    )
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    snapshot = load(args.snapshot)
+    if args.update:
+        print_update(baseline, snapshot)
+        return
+
+    failures = gate(baseline, snapshot, args.tolerance)
+    if failures:
+        print(f"\n{len(failures)} bench regression(s) beyond ±{args.tolerance:.0%}:")
+        for f in failures:
+            print(f"REGRESSION {f}")
+        sys.exit(1)
+    print(f"\nbench gate clean (tolerance ±{args.tolerance:.0%})")
+
+
+if __name__ == "__main__":
+    main()
