@@ -5,11 +5,12 @@
 //! benchmark the §Perf pass optimizes.
 //!
 //! Appends machine-readable sections to `BENCH_PR1.json` (override with
-//! `ISO_PERF_SNAPSHOT`), `BENCH_PR2.json` (`ISO_PERF_SNAPSHOT_PR2`), and
+//! `ISO_PERF_SNAPSHOT`), `BENCH_PR2.json` (`ISO_PERF_SNAPSHOT_PR2`),
 //! `BENCH_PR4.json` (`ISO_PERF_SNAPSHOT_PR4`, the PP×TP sweep CI gates
-//! against `BENCH_BASELINE.json`): each engine sweep is recorded next to
-//! the simulator's prediction, so the sim-vs-engine trend direction is
-//! recorded per PR.
+//! against `BENCH_BASELINE.json`), and `BENCH_PR5.json`
+//! (`ISO_PERF_SNAPSHOT_PR5`, the fused-epilogue sweep, also CI-gated):
+//! each engine sweep is recorded next to the simulator's prediction, so
+//! the sim-vs-engine trend direction is recorded per PR.
 //!
 //! Requires `make artifacts` for the engine sections; the simulator
 //! sections always run.
@@ -21,8 +22,8 @@ use iso::model::ModelSpec;
 use iso::report::{append_perf_records, PerfRecord};
 use iso::runtime::Manifest;
 use iso::sched::{
-    mixed_iteration_s, pp_best_config, pp_bubble_fraction, pp_iteration_s, Coster,
-    MixedIteration,
+    epilogue_exposed_s, epilogue_s, fused_epilogue_iteration_s, mixed_iteration_s,
+    pp_best_config, pp_bubble_fraction, pp_iteration_s, Coster, MixedIteration,
 };
 use iso::util::bench::{bench, section};
 use iso::workload::{LenDist, TraceGen};
@@ -49,6 +50,10 @@ fn pr2_snapshot_path() -> String {
 
 fn pr4_snapshot_path() -> String {
     std::env::var("ISO_PERF_SNAPSHOT_PR4").unwrap_or_else(|_| "../BENCH_PR4.json".into())
+}
+
+fn pr5_snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT_PR5").unwrap_or_else(|_| "../BENCH_PR5.json".into())
 }
 
 /// The PP×TP factorizations of a 4-device node that the deterministic
@@ -299,6 +304,120 @@ fn engine_mixed_sweep(path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Simulator side of the PR-5 sweep (no artifacts needed, fully
+/// deterministic — gated against `BENCH_BASELINE.json` by
+/// `scripts/check_bench_regression.py` in CI): one blocking layer-stage
+/// iteration over a 4096-token chunk on the modeled 4-card 4090 with the
+/// post-collective epilogue serial vs fused into the segment stream
+/// (TokenWeave-style, DESIGN.md §12). The direction the engine sweep
+/// below must reproduce: fused exposure falls as `comm_segments` grows;
+/// unfused exposure does not.
+fn sim_fused_epilogue_sweep(path: &str) {
+    let node = NodeProfile::rtx4090(4);
+    let model = ModelSpec::mha_30b();
+    let t = 4096usize;
+    section("simulator: fused-epilogue iteration vs comm_segments (4090-4, 30b, t=4096)");
+    let mut records = Vec::new();
+    for segments in [1usize, 2, 4, 8] {
+        let fused_s = fused_epilogue_iteration_s(&node, &model, t, segments, true, true);
+        let unfused_s = fused_epilogue_iteration_s(&node, &model, t, segments, false, true);
+        let c = Coster {
+            node: node.clone(),
+            model: model.clone(),
+            int8_wire: true,
+        };
+        let epi = epilogue_s(&node, &model, t);
+        let exposed_epi_ms = model.n_layers as f64
+            * 2.0
+            * epilogue_exposed_s(c.ar_s(t, 1), epi, segments, true)
+            * 1e3;
+        println!(
+            "  segments={segments}: fused {:.2}ms unfused {:.2}ms exposed-epilogue {:.4}ms",
+            fused_s * 1e3,
+            unfused_s * 1e3,
+            exposed_epi_ms
+        );
+        records.push(
+            PerfRecord::new(
+                &format!("sim fused-epi seg{segments}"),
+                fused_s * 1e3,
+                fused_s * 1e3,
+                fused_s * 1e3,
+            )
+            .with("segments", segments as f64)
+            .with("fused_iter_ms", fused_s * 1e3)
+            .with("unfused_iter_ms", unfused_s * 1e3)
+            .with("exposed_epilogue_ms", exposed_epi_ms),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "sim_fused_epilogue", &records) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
+/// Engine side of the PR-5 sweep: measured prefill wall time and
+/// epilogue exposure across `comm_segments` × fused/unfused, plus the
+/// numerics-changing ladder-residual rider on the serial baseline.
+fn engine_fused_epilogue_sweep(path: &str) -> anyhow::Result<()> {
+    let prompt: Vec<i32> = (0..128).map(|i| ((i * 31) % 512) as i32).collect();
+    section("engine: fused-epilogue × comm_segments (tp=2, pcie-emu 40 MB/s, α=5µs)");
+    let mut records = Vec::new();
+    for fused in [false, true] {
+        for segments in [1usize, 2, 4] {
+            let mut c = cfg(Strategy::Iso, 2, CommQuant::F32, Some(40.0));
+            c.link_alpha_us = 5.0;
+            c.comm_segments = segments;
+            c.fused_epilogue = fused;
+            let mut engine = Engine::start(c)?;
+            engine.prefill(&prompt)?; // warmup
+            let label = format!("{} seg{segments}", if fused { "fused-epi" } else { "unfused" });
+            let r = bench(&format!("tp2 iso {label}"), 1, 6, || {
+                engine.prefill(&prompt).unwrap();
+            });
+            let report = engine.shutdown()?;
+            let m = report.metrics;
+            println!(
+                "    exposed {:.2}ms exposed-epilogue {:.3}ms fused_epi_rows {} seg_acks {}",
+                m.exposed_ms, m.exposed_epilogue_ms, m.fused_epilogue_rows, m.seg_acks
+            );
+            records.push(
+                PerfRecord::new(&format!("engine {label}"), r.mean_ms, r.p50_ms, r.p95_ms)
+                    .with("segments", segments as f64)
+                    .with("fused", if fused { 1.0 } else { 0.0 })
+                    .with("exposed_ms", m.exposed_ms)
+                    .with("exposed_epilogue_ms", m.exposed_epilogue_ms)
+                    .with("fused_epilogue_rows", m.fused_epilogue_rows as f64),
+            );
+        }
+    }
+    // Ladder-residual rider: numerics-changing, so it sweeps the serial
+    // baseline (where the exposed window it attacks lives) and records
+    // wall time only — no bit-exact claims.
+    for ladder in [false, true] {
+        let mut c = cfg(Strategy::Serial, 2, CommQuant::F32, Some(40.0));
+        c.link_alpha_us = 5.0;
+        c.ladder_residual = ladder;
+        let mut engine = Engine::start(c)?;
+        engine.prefill(&prompt)?; // warmup
+        let label = if ladder { "serial ladder" } else { "serial baseline" };
+        let r = bench(&format!("tp2 {label}"), 1, 6, || {
+            engine.prefill(&prompt).unwrap();
+        });
+        let report = engine.shutdown()?;
+        records.push(
+            PerfRecord::new(&format!("engine {label}"), r.mean_ms, r.p50_ms, r.p95_ms)
+                .with("ladder", if ladder { 1.0 } else { 0.0 })
+                .with("exposed_ms", report.metrics.exposed_ms),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "e2e_engine_fused_epilogue", &records) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("  wrote fused-epilogue sweep to {path}");
+    }
+    Ok(())
+}
+
 /// Simulator prediction for the exposed (un-hidden) time of one
 /// segment-streamed all-reduce: the first comm tile is always exposed;
 /// each later tile hides up to one compute tile behind it (paper §3.2,
@@ -315,6 +434,7 @@ fn main() -> anyhow::Result<()> {
     let path = snapshot_path();
     let pr2_path = pr2_snapshot_path();
     let pr4_path = pr4_snapshot_path();
+    let pr5_path = pr5_snapshot_path();
 
     // --- PR-2: simulator-predicted mixed-batching direction (no
     // artifacts needed).
@@ -323,6 +443,10 @@ fn main() -> anyhow::Result<()> {
     // --- PR-4: simulator-predicted PP×TP factorization direction (no
     // artifacts needed; gated against BENCH_BASELINE.json in CI).
     sim_pp_sweep(&pr4_path);
+
+    // --- PR-5: simulator-predicted fused-epilogue direction (no
+    // artifacts needed; gated against BENCH_BASELINE.json in CI).
+    sim_fused_epilogue_sweep(&pr5_path);
 
     // --- simulator side of the segment sweep (no artifacts needed).
     let sim_exp = SimExperiment::new(
@@ -390,6 +514,10 @@ fn main() -> anyhow::Result<()> {
         let mut c = cfg(Strategy::Iso, 2, CommQuant::F32, Some(40.0));
         c.link_alpha_us = 5.0;
         c.comm_segments = segments;
+        // The PR-1 sweep measures the legacy streamed-ack path so its
+        // rows stay comparable with earlier BENCH_PR1.json snapshots;
+        // the fused-epilogue path has its own PR-5 sweep below.
+        c.fused_epilogue = false;
         let mut engine = Engine::start(c)?;
         engine.prefill(&prompt)?; // warmup
         let r = bench(&format!("tp2 iso pcie-emu segments={segments}"), 1, 6, || {
@@ -438,6 +566,10 @@ fn main() -> anyhow::Result<()> {
 
     // --- PR-4 tentpole: PP×TP factorization sweep on the real engine.
     engine_pp_sweep(&pr4_path)?;
+
+    // --- PR-5 tentpole: fused-epilogue × segments sweep on the real
+    // engine, plus the ladder-residual rider.
+    engine_fused_epilogue_sweep(&pr5_path)?;
 
     Ok(())
 }

@@ -407,6 +407,32 @@ impl LaneSeq {
 /// (one prefill per iteration keeps TTFT bounded while the lane streams)
 /// plus up to `decode_batch` decode rows, selected round-robin so a lane
 /// wider than the cap shares iterations fairly.
+///
+/// # Examples
+///
+/// ```
+/// use iso::batch::{LaneSeq, MixedPlanner};
+/// use iso::config::{SplitPolicy, Strategy};
+///
+/// let mut planner = MixedPlanner::new(
+///     Strategy::Iso,
+///     SplitPolicy::Even,
+///     vec![16, 32, 64], // compiled chunk sizes
+///     4,                // decode lane cap
+///     256,              // max_seq
+/// );
+/// let live = vec![
+///     // Slot 0 still needs its prefill; slot 1 is decoding.
+///     LaneSeq { slot: 0, prompt_len: 64, prefilled: false, last_token: 0, offset: 0, decode_left: 4 },
+///     LaneSeq { slot: 1, prompt_len: 64, prefilled: true, last_token: 7, offset: 64, decode_left: 4 },
+/// ];
+/// let plan = planner.plan(&live, None);
+/// let prefill = plan.prefill.expect("head-of-line prefill");
+/// assert_eq!(prefill.slot, 0);
+/// assert_eq!(prefill.chunks.iter().map(|c| c.len).sum::<usize>(), 64);
+/// assert_eq!(plan.decode.len(), 1); // slot 1 rides the fused lane
+/// assert_eq!(plan.decode[0].slot, 1);
+/// ```
 #[derive(Clone, Debug)]
 pub struct MixedPlanner {
     /// Overlap strategy the prefill chunk sets follow.

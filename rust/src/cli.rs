@@ -92,6 +92,14 @@ COMMANDS:
               --spec-k N (speculative decoding: drafts verified per lane
                 sequence per iteration; 0 = off)
               --spec-ngram N (self-draft n-gram order; default 2)
+              --comm-segments N (row-segments per streamed collective)
+              --fused-epilogue true|false (fold the residual epilogue into
+                the collective's segment callbacks, TokenWeave-style;
+                bit-exact, default on)
+              --ladder-residual true|false (NUMERICS-CHANGING: the
+                serial prefill / per-sequence decode loops compute the
+                MLP from the pre-attention residual so both collectives
+                overlap it; fused lanes unaffected; default off)
               --config FILE (e.g. configs/engine-iso.conf; flags override)
   table1      print the paper's Table 1 from the calibrated simulator
               --strategy iso|gemm-overlap|request-overlap  --csv FILE

@@ -239,8 +239,34 @@ impl RingHandle {
     /// right after the reduce-scatter phase, then every received
     /// sub-message during the all-gather. Ranges are non-empty, disjoint,
     /// and cover `[0, rows)` exactly, so a consumer can stream the result
-    /// out (e.g. the coordinator's per-segment acks) without waiting for
-    /// the tail of the collective. Returns wire bytes sent by this rank.
+    /// out (e.g. the coordinator's per-segment epilogues) without waiting
+    /// for the tail of the collective. Returns wire bytes sent by this
+    /// rank.
+    ///
+    /// # Examples
+    ///
+    /// Streaming the reduced rows out while the collective's tail is
+    /// still on the ring:
+    ///
+    /// ```
+    /// use iso::collective::run_on_ring;
+    /// use iso::config::CommQuant;
+    ///
+    /// // Two ranks each contribute a 4×2 tensor of ones and twos.
+    /// let results = run_on_ring(2, |r, h| {
+    ///     let mut data = vec![r as f32 + 1.0; 8];
+    ///     let mut rows_seen = 0;
+    ///     h.allreduce_seg_with(&mut data, 4, 2, CommQuant::F32, 2, |a, b, vals| {
+    ///         assert_eq!(vals.len(), (b - a) * 2);
+    ///         rows_seen += b - a;
+    ///     });
+    ///     (data, rows_seen)
+    /// });
+    /// for (data, rows_seen) in results {
+    ///     assert_eq!(rows_seen, 4); // every row finalized exactly once
+    ///     assert!(data.iter().all(|&x| x == 3.0)); // 1 + 2 everywhere
+    /// }
+    /// ```
     pub fn allreduce_seg_with<F>(
         &mut self,
         data: &mut [f32],
@@ -457,6 +483,50 @@ impl RingHandle {
         self.sent_bytes - before
     }
 
+    /// [`RingHandle::allreduce_seg_with`] with the callback bound to a
+    /// [`FusedEpilogue`] (DESIGN.md §12): every finalized row-range is
+    /// immediately residual-added (and, when configured, RMSNorm-ed and
+    /// prologue-GEMM-ed) while the collective's remaining segments are
+    /// still on the wire, so by the time the last sub-message lands the
+    /// layer epilogue is already materialized. Bit-identical to running
+    /// [`RingHandle::allreduce_seg`] first and applying the epilogue once
+    /// over all rows (every epilogue stage is row-local). Returns wire
+    /// bytes sent by this rank.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use iso::collective::{run_on_ring, FusedEpilogue};
+    /// use iso::config::CommQuant;
+    ///
+    /// let (rows, cols) = (4usize, 2usize);
+    /// let results = run_on_ring(2, |r, h| {
+    ///     let mut partial = vec![r as f32 + 1.0; rows * cols];
+    ///     let mut residual = vec![10.0f32; rows * cols];
+    ///     let mut ep = FusedEpilogue::residual_only(&mut residual, cols);
+    ///     h.allreduce_seg_fused(&mut partial, rows, cols, CommQuant::F32, 2, &mut ep);
+    ///     residual
+    /// });
+    /// for residual in results {
+    ///     assert!(residual.iter().all(|&x| x == 13.0)); // 10 + (1 + 2)
+    /// }
+    /// ```
+    pub fn allreduce_seg_fused(
+        &mut self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+        segments: usize,
+        epilogue: &mut FusedEpilogue<'_>,
+    ) -> u64 {
+        assert_eq!(epilogue.cols, cols, "epilogue width mismatch");
+        assert_eq!(epilogue.residual.len(), rows * cols, "epilogue residual shape");
+        self.allreduce_seg_with(data, rows, cols, quant, segments, |a, b, vals| {
+            epilogue.apply(a, b, vals)
+        })
+    }
+
     /// Hand a spent f32 buffer back to this rank's pool (used by the
     /// coordinator's comm thread to recycle job payloads).
     pub fn recycle_f32(&mut self, v: Vec<f32>) {
@@ -466,6 +536,147 @@ impl RingHandle {
     /// (allocs, reuses) counters of this rank's buffer pool.
     pub fn pool_stats(&self) -> (u64, u64) {
         (self.pool.allocs, self.pool.reuses)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused epilogue (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Host-side row-wise RMSNorm:
+/// `out[r] = x[r] · rsqrt(mean(x[r]²) + eps) ⊙ gamma`, f32 accumulation —
+/// the same semantics as the engine's compiled kernel
+/// (`python/compile/kernels/rmsnorm.py`, `eps = 1e-5`). Row-local by
+/// construction, so applying it to any row-slice of a tensor is
+/// **bit-identical** to applying it to the whole tensor — the property
+/// that lets [`FusedEpilogue`] normalize segment-by-segment.
+pub fn rmsnorm_rows(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    gamma: &[f32],
+    eps: f32,
+    out: &mut [f32],
+) {
+    assert!(cols >= 1, "rmsnorm over zero-width rows");
+    assert_eq!(x.len(), rows * cols, "rmsnorm input shape");
+    assert_eq!(out.len(), rows * cols, "rmsnorm output shape");
+    assert_eq!(gamma.len(), cols, "rmsnorm weight width");
+    for (xr, or) in x.chunks_exact(cols).zip(out.chunks_exact_mut(cols)) {
+        let mut ss = 0.0f32;
+        for &v in xr {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / cols as f32 + eps).sqrt();
+        for ((o, &v), &g) in or.iter_mut().zip(xr).zip(gamma) {
+            *o = v * inv * g;
+        }
+    }
+}
+
+/// Row-major GEMM `out = a × w` (`a: rows × k`, `w: k × n`) — the
+/// host-side stand-in for a next-op prologue GEMM. Each output row
+/// depends only on input row `r`, so row-sliced execution is bit-identical
+/// to one whole-tensor launch — the property [`FusedEpilogue`] relies on
+/// to start the next op's first rows while the collective's tail is still
+/// on the ring.
+pub fn gemm_rows(a: &[f32], rows: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    assert!(k >= 1, "gemm over zero-width rows");
+    assert!(n >= 1, "gemm with zero-width output");
+    assert_eq!(a.len(), rows * k, "gemm lhs shape");
+    assert_eq!(w.len(), k * n, "gemm weight shape");
+    assert_eq!(out.len(), rows * n, "gemm output shape");
+    for (ar, or) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        or.fill(0.0);
+        for (i, &x) in ar.iter().enumerate() {
+            for (o, &ww) in or.iter_mut().zip(&w[i * n..(i + 1) * n]) {
+                *o += x * ww;
+            }
+        }
+    }
+}
+
+/// The next-op prologue of a [`FusedEpilogue`]: a row-sliced GEMM
+/// (`weight: cols × n`) whose output row `r` depends only on epilogue row
+/// `r`, so each segment's rows can start the next op immediately.
+pub struct Prologue<'a> {
+    /// `cols × n` row-major weight of the next op's first GEMM.
+    pub weight: &'a [f32],
+    /// Output width of the prologue GEMM.
+    pub n: usize,
+    /// `rows × n` output buffer the prologue writes into.
+    pub out: &'a mut [f32],
+}
+
+/// The per-segment layer epilogue fused into a segmented all-reduce
+/// (TokenWeave-style, DESIGN.md §12): residual-add, then optionally the
+/// next op's RMSNorm slice and a row-sliced prologue GEMM, applied to
+/// each row-range the moment the collective finalizes it
+/// ([`RingHandle::allreduce_seg_fused`]). Every stage is row-local, so
+/// the fused per-segment application is **bit-identical** to running the
+/// full collective first and the epilogue once over all rows — pinned by
+/// `rust/tests/fused_epilogue.rs` across segment counts, rank counts,
+/// wire formats, and the engine's scheduler shapes.
+pub struct FusedEpilogue<'a> {
+    /// Residual stream the reduced rows accumulate into (`rows × cols`).
+    pub residual: &'a mut [f32],
+    /// Row width (the model's `d_model` in the engine).
+    pub cols: usize,
+    /// Optional next-op RMSNorm: `(gamma, eps)`; requires `normed`.
+    pub norm: Option<(&'a [f32], f32)>,
+    /// `rows × cols` output of the RMSNorm stage (post-residual rows
+    /// normalized), required when `norm` is set.
+    pub normed: Option<&'a mut [f32]>,
+    /// Optional row-sliced prologue GEMM fed by the normed rows (or the
+    /// raw residual rows when `norm` is unset).
+    pub prologue: Option<Prologue<'a>>,
+}
+
+impl<'a> FusedEpilogue<'a> {
+    /// An epilogue that only folds the residual-add into the collective —
+    /// what the engine's comm threads run (the compiled next-op stage
+    /// applies its own norm, so the engine path stays bit-exact).
+    pub fn residual_only(residual: &'a mut [f32], cols: usize) -> FusedEpilogue<'a> {
+        FusedEpilogue { residual, cols, norm: None, normed: None, prologue: None }
+    }
+
+    /// Apply the epilogue to the finalized rows `[row_start, row_end)`
+    /// whose reduced values are `reduced` (length `(row_end − row_start) ×
+    /// cols`). Safe to call per segment in any order; ranges must be
+    /// disjoint (as [`RingHandle::allreduce_seg_with`] guarantees).
+    pub fn apply(&mut self, row_start: usize, row_end: usize, reduced: &[f32]) {
+        let cols = self.cols;
+        let lo = row_start * cols;
+        let hi = row_end * cols;
+        debug_assert_eq!(reduced.len(), hi - lo, "reduced segment shape");
+        for (o, v) in self.residual[lo..hi].iter_mut().zip(reduced) {
+            *o += *v;
+        }
+        if let Some((gamma, eps)) = self.norm {
+            let normed = self.normed.as_deref_mut().expect("norm requires a normed buffer");
+            rmsnorm_rows(
+                &self.residual[lo..hi],
+                row_end - row_start,
+                cols,
+                gamma,
+                eps,
+                &mut normed[lo..hi],
+            );
+        }
+        if let Some(p) = self.prologue.as_mut() {
+            let src: &[f32] = match self.normed.as_deref() {
+                Some(nrm) => &nrm[lo..hi],
+                None => &self.residual[lo..hi],
+            };
+            gemm_rows(
+                src,
+                row_end - row_start,
+                cols,
+                p.weight,
+                p.n,
+                &mut p.out[row_start * p.n..row_end * p.n],
+            );
+        }
     }
 }
 
@@ -1114,6 +1325,119 @@ mod tests {
         assert!(send_elapsed < Duration::from_millis(15), "send must not block");
         assert!(recv_elapsed >= Duration::from_millis(15), "arrival beat the deadline");
         assert_eq!(d, vec![1.0; 64]);
+    }
+
+    #[test]
+    fn rmsnorm_rows_row_local_bitwise() {
+        // Applying the norm to a row-slice equals applying it to the
+        // whole tensor, bit for bit — the segment-streaming invariant.
+        let (rows, cols) = (9usize, 6usize);
+        let mut rng = Rng::new(31);
+        let x = rng.normal_vec(rows * cols, 2.0);
+        let gamma = rng.normal_vec(cols, 1.0);
+        let mut whole = vec![0.0f32; rows * cols];
+        rmsnorm_rows(&x, rows, cols, &gamma, 1e-5, &mut whole);
+        for split in [1usize, 4, 8] {
+            let mut sliced = vec![0.0f32; rows * cols];
+            let (head, _) = x.split_at(split * cols);
+            rmsnorm_rows(head, split, cols, &gamma, 1e-5, &mut sliced[..split * cols]);
+            rmsnorm_rows(
+                &x[split * cols..],
+                rows - split,
+                cols,
+                &gamma,
+                1e-5,
+                &mut sliced[split * cols..],
+            );
+            assert_eq!(whole, sliced, "split={split}: norm not row-local");
+        }
+        // Sanity: unit gamma + constant rows normalize to ~±1.
+        let ones = vec![1.0f32; cols];
+        let threes = vec![3.0f32; cols];
+        let mut out = vec![0.0f32; cols];
+        rmsnorm_rows(&threes, 1, cols, &ones, 0.0, &mut out);
+        for v in out {
+            assert!((v - 1.0).abs() < 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn gemm_rows_matches_hand_result_and_is_row_local() {
+        // 2×3 × 3×2, hand-checked.
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let mut out = [0.0f32; 4];
+        gemm_rows(&a, 2, 3, &w, 2, &mut out);
+        assert_eq!(out, [4.0, 5.0, 10.0, 11.0]);
+        // Row-sliced equals whole, bitwise.
+        let mut rng = Rng::new(5);
+        let (rows, k, n) = (7usize, 5usize, 4usize);
+        let a = rng.normal_vec(rows * k, 1.5);
+        let w = rng.normal_vec(k * n, 1.5);
+        let mut whole = vec![0.0f32; rows * n];
+        gemm_rows(&a, rows, k, &w, n, &mut whole);
+        let mut sliced = vec![0.0f32; rows * n];
+        for r in 0..rows {
+            gemm_rows(&a[r * k..(r + 1) * k], 1, k, &w, n, &mut sliced[r * n..(r + 1) * n]);
+        }
+        assert_eq!(whole, sliced, "gemm not row-local");
+    }
+
+    #[test]
+    fn fused_epilogue_segmented_matches_monolithic_bitwise() {
+        // The PR-5 invariant at the collective layer: fusing the full
+        // epilogue (residual + norm + prologue) into the per-segment
+        // callbacks equals reducing first and applying once — bit for
+        // bit, for every wire format and segment count.
+        let (rows, cols, n_out) = (11usize, 6usize, 4usize);
+        for quant in [CommQuant::F32, CommQuant::Int8] {
+            for n in [1usize, 2, 4] {
+                let mut rng = Rng::new(600 + n as u64);
+                let parts: Vec<Vec<f32>> =
+                    (0..n).map(|_| rng.normal_vec(rows * cols, 1.0)).collect();
+                let res0 = rng.normal_vec(rows * cols, 1.0);
+                let gamma = rng.normal_vec(cols, 1.0);
+                let w = rng.normal_vec(cols * n_out, 1.0);
+                // Gold: monolithic reduce, then one whole-tensor epilogue.
+                let gold = run_on_ring(n, |r, h| {
+                    let mut d = parts[r].clone();
+                    h.allreduce_seg(&mut d, rows, cols, quant, 1);
+                    let mut res = res0.clone();
+                    let mut normed = vec![0.0f32; rows * cols];
+                    let mut out = vec![0.0f32; rows * n_out];
+                    let mut ep = FusedEpilogue {
+                        residual: &mut res,
+                        cols,
+                        norm: Some((&gamma, 1e-5)),
+                        normed: Some(&mut normed),
+                        prologue: Some(Prologue { weight: &w, n: n_out, out: &mut out }),
+                    };
+                    ep.apply(0, rows, &d);
+                    (res, normed, out)
+                });
+                for segments in [1usize, 2, 3, 8] {
+                    let fused = run_on_ring(n, |r, h| {
+                        let mut d = parts[r].clone();
+                        let mut res = res0.clone();
+                        let mut normed = vec![0.0f32; rows * cols];
+                        let mut out = vec![0.0f32; rows * n_out];
+                        let mut ep = FusedEpilogue {
+                            residual: &mut res,
+                            cols,
+                            norm: Some((&gamma, 1e-5)),
+                            normed: Some(&mut normed),
+                            prologue: Some(Prologue { weight: &w, n: n_out, out: &mut out }),
+                        };
+                        h.allreduce_seg_fused(&mut d, rows, cols, quant, segments, &mut ep);
+                        (res, normed, out)
+                    });
+                    assert_eq!(
+                        gold, fused,
+                        "quant={quant:?} n={n} segments={segments}: fused epilogue diverged"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

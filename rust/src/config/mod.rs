@@ -167,6 +167,27 @@ pub struct EngineConfig {
     /// bit-stable against per-row execution (lane *collectives* stay
     /// fused either way).
     pub lane_gemm: bool,
+    /// Fused post-collective epilogue (DESIGN.md §12): collectives carry
+    /// their residual tensor to the comm thread, which applies each
+    /// reduced row-segment into it the moment the segment finalizes —
+    /// TokenWeave-style — so the residual-add overlaps the collective's
+    /// in-flight tail instead of running serially after it. Bit-exact to
+    /// the unfused path (same adds, same order per element; pinned by
+    /// `rust/tests/fused_epilogue.rs`). `false` = legacy per-segment acks
+    /// applied on the compute thread, kept for A/B comparison.
+    pub fused_epilogue: bool,
+    /// Ladder-residual reordering (DESIGN.md §12, **numerics-changing**,
+    /// opt-in): in the per-sequence blocking layer loops (serial-strategy
+    /// prefill and legacy per-sequence decode) the MLP reads the
+    /// *pre-attention* residual so both block collectives are in flight
+    /// while it computes, and the two reduced partials fold in
+    /// back-to-back. Changes activations (the model was not trained with
+    /// this dataflow), so it is excluded from every bit-exact pin and off
+    /// by default. The fused decode/verify lanes and the ISO/mixed
+    /// schedules ignore it — the lanes so iteration composition never
+    /// changes a sequence's math, the ISO interleave because it already
+    /// fills those windows.
+    pub ladder_residual: bool,
     /// Speculative decoding (DESIGN.md §10): draft tokens verified per
     /// lane sequence per iteration. `0` = off (the one-token decode
     /// lane); `k > 0` widens each lane entry into a `k + 1`-row verify
@@ -205,6 +226,8 @@ impl Default for EngineConfig {
             decode_batch: 8,
             mixed_iterations: true,
             lane_gemm: true,
+            fused_epilogue: true,
+            ladder_residual: false,
             spec_k: 0,
             spec_ngram: 2,
             decode_steps: 0,
@@ -338,6 +361,12 @@ impl EngineConfig {
                     cfg.mixed_iterations = parse_bool(v, "mixed_iterations")?
                 }
                 "engine.lane_gemm" => cfg.lane_gemm = parse_bool(v, "lane_gemm")?,
+                "engine.fused_epilogue" => {
+                    cfg.fused_epilogue = parse_bool(v, "fused_epilogue")?
+                }
+                "engine.ladder_residual" => {
+                    cfg.ladder_residual = parse_bool(v, "ladder_residual")?
+                }
                 "engine.spec_k" => {
                     cfg.spec_k = v.parse().map_err(|_| format!("bad spec_k {v:?}"))?
                 }
@@ -436,6 +465,24 @@ mod tests {
         assert!(EngineConfig::from_map(&map).is_err());
         let map = parse_config_str("[engine]\nlane_gemm = off").unwrap();
         assert!(!EngineConfig::from_map(&map).unwrap().lane_gemm);
+    }
+
+    #[test]
+    fn fused_epilogue_and_ladder_knobs() {
+        let cfg = EngineConfig::default();
+        assert!(cfg.fused_epilogue, "fused epilogue is the default path");
+        assert!(!cfg.ladder_residual, "numerics-changing mode must be opt-in");
+        let map = parse_config_str(
+            "[engine]\nfused_epilogue = off\nladder_residual = on",
+        )
+        .unwrap();
+        let cfg = EngineConfig::from_map(&map).unwrap();
+        assert!(!cfg.fused_epilogue);
+        assert!(cfg.ladder_residual);
+        let bad = parse_config_str("[engine]\nfused_epilogue = maybe").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+        let bad = parse_config_str("[engine]\nladder_residual = 2").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
     }
 
     #[test]

@@ -40,6 +40,25 @@
 //! are recycled back to the comm thread — the job path allocates nothing
 //! in steady state.
 //!
+//! Fused epilogue (DESIGN.md §12, the default): under `fused_epilogue`
+//! every collective — prefill chunks, the fused decode/verify lanes, and
+//! every PP stage's slice — ships its residual tensor along with the
+//! partial, and the comm thread folds each reduced row-segment into it
+//! inside the collective's own segment callback
+//! ([`crate::collective::FusedEpilogue`]). The residual-add of segment
+//! `k` therefore overlaps the wire time of segments `k+1..`, and the one
+//! returning ack hands the finished tensor back — the exposed epilogue
+//! collapses from a per-layer serial window to a buffer swap. Bit-exact
+//! to the unfused path (same f32 adds per element, same order). The
+//! opt-in `ladder_residual` mode goes further and is numerics-changing:
+//! the per-sequence blocking layer loops (serial prefill, legacy
+//! decode) compute the MLP from the *pre-attention* residual so both
+//! block collectives fly while it runs (Ladder-Residual style); it
+//! never ships residuals (the tensor stays compute-side for the next
+//! block) and is excluded from every bit-exact pin. The fused lanes and
+//! the ISO/mixed schedules ignore it, so a serving configuration's lane
+//! math never depends on iteration composition.
+//!
 //! Mixed iterations (DESIGN.md §9): `serve_trace` no longer runs one
 //! request at a time. Each leader iteration broadcasts a `Job::Step`
 //! composing the head-of-line prefill's ISO chunks with a **fused decode
@@ -78,7 +97,7 @@ use crate::batch::{
     accept_count, plan_prefill_pp, ChunkJob, DecodeSlot, DraftProposer, LaneSeq, MixedPlanner,
     NGramProposer, SpecSlot,
 };
-use crate::collective::{ring, seg_range, stage_grid, RingHandle, StagePort};
+use crate::collective::{ring, seg_range, stage_grid, FusedEpilogue, RingHandle, StagePort};
 use crate::config::{CommQuant, EngineConfig, Strategy};
 use crate::kv::KvManager;
 use crate::metrics::{EngineMetrics, Timer};
@@ -131,13 +150,17 @@ enum Reply {
 /// Work handed from a compute thread to its comm thread: one partial to
 /// all-reduce, streamed back as `segments`-granular acks. `fused` marks a
 /// decode-lane batch reduced rank-ordered (`allreduce_rows_fused`) so the
-/// result is bit-identical to per-row collectives.
+/// result is bit-identical to per-row collectives. Under the fused
+/// epilogue (DESIGN.md §12) `residual` carries the chunk's residual
+/// tensor; the comm thread applies each reduced segment into it the
+/// moment the segment finalizes and one ack returns the finished tensor.
 struct CommJob {
     data: Vec<f32>,
     rows: usize,
     cols: usize,
     segments: usize,
     fused: bool,
+    residual: Option<Vec<f32>>,
 }
 
 /// Rank-0 logits produced by one worker-side step: the prefill's
@@ -150,6 +173,14 @@ struct SegAck {
     row_start: usize,
     rows: usize,
     data: Vec<f32>,
+    /// `true`: the comm thread already applied the epilogue
+    /// (DESIGN.md §12) — `data` is the finished residual tensor to adopt,
+    /// one ack per collective. `false`: `data` is a reduced row-segment
+    /// the compute thread adds in place (legacy path).
+    fused: bool,
+    /// A spent submit payload riding back for buffer reuse, keeping the
+    /// fused-epilogue path allocation-free in steady state.
+    spent: Option<Vec<f32>>,
 }
 
 /// Contiguous layer range `[lo, hi)` owned by pipeline stage `stage` of
@@ -189,8 +220,20 @@ pub struct WorkerStats {
     /// `fused_allreduces` this gives the mean verify-window width the
     /// spec-decode lane actually achieved (DESIGN.md §10).
     pub fused_rows: u64,
-    /// Per-segment acks exchanged between the comm and compute threads.
+    /// Per-segment acks exchanged between the comm and compute threads
+    /// (one per collective under the fused epilogue).
     pub seg_acks: u64,
+    /// Compute-thread time spent applying reduced rows into the residual
+    /// — the *exposed* post-collective epilogue (DESIGN.md §12). Near
+    /// zero under `fused_epilogue`, where the comm thread applies each
+    /// segment while the collective's tail is still on the ring.
+    pub epilogue_ms: f64,
+    /// Rows whose residual epilogue ran comm-side, fused into the
+    /// collective's segment callbacks.
+    pub fused_epilogue_rows: u64,
+    /// Comm-thread time inside the fused epilogue (hidden behind the
+    /// in-flight wire segments, not behind compute).
+    pub fused_epilogue_ms: f64,
     /// Activation bytes this rank sent to the next pipeline stage.
     pub p2p_bytes: u64,
     /// Activation messages this rank sent to the next pipeline stage.
@@ -311,6 +354,12 @@ struct ComputeWorker {
     comm_segments: usize,
     /// B-row lane-MLP GEMM fusion (config `lane_gemm`).
     lane_gemm: bool,
+    /// Comm-side fused epilogue (config `fused_epilogue`, DESIGN.md §12):
+    /// collectives carry their residual and come back fully applied.
+    fused_epilogue: bool,
+    /// Ladder-residual reordering (config `ladder_residual`,
+    /// numerics-changing, DESIGN.md §12).
+    ladder: bool,
     // compiled stages keyed by chunk length
     embed: BTreeMap<usize, Executable>,
     attn: BTreeMap<usize, Executable>,
@@ -436,6 +485,8 @@ impl ComputeWorker {
             port,
             comm_segments: cfg.comm_segments.max(1),
             lane_gemm: cfg.lane_gemm,
+            fused_epilogue: cfg.fused_epilogue,
+            ladder: cfg.ladder_residual,
             embed,
             attn,
             mlp,
@@ -507,43 +558,96 @@ impl ComputeWorker {
 
     /// Submit a partial for all-reduce; the reduced rows stream back as
     /// per-segment acks consumed by [`ComputeWorker::recv_reduced_apply`].
-    fn submit(&mut self, data: Vec<f32>, rows: usize) {
-        let cols = self.d_model;
-        self.stats.allreduces += 1;
-        self.to_comm
-            .send(CommJob { data, rows, cols, segments: self.comm_segments, fused: false })
-            .expect("comm thread hung up");
+    /// Under the fused epilogue (DESIGN.md §12) the chunk's residual
+    /// tensor `x` rides along: the comm thread folds each reduced segment
+    /// into it the moment the segment finalizes, and the single returning
+    /// ack carries the fully-updated tensor — the residual-add overlaps
+    /// the collective's in-flight tail instead of running after it.
+    fn submit(&mut self, data: Vec<f32>, rows: usize, x: &mut Tensor) {
+        let residual = self.take_residual(x, rows);
+        self.submit_with(data, rows, self.comm_segments, false, residual);
+    }
+
+    /// [`ComputeWorker::submit`] without the residual payload — the
+    /// ladder-residual paths keep the tensor compute-side because the
+    /// next block still reads it while the collective is in flight.
+    fn submit_plain(&mut self, data: Vec<f32>, rows: usize) {
+        self.submit_with(data, rows, self.comm_segments, false, None);
     }
 
     /// Submit a fused decode-lane batch: one rank-ordered B-row
     /// collective whose result is bit-identical to B per-row collectives.
-    fn submit_fused(&mut self, data: Vec<f32>, rows: usize) {
+    /// The lane's residual rides along under the fused epilogue.
+    fn submit_fused(&mut self, data: Vec<f32>, rows: usize, x: &mut Tensor) {
+        let residual = self.take_residual(x, rows);
+        self.submit_with(data, rows, 1, true, residual);
+    }
+
+    /// Detach `x`'s buffer as the job's residual payload when the fused
+    /// epilogue is on; `x` keeps its shape and readopts the (updated)
+    /// buffer at the matching [`ComputeWorker::recv_reduced_apply`].
+    fn take_residual(&mut self, x: &mut Tensor, rows: usize) -> Option<Vec<f32>> {
+        if !self.fused_epilogue {
+            return None;
+        }
+        debug_assert_eq!(x.data.len(), rows * self.d_model, "residual shape");
+        Some(std::mem::take(&mut x.data))
+    }
+
+    fn submit_with(
+        &mut self,
+        data: Vec<f32>,
+        rows: usize,
+        segments: usize,
+        fused: bool,
+        residual: Option<Vec<f32>>,
+    ) {
         let cols = self.d_model;
         self.stats.allreduces += 1;
         self.to_comm
-            .send(CommJob { data, rows, cols, segments: 1, fused: true })
+            .send(CommJob { data, rows, cols, segments, fused, residual })
             .expect("comm thread hung up");
     }
 
-    /// Consume the next reduced result (FIFO) and add it into `x` — the
-    /// residual connection — row-segment by row-segment as acks land.
-    /// Segment 0 is applied while the collective's tail is still on the
-    /// ring; only time actually blocked counts as stall (exposed comm).
+    /// Consume the next reduced result (FIFO) and fold it into `x` — the
+    /// residual connection. Legacy path: add row-segment by row-segment
+    /// as acks land (segment 0 applies while the collective's tail is
+    /// still on the ring). Fused-epilogue path (DESIGN.md §12): the comm
+    /// thread already applied every segment into the shipped residual, so
+    /// the single ack just hands the finished buffer back and the exposed
+    /// epilogue collapses to a pointer swap. Only time actually blocked
+    /// counts as stall (exposed comm).
     fn recv_reduced_apply(&mut self, x: &mut Tensor) {
         let cols = self.d_model;
-        let rows = x.data.len() / cols;
+        let rows = x.shape.first().copied().unwrap_or(0);
         let mut got = 0;
         while got < rows {
             let t = Timer::start();
             let ack = self.from_comm.recv().expect("comm thread hung up");
             self.stats.stall_ms += t.elapsed_ms();
             self.stats.seg_acks += 1;
+            if let Some(buf) = ack.spent {
+                // Spent submit payloads return for reuse (§Perf).
+                if self.scratch.len() < 4 {
+                    self.scratch.push(buf);
+                } else {
+                    self.recycle_tx.send(buf).ok();
+                }
+            }
+            if ack.fused {
+                debug_assert_eq!(ack.data.len(), rows * cols, "fused ack shape");
+                x.data = ack.data;
+                got = rows;
+                continue;
+            }
+            let t_epi = Timer::start();
             let lo = ack.row_start * cols;
             let hi = lo + ack.rows * cols;
             debug_assert!(hi <= x.data.len(), "ack outside tensor");
             for (o, v) in x.data[lo..hi].iter_mut().zip(&ack.data) {
                 *o += *v;
             }
+            self.stats.epilogue_ms += t_epi.elapsed_ms();
             got += ack.rows;
             // Return the buffer for reuse: a few stay compute-side for
             // the fused lane's submits, the rest refill the comm thread's
@@ -707,12 +811,12 @@ impl ComputeWorker {
                         self.recv_reduced_apply(&mut xs[i]);
                     }
                     let partial = self.run_attn(slot, l, &xs[i], chunks[i].offset)?;
-                    self.submit(partial.data, chunks[i].len);
+                    self.submit(partial.data, chunks[i].len, &mut xs[i]);
                 }
                 for i in g0..g1 {
                     self.recv_reduced_apply(&mut xs[i]);
                     let partial = self.run_mlp(l, &xs[i])?;
-                    self.submit(partial.data, chunks[i].len);
+                    self.submit(partial.data, chunks[i].len, &mut xs[i]);
                 }
             }
             for x in xs.iter_mut().take(g1).skip(g0) {
@@ -730,6 +834,9 @@ impl ComputeWorker {
     /// Under pipeline stages the chunk-major order forwards each chunk
     /// the moment its last layer lands, so even the serial baseline
     /// pipelines across stages (it just never overlaps within one).
+    /// With `ladder_residual` (DESIGN.md §12, numerics-changing) the MLP
+    /// reads the pre-attention residual so both block collectives are in
+    /// flight while it computes.
     fn prefill_blocking(
         &mut self,
         slot: usize,
@@ -740,12 +847,21 @@ impl ComputeWorker {
         for c in chunks {
             let mut x = self.chunk_in(tokens, c)?;
             for l in 0..self.local_layers {
-                let partial = self.run_attn(slot, l, &x, c.offset)?;
-                self.submit(partial.data, c.len);
-                self.recv_reduced_apply(&mut x);
-                let partial = self.run_mlp(l, &x)?;
-                self.submit(partial.data, c.len);
-                self.recv_reduced_apply(&mut x);
+                if self.ladder {
+                    let pa = self.run_attn(slot, l, &x, c.offset)?;
+                    self.submit_plain(pa.data, c.len);
+                    let pm = self.run_mlp(l, &x)?;
+                    self.submit_plain(pm.data, c.len);
+                    self.recv_reduced_apply(&mut x);
+                    self.recv_reduced_apply(&mut x);
+                } else {
+                    let partial = self.run_attn(slot, l, &x, c.offset)?;
+                    self.submit(partial.data, c.len, &mut x);
+                    self.recv_reduced_apply(&mut x);
+                    let partial = self.run_mlp(l, &x)?;
+                    self.submit(partial.data, c.len, &mut x);
+                    self.recv_reduced_apply(&mut x);
+                }
             }
             if !self.is_last_stage() {
                 self.send_stage(std::mem::take(&mut x));
@@ -766,12 +882,21 @@ impl ComputeWorker {
             self.recv_stage(1)?
         };
         for l in 0..self.local_layers {
-            let partial = self.run_attn(slot, l, &x, offset)?;
-            self.submit(partial.data, 1);
-            self.recv_reduced_apply(&mut x);
-            let partial = self.run_mlp(l, &x)?;
-            self.submit(partial.data, 1);
-            self.recv_reduced_apply(&mut x);
+            if self.ladder {
+                let pa = self.run_attn(slot, l, &x, offset)?;
+                self.submit_plain(pa.data, 1);
+                let pm = self.run_mlp(l, &x)?;
+                self.submit_plain(pm.data, 1);
+                self.recv_reduced_apply(&mut x);
+                self.recv_reduced_apply(&mut x);
+            } else {
+                let partial = self.run_attn(slot, l, &x, offset)?;
+                self.submit(partial.data, 1, &mut x);
+                self.recv_reduced_apply(&mut x);
+                let partial = self.run_mlp(l, &x)?;
+                self.submit(partial.data, 1, &mut x);
+                self.recv_reduced_apply(&mut x);
+            }
         }
         if !self.is_last_stage() {
             self.send_stage(x);
@@ -796,16 +921,16 @@ impl ComputeWorker {
         Ok(x)
     }
 
-    /// Lane attention for one layer: per-slot t=1 attention (each row has
-    /// its own cache and offset), partials concatenated into **one**
-    /// fused B-row collective. `row` is a reusable 1×d scratch tensor.
-    fn lane_attn_submit(
+    /// Assemble the lane's per-slot t=1 attention partials (each row has
+    /// its own cache and offset) into one B-row buffer ready for a fused
+    /// collective. `row` is a reusable 1×d scratch tensor.
+    fn lane_attn_partial(
         &mut self,
         layer: usize,
         lane: &[DecodeSlot],
         x_lane: &Tensor,
         row: &mut Tensor,
-    ) -> Result<()> {
+    ) -> Result<Vec<f32>> {
         let d = self.d_model;
         let mut fused = self.take_scratch(lane.len() * d);
         for (j, s) in lane.iter().enumerate() {
@@ -814,20 +939,37 @@ impl ComputeWorker {
             let p = self.run_attn(s.slot, layer, &*row, s.offset)?;
             fused[j * d..(j + 1) * d].copy_from_slice(&p.data);
         }
-        self.submit_fused(fused, lane.len());
+        Ok(fused)
+    }
+
+    /// Lane attention for one layer: per-slot t=1 attention, partials
+    /// concatenated into **one** fused B-row collective (the lane's
+    /// residual rides along under the fused epilogue).
+    fn lane_attn_submit(
+        &mut self,
+        layer: usize,
+        lane: &[DecodeSlot],
+        x_lane: &mut Tensor,
+        row: &mut Tensor,
+    ) -> Result<()> {
+        let p = self.lane_attn_partial(layer, lane, &*x_lane, row)?;
+        self.submit_fused(p, lane.len(), x_lane);
         Ok(())
     }
 
-    /// Lane MLP for one layer: position-free, so it runs as **one B-row
-    /// GEMM** when a stage of exactly that width is compiled; otherwise
-    /// per-row launches. Either way the partials go out as one fused
-    /// collective.
-    fn lane_mlp_submit(&mut self, layer: usize, x_lane: &Tensor, row: &mut Tensor) -> Result<()> {
+    /// The lane's MLP partial for one layer: position-free, so it runs as
+    /// **one B-row GEMM** when a stage of exactly that width is compiled;
+    /// otherwise per-row launches.
+    fn lane_mlp_partial(
+        &mut self,
+        layer: usize,
+        x_lane: &Tensor,
+        row: &mut Tensor,
+    ) -> Result<Vec<f32>> {
         let d = self.d_model;
         let b = x_lane.shape[0];
         if b > 1 && self.lane_gemm && self.mlp.contains_key(&b) {
-            let p = self.run_mlp(layer, x_lane)?;
-            self.submit_fused(p.data, b);
+            Ok(self.run_mlp(layer, x_lane)?.data)
         } else {
             let mut fused = self.take_scratch(b * d);
             for j in 0..b {
@@ -835,8 +977,21 @@ impl ComputeWorker {
                 let p = self.run_mlp(layer, &*row)?;
                 fused[j * d..(j + 1) * d].copy_from_slice(&p.data);
             }
-            self.submit_fused(fused, b);
+            Ok(fused)
         }
+    }
+
+    /// Lane MLP for one layer; the partials go out as one fused
+    /// collective (residual riding along under the fused epilogue).
+    fn lane_mlp_submit(
+        &mut self,
+        layer: usize,
+        x_lane: &mut Tensor,
+        row: &mut Tensor,
+    ) -> Result<()> {
+        let b = x_lane.shape[0];
+        let p = self.lane_mlp_partial(layer, &*x_lane, row)?;
+        self.submit_fused(p, b, x_lane);
         Ok(())
     }
 
@@ -856,6 +1011,10 @@ impl ComputeWorker {
     /// `2 × local_layers` collectives per stage instead of `B ×` that —
     /// bit-identical to B independent [`ComputeWorker::decode`] steps.
     /// The lane's single B-row activation flows through the stages.
+    /// `ladder_residual` deliberately does **not** apply here: under the
+    /// mixed scheduler a lane-only iteration and a prefill+lane
+    /// iteration must use identical lane math, so the ladder reorder is
+    /// confined to the per-sequence blocking paths (DESIGN.md §12).
     fn decode_fused(&mut self, lane: &[DecodeSlot]) -> Result<Option<Vec<Vec<f32>>>> {
         debug_assert!(!lane.is_empty());
         let mut x_lane = if self.stage == 0 {
@@ -865,9 +1024,9 @@ impl ComputeWorker {
         };
         let mut row = Tensor::zeros(vec![1, self.d_model]);
         for l in 0..self.local_layers {
-            self.lane_attn_submit(l, lane, &x_lane, &mut row)?;
+            self.lane_attn_submit(l, lane, &mut x_lane, &mut row)?;
             self.recv_reduced_apply(&mut x_lane);
-            self.lane_mlp_submit(l, &x_lane, &mut row)?;
+            self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
             self.recv_reduced_apply(&mut x_lane);
         }
         if !self.is_last_stage() {
@@ -899,19 +1058,17 @@ impl ComputeWorker {
         Ok(x)
     }
 
-    /// Verify-lane attention for one layer: each window's rows run t=1
-    /// attention at consecutive offsets — row `j` writes its K/V at
-    /// `offset + j` before attending, so within a window the causal chain
-    /// over the draft tokens is exact — and every row's partial
-    /// concatenates into **one** fused `ΣW`-row collective, the wide-lane
-    /// reuse of `allreduce_rows_fused` (DESIGN.md §10).
-    fn spec_attn_submit(
+    /// Assemble the verify lane's attention partials for one layer: each
+    /// window's rows run t=1 attention at consecutive offsets — row `j`
+    /// writes its K/V at `offset + j` before attending, so within a
+    /// window the causal chain over the draft tokens is exact.
+    fn spec_attn_partial(
         &mut self,
         layer: usize,
         lane: &[SpecSlot],
         x_lane: &Tensor,
         row: &mut Tensor,
-    ) -> Result<()> {
+    ) -> Result<Vec<f32>> {
         let d = self.d_model;
         let rows = x_lane.shape[0];
         let mut fused = self.take_scratch(rows * d);
@@ -925,7 +1082,23 @@ impl ComputeWorker {
                 r += 1;
             }
         }
-        self.submit_fused(fused, rows);
+        Ok(fused)
+    }
+
+    /// Verify-lane attention for one layer: every row's partial
+    /// concatenates into **one** fused `ΣW`-row collective, the wide-lane
+    /// reuse of `allreduce_rows_fused` (DESIGN.md §10), with the lane's
+    /// residual riding along under the fused epilogue.
+    fn spec_attn_submit(
+        &mut self,
+        layer: usize,
+        lane: &[SpecSlot],
+        x_lane: &mut Tensor,
+        row: &mut Tensor,
+    ) -> Result<()> {
+        let rows = x_lane.shape[0];
+        let p = self.spec_attn_partial(layer, lane, &*x_lane, row)?;
+        self.submit_fused(p, rows, x_lane);
         Ok(())
     }
 
@@ -945,9 +1118,9 @@ impl ComputeWorker {
         };
         let mut row = Tensor::zeros(vec![1, self.d_model]);
         for l in 0..self.local_layers {
-            self.spec_attn_submit(l, lane, &x_lane, &mut row)?;
+            self.spec_attn_submit(l, lane, &mut x_lane, &mut row)?;
             self.recv_reduced_apply(&mut x_lane);
-            self.lane_mlp_submit(l, &x_lane, &mut row)?;
+            self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
             self.recv_reduced_apply(&mut x_lane);
         }
         if !self.is_last_stage() {
@@ -985,7 +1158,7 @@ impl ComputeWorker {
                     self.recv_reduced_apply(&mut xs[i]);
                 }
                 let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
-                self.submit(partial.data, p.chunks[i].len);
+                self.submit(partial.data, p.chunks[i].len, &mut xs[i]);
             }
             if l == 0 && self.stage > 0 {
                 // Wire order is [chunks…, lane]: the upstream stage
@@ -995,14 +1168,14 @@ impl ComputeWorker {
             if l > 0 {
                 self.recv_reduced_apply(&mut x_lane);
             }
-            self.spec_attn_submit(l, lane, &x_lane, &mut row)?;
+            self.spec_attn_submit(l, lane, &mut x_lane, &mut row)?;
             for i in 0..k {
                 self.recv_reduced_apply(&mut xs[i]);
                 let partial = self.run_mlp(l, &xs[i])?;
-                self.submit(partial.data, p.chunks[i].len);
+                self.submit(partial.data, p.chunks[i].len, &mut xs[i]);
             }
             self.recv_reduced_apply(&mut x_lane);
-            self.lane_mlp_submit(l, &x_lane, &mut row)?;
+            self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
         }
         for x in xs.iter_mut() {
             self.recv_reduced_apply(x);
@@ -1055,7 +1228,7 @@ impl ComputeWorker {
                     self.recv_reduced_apply(&mut xs[i]);
                 }
                 let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
-                self.submit(partial.data, p.chunks[i].len);
+                self.submit(partial.data, p.chunks[i].len, &mut xs[i]);
             }
             if l == 0 && self.stage > 0 {
                 // Wire order is [chunks…, lane]: the upstream stage
@@ -1065,14 +1238,14 @@ impl ComputeWorker {
             if l > 0 {
                 self.recv_reduced_apply(&mut x_lane);
             }
-            self.lane_attn_submit(l, lane, &x_lane, &mut row)?;
+            self.lane_attn_submit(l, lane, &mut x_lane, &mut row)?;
             for i in 0..k {
                 self.recv_reduced_apply(&mut xs[i]);
                 let partial = self.run_mlp(l, &xs[i])?;
-                self.submit(partial.data, p.chunks[i].len);
+                self.submit(partial.data, p.chunks[i].len, &mut xs[i]);
             }
             self.recv_reduced_apply(&mut x_lane);
-            self.lane_mlp_submit(l, &x_lane, &mut row)?;
+            self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
         }
         for x in xs.iter_mut() {
             self.recv_reduced_apply(x);
@@ -1144,11 +1317,15 @@ impl ComputeWorker {
     }
 }
 
-/// Comm-thread main loop: drain all-reduce jobs through the ring,
-/// streaming per-segment acks so the compute thread starts on segment 0
-/// without waiting for the tail. Ack buffers come back through `recycled`
-/// and wire buffers live in the ring handle's pool — steady state
-/// allocates nothing.
+/// Comm-thread main loop: drain all-reduce jobs through the ring. Jobs
+/// carrying a residual run the fused epilogue (DESIGN.md §12): each
+/// reduced row-segment is applied into the residual inside the
+/// collective's own segment callback, and one ack returns the finished
+/// tensor (plus the spent partial for buffer reuse). Legacy jobs stream
+/// per-segment acks so the compute thread starts on segment 0 without
+/// waiting for the tail. Ack buffers come back through `recycled` and
+/// wire buffers live in the ring handle's pool — steady state allocates
+/// nothing.
 fn comm_main(
     mut handle: RingHandle,
     quant: CommQuant,
@@ -1167,7 +1344,7 @@ fn comm_main(
                 handle.recycle_f32(buf);
             }
         }
-        let CommJob { mut data, rows, cols, segments, fused } = job;
+        let CommJob { mut data, rows, cols, segments, fused, residual } = job;
         let t = Timer::start();
         let mut hung_up = false;
         let bytes = if fused {
@@ -1176,12 +1353,59 @@ fn comm_main(
             let b = handle.allreduce_rows_fused(&mut data, rows, cols, quant);
             stats.fused_allreduces += 1;
             stats.fused_rows += rows as u64;
-            hung_up = acks.send(SegAck { row_start: 0, rows, data }).is_err();
+            match residual {
+                // Fused epilogue (DESIGN.md §12): fold the lane's
+                // residual-add into the comm thread so the compute thread
+                // gets the finished tensor back in one ack.
+                Some(mut res) => {
+                    let te = Timer::start();
+                    debug_assert_eq!(res.len(), data.len(), "lane residual shape");
+                    FusedEpilogue::residual_only(&mut res, cols).apply(0, rows, &data);
+                    stats.fused_epilogue_ms += te.elapsed_ms();
+                    stats.fused_epilogue_rows += rows as u64;
+                    let ack =
+                        SegAck { row_start: 0, rows, data: res, fused: true, spent: Some(data) };
+                    hung_up = acks.send(ack).is_err();
+                }
+                None => {
+                    let ack = SegAck { row_start: 0, rows, data, fused: false, spent: None };
+                    hung_up = acks.send(ack).is_err();
+                }
+            }
+            b
+        } else if let Some(mut res) = residual {
+            // Fused epilogue, segment-streamed (DESIGN.md §12): apply
+            // each reduced row-range into the residual the moment the
+            // collective finalizes it, so segment k's epilogue hides
+            // behind the wire time of segments k+1.. — then one ack
+            // returns the finished tensor.
+            debug_assert_eq!(res.len(), rows * cols, "residual shape");
+            let mut epi_ms = 0.0f64;
+            let b = {
+                let mut epilogue = FusedEpilogue::residual_only(&mut res, cols);
+                handle.allreduce_seg_with(
+                    &mut data,
+                    rows,
+                    cols,
+                    quant,
+                    segments.max(1),
+                    |row_start, row_end, vals| {
+                        let te = Timer::start();
+                        epilogue.apply(row_start, row_end, vals);
+                        epi_ms += te.elapsed_ms();
+                    },
+                )
+            };
+            stats.fused_epilogue_ms += epi_ms;
+            stats.fused_epilogue_rows += rows as u64;
+            let ack = SegAck { row_start: 0, rows, data: res, fused: true, spent: Some(data) };
+            hung_up = acks.send(ack).is_err();
             b
         } else if segments <= 1 {
             // Single segment: hand the whole payload over, no copy.
             let b = handle.allreduce_seg(&mut data, rows, cols, quant, 1);
-            hung_up = acks.send(SegAck { row_start: 0, rows, data }).is_err();
+            let ack = SegAck { row_start: 0, rows, data, fused: false, spent: None };
+            hung_up = acks.send(ack).is_err();
             b
         } else {
             let acks_ref = &acks;
@@ -1203,7 +1427,13 @@ fn comm_main(
                         .unwrap_or_default();
                     buf.clear();
                     buf.extend_from_slice(vals);
-                    let ack = SegAck { row_start, rows: row_end - row_start, data: buf };
+                    let ack = SegAck {
+                        row_start,
+                        rows: row_end - row_start,
+                        data: buf,
+                        fused: false,
+                        spent: None,
+                    };
                     if acks_ref.send(ack).is_err() {
                         *hung_up_ref = true;
                     }
@@ -1534,6 +1764,33 @@ impl Engine {
     /// fused decode lane over engine-managed slots. Lane entries advance
     /// independent sequences one token each, sharing one B-row collective
     /// per layer-stage.
+    ///
+    /// # Examples
+    ///
+    /// Driving the engine iteration by iteration (requires
+    /// `make artifacts` and a real PJRT backend, hence `no_run`):
+    ///
+    /// ```no_run
+    /// use iso::batch::DecodeSlot;
+    /// use iso::config::EngineConfig;
+    /// use iso::coordinator::Engine;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let mut engine = Engine::start(EngineConfig::default())?;
+    /// let slot = engine.alloc_slot()?;
+    /// // Iteration 1: prefill the prompt (no decode lane yet).
+    /// let prompt = [1, 2, 3, 4];
+    /// let out = engine.step(Some((slot, &prompt[..])), &[])?;
+    /// let first = out.prefill.expect("prefill ran").first_token;
+    /// // Iteration 2: the sequence joins the fused decode lane.
+    /// let lane = [DecodeSlot { slot, token: first, offset: prompt.len() }];
+    /// let out = engine.step(None, &lane)?;
+    /// println!("next token: {}", out.decode_tokens[0]);
+    /// engine.free_slot(slot)?;
+    /// engine.shutdown()?;
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn step(
         &mut self,
         prefill: Option<(usize, &[i32])>,
@@ -1563,6 +1820,31 @@ impl Engine {
     /// dense caches (later windows overwrite before reading); callers
     /// tracking a paged [`KvManager`] mirror the acceptance with
     /// `truncate`, as `serve_trace` does.
+    ///
+    /// # Examples
+    ///
+    /// One verify window of two drafts (requires `make artifacts` and a
+    /// real PJRT backend, hence `no_run`):
+    ///
+    /// ```no_run
+    /// use iso::batch::SpecSlot;
+    /// use iso::config::EngineConfig;
+    /// use iso::coordinator::Engine;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let mut engine = Engine::start(EngineConfig::default())?;
+    /// let slot = engine.alloc_slot()?;
+    /// let out = engine.step(Some((slot, &[1, 2, 3, 4][..])), &[])?;
+    /// let first = out.prefill.expect("prefill ran").first_token;
+    /// // Verify window: last emitted token + two drafted candidates.
+    /// let window = SpecSlot { slot, tokens: vec![first, 7, 9], offset: 4 };
+    /// let out = engine.step_spec(None, &[window])?;
+    /// println!("accepted {} drafts, emitted {:?}", out.accepted[0], out.emitted[0]);
+    /// engine.free_slot(slot)?;
+    /// engine.shutdown()?;
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn step_spec(
         &mut self,
         prefill: Option<(usize, &[i32])>,
@@ -2110,6 +2392,8 @@ impl Engine {
             w.fused_rows = comm.fused_rows;
             w.wire_bytes = comm.wire_bytes;
             w.wire_msgs = comm.wire_msgs;
+            w.fused_epilogue_rows = comm.fused_epilogue_rows;
+            w.fused_epilogue_ms = comm.fused_epilogue_ms;
         }
         // Fold worker counters into the final metrics without cloning the
         // histograms (§Perf: `metrics` can hold thousands of samples).
@@ -2123,6 +2407,12 @@ impl Engine {
         metrics.overlapped_ms =
             workers.iter().map(|w| w.overlapped_ms()).sum::<f64>() / n_workers;
         metrics.exposed_ms = workers.iter().map(|w| w.stall_ms).sum::<f64>() / n_workers;
+        // Epilogue accounting (DESIGN.md §12): compute-side residual
+        // applies are the exposed epilogue; comm-side applies ran inside
+        // the collective and are hidden behind the in-flight segments.
+        metrics.exposed_epilogue_ms =
+            workers.iter().map(|w| w.epilogue_ms).sum::<f64>() / n_workers;
+        metrics.fused_epilogue_rows = workers.iter().map(|w| w.fused_epilogue_rows).sum();
         // Pipeline accounting (DESIGN.md §11). Single-stage engines record
         // nothing here, keeping their reports byte-identical to pre-PP
         // output.
@@ -2209,6 +2499,16 @@ mod tests {
         let s = WorkerStats::default();
         assert_eq!((s.stage, s.p2p_bytes, s.p2p_msgs), (0, 0, 0));
         assert_eq!(s.p2p_stall_ms, 0.0);
+    }
+
+    #[test]
+    fn worker_stats_epilogue_fields_default_zero() {
+        // PR-5: epilogue accounting starts empty so a run that never
+        // fuses reports zeros, not garbage.
+        let s = WorkerStats::default();
+        assert_eq!(s.fused_epilogue_rows, 0);
+        assert_eq!(s.epilogue_ms, 0.0);
+        assert_eq!(s.fused_epilogue_ms, 0.0);
     }
 
     #[test]

@@ -77,13 +77,25 @@ fn serve(cli: &Cli) -> Result<()> {
     if cli.has("spec-ngram") {
         cfg.spec_ngram = cli.usize_or("spec-ngram", cfg.spec_ngram).map_err(|e| anyhow!(e))?;
     }
+    if cli.has("comm-segments") {
+        cfg.comm_segments =
+            cli.usize_or("comm-segments", cfg.comm_segments).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(v) = cli.get("fused-epilogue") {
+        cfg.fused_epilogue =
+            iso::config::parse_bool(v, "--fused-epilogue").map_err(|e| anyhow!(e))?;
+    }
+    if let Some(v) = cli.get("ladder-residual") {
+        cfg.ladder_residual =
+            iso::config::parse_bool(v, "--ladder-residual").map_err(|e| anyhow!(e))?;
+    }
     let n_requests = cli.usize_or("requests", 8).map_err(|e| anyhow!(e))?;
     let prompt_len = cli.usize_or("prompt-len", 128).map_err(|e| anyhow!(e))?;
     let decode = cli.usize_or("decode", 0).map_err(|e| anyhow!(e))?;
 
     println!(
         "engine: pp={} tp={} strategy={} comm_quant={:?} mixed={} decode_batch={} spec_k={} \
-         artifacts={}",
+         comm_segments={} fused_epilogue={} ladder_residual={} artifacts={}",
         cfg.pp_stages,
         cfg.tp,
         cfg.strategy,
@@ -91,6 +103,9 @@ fn serve(cli: &Cli) -> Result<()> {
         cfg.mixed_iterations,
         cfg.decode_batch,
         cfg.spec_k,
+        cfg.comm_segments,
+        cfg.fused_epilogue,
+        cfg.ladder_residual,
         cfg.artifacts_dir
     );
     let mut engine = Engine::start(cfg)?;

@@ -116,7 +116,11 @@ impl Histogram {
     }
 }
 
-/// Engine-level counters reported by the coordinator.
+/// Engine-level counters reported by the coordinator. Every field that
+/// [`EngineMetrics::report`] prints is cataloged in the metrics
+/// glossary, DESIGN.md §13, alongside the `report::worker_rollup`
+/// per-rank fields; `TUNING.md` maps each counter to the knob that
+/// moves it.
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
     /// Time-to-first-token per request (ms) — the paper's headline metric.
@@ -147,8 +151,21 @@ pub struct EngineMetrics {
     /// Wire messages sent by the rings; grows with `comm_segments`
     /// (per-segment wire accounting: bytes/messages ≈ segment size).
     pub comm_msgs: u64,
-    /// Per-segment acks streamed from comm to compute threads.
+    /// Per-segment acks streamed from comm to compute threads: one per
+    /// collective for residual-carrying jobs under the fused epilogue
+    /// (DESIGN.md §12), per-segment otherwise (`fused_epilogue = false`,
+    /// or the `ladder_residual` loops, whose collectives keep the tensor
+    /// compute-side).
     pub seg_acks: u64,
+    /// Compute-thread time applying reduced rows into the residual (mean
+    /// per-rank, ms) — the *exposed* post-collective epilogue. Near zero
+    /// under `fused_epilogue` (the comm thread applies each segment
+    /// while the collective's tail is still on the ring, DESIGN.md §12)
+    /// unless `ladder_residual` routes collectives around the fusion.
+    pub exposed_epilogue_ms: f64,
+    /// Rows whose residual epilogue ran comm-side, fused into the
+    /// collective's segment callbacks (DESIGN.md §12).
+    pub fused_epilogue_rows: u64,
     /// Total generated tokens.
     pub generated_tokens: u64,
     /// Wall time the comm stream overlapped with compute (ms, ISO only).
@@ -240,11 +257,13 @@ impl EngineMetrics {
         ));
         s.push_str(&format!(
             "\niterations={} fused_decode_tokens={} fused_allreduces={} \
-             exposed_ms_per_tok={:.4}",
+             exposed_ms_per_tok={:.4} exposed_epilogue_ms={:.2} fused_epilogue_rows={}",
             self.iterations,
             self.fused_decode_tokens,
             self.fused_allreduces,
-            self.exposed_ms_per_token()
+            self.exposed_ms_per_token(),
+            self.exposed_epilogue_ms,
+            self.fused_epilogue_rows
         ));
         if self.spec_windows > 0 {
             s.push_str(&format!(
@@ -355,11 +374,15 @@ mod tests {
         m.iterations = 7;
         m.fused_decode_tokens = 32;
         m.fused_allreduces = 56;
+        m.exposed_epilogue_ms = 1.5;
+        m.fused_epilogue_rows = 96;
         let r = m.report();
         assert!(r.contains("tbt_ms"));
         assert!(r.contains("iter_occupancy"));
         assert!(r.contains("fused_decode_tokens=32"));
         assert!(r.contains("exposed_ms_per_tok=0.25"));
+        assert!(r.contains("exposed_epilogue_ms=1.50"));
+        assert!(r.contains("fused_epilogue_rows=96"));
     }
 
     #[test]

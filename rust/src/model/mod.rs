@@ -163,6 +163,16 @@ impl ModelSpec {
         let c = self.layer_chunk_cost(len, 0);
         self.n_layers as f64 * (c.gemm_flops_attn + c.gemm_flops_mlp + c.attn_flops)
     }
+
+    /// FLOPs of the per-layer post-collective epilogue over `t` tokens
+    /// (DESIGN.md §12): the residual add (1 FLOP/element) plus the next
+    /// op's RMSNorm (≈2 FLOP/element square-accumulate + 2 FLOP/element
+    /// rescale) — 5 per element of the `t × d_model` activation.
+    /// Replicated on every rank (each applies its own copy), so callers
+    /// do **not** divide by the TP degree.
+    pub fn epilogue_flops(&self, t: usize) -> f64 {
+        5.0 * t as f64 * self.d_model as f64
+    }
 }
 
 #[cfg(test)]
@@ -235,6 +245,16 @@ mod tests {
         let f2 = m.prefill_flops(2048);
         assert!(f2 > 2.0 * f1); // quadratic attention term
         assert!(f2 < 4.0 * f1);
+    }
+
+    #[test]
+    fn epilogue_flops_linear_in_tokens() {
+        // The epilogue is elementwise over t × d_model: additive in the
+        // split (work-conserving, like the layer costs) and linear in d.
+        let m = ModelSpec::mha_30b();
+        assert_eq!(m.epilogue_flops(2048), 2.0 * m.epilogue_flops(1024));
+        assert_eq!(m.epilogue_flops(1), 5.0 * m.d_model as f64);
+        assert_eq!(m.epilogue_flops(0), 0.0);
     }
 
     #[test]

@@ -125,6 +125,10 @@ pub fn timeline_json(tl: &Timeline) -> Json {
 /// multi-stage engines group the ranks by stage first, each stage headed
 /// by its summed compute and pipeline-bubble wait, so imbalanced layer
 /// assignments and starved stages are visible at a glance.
+///
+/// Every emitted field (`compute`, `stall`, `comm`, `overlap_eff`, and
+/// the stage headers' `bubble_wait`/`p2p_sent`) is defined in the
+/// metrics glossary, DESIGN.md §13.
 pub fn worker_rollup(workers: &[WorkerStats], pp_stages: usize, tp: usize) -> String {
     let mut s = String::new();
     let rank_line = |w: &WorkerStats| {

@@ -601,6 +601,57 @@ pub fn pp_iteration_s(
     crate::sim::pipeline_makespan(&stage_s, hop_s, chunks)
 }
 
+/// Host-side cost of the per-layer post-collective epilogue over `t`
+/// tokens (residual add + the next op's RMSNorm,
+/// [`ModelSpec::epilogue_flops`]): elementwise work priced through the
+/// device's GEMM-shaped throughput curve. Replicated per rank — every
+/// rank applies its own copy — so there is no TP division.
+pub fn epilogue_s(node: &NodeProfile, model: &ModelSpec, t: usize) -> f64 {
+    node.device.gemm_s(model.epilogue_flops(t), t)
+}
+
+/// Exposed (serial) share of one collective's epilogue (DESIGN.md §12).
+/// Unfused, the whole epilogue runs after the last segment lands —
+/// `epi_s` regardless of `segments`. Fused (TokenWeave-style), segment
+/// `k`'s slice applies while segments `k+1..` are still on the wire
+/// ([`crate::sim::streamed_epilogue_exposed_s`]): wire-dominated
+/// epilogues expose exactly `epi_s / segments`.
+pub fn epilogue_exposed_s(ar_s: f64, epi_s: f64, segments: usize, fused: bool) -> f64 {
+    assert!(segments >= 1, "segments must be >= 1");
+    if !fused || segments == 1 {
+        return epi_s;
+    }
+    let cover = vec![ar_s / segments as f64; segments];
+    let work = vec![epi_s / segments as f64; segments];
+    crate::sim::streamed_epilogue_exposed_s(&cover, &work)
+}
+
+/// Predicted wall time of one blocking TP layer-stage pass over a
+/// `t`-token chunk with the post-collective epilogue either serial
+/// (`fused = false`: the residual-add + norm wait for the whole
+/// collective) or fused into the `segments`-streamed collective — the
+/// cost model of the engine's `fused_epilogue` knob. The absolute level
+/// prices the blocking skeleton (ISO's cross-chunk overlap hides comm,
+/// not the epilogue, which is consumed in ack order either way); the
+/// fused-vs-unfused *direction* is what `BENCH_PR5.json` records and the
+/// CI bench gate pins against `BENCH_BASELINE.json`.
+pub fn fused_epilogue_iteration_s(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    t: usize,
+    segments: usize,
+    fused: bool,
+    int8_wire: bool,
+) -> f64 {
+    assert!(t >= 1 && segments >= 1);
+    let c = Coster { node: node.clone(), model: model.clone(), int8_wire };
+    let ar = c.ar_s(t, 1);
+    let epi = epilogue_s(node, model, t);
+    let exposed = epilogue_exposed_s(ar, epi, segments, fused);
+    let layer = c.attn_block_s(t, 0) + c.mlp_block_s(t) + 2.0 * (ar + exposed);
+    model.n_layers as f64 * layer
+}
+
 /// The pipeline's fill/drain bubble share for a `pp`-stage, `chunks`-deep
 /// schedule: `(pp − 1) / (chunks + pp − 1)` of the iteration is spent
 /// filling and draining — the quantity deeper chunk sets amortize away
@@ -996,6 +1047,53 @@ mod tests {
         // layer τ = 2 ARs · 2(2−1)(α + b/2/bw) ≈ 4α (compute ~0, bw ~∞).
         let tau = 4.0 * 1e-3;
         assert!((got / tau - 14.0).abs() < 0.01, "got {} vs 14τ", got / tau);
+    }
+
+    #[test]
+    fn epilogue_exposure_hand_arithmetic() {
+        // Unfused or single-segment: the whole epilogue is exposed.
+        assert_eq!(epilogue_exposed_s(1.0, 0.25, 1, true), 0.25);
+        assert_eq!(epilogue_exposed_s(1.0, 0.25, 4, false), 0.25);
+        // Wire-dominated (epi <= ar): only the last segment's slice is
+        // exposed — epi / segments exactly.
+        let e = epilogue_exposed_s(1.0, 0.25, 4, true);
+        assert!((e - 0.0625).abs() < 1e-12, "{e}");
+        // Epilogue-dominated: arrivals at 0.025·k, 0.25 work each —
+        // finish 0.025 + 4·0.25 = 1.025, exposed 1.025 − 0.1 = 0.925.
+        let e = epilogue_exposed_s(0.1, 1.0, 4, true);
+        assert!((e - 0.925).abs() < 1e-12, "{e}");
+    }
+
+    #[test]
+    fn fused_epilogue_iteration_direction() {
+        // The PR-5 cost model, pinned: fusing the epilogue into the
+        // segment stream wins exactly the hidden epilogue share and only
+        // once there are in-flight segments to hide behind.
+        let node = NodeProfile::rtx4090(4);
+        let model = ModelSpec::mha_30b();
+        let s =
+            |seg, fused| fused_epilogue_iteration_s(&node, &model, 4096, seg, fused, true);
+        // segments = 1: nothing in flight to hide behind — identical.
+        assert_eq!(s(1, true), s(1, false));
+        // Unfused time is segment-independent (the epilogue waits out the
+        // whole collective either way).
+        assert!((s(4, false) - s(1, false)).abs() < 1e-12);
+        // Fusion wins at every segment count >= 2, monotonically.
+        for seg in [2usize, 4, 8] {
+            assert!(s(seg, true) < s(seg, false), "seg={seg}");
+        }
+        assert!(s(4, true) <= s(2, true) + 1e-15);
+        // The win is exactly the hidden epilogue share, layer for layer:
+        // 2 collectives × n_layers × (epi − exposed).
+        let c = Coster { node: node.clone(), model: model.clone(), int8_wire: true };
+        let epi = epilogue_s(&node, &model, 4096);
+        let hidden = epi - epilogue_exposed_s(c.ar_s(4096, 1), epi, 4, true);
+        let want = model.n_layers as f64 * 2.0 * hidden;
+        let got = s(4, false) - s(4, true);
+        assert!(
+            (got - want).abs() <= 1e-9 * want.max(1e-12),
+            "hidden share mismatch: got {got}, want {want}"
+        );
     }
 
     #[test]

@@ -171,6 +171,36 @@ pub fn pipeline_makespan(stage_s: &[f64], hop_s: f64, chunks: usize) -> f64 {
     finish[stage_s.len() - 1]
 }
 
+/// Exposed tail of a segment-streamed epilogue (DESIGN.md §12): segment
+/// `k`'s reduced rows arrive `cover_s[k]` seconds after segment `k−1`'s
+/// (the collective's wire pacing), and a single epilogue worker spends
+/// `work_s[k]` on each the moment it is both arrived and free — the
+/// TokenWeave-style fusion the engine's comm threads run. Returns how
+/// long the epilogue runs **past the last arrival** — the only part the
+/// collective cannot hide:
+///
+/// ```text
+/// arrive[k] = Σ cover_s[..=k]
+/// finish    = max(finish, arrive[k]) + work_s[k]
+/// exposed   = finish − arrive[last]
+/// ```
+///
+/// One segment degenerates to the serial epilogue (`work_s[0]` fully
+/// exposed); with wire-dominated segments (`work ≤ cover` per segment)
+/// only the last segment's slice is exposed.
+pub fn streamed_epilogue_exposed_s(cover_s: &[f64], work_s: &[f64]) -> f64 {
+    assert_eq!(cover_s.len(), work_s.len(), "one cover per work segment");
+    assert!(!cover_s.is_empty(), "no segments");
+    assert!(cover_s.iter().chain(work_s).all(|&x| x >= 0.0));
+    let mut arrive = 0.0f64;
+    let mut finish = 0.0f64;
+    for (&c, &w) in cover_s.iter().zip(work_s) {
+        arrive += c;
+        finish = finish.max(arrive) + w;
+    }
+    (finish - arrive).max(0.0)
+}
+
 struct Running {
     op: usize,
     start: f64,
@@ -537,6 +567,33 @@ mod tests {
         let per = |k: usize| pipeline_makespan(&[2.0, 2.0], 0.25, k) / k as f64;
         assert!(per(8) < per(2));
         assert!(per(32) < per(8));
+    }
+
+    #[test]
+    fn streamed_epilogue_hand_arithmetic() {
+        // One segment: the whole epilogue is exposed.
+        assert!((streamed_epilogue_exposed_s(&[1.0], &[0.5]) - 0.5).abs() < 1e-12);
+        // Wire-dominated (work <= cover per segment): only the last
+        // segment's slice is exposed — arrivals 1,2,3,4 each processed in
+        // 0.25 before the next lands.
+        let e = streamed_epilogue_exposed_s(&[1.0; 4], &[0.25; 4]);
+        assert!((e - 0.25).abs() < 1e-12, "{e}");
+        // Work-dominated: the worker queues — arrivals at 0.1, 0.2;
+        // finish = 0.1 + 1.0 + 1.0 = 2.1; exposed = 2.1 − 0.2 = 1.9.
+        let e = streamed_epilogue_exposed_s(&[0.1; 2], &[1.0; 2]);
+        assert!((e - 1.9).abs() < 1e-12, "{e}");
+        // More segments never increase exposure (same totals).
+        let total_cover = 1.0;
+        let total_work = 0.8;
+        let mut prev = f64::INFINITY;
+        for s in [1usize, 2, 4, 8] {
+            let e = streamed_epilogue_exposed_s(
+                &vec![total_cover / s as f64; s],
+                &vec![total_work / s as f64; s],
+            );
+            assert!(e <= prev + 1e-12, "s={s}: {e} > {prev}");
+            prev = e;
+        }
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Fused-epilogue contracts (PR-5 tentpole acceptance): folding the
+//! per-segment epilogue — residual add, and optionally the next op's
+//! RMSNorm and row-sliced prologue GEMM — into the collective's segment
+//! callbacks (`allreduce_seg_fused`, DESIGN.md §12) is **bit-identical**
+//! to running the collective first and applying the epilogue once, across
+//! segment counts × rank counts × wire formats × the engine's scheduler
+//! shapes (sequential / mixed / spec / pp).
+//!
+//! The engine-level twin (fused vs unfused logits bit-equality through
+//! the real coordinator) lives in `engine_e2e::fused_epilogue_engine_bit_identical`
+//! and is artifact-gated; these tests are pure rust and always run.
+
+use iso::collective::{run_on_ring, FusedEpilogue, Prologue};
+use iso::config::CommQuant;
+use iso::util::{Prop, Rng};
+
+/// Deterministic per-rank partial for collective number `step` given the
+/// current residual: rank-dependent scale plus a step offset, so any
+/// bitwise divergence compounds through the schedule and gets caught.
+fn partial_of(res: &[f32], rank: usize, step: usize) -> Vec<f32> {
+    res.iter()
+        .map(|&v| 0.25 * v * (rank as f32 + 1.0) + step as f32 * 0.01)
+        .collect()
+}
+
+/// One scheduler shape: a sequence of collectives over named tensors.
+/// `Seg(tensor, rows)` is a segment-streamed chunk collective (the
+/// prefill path); `Lane(tensor, rows)` is a rank-ordered fused-rows lane
+/// collective (the decode/verify path).
+#[derive(Clone, Copy)]
+enum Coll {
+    Seg(usize, usize),
+    Lane(usize, usize),
+}
+
+/// The four engine scheduler shapes, as the comm thread sees them
+/// (tensor id, rows). `cols` is fixed by the caller.
+fn shape(name: &str) -> (Vec<Coll>, Vec<usize>) {
+    // Returns (collective sequence per "layer" ×2 layers, tensor rows).
+    let (per_layer, tensors): (Vec<Coll>, Vec<usize>) = match name {
+        // One chunk, attn + mlp collectives per layer.
+        "sequential" => (vec![Coll::Seg(0, 12)], vec![12]),
+        // Two prefill chunks + a fused decode lane per layer
+        // ([P_attn×2, D], DESIGN.md §9 wire order).
+        "mixed" => (
+            vec![Coll::Seg(0, 8), Coll::Seg(1, 5), Coll::Lane(2, 3)],
+            vec![8, 5, 3],
+        ),
+        // One wide verify lane (B·(k+1) rows, DESIGN.md §10).
+        "spec" => (vec![Coll::Lane(0, 9)], vec![9]),
+        // Two pipeline stages' slices of the same chunk back-to-back
+        // (the p2p handoff is bit-exact by construction, DESIGN.md §11).
+        "pp" => (vec![Coll::Seg(0, 7), Coll::Seg(0, 7)], vec![7]),
+        other => panic!("unknown shape {other}"),
+    };
+    let mut seq = Vec::new();
+    for _layer in 0..2 {
+        // attn-reduce then mlp-reduce per tensor, per layer.
+        seq.extend(per_layer.iter().copied());
+        seq.extend(per_layer.iter().copied());
+    }
+    (seq, tensors)
+}
+
+/// Run a shape's collective stream on every rank; `fused` routes the
+/// segment-streamed collectives through `allreduce_seg_fused` (comm-side
+/// epilogue), `!fused` through `allreduce_seg` + a monolithic apply.
+/// Returns each rank's final tensors.
+fn run_shape(
+    name: &str,
+    n: usize,
+    cols: usize,
+    segments: usize,
+    quant: CommQuant,
+    fused: bool,
+    seed: u64,
+) -> Vec<Vec<Vec<f32>>> {
+    let (seq, tensor_rows) = shape(name);
+    let mut rng = Rng::new(seed);
+    let init: Vec<Vec<f32>> =
+        tensor_rows.iter().map(|&r| rng.normal_vec(r * cols, 1.0)).collect();
+    run_on_ring(n, |rank, h| {
+        let mut tensors: Vec<Vec<f32>> = init.clone();
+        for (step, c) in seq.iter().enumerate() {
+            match *c {
+                Coll::Seg(t, rows) => {
+                    let mut d = partial_of(&tensors[t], rank, step);
+                    if fused {
+                        let mut ep = FusedEpilogue::residual_only(&mut tensors[t], cols);
+                        h.allreduce_seg_fused(&mut d, rows, cols, quant, segments, &mut ep);
+                    } else {
+                        h.allreduce_seg(&mut d, rows, cols, quant, segments);
+                        for (o, v) in tensors[t].iter_mut().zip(&d) {
+                            *o += *v;
+                        }
+                    }
+                }
+                Coll::Lane(t, rows) => {
+                    // The lane collective is rank-ordered and un-segmented
+                    // in both modes; only where the residual-add runs
+                    // differs in the engine (comm vs compute thread) —
+                    // the arithmetic is identical by construction.
+                    let mut d = partial_of(&tensors[t], rank, step);
+                    h.allreduce_rows_fused(&mut d, rows, cols, quant);
+                    for (o, v) in tensors[t].iter_mut().zip(&d) {
+                        *o += *v;
+                    }
+                }
+            }
+        }
+        tensors
+    })
+}
+
+#[test]
+fn fused_epilogue_bit_identical_across_schedulers_and_segments() {
+    // The acceptance pin: for every scheduler shape, rank count, wire
+    // format and segment count, the fused-epilogue stream produces
+    // bit-identical tensors to the unfused reference.
+    for name in ["sequential", "mixed", "spec", "pp"] {
+        for quant in [CommQuant::F32, CommQuant::Int8] {
+            for n in [1usize, 2, 4] {
+                let gold = run_shape(name, n, 6, 1, quant, false, 77);
+                for segments in [1usize, 2, 3, 8] {
+                    for fused in [false, true] {
+                        let got = run_shape(name, n, 6, segments, quant, fused, 77);
+                        assert_eq!(
+                            gold, got,
+                            "shape={name} quant={quant:?} n={n} segments={segments} \
+                             fused={fused}: schedule diverged bitwise"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn full_epilogue_with_norm_and_prologue_bit_identical() {
+    // The full TokenWeave-style epilogue (residual + RMSNorm + prologue
+    // GEMM) fused per segment equals reduce-then-apply-once, bitwise.
+    let (rows, cols, n_out) = (10usize, 8usize, 3usize);
+    let n = 3;
+    let mut rng = Rng::new(13);
+    let parts: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(rows * cols, 1.0)).collect();
+    let res0 = rng.normal_vec(rows * cols, 1.0);
+    let gamma = rng.normal_vec(cols, 1.0);
+    let w = rng.normal_vec(cols * n_out, 1.0);
+    let gold = run_on_ring(n, |r, h| {
+        let mut d = parts[r].clone();
+        h.allreduce_seg(&mut d, rows, cols, CommQuant::F32, 1);
+        let mut res = res0.clone();
+        let mut normed = vec![0.0f32; rows * cols];
+        let mut out = vec![0.0f32; rows * n_out];
+        let mut ep = FusedEpilogue {
+            residual: &mut res,
+            cols,
+            norm: Some((&gamma, 1e-5)),
+            normed: Some(&mut normed),
+            prologue: Some(Prologue { weight: &w, n: n_out, out: &mut out }),
+        };
+        ep.apply(0, rows, &d);
+        (res, normed, out)
+    });
+    for segments in [2usize, 4, 7] {
+        let got = run_on_ring(n, |r, h| {
+            let mut d = parts[r].clone();
+            let mut res = res0.clone();
+            let mut normed = vec![0.0f32; rows * cols];
+            let mut out = vec![0.0f32; rows * n_out];
+            let mut ep = FusedEpilogue {
+                residual: &mut res,
+                cols,
+                norm: Some((&gamma, 1e-5)),
+                normed: Some(&mut normed),
+                prologue: Some(Prologue { weight: &w, n: n_out, out: &mut out }),
+            };
+            h.allreduce_seg_fused(&mut d, rows, cols, CommQuant::F32, segments, &mut ep);
+            (res, normed, out)
+        });
+        assert_eq!(gold, got, "segments={segments}: full epilogue diverged");
+    }
+}
+
+#[test]
+fn prop_fused_epilogue_bit_identical() {
+    // Randomized sweep over shapes the grid test does not enumerate.
+    Prop::new(29).cases(40).run("fused epilogue bitwise", |rng| {
+        let n = rng.range(1, 5);
+        let rows = rng.range(1, 24);
+        let cols = rng.range(1, 12);
+        let segments = rng.range(1, 10);
+        let quant = if rng.f64() < 0.5 { CommQuant::F32 } else { CommQuant::Int8 };
+        let mut seeder = Rng::new(1000 + rows as u64 * 31 + cols as u64);
+        let parts: Vec<Vec<f32>> =
+            (0..n).map(|_| seeder.normal_vec(rows * cols, 1.5)).collect();
+        let res0 = seeder.normal_vec(rows * cols, 1.5);
+        let gold = run_on_ring(n, |r, h| {
+            let mut d = parts[r].clone();
+            h.allreduce_seg(&mut d, rows, cols, quant, 1);
+            let mut res = res0.clone();
+            for (o, v) in res.iter_mut().zip(&d) {
+                *o += *v;
+            }
+            res
+        });
+        let got = run_on_ring(n, |r, h| {
+            let mut d = parts[r].clone();
+            let mut res = res0.clone();
+            let mut ep = FusedEpilogue::residual_only(&mut res, cols);
+            h.allreduce_seg_fused(&mut d, rows, cols, quant, segments, &mut ep);
+            res
+        });
+        if gold != got {
+            return Err(format!(
+                "n={n} rows={rows} cols={cols} segments={segments} quant={quant:?}"
+            ));
+        }
+        Ok(())
+    });
+}

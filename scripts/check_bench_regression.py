@@ -23,10 +23,13 @@ Semantics:
     passes.
 
 Exit 0 = within tolerance, 1 = regression (each printed). Run from the
-repo root:
+repo root; `--snapshot` is repeatable and the files' sections are merged
+(the baseline's sections may be split across per-PR snapshots, e.g.
+`sim_pp` in BENCH_PR4.json and `sim_fused_epilogue` in BENCH_PR5.json):
 
     python3 scripts/check_bench_regression.py \
-        --baseline BENCH_BASELINE.json --snapshot BENCH_PR4.json
+        --baseline BENCH_BASELINE.json \
+        --snapshot BENCH_PR4.json --snapshot BENCH_PR5.json
 
 To refresh the baseline after an intentional perf change, re-run the
 bench and copy the gated sections over (`--update` prints the snapshot's
@@ -139,7 +142,12 @@ def print_update(baseline, snapshot):
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_BASELINE.json")
-    ap.add_argument("--snapshot", default="BENCH_PR4.json")
+    ap.add_argument(
+        "--snapshot",
+        action="append",
+        help="snapshot file; repeatable — sections from later files merge "
+        "over earlier ones (default: BENCH_PR4.json)",
+    )
     ap.add_argument("--tolerance", type=float, default=0.10)
     ap.add_argument(
         "--update",
@@ -149,7 +157,9 @@ def main():
     args = ap.parse_args()
 
     baseline = load(args.baseline)
-    snapshot = load(args.snapshot)
+    snapshot = {}
+    for path in args.snapshot or ["BENCH_PR4.json"]:
+        snapshot.update(load(path))
     if args.update:
         print_update(baseline, snapshot)
         return

@@ -18,7 +18,7 @@ import os
 import re
 import sys
 
-CHECKED_MD = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md"]
+CHECKED_MD = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md", "TUNING.md"]
 RUST_DIRS = ["rust/src", "rust/benches", "rust/tests", "examples"]
 
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
