@@ -7,10 +7,12 @@
 //! Appends machine-readable sections to `BENCH_PR1.json` (override with
 //! `ISO_PERF_SNAPSHOT`), `BENCH_PR2.json` (`ISO_PERF_SNAPSHOT_PR2`),
 //! `BENCH_PR4.json` (`ISO_PERF_SNAPSHOT_PR4`, the PP×TP sweep CI gates
-//! against `BENCH_BASELINE.json`), and `BENCH_PR5.json`
-//! (`ISO_PERF_SNAPSHOT_PR5`, the fused-epilogue sweep, also CI-gated):
-//! each engine sweep is recorded next to the simulator's prediction, so
-//! the sim-vs-engine trend direction is recorded per PR.
+//! against `BENCH_BASELINE.json`), `BENCH_PR5.json`
+//! (`ISO_PERF_SNAPSHOT_PR5`, the fused-epilogue sweep, also CI-gated),
+//! and `BENCH_PR6.json` (`ISO_PERF_SNAPSHOT_PR6`, the fault-rate ×
+//! recovery-overhead sweep, also CI-gated): each engine sweep is
+//! recorded next to the simulator's prediction, so the sim-vs-engine
+//! trend direction is recorded per PR.
 //!
 //! Requires `make artifacts` for the engine sections; the simulator
 //! sections always run.
@@ -22,8 +24,9 @@ use iso::model::ModelSpec;
 use iso::report::{append_perf_records, PerfRecord};
 use iso::runtime::Manifest;
 use iso::sched::{
-    epilogue_exposed_s, epilogue_s, fused_epilogue_iteration_s, mixed_iteration_s,
-    pp_best_config, pp_bubble_fraction, pp_iteration_s, Coster, MixedIteration,
+    epilogue_exposed_s, epilogue_s, expected_overhead_frac, fused_epilogue_iteration_s,
+    iteration_deadline_s, mixed_iteration_s, pp_best_config, pp_bubble_fraction, pp_iteration_s,
+    recovery_s, Coster, MixedIteration,
 };
 use iso::util::bench::{bench, section};
 use iso::workload::{LenDist, TraceGen};
@@ -54,6 +57,10 @@ fn pr4_snapshot_path() -> String {
 
 fn pr5_snapshot_path() -> String {
     std::env::var("ISO_PERF_SNAPSHOT_PR5").unwrap_or_else(|_| "../BENCH_PR5.json".into())
+}
+
+fn pr6_snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT_PR6").unwrap_or_else(|_| "../BENCH_PR6.json".into())
 }
 
 /// The PP×TP factorizations of a 4-device node that the deterministic
@@ -418,6 +425,106 @@ fn engine_fused_epilogue_sweep(path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Simulator side of the PR-6 sweep (no artifacts needed, fully
+/// deterministic — gated against `BENCH_BASELINE.json` by
+/// `scripts/check_bench_regression.py` in CI): the pinned recovery cost
+/// model (DESIGN.md §14) over fault rate × live context. One recovery
+/// costs a worst-case detection deadline + mesh respawn + checkpoint-
+/// free replay of the live context; goodput is the fused decode lane's
+/// throughput scaled by the expected recovery-overhead share. The
+/// directions the gate pins: recovery cost grows with context, goodput
+/// falls as the fault rate rises.
+fn sim_fault_sweep(path: &str) {
+    // Modeled serving point: a 30 ms mixed iteration advancing an
+    // 8-wide fused decode lane, deadline slack 4, 2 s mesh respawn,
+    // 20k tok/s re-prefill throughput.
+    let (iter_s, slack, respawn_s, prefill_tok_s) = (0.03f64, 4.0f64, 2.0f64, 20_000.0f64);
+    let lane_tok_s = 8.0 / iter_s;
+    let deadline_s = iteration_deadline_s(iter_s, slack);
+    section("simulator: fault rate × recovery overhead (8-lane 30ms iterations)");
+    let mut records = Vec::new();
+    for ctx in [512usize, 4096] {
+        let rec_s = recovery_s(deadline_s, respawn_s, ctx, prefill_tok_s);
+        for rate in [1e-5f64, 1e-4, 1e-3] {
+            let frac = expected_overhead_frac(rate, iter_s, rec_s);
+            let goodput = lane_tok_s * (1.0 - frac);
+            println!(
+                "  ctx={ctx:<4} rate={rate:.0e}: recovery {:7.1}ms overhead {:.5} \
+                 goodput {goodput:7.2} tok/s",
+                rec_s * 1e3,
+                frac
+            );
+            records.push(
+                PerfRecord::new(
+                    &format!("sim fault ctx{ctx} rate{rate:.0e}"),
+                    rec_s * 1e3,
+                    rec_s * 1e3,
+                    rec_s * 1e3,
+                )
+                .with("ctx", ctx as f64)
+                .with("fault_rate", rate)
+                .with("pred_recovery_ms", rec_s * 1e3)
+                .with("pred_goodput_tok_s", goodput)
+                .with("pred_overhead_frac", frac),
+            );
+        }
+    }
+    if let Err(e) = append_perf_records(path, "sim_fault", &records) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
+/// Engine side of the PR-6 sweep (artifact-gated, not in the baseline):
+/// serve a fixed trace with seeded kill-rank plans of increasing event
+/// count and record measured recovery latency and goodput next to the
+/// fault-free run. Zero dropped sequences is asserted here too — a
+/// bench that silently lost work would be measuring the wrong engine.
+fn engine_fault_sweep(path: &str) -> anyhow::Result<()> {
+    section("engine: seeded kill-rank faults during serve_trace (tp=2, mixed)");
+    let mut records = Vec::new();
+    for (label, plan) in [
+        ("fault-free", None),
+        ("kill x1", Some("kill:rank=1:iter=4")),
+        ("kill x2", Some("kill:rank=1:iter=4;kill:rank=0:iter=9")),
+    ] {
+        let mut c = cfg(Strategy::Iso, 2, CommQuant::F32, None);
+        c.decode_batch = 4;
+        c.fault_plan = plan.map(str::to_string);
+        c.fault_slack = 64.0;
+        let mut engine = Engine::start(c)?;
+        let reqs = TraceGen::new(11, 512, LenDist::Fixed(32)).decode_steps(8).generate(4);
+        let clock = std::time::Instant::now();
+        let trace = engine.serve_trace(&reqs)?;
+        let wall_ms = clock.elapsed().as_secs_f64() * 1e3;
+        let report = engine.shutdown()?;
+        assert_eq!(trace.completed, 4, "dropped sequences in {label}");
+        let recoveries = report.metrics.recoveries;
+        let rec_ms = if report.metrics.recovery_ms.is_empty() {
+            0.0
+        } else {
+            report.metrics.recovery_ms.mean()
+        };
+        println!(
+            "  {label:<10} wall {wall_ms:8.1}ms  recoveries {recoveries}  \
+             recovery mean {rec_ms:.1}ms  {:7.1} tok/s",
+            trace.throughput_tok_s()
+        );
+        records.push(
+            PerfRecord::new(&format!("engine fault {label}"), wall_ms, wall_ms, wall_ms)
+                .with("recoveries", recoveries as f64)
+                .with("recovery_mean_ms", rec_ms)
+                .with("tok_s", trace.throughput_tok_s())
+                .with("replayed_tokens", report.metrics.replayed_tokens as f64),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "e2e_engine_fault", &records) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("  wrote fault sweep to {path}");
+    }
+    Ok(())
+}
+
 /// Simulator prediction for the exposed (un-hidden) time of one
 /// segment-streamed all-reduce: the first comm tile is always exposed;
 /// each later tile hides up to one compute tile behind it (paper §3.2,
@@ -435,6 +542,7 @@ fn main() -> anyhow::Result<()> {
     let pr2_path = pr2_snapshot_path();
     let pr4_path = pr4_snapshot_path();
     let pr5_path = pr5_snapshot_path();
+    let pr6_path = pr6_snapshot_path();
 
     // --- PR-2: simulator-predicted mixed-batching direction (no
     // artifacts needed).
@@ -447,6 +555,10 @@ fn main() -> anyhow::Result<()> {
     // --- PR-5: simulator-predicted fused-epilogue direction (no
     // artifacts needed; gated against BENCH_BASELINE.json in CI).
     sim_fused_epilogue_sweep(&pr5_path);
+
+    // --- PR-6: pinned recovery cost model over fault rate × context
+    // (no artifacts needed; gated against BENCH_BASELINE.json in CI).
+    sim_fault_sweep(&pr6_path);
 
     // --- simulator side of the segment sweep (no artifacts needed).
     let sim_exp = SimExperiment::new(
@@ -570,6 +682,10 @@ fn main() -> anyhow::Result<()> {
     // --- PR-5 tentpole: fused-epilogue × segments sweep on the real
     // engine, plus the ladder-residual rider.
     engine_fused_epilogue_sweep(&pr5_path)?;
+
+    // --- PR-6 tentpole: seeded kill-rank faults on the real engine —
+    // measured detection + respawn + replay latency vs fault-free.
+    engine_fault_sweep(&pr6_path)?;
 
     Ok(())
 }

@@ -100,6 +100,11 @@ COMMANDS:
                 serial prefill / per-sequence decode loops compute the
                 MLP from the pre-attention residual so both collectives
                 overlap it; fused lanes unaffected; default off)
+              --fault-plan SPEC (deterministic fault injection, e.g.
+                kill:rank=1:iter=3 or seed=7:ranks=4:iters=20;
+                see DESIGN.md §14; default off)
+              --fault-slack X (detection deadline = X × iteration EMA)
+              --max-recoveries N (mesh respawns before giving up)
               --config FILE (e.g. configs/engine-iso.conf; flags override)
   table1      print the paper's Table 1 from the calibrated simulator
               --strategy iso|gemm-overlap|request-overlap  --csv FILE

@@ -27,6 +27,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
 
 use crate::config::CommQuant;
+use crate::fault::EngineError;
 use crate::quant::quantize_rows_into;
 
 /// One hop's payload.
@@ -50,6 +51,9 @@ struct Packet {
     /// the link runs at memory speed.
     arrive_at: Option<Instant>,
     wire: Wire,
+    /// Fault injection: a modeled CRC failure. The receiver surfaces
+    /// [`EngineError::WireCorrupt`] instead of applying the payload.
+    poisoned: bool,
 }
 
 /// Reusable per-rank wire buffers (DESIGN.md §4). Senders draw from the
@@ -160,6 +164,8 @@ pub struct RingHandle {
     link_busy: Option<Instant>,
     /// Reusable wire buffers.
     pool: BufferPool,
+    /// Fault injection: flag the next outgoing segment corrupt.
+    poison_next: bool,
 }
 
 /// Build a ring of `n` handles (index = rank).
@@ -188,6 +194,7 @@ pub fn ring(n: usize) -> Vec<RingHandle> {
             throttle: None,
             link_busy: None,
             pool: BufferPool::default(),
+            poison_next: false,
         });
     }
     handles
@@ -206,6 +213,15 @@ pub fn seg_range(rows: usize, n: usize, i: usize) -> (usize, usize) {
 }
 
 impl RingHandle {
+    /// Fault injection: flag this rank's next outgoing ring segment as
+    /// corrupt (a modeled CRC failure). The downstream peer's receive
+    /// surfaces [`EngineError::WireCorrupt`] on the supervised (`try_*`)
+    /// paths. A single-rank ring sends nothing, so the flag is inert
+    /// there.
+    pub fn poison_next_send(&mut self) {
+        self.poison_next = true;
+    }
+
     /// In-place sum-all-reduce over `data` viewed as `rows × cols`
     /// (row-major). All ranks must call with equal shapes. `quant`
     /// selects the wire format. Returns wire bytes sent by this rank.
@@ -217,6 +233,18 @@ impl RingHandle {
         quant: CommQuant,
     ) -> u64 {
         self.allreduce_seg(data, rows, cols, quant, 1)
+    }
+
+    /// Supervised [`RingHandle::allreduce`]: surfaces peer death and
+    /// wire corruption as [`EngineError`] instead of panicking.
+    pub fn try_allreduce(
+        &mut self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+    ) -> Result<u64, EngineError> {
+        self.try_allreduce_seg(data, rows, cols, quant, 1)
     }
 
     /// Segment-streamed all-reduce: every hop's chunk moves as
@@ -231,6 +259,18 @@ impl RingHandle {
         segments: usize,
     ) -> u64 {
         self.allreduce_seg_with(data, rows, cols, quant, segments, |_, _, _| {})
+    }
+
+    /// Supervised [`RingHandle::allreduce_seg`].
+    pub fn try_allreduce_seg(
+        &mut self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+        segments: usize,
+    ) -> Result<u64, EngineError> {
+        self.try_allreduce_seg_with(data, rows, cols, quant, segments, |_, _, _| {})
     }
 
     /// Like [`RingHandle::allreduce_seg`], invoking `on_final(row_start,
@@ -274,8 +314,28 @@ impl RingHandle {
         cols: usize,
         quant: CommQuant,
         segments: usize,
-        mut on_final: F,
+        on_final: F,
     ) -> u64
+    where
+        F: FnMut(usize, usize, &[f32]),
+    {
+        self.try_allreduce_seg_with(data, rows, cols, quant, segments, on_final)
+            .expect("ring peer hung up")
+    }
+
+    /// Supervised [`RingHandle::allreduce_seg_with`]: identical wire
+    /// motion and callback contract, but a dead peer or a poisoned
+    /// segment returns [`EngineError`] instead of panicking, so the
+    /// engine's comm threads can exit cleanly and report the failure.
+    pub fn try_allreduce_seg_with<F>(
+        &mut self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+        segments: usize,
+        mut on_final: F,
+    ) -> Result<u64, EngineError>
     where
         F: FnMut(usize, usize, &[f32]),
     {
@@ -285,7 +345,7 @@ impl RingHandle {
             if !data.is_empty() {
                 on_final(0, rows, data);
             }
-            return 0;
+            return Ok(0);
         }
         let n = self.n;
         let r = self.rank;
@@ -298,7 +358,7 @@ impl RingHandle {
             let recv_i = (r + n - s - 1) % n;
             let send_rows = seg_range(rows, n, send_i);
             let recv_rows = seg_range(rows, n, recv_i);
-            self.stream_step(data, cols, send_rows, recv_rows, segments, true, quant, &mut noop);
+            self.stream_step(data, cols, send_rows, recv_rows, segments, true, quant, &mut noop)?;
         }
 
         // This rank's chunk is now fully reduced — stream it out first.
@@ -317,9 +377,9 @@ impl RingHandle {
             let recv_rows = seg_range(rows, n, recv_i);
             self.stream_step(
                 data, cols, send_rows, recv_rows, segments, false, quant, &mut on_final,
-            );
+            )?;
         }
-        self.sent_bytes - before
+        Ok(self.sent_bytes - before)
     }
 
     /// One ring step with double-buffered sub-message streaming: send the
@@ -340,7 +400,8 @@ impl RingHandle {
         add: bool,
         quant: CommQuant,
         on_recv: &mut F,
-    ) where
+    ) -> Result<(), EngineError>
+    where
         F: FnMut(usize, usize, &[f32]),
     {
         let (sa, sb) = send_rows;
@@ -351,18 +412,25 @@ impl RingHandle {
             if k < ns {
                 let (a, b) = seg_range(sb - sa, ns, k);
                 let (s0, s1) = (sa + a, sa + b);
-                self.send_segment(&data[s0 * cols..s1 * cols], s1 - s0, cols, quant);
+                self.send_segment(&data[s0 * cols..s1 * cols], s1 - s0, cols, quant)?;
             }
             if k >= 1 && k - 1 < nr {
                 let (a, b) = seg_range(rb - ra, nr, k - 1);
                 let (r0, r1) = (ra + a, ra + b);
-                self.recv_apply(&mut data[r0 * cols..r1 * cols], r1 - r0, cols, add);
+                self.recv_apply(&mut data[r0 * cols..r1 * cols], r1 - r0, cols, add)?;
                 on_recv(r0, r1, &data[r0 * cols..r1 * cols]);
             }
         }
+        Ok(())
     }
 
-    fn send_segment(&mut self, seg: &[f32], rows: usize, cols: usize, quant: CommQuant) {
+    fn send_segment(
+        &mut self,
+        seg: &[f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+    ) -> Result<(), EngineError> {
         let wire = match quant {
             CommQuant::Int8 => {
                 let mut scales = self.pool.take_f32();
@@ -397,14 +465,29 @@ impl RingHandle {
             }
             None => None,
         };
-        self.tx_next.send(Packet { arrive_at, wire }).expect("ring peer hung up");
+        let poisoned = std::mem::take(&mut self.poison_next);
+        self.tx_next
+            .send(Packet { arrive_at, wire, poisoned })
+            .map_err(|_| EngineError::RankDead { rank: (self.rank + 1) % self.n, link: "ring" })
     }
 
     /// Receive the next sub-message and either accumulate (`add = true`,
     /// reduce-scatter) or overwrite (`add = false`, all-gather) in place.
     /// Arrived buffers are recycled into this rank's pool.
-    fn recv_apply(&mut self, out: &mut [f32], rows: usize, cols: usize, add: bool) {
-        let pkt = self.rx_prev.recv().expect("ring peer hung up");
+    fn recv_apply(
+        &mut self,
+        out: &mut [f32],
+        rows: usize,
+        cols: usize,
+        add: bool,
+    ) -> Result<(), EngineError> {
+        let pkt = self.rx_prev.recv().map_err(|_| EngineError::RankDead {
+            rank: (self.rank + self.n - 1) % self.n,
+            link: "ring",
+        })?;
+        if pkt.poisoned {
+            return Err(EngineError::WireCorrupt { rank: self.rank, link: "ring" });
+        }
         if let Some(at) = pkt.arrive_at {
             let now = Instant::now();
             if at > now {
@@ -435,6 +518,7 @@ impl RingHandle {
                 self.pool.put_i8(q.data);
             }
         }
+        Ok(())
     }
 
     /// Fused-rows all-reduce for the decode lane (DESIGN.md §9): reduce
@@ -455,9 +539,22 @@ impl RingHandle {
         cols: usize,
         quant: CommQuant,
     ) -> u64 {
+        self.try_allreduce_rows_fused(data, rows, cols, quant).expect("ring peer hung up")
+    }
+
+    /// Supervised [`RingHandle::allreduce_rows_fused`]: same rank-ordered
+    /// wire motion, but peer death / poisoned segments surface as
+    /// [`EngineError`].
+    pub fn try_allreduce_rows_fused(
+        &mut self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+    ) -> Result<u64, EngineError> {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
         if self.n == 1 || data.is_empty() {
-            return 0;
+            return Ok(0);
         }
         let n = self.n;
         let r = self.rank;
@@ -465,22 +562,22 @@ impl RingHandle {
 
         // Reduce phase: partial sums flow 0 → 1 → … → n−1.
         if r > 0 {
-            self.recv_apply(data, rows, cols, true);
+            self.recv_apply(data, rows, cols, true)?;
         }
         if r < n - 1 {
-            self.send_segment(data, rows, cols, quant);
+            self.send_segment(data, rows, cols, quant)?;
         }
 
         // Broadcast phase: the total flows n−1 → 0 → … → n−2.
         if r == n - 1 {
-            self.send_segment(data, rows, cols, quant);
+            self.send_segment(data, rows, cols, quant)?;
         } else {
-            self.recv_apply(data, rows, cols, false);
+            self.recv_apply(data, rows, cols, false)?;
             if r + 1 != n - 1 {
-                self.send_segment(data, rows, cols, quant);
+                self.send_segment(data, rows, cols, quant)?;
             }
         }
-        self.sent_bytes - before
+        Ok(self.sent_bytes - before)
     }
 
     /// [`RingHandle::allreduce_seg_with`] with the callback bound to a
@@ -520,9 +617,23 @@ impl RingHandle {
         segments: usize,
         epilogue: &mut FusedEpilogue<'_>,
     ) -> u64 {
+        self.try_allreduce_seg_fused(data, rows, cols, quant, segments, epilogue)
+            .expect("ring peer hung up")
+    }
+
+    /// Supervised [`RingHandle::allreduce_seg_fused`].
+    pub fn try_allreduce_seg_fused(
+        &mut self,
+        data: &mut [f32],
+        rows: usize,
+        cols: usize,
+        quant: CommQuant,
+        segments: usize,
+        epilogue: &mut FusedEpilogue<'_>,
+    ) -> Result<u64, EngineError> {
         assert_eq!(epilogue.cols, cols, "epilogue width mismatch");
         assert_eq!(epilogue.residual.len(), rows * cols, "epilogue residual shape");
-        self.allreduce_seg_with(data, rows, cols, quant, segments, |a, b, vals| {
+        self.try_allreduce_seg_with(data, rows, cols, quant, segments, |a, b, vals| {
             epilogue.apply(a, b, vals)
         })
     }
@@ -693,6 +804,8 @@ struct P2pPacket {
     rows: usize,
     cols: usize,
     data: Vec<f32>,
+    /// Fault injection: a modeled CRC failure on the stage link.
+    poisoned: bool,
 }
 
 /// A rank's endpoint on the inter-stage activation chain (DESIGN.md §11).
@@ -726,6 +839,8 @@ pub struct StagePort {
     pub sent_bytes: u64,
     /// Activation messages this port has sent downstream.
     pub sent_msgs: u64,
+    /// Fault injection: flag the next outgoing activation corrupt.
+    poison_next: bool,
 }
 
 impl StagePort {
@@ -740,7 +855,17 @@ impl StagePort {
             link_busy: None,
             sent_bytes: 0,
             sent_msgs: 0,
+            poison_next: false,
         }
+    }
+
+    /// Fault injection: flag this port's next downstream activation as
+    /// corrupt (a modeled CRC failure); the downstream stage's
+    /// [`StagePort::try_recv_prev`] surfaces
+    /// [`EngineError::WireCorrupt`]. Inert on the last stage (no
+    /// downstream link).
+    pub fn poison_next_send(&mut self) {
+        self.poison_next = true;
     }
 
     /// Whether an upstream stage feeds this port.
@@ -758,6 +883,20 @@ impl StagePort {
     /// arrival deadline is stamped and the transfer "flies" while this
     /// rank computes its next chunk.
     pub fn send_next(&mut self, data: Vec<f32>, rows: usize, cols: usize) {
+        self.try_send_next(data, rows, cols).expect("stage peer hung up");
+    }
+
+    /// Supervised [`StagePort::send_next`]: a dead downstream stage
+    /// returns [`EngineError::RankDead`] (the `rank` field carries the
+    /// downstream **stage index**; the coordinator maps it to a global
+    /// rank). Calling on the last stage is still a programming-error
+    /// panic.
+    pub fn try_send_next(
+        &mut self,
+        data: Vec<f32>,
+        rows: usize,
+        cols: usize,
+    ) -> Result<(), EngineError> {
         assert_eq!(data.len(), rows * cols, "stage send shape mismatch");
         let tx = self.tx_next.as_ref().expect("send_next on the last stage");
         let nbytes = data.len() * 4;
@@ -776,22 +915,39 @@ impl StagePort {
             }
             None => None,
         };
-        tx.send(P2pPacket { arrive_at, rows, cols, data }).expect("stage peer hung up");
+        let poisoned = std::mem::take(&mut self.poison_next);
+        tx.send(P2pPacket { arrive_at, rows, cols, data, poisoned })
+            .map_err(|_| EngineError::RankDead { rank: self.stage + 1, link: "stage" })
     }
 
     /// Blocking receive of the next upstream activation, in sender order
     /// (the chain is a FIFO channel). Sleeps until the modeled arrival
     /// deadline, then hands the buffer over verbatim.
     pub fn recv_prev(&mut self) -> (usize, usize, Vec<f32>) {
+        self.try_recv_prev().expect("stage peer hung up")
+    }
+
+    /// Supervised [`StagePort::recv_prev`]: a dead upstream stage
+    /// returns [`EngineError::RankDead`] and a poisoned activation
+    /// returns [`EngineError::WireCorrupt`] (the `rank` field carries
+    /// the **stage index** on this link). Calling on stage 0 is still a
+    /// programming-error panic.
+    pub fn try_recv_prev(&mut self) -> Result<(usize, usize, Vec<f32>), EngineError> {
         let rx = self.rx_prev.as_ref().expect("recv_prev on stage 0");
-        let pkt = rx.recv().expect("stage peer hung up");
+        let pkt = rx.recv().map_err(|_| EngineError::RankDead {
+            rank: self.stage.saturating_sub(1),
+            link: "stage",
+        })?;
+        if pkt.poisoned {
+            return Err(EngineError::WireCorrupt { rank: self.stage, link: "stage" });
+        }
         if let Some(at) = pkt.arrive_at {
             let now = Instant::now();
             if at > now {
                 std::thread::sleep(at - now);
             }
         }
-        (pkt.rows, pkt.cols, pkt.data)
+        Ok((pkt.rows, pkt.cols, pkt.data))
     }
 }
 
@@ -836,7 +992,7 @@ pub fn run_on_ring<T: Send>(
             out[r] = Some(v);
         }
     });
-    out.into_iter().map(|v| v.unwrap()).collect()
+    out.into_iter().map(|v| v.expect("invariant: every rank joined above")).collect()
 }
 
 #[cfg(test)]
@@ -1438,6 +1594,99 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn poisoned_ring_segment_surfaces_wire_corrupt() {
+        // PR-6: a poisoned wire segment is detected at the receiver as
+        // WireCorrupt; the sender then observes the cascade (its dead
+        // peer) as RankDead. Nothing hangs.
+        let results = run_on_ring(2, |r, h| {
+            if r == 0 {
+                h.poison_next_send();
+            }
+            let mut d = vec![1.0f32; 8];
+            h.try_allreduce(&mut d, 2, 4, CommQuant::F32)
+        });
+        assert_eq!(
+            results[1],
+            Err(EngineError::WireCorrupt { rank: 1, link: "ring" }),
+            "receiver must flag the poisoned segment"
+        );
+        assert_eq!(
+            results[0],
+            Err(EngineError::RankDead { rank: 1, link: "ring" }),
+            "sender must observe the peer's exit, not hang"
+        );
+    }
+
+    #[test]
+    fn poison_is_inert_on_a_single_rank_ring() {
+        let mut h = ring(1).pop().unwrap();
+        h.poison_next_send();
+        let mut d = vec![1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(h.try_allreduce(&mut d, 2, 2, CommQuant::F32), Ok(0));
+        assert_eq!(d, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn dead_ring_peer_cascades_rank_dead_without_hanging() {
+        // PR-6 detection invariant (DESIGN.md §14): one rank exiting
+        // before the collective unblocks every other rank with RankDead
+        // via the sender-drop cascade — no recv waits forever.
+        let results = run_on_ring(3, |r, h| {
+            if r == 1 {
+                return Ok(0); // rank 1 "dies" before the collective
+            }
+            let mut d = vec![r as f32; 6];
+            h.try_allreduce(&mut d, 2, 3, CommQuant::F32)
+        });
+        assert_eq!(results[1], Ok(0));
+        for r in [0usize, 2] {
+            match &results[r] {
+                Err(EngineError::RankDead { link: "ring", .. }) => {}
+                other => panic!("rank {r}: expected RankDead, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn poisoned_stage_activation_surfaces_wire_corrupt_then_recovers() {
+        let mut grid = stage_grid(2, 1);
+        let mut tail = grid.pop().unwrap().pop().unwrap();
+        let mut head = grid.pop().unwrap().pop().unwrap();
+        head.poison_next_send();
+        head.try_send_next(vec![1.0; 4], 2, 2).unwrap();
+        assert_eq!(
+            tail.try_recv_prev(),
+            Err(EngineError::WireCorrupt { rank: 1, link: "stage" })
+        );
+        // The flag is one-shot: the next activation crosses clean.
+        head.try_send_next(vec![2.0; 4], 2, 2).unwrap();
+        let (r, c, d) = tail.try_recv_prev().unwrap();
+        assert_eq!((r, c, d), (2, 2, vec![2.0; 4]));
+    }
+
+    #[test]
+    fn dead_stage_peer_surfaces_rank_dead() {
+        // Upstream death: recv errors instead of hanging.
+        let mut grid = stage_grid(2, 1);
+        let mut tail = grid.pop().unwrap().pop().unwrap();
+        let head = grid.pop().unwrap().pop().unwrap();
+        drop(head);
+        assert_eq!(
+            tail.try_recv_prev(),
+            Err(EngineError::RankDead { rank: 0, link: "stage" })
+        );
+        // Downstream death: send errors instead of aborting.
+        let mut grid = stage_grid(2, 1);
+        let tail = grid.pop().unwrap().pop().unwrap();
+        let mut head = grid.pop().unwrap().pop().unwrap();
+        drop(tail);
+        assert_eq!(
+            head.try_send_next(vec![0.0; 2], 1, 2),
+            Err(EngineError::RankDead { rank: 1, link: "stage" })
+        );
     }
 
     #[test]

@@ -209,6 +209,22 @@ pub struct EngineConfig {
     pub link_mbps: Option<f64>,
     /// Emulated per-hop latency (µs) when `link_mbps` is set.
     pub link_alpha_us: f64,
+    /// Seeded deterministic fault plan (`fault::FaultPlan` grammar, e.g.
+    /// `"kill:rank=1:iter=3"`), `None` = fault-free. Parsed eagerly so a
+    /// typo fails at startup, not mid-serve (DESIGN.md §14).
+    pub fault_plan: Option<String>,
+    /// Detection-deadline slack: the leader waits `fault_slack ×` the
+    /// observed per-iteration EMA before declaring a rank dead. Large by
+    /// default so scheduler jitter on a loaded CI box never trips a
+    /// false positive (false positives are safe — recovery preserves
+    /// bit-identity — just slow).
+    pub fault_slack: f64,
+    /// Floor (ms) under the deadline EMA, covering cold starts and
+    /// compilation pauses before the EMA has samples.
+    pub deadline_floor_ms: f64,
+    /// Mesh respawns the engine will attempt before giving up and
+    /// surfacing the fault to the caller.
+    pub max_recoveries: usize,
 }
 
 impl Default for EngineConfig {
@@ -234,6 +250,10 @@ impl Default for EngineConfig {
             artifacts_dir: "artifacts".into(),
             link_mbps: None,
             link_alpha_us: 50.0,
+            fault_plan: None,
+            fault_slack: 32.0,
+            deadline_floor_ms: 250.0,
+            max_recoveries: 4,
         }
     }
 }
@@ -384,6 +404,18 @@ impl EngineConfig {
                 "engine.link_alpha_us" => {
                     cfg.link_alpha_us = v.parse().map_err(|_| format!("bad link_alpha_us {v:?}"))?
                 }
+                "engine.fault_plan" => cfg.fault_plan = Some(v.clone()),
+                "engine.fault_slack" => {
+                    cfg.fault_slack = v.parse().map_err(|_| format!("bad fault_slack {v:?}"))?
+                }
+                "engine.deadline_floor_ms" => {
+                    cfg.deadline_floor_ms =
+                        v.parse().map_err(|_| format!("bad deadline_floor_ms {v:?}"))?
+                }
+                "engine.max_recoveries" => {
+                    cfg.max_recoveries =
+                        v.parse().map_err(|_| format!("bad max_recoveries {v:?}"))?
+                }
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -401,6 +433,13 @@ impl EngineConfig {
         }
         if cfg.pp_stages == 0 {
             return Err("pp_stages must be >= 1".into());
+        }
+        if cfg.fault_slack < 1.0 {
+            return Err("fault_slack must be >= 1".into());
+        }
+        if let Some(plan) = &cfg.fault_plan {
+            // Parse eagerly so a typo'd plan fails at startup.
+            crate::fault::FaultPlan::parse(plan).map_err(|e| format!("bad fault_plan: {e}"))?;
         }
         Ok(cfg)
     }
@@ -531,6 +570,35 @@ mod tests {
     #[test]
     fn missing_equals_is_error() {
         assert!(parse_config_str("[engine]\nstrategy iso").is_err());
+    }
+
+    #[test]
+    fn fault_knobs_default_off_and_parse() {
+        let cfg = EngineConfig::default();
+        assert!(cfg.fault_plan.is_none(), "fault injection must be opt-in");
+        assert!(cfg.fault_slack >= 1.0);
+        assert!(cfg.deadline_floor_ms > 0.0);
+        assert!(cfg.max_recoveries >= 1);
+
+        let map = parse_config_str(
+            "[engine]\nfault_plan = kill:rank=1:iter=3\nfault_slack = 8\n\
+             deadline_floor_ms = 100\nmax_recoveries = 2",
+        )
+        .unwrap();
+        let cfg = EngineConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.fault_plan.as_deref(), Some("kill:rank=1:iter=3"));
+        assert_eq!(cfg.fault_slack, 8.0);
+        assert_eq!(cfg.deadline_floor_ms, 100.0);
+        assert_eq!(cfg.max_recoveries, 2);
+    }
+
+    #[test]
+    fn fault_knobs_validated() {
+        // A typo'd plan fails at parse time, not mid-serve.
+        let bad = parse_config_str("[engine]\nfault_plan = kill:rank=1").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+        let bad = parse_config_str("[engine]\nfault_slack = 0.5").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
     }
 
     #[test]

@@ -87,9 +87,11 @@
 //! HLO text by `make artifacts` and are compiled per worker at startup.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -99,6 +101,7 @@ use crate::batch::{
 };
 use crate::collective::{ring, seg_range, stage_grid, FusedEpilogue, RingHandle, StagePort};
 use crate::config::{CommQuant, EngineConfig, Strategy};
+use crate::fault::{EngineError, FaultInjector, FaultPlan, SupervisionEvent};
 use crate::kv::KvManager;
 use crate::metrics::{EngineMetrics, Timer};
 use crate::runtime::{Arg, DevTensor, Executable, Manifest, Tensor, WorkerRuntime};
@@ -256,6 +259,41 @@ impl WorkerStats {
         }
         self.overlapped_ms() / self.comm_ms
     }
+
+    /// Copy the comm-thread half of a rank's counters into the
+    /// compute-side record (the rank's two threads split the fields).
+    fn fold_comm(&mut self, comm: &WorkerStats) {
+        self.comm_ms = comm.comm_ms;
+        self.allreduces = comm.allreduces;
+        self.fused_allreduces = comm.fused_allreduces;
+        self.fused_rows = comm.fused_rows;
+        self.wire_bytes = comm.wire_bytes;
+        self.wire_msgs = comm.wire_msgs;
+        self.fused_epilogue_rows = comm.fused_epilogue_rows;
+        self.fused_epilogue_ms = comm.fused_epilogue_ms;
+    }
+
+    /// Add another mesh generation's counters for the same rank.
+    /// Recovery (DESIGN.md §14) respawns the worker grid; the final
+    /// report spans every generation, so an abandoned mesh's counters
+    /// are folded into its successor's rather than dropped.
+    fn absorb(&mut self, o: &WorkerStats) {
+        self.compute_ms += o.compute_ms;
+        self.stall_ms += o.stall_ms;
+        self.comm_ms += o.comm_ms;
+        self.wire_bytes += o.wire_bytes;
+        self.wire_msgs += o.wire_msgs;
+        self.allreduces += o.allreduces;
+        self.fused_allreduces += o.fused_allreduces;
+        self.fused_rows += o.fused_rows;
+        self.seg_acks += o.seg_acks;
+        self.epilogue_ms += o.epilogue_ms;
+        self.fused_epilogue_rows += o.fused_epilogue_rows;
+        self.fused_epilogue_ms += o.fused_epilogue_ms;
+        self.p2p_bytes += o.p2p_bytes;
+        self.p2p_msgs += o.p2p_msgs;
+        self.p2p_stall_ms += o.p2p_stall_ms;
+    }
 }
 
 /// Result of one prefill.
@@ -382,6 +420,9 @@ struct ComputeWorker {
     /// (§Perf): a fused submit payload comes back as the ack payload, so
     /// the lane reuses buffers instead of allocating per layer-stage.
     scratch: Vec<Vec<f32>>,
+    /// Engine-wide fault injector (DESIGN.md §14), polled at layer
+    /// boundaries. Holds an empty plan unless a `FaultPlan` is set.
+    injector: Arc<FaultInjector>,
     stats: WorkerStats,
 }
 
@@ -398,6 +439,7 @@ struct LayerWeights {
 }
 
 impl ComputeWorker {
+    #[allow(clippy::too_many_arguments)]
     fn build(
         rank: usize,
         cfg: &EngineConfig,
@@ -406,6 +448,7 @@ impl ComputeWorker {
         to_comm: Sender<CommJob>,
         from_comm: Receiver<SegAck>,
         recycle_tx: Sender<Vec<f32>>,
+        injector: Arc<FaultInjector>,
     ) -> Result<Self> {
         let tp = cfg.tp;
         let stages = cfg.pp_stages;
@@ -501,8 +544,21 @@ impl ComputeWorker {
             from_comm,
             recycle_tx,
             scratch: Vec::new(),
+            injector,
             stats: WorkerStats { rank, stage, ..Default::default() },
         })
+    }
+
+    /// Poll the fault injector at a layer boundary (DESIGN.md §14): a
+    /// planned kill surfaces as a typed error the worker exits with, a
+    /// stall sleeps in place, and a planned p2p poison arms the stage
+    /// port so its next activation send is flagged corrupt.
+    fn fault_check(&mut self, layer: usize) -> Result<()> {
+        if self.injector.poll_wire(self.stats.rank, true) {
+            self.port.poison_next_send();
+        }
+        self.injector.poll_compute(self.stats.rank, layer)?;
+        Ok(())
     }
 
     /// Per-stage KV ownership (DESIGN.md §11): a slot's caches on this
@@ -530,7 +586,7 @@ impl ComputeWorker {
     /// all-reduce stalls.
     fn recv_stage(&mut self, rows: usize) -> Result<Tensor> {
         let t = Timer::start();
-        let (r, c, data) = self.port.recv_prev();
+        let (r, c, data) = self.port.try_recv_prev()?;
         self.stats.p2p_stall_ms += t.elapsed_ms();
         if r != rows || c != self.d_model {
             bail!("stage handoff shape mismatch: got {r}x{c}, want {rows}x{}", self.d_model);
@@ -540,10 +596,11 @@ impl ComputeWorker {
 
     /// Hand a finalized activation to the next stage (zero-copy, bit
     /// exact; never blocks — the transfer overlaps this rank's next
-    /// chunk).
-    fn send_stage(&mut self, x: Tensor) {
+    /// chunk). A dead downstream stage surfaces as a typed error.
+    fn send_stage(&mut self, x: Tensor) -> Result<()> {
         let rows = x.shape[0];
-        self.port.send_next(x.data, rows, self.d_model);
+        self.port.try_send_next(x.data, rows, self.d_model)?;
+        Ok(())
     }
 
     /// A chunk's input activation: embedded on stage 0, received from the
@@ -563,24 +620,24 @@ impl ComputeWorker {
     /// into it the moment the segment finalizes, and the single returning
     /// ack carries the fully-updated tensor — the residual-add overlaps
     /// the collective's in-flight tail instead of running after it.
-    fn submit(&mut self, data: Vec<f32>, rows: usize, x: &mut Tensor) {
+    fn submit(&mut self, data: Vec<f32>, rows: usize, x: &mut Tensor) -> Result<()> {
         let residual = self.take_residual(x, rows);
-        self.submit_with(data, rows, self.comm_segments, false, residual);
+        self.submit_with(data, rows, self.comm_segments, false, residual)
     }
 
     /// [`ComputeWorker::submit`] without the residual payload — the
     /// ladder-residual paths keep the tensor compute-side because the
     /// next block still reads it while the collective is in flight.
-    fn submit_plain(&mut self, data: Vec<f32>, rows: usize) {
-        self.submit_with(data, rows, self.comm_segments, false, None);
+    fn submit_plain(&mut self, data: Vec<f32>, rows: usize) -> Result<()> {
+        self.submit_with(data, rows, self.comm_segments, false, None)
     }
 
     /// Submit a fused decode-lane batch: one rank-ordered B-row
     /// collective whose result is bit-identical to B per-row collectives.
     /// The lane's residual rides along under the fused epilogue.
-    fn submit_fused(&mut self, data: Vec<f32>, rows: usize, x: &mut Tensor) {
+    fn submit_fused(&mut self, data: Vec<f32>, rows: usize, x: &mut Tensor) -> Result<()> {
         let residual = self.take_residual(x, rows);
-        self.submit_with(data, rows, 1, true, residual);
+        self.submit_with(data, rows, 1, true, residual)
     }
 
     /// Detach `x`'s buffer as the job's residual payload when the fused
@@ -601,12 +658,13 @@ impl ComputeWorker {
         segments: usize,
         fused: bool,
         residual: Option<Vec<f32>>,
-    ) {
+    ) -> Result<()> {
         let cols = self.d_model;
         self.stats.allreduces += 1;
         self.to_comm
             .send(CommJob { data, rows, cols, segments, fused, residual })
-            .expect("comm thread hung up");
+            .map_err(|_| EngineError::RankDead { rank: self.stats.rank, link: "comm" })?;
+        Ok(())
     }
 
     /// Consume the next reduced result (FIFO) and fold it into `x` — the
@@ -616,14 +674,18 @@ impl ComputeWorker {
     /// thread already applied every segment into the shipped residual, so
     /// the single ack just hands the finished buffer back and the exposed
     /// epilogue collapses to a pointer swap. Only time actually blocked
-    /// counts as stall (exposed comm).
-    fn recv_reduced_apply(&mut self, x: &mut Tensor) {
+    /// counts as stall (exposed comm). A comm thread that exited on a
+    /// ring fault surfaces here as a typed [`EngineError::RankDead`].
+    fn recv_reduced_apply(&mut self, x: &mut Tensor) -> Result<()> {
         let cols = self.d_model;
         let rows = x.shape.first().copied().unwrap_or(0);
         let mut got = 0;
         while got < rows {
             let t = Timer::start();
-            let ack = self.from_comm.recv().expect("comm thread hung up");
+            let ack = self
+                .from_comm
+                .recv()
+                .map_err(|_| EngineError::RankDead { rank: self.stats.rank, link: "comm" })?;
             self.stats.stall_ms += t.elapsed_ms();
             self.stats.seg_acks += 1;
             if let Some(buf) = ack.spent {
@@ -658,6 +720,7 @@ impl ComputeWorker {
                 self.recycle_tx.send(ack.data).ok();
             }
         }
+        Ok(())
     }
 
     /// A zeroed `len`-element buffer from the scratch pool (or fresh).
@@ -672,7 +735,7 @@ impl ComputeWorker {
         let t = tokens.len();
         let exe = self.embed.get(&t).ok_or_else(|| anyhow!("no embed_t{t}"))?;
         let out = exe.run(&[Arg::I32(tokens), Arg::Dev(&self.emb)])?;
-        Ok(out.into_iter().next().unwrap())
+        Ok(out.into_iter().next().expect("invariant: embed module emits one output"))
     }
 
     /// One chunk's attention partial; updates the slot's KV cache.
@@ -684,8 +747,8 @@ impl ComputeWorker {
         // Move the caches out instead of cloning them (§Perf): the stage
         // returns the updated caches, which we put back below. `take`
         // leaves an unallocated placeholder, not a zero-filled tensor.
-        let (k_cache, v_cache) =
-            std::mem::take(&mut self.caches.get_mut(&slot).unwrap()[layer]);
+        let caches = self.caches.get_mut(&slot).expect("invariant: slot cache allocated at spawn");
+        let (k_cache, v_cache) = std::mem::take(&mut caches[layer]);
         let out = exe.run(&[
             Arg::F32(x),
             Arg::Dev(&w.ln1),
@@ -698,10 +761,12 @@ impl ComputeWorker {
             Arg::Scalar(offset as i32),
         ])?;
         let mut it = out.into_iter();
-        let partial = it.next().unwrap();
-        let new_k = it.next().unwrap();
-        let new_v = it.next().unwrap();
-        self.caches.get_mut(&slot).unwrap()[layer] = (new_k, new_v);
+        let arity = "invariant: attn module emits (partial, k, v)";
+        let partial = it.next().expect(arity);
+        let new_k = it.next().expect(arity);
+        let new_v = it.next().expect(arity);
+        self.caches.get_mut(&slot).expect("invariant: slot cache allocated at spawn")[layer] =
+            (new_k, new_v);
         self.stats.compute_ms += timer.elapsed_ms();
         Ok(partial)
     }
@@ -719,14 +784,14 @@ impl ComputeWorker {
             Arg::Dev(&w.w_down),
         ])?;
         self.stats.compute_ms += timer.elapsed_ms();
-        Ok(out.into_iter().next().unwrap())
+        Ok(out.into_iter().next().expect("invariant: mlp module emits one output"))
     }
 
     fn run_logits(&mut self, x: &Tensor) -> Result<Tensor> {
         let t = x.shape[0];
         let exe = self.logits.get(&t).ok_or_else(|| anyhow!("no logits_t{t}"))?;
         let out = exe.run(&[Arg::F32(x), Arg::Dev(&self.ln_f), Arg::Dev(&self.head)])?;
-        Ok(out.into_iter().next().unwrap())
+        Ok(out.into_iter().next().expect("invariant: logits module emits one output"))
     }
 
     /// Prefill one sequence with the ISO pipelined schedule (or blocking
@@ -802,27 +867,28 @@ impl ComputeWorker {
         while g0 < k {
             let g1 = (g0 + group).min(k);
             for l in 0..self.local_layers {
+                self.fault_check(l)?;
                 for i in g0..g1 {
                     if l == 0 {
                         let x = self.chunk_in(tokens, &chunks[i])?;
                         xs.push(x);
                     } else {
                         // consume chunk i's MLP all-reduce from layer l-1
-                        self.recv_reduced_apply(&mut xs[i]);
+                        self.recv_reduced_apply(&mut xs[i])?;
                     }
                     let partial = self.run_attn(slot, l, &xs[i], chunks[i].offset)?;
-                    self.submit(partial.data, chunks[i].len, &mut xs[i]);
+                    self.submit(partial.data, chunks[i].len, &mut xs[i])?;
                 }
                 for i in g0..g1 {
-                    self.recv_reduced_apply(&mut xs[i]);
+                    self.recv_reduced_apply(&mut xs[i])?;
                     let partial = self.run_mlp(l, &xs[i])?;
-                    self.submit(partial.data, chunks[i].len, &mut xs[i]);
+                    self.submit(partial.data, chunks[i].len, &mut xs[i])?;
                 }
             }
-            for x in xs.iter_mut().take(g1).skip(g0) {
-                self.recv_reduced_apply(x);
+            for i in g0..g1 {
+                self.recv_reduced_apply(&mut xs[i])?;
                 if !self.is_last_stage() {
-                    self.send_stage(std::mem::take(x));
+                    self.send_stage(std::mem::take(&mut xs[i]))?;
                 }
             }
             g0 = g1;
@@ -847,24 +913,25 @@ impl ComputeWorker {
         for c in chunks {
             let mut x = self.chunk_in(tokens, c)?;
             for l in 0..self.local_layers {
+                self.fault_check(l)?;
                 if self.ladder {
                     let pa = self.run_attn(slot, l, &x, c.offset)?;
-                    self.submit_plain(pa.data, c.len);
+                    self.submit_plain(pa.data, c.len)?;
                     let pm = self.run_mlp(l, &x)?;
-                    self.submit_plain(pm.data, c.len);
-                    self.recv_reduced_apply(&mut x);
-                    self.recv_reduced_apply(&mut x);
+                    self.submit_plain(pm.data, c.len)?;
+                    self.recv_reduced_apply(&mut x)?;
+                    self.recv_reduced_apply(&mut x)?;
                 } else {
                     let partial = self.run_attn(slot, l, &x, c.offset)?;
-                    self.submit(partial.data, c.len, &mut x);
-                    self.recv_reduced_apply(&mut x);
+                    self.submit(partial.data, c.len, &mut x)?;
+                    self.recv_reduced_apply(&mut x)?;
                     let partial = self.run_mlp(l, &x)?;
-                    self.submit(partial.data, c.len, &mut x);
-                    self.recv_reduced_apply(&mut x);
+                    self.submit(partial.data, c.len, &mut x)?;
+                    self.recv_reduced_apply(&mut x)?;
                 }
             }
             if !self.is_last_stage() {
-                self.send_stage(std::mem::take(&mut x));
+                self.send_stage(std::mem::take(&mut x))?;
             }
             xs.push(x);
         }
@@ -882,24 +949,25 @@ impl ComputeWorker {
             self.recv_stage(1)?
         };
         for l in 0..self.local_layers {
+            self.fault_check(l)?;
             if self.ladder {
                 let pa = self.run_attn(slot, l, &x, offset)?;
-                self.submit_plain(pa.data, 1);
+                self.submit_plain(pa.data, 1)?;
                 let pm = self.run_mlp(l, &x)?;
-                self.submit_plain(pm.data, 1);
-                self.recv_reduced_apply(&mut x);
-                self.recv_reduced_apply(&mut x);
+                self.submit_plain(pm.data, 1)?;
+                self.recv_reduced_apply(&mut x)?;
+                self.recv_reduced_apply(&mut x)?;
             } else {
                 let partial = self.run_attn(slot, l, &x, offset)?;
-                self.submit(partial.data, 1, &mut x);
-                self.recv_reduced_apply(&mut x);
+                self.submit(partial.data, 1, &mut x)?;
+                self.recv_reduced_apply(&mut x)?;
                 let partial = self.run_mlp(l, &x)?;
-                self.submit(partial.data, 1, &mut x);
-                self.recv_reduced_apply(&mut x);
+                self.submit(partial.data, 1, &mut x)?;
+                self.recv_reduced_apply(&mut x)?;
             }
         }
         if !self.is_last_stage() {
-            self.send_stage(x);
+            self.send_stage(x)?;
             return Ok(None);
         }
         if self.is_reply {
@@ -953,8 +1021,7 @@ impl ComputeWorker {
         row: &mut Tensor,
     ) -> Result<()> {
         let p = self.lane_attn_partial(layer, lane, &*x_lane, row)?;
-        self.submit_fused(p, lane.len(), x_lane);
-        Ok(())
+        self.submit_fused(p, lane.len(), x_lane)
     }
 
     /// The lane's MLP partial for one layer: position-free, so it runs as
@@ -991,8 +1058,7 @@ impl ComputeWorker {
     ) -> Result<()> {
         let b = x_lane.shape[0];
         let p = self.lane_mlp_partial(layer, &*x_lane, row)?;
-        self.submit_fused(p, b, x_lane);
-        Ok(())
+        self.submit_fused(p, b, x_lane)
     }
 
     /// Rank-0 logits for every lane row.
@@ -1024,13 +1090,14 @@ impl ComputeWorker {
         };
         let mut row = Tensor::zeros(vec![1, self.d_model]);
         for l in 0..self.local_layers {
+            self.fault_check(l)?;
             self.lane_attn_submit(l, lane, &mut x_lane, &mut row)?;
-            self.recv_reduced_apply(&mut x_lane);
+            self.recv_reduced_apply(&mut x_lane)?;
             self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
-            self.recv_reduced_apply(&mut x_lane);
+            self.recv_reduced_apply(&mut x_lane)?;
         }
         if !self.is_last_stage() {
-            self.send_stage(x_lane);
+            self.send_stage(x_lane)?;
             return Ok(None);
         }
         if self.is_reply {
@@ -1098,8 +1165,7 @@ impl ComputeWorker {
     ) -> Result<()> {
         let rows = x_lane.shape[0];
         let p = self.spec_attn_partial(layer, lane, &*x_lane, row)?;
-        self.submit_fused(p, rows, x_lane);
-        Ok(())
+        self.submit_fused(p, rows, x_lane)
     }
 
     /// Speculative verify step over the whole lane: `2 × n_layers` fused
@@ -1118,13 +1184,14 @@ impl ComputeWorker {
         };
         let mut row = Tensor::zeros(vec![1, self.d_model]);
         for l in 0..self.local_layers {
+            self.fault_check(l)?;
             self.spec_attn_submit(l, lane, &mut x_lane, &mut row)?;
-            self.recv_reduced_apply(&mut x_lane);
+            self.recv_reduced_apply(&mut x_lane)?;
             self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
-            self.recv_reduced_apply(&mut x_lane);
+            self.recv_reduced_apply(&mut x_lane)?;
         }
         if !self.is_last_stage() {
-            self.send_stage(x_lane);
+            self.send_stage(x_lane)?;
             return Ok(None);
         }
         if self.is_reply {
@@ -1150,15 +1217,16 @@ impl ComputeWorker {
         let mut row = Tensor::zeros(vec![1, self.d_model]);
 
         for l in 0..self.local_layers {
+            self.fault_check(l)?;
             for i in 0..k {
                 if l == 0 {
                     let x = self.chunk_in(&p.tokens, &p.chunks[i])?;
                     xs.push(x);
                 } else {
-                    self.recv_reduced_apply(&mut xs[i]);
+                    self.recv_reduced_apply(&mut xs[i])?;
                 }
                 let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
-                self.submit(partial.data, p.chunks[i].len, &mut xs[i]);
+                self.submit(partial.data, p.chunks[i].len, &mut xs[i])?;
             }
             if l == 0 && self.stage > 0 {
                 // Wire order is [chunks…, lane]: the upstream stage
@@ -1166,26 +1234,26 @@ impl ComputeWorker {
                 x_lane = self.recv_stage(lane_rows)?;
             }
             if l > 0 {
-                self.recv_reduced_apply(&mut x_lane);
+                self.recv_reduced_apply(&mut x_lane)?;
             }
             self.spec_attn_submit(l, lane, &mut x_lane, &mut row)?;
             for i in 0..k {
-                self.recv_reduced_apply(&mut xs[i]);
+                self.recv_reduced_apply(&mut xs[i])?;
                 let partial = self.run_mlp(l, &xs[i])?;
-                self.submit(partial.data, p.chunks[i].len, &mut xs[i]);
+                self.submit(partial.data, p.chunks[i].len, &mut xs[i])?;
             }
-            self.recv_reduced_apply(&mut x_lane);
+            self.recv_reduced_apply(&mut x_lane)?;
             self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
         }
         for x in xs.iter_mut() {
-            self.recv_reduced_apply(x);
+            self.recv_reduced_apply(x)?;
             if !self.is_last_stage() {
-                self.send_stage(std::mem::take(x));
+                self.send_stage(std::mem::take(x))?;
             }
         }
-        self.recv_reduced_apply(&mut x_lane);
+        self.recv_reduced_apply(&mut x_lane)?;
         if !self.is_last_stage() {
-            self.send_stage(x_lane);
+            self.send_stage(x_lane)?;
             return Ok((None, None));
         }
 
@@ -1218,6 +1286,7 @@ impl ComputeWorker {
         let mut row = Tensor::zeros(vec![1, self.d_model]);
 
         for l in 0..self.local_layers {
+            self.fault_check(l)?;
             // Prefill chunk attentions launch first so their collectives
             // are on the ring while the lane computes.
             for i in 0..k {
@@ -1225,10 +1294,10 @@ impl ComputeWorker {
                     let x = self.chunk_in(&p.tokens, &p.chunks[i])?;
                     xs.push(x);
                 } else {
-                    self.recv_reduced_apply(&mut xs[i]);
+                    self.recv_reduced_apply(&mut xs[i])?;
                 }
                 let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
-                self.submit(partial.data, p.chunks[i].len, &mut xs[i]);
+                self.submit(partial.data, p.chunks[i].len, &mut xs[i])?;
             }
             if l == 0 && self.stage > 0 {
                 // Wire order is [chunks…, lane]: the upstream stage
@@ -1236,26 +1305,26 @@ impl ComputeWorker {
                 x_lane = self.recv_stage(lane.len())?;
             }
             if l > 0 {
-                self.recv_reduced_apply(&mut x_lane);
+                self.recv_reduced_apply(&mut x_lane)?;
             }
             self.lane_attn_submit(l, lane, &mut x_lane, &mut row)?;
             for i in 0..k {
-                self.recv_reduced_apply(&mut xs[i]);
+                self.recv_reduced_apply(&mut xs[i])?;
                 let partial = self.run_mlp(l, &xs[i])?;
-                self.submit(partial.data, p.chunks[i].len, &mut xs[i]);
+                self.submit(partial.data, p.chunks[i].len, &mut xs[i])?;
             }
-            self.recv_reduced_apply(&mut x_lane);
+            self.recv_reduced_apply(&mut x_lane)?;
             self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
         }
         for x in xs.iter_mut() {
-            self.recv_reduced_apply(x);
+            self.recv_reduced_apply(x)?;
             if !self.is_last_stage() {
-                self.send_stage(std::mem::take(x));
+                self.send_stage(std::mem::take(x))?;
             }
         }
-        self.recv_reduced_apply(&mut x_lane);
+        self.recv_reduced_apply(&mut x_lane)?;
         if !self.is_last_stage() {
-            self.send_stage(x_lane);
+            self.send_stage(x_lane)?;
             return Ok((None, None));
         }
 
@@ -1317,6 +1386,120 @@ impl ComputeWorker {
     }
 }
 
+/// Run one all-reduce job through the ring, streaming acks back to the
+/// compute thread. Returns the wire bytes the job sent; a typed error
+/// means a ring peer is dead (or a segment arrived corrupt) and the
+/// comm thread exits with it.
+#[allow(clippy::too_many_arguments)]
+fn comm_reduce(
+    handle: &mut RingHandle,
+    quant: CommQuant,
+    job: CommJob,
+    stats: &mut WorkerStats,
+    acks: &Sender<SegAck>,
+    recycled: &Receiver<Vec<f32>>,
+    ack_pool: &mut Vec<Vec<f32>>,
+    hung_up: &mut bool,
+) -> Result<u64, EngineError> {
+    let CommJob { mut data, rows, cols, segments, fused, residual } = job;
+    if fused {
+        // Decode lane: rank-ordered fused-rows reduce, bit-identical
+        // to per-row collectives; one ack for the whole lane.
+        let b = handle.try_allreduce_rows_fused(&mut data, rows, cols, quant)?;
+        stats.fused_allreduces += 1;
+        stats.fused_rows += rows as u64;
+        match residual {
+            // Fused epilogue (DESIGN.md §12): fold the lane's
+            // residual-add into the comm thread so the compute thread
+            // gets the finished tensor back in one ack.
+            Some(mut res) => {
+                let te = Timer::start();
+                debug_assert_eq!(res.len(), data.len(), "lane residual shape");
+                FusedEpilogue::residual_only(&mut res, cols).apply(0, rows, &data);
+                stats.fused_epilogue_ms += te.elapsed_ms();
+                stats.fused_epilogue_rows += rows as u64;
+                let ack =
+                    SegAck { row_start: 0, rows, data: res, fused: true, spent: Some(data) };
+                *hung_up = acks.send(ack).is_err();
+            }
+            None => {
+                let ack = SegAck { row_start: 0, rows, data, fused: false, spent: None };
+                *hung_up = acks.send(ack).is_err();
+            }
+        }
+        Ok(b)
+    } else if let Some(mut res) = residual {
+        // Fused epilogue, segment-streamed (DESIGN.md §12): apply
+        // each reduced row-range into the residual the moment the
+        // collective finalizes it, so segment k's epilogue hides
+        // behind the wire time of segments k+1.. — then one ack
+        // returns the finished tensor.
+        debug_assert_eq!(res.len(), rows * cols, "residual shape");
+        let mut epi_ms = 0.0f64;
+        let b = {
+            let mut epilogue = FusedEpilogue::residual_only(&mut res, cols);
+            handle.try_allreduce_seg_with(
+                &mut data,
+                rows,
+                cols,
+                quant,
+                segments.max(1),
+                |row_start, row_end, vals| {
+                    let te = Timer::start();
+                    epilogue.apply(row_start, row_end, vals);
+                    epi_ms += te.elapsed_ms();
+                },
+            )?
+        };
+        stats.fused_epilogue_ms += epi_ms;
+        stats.fused_epilogue_rows += rows as u64;
+        let ack = SegAck { row_start: 0, rows, data: res, fused: true, spent: Some(data) };
+        *hung_up = acks.send(ack).is_err();
+        Ok(b)
+    } else if segments <= 1 {
+        // Single segment: hand the whole payload over, no copy.
+        let b = handle.try_allreduce_seg(&mut data, rows, cols, quant, 1)?;
+        let ack = SegAck { row_start: 0, rows, data, fused: false, spent: None };
+        *hung_up = acks.send(ack).is_err();
+        Ok(b)
+    } else {
+        let acks_ref = &acks;
+        let recycled_ref = &recycled;
+        let ack_pool_ref = ack_pool;
+        let hung_up_ref = hung_up;
+        let b = handle.try_allreduce_seg_with(
+            &mut data,
+            rows,
+            cols,
+            quant,
+            segments,
+            |row_start, row_end, vals| {
+                // Pool first, then buffers the compute thread has
+                // already returned mid-collective, then allocate.
+                let mut buf = ack_pool_ref
+                    .pop()
+                    .or_else(|| recycled_ref.try_recv().ok())
+                    .unwrap_or_default();
+                buf.clear();
+                buf.extend_from_slice(vals);
+                let ack = SegAck {
+                    row_start,
+                    rows: row_end - row_start,
+                    data: buf,
+                    fused: false,
+                    spent: None,
+                };
+                if acks_ref.send(ack).is_err() {
+                    *hung_up_ref = true;
+                }
+            },
+        )?;
+        // The job payload stays on this side; feed it to the wire pool.
+        handle.recycle_f32(data);
+        Ok(b)
+    }
+}
+
 /// Comm-thread main loop: drain all-reduce jobs through the ring. Jobs
 /// carrying a residual run the fused epilogue (DESIGN.md §12): each
 /// reduced row-segment is applied into the residual inside the
@@ -1326,14 +1509,25 @@ impl ComputeWorker {
 /// waiting for the tail. Ack buffers come back through `recycled` and
 /// wire buffers live in the ring handle's pool — steady state allocates
 /// nothing.
+///
+/// Supervision (DESIGN.md §14): the fault injector is polled before
+/// each job so a planned ring poison flags the next wire segment, and a
+/// ring fault (dead peer, corrupt segment) posts a typed
+/// [`SupervisionEvent`] and exits the loop — the dropped channel
+/// endpoints then cascade the failure to the ring successor and this
+/// rank's compute thread, so no peer blocks forever.
+#[allow(clippy::too_many_arguments)]
 fn comm_main(
+    rank: usize,
     mut handle: RingHandle,
     quant: CommQuant,
     jobs: Receiver<CommJob>,
     acks: Sender<SegAck>,
     recycled: Receiver<Vec<f32>>,
+    injector: Arc<FaultInjector>,
+    events: Sender<SupervisionEvent>,
 ) -> WorkerStats {
-    let mut stats = WorkerStats { rank: handle.rank, ..Default::default() };
+    let mut stats = WorkerStats { rank, ..Default::default() };
     // Buffers for streamed ack payloads, refilled by the compute thread.
     let mut ack_pool: Vec<Vec<f32>> = Vec::new();
     while let Ok(job) = jobs.recv() {
@@ -1344,104 +1538,26 @@ fn comm_main(
                 handle.recycle_f32(buf);
             }
         }
-        let CommJob { mut data, rows, cols, segments, fused, residual } = job;
+        if injector.poll_wire(rank, false) {
+            handle.poison_next_send();
+        }
         let t = Timer::start();
         let mut hung_up = false;
-        let bytes = if fused {
-            // Decode lane: rank-ordered fused-rows reduce, bit-identical
-            // to per-row collectives; one ack for the whole lane.
-            let b = handle.allreduce_rows_fused(&mut data, rows, cols, quant);
-            stats.fused_allreduces += 1;
-            stats.fused_rows += rows as u64;
-            match residual {
-                // Fused epilogue (DESIGN.md §12): fold the lane's
-                // residual-add into the comm thread so the compute thread
-                // gets the finished tensor back in one ack.
-                Some(mut res) => {
-                    let te = Timer::start();
-                    debug_assert_eq!(res.len(), data.len(), "lane residual shape");
-                    FusedEpilogue::residual_only(&mut res, cols).apply(0, rows, &data);
-                    stats.fused_epilogue_ms += te.elapsed_ms();
-                    stats.fused_epilogue_rows += rows as u64;
-                    let ack =
-                        SegAck { row_start: 0, rows, data: res, fused: true, spent: Some(data) };
-                    hung_up = acks.send(ack).is_err();
-                }
-                None => {
-                    let ack = SegAck { row_start: 0, rows, data, fused: false, spent: None };
-                    hung_up = acks.send(ack).is_err();
-                }
+        let bytes = match comm_reduce(
+            &mut handle,
+            quant,
+            job,
+            &mut stats,
+            &acks,
+            &recycled,
+            &mut ack_pool,
+            &mut hung_up,
+        ) {
+            Ok(b) => b,
+            Err(error) => {
+                events.send(SupervisionEvent { rank, error }).ok();
+                break;
             }
-            b
-        } else if let Some(mut res) = residual {
-            // Fused epilogue, segment-streamed (DESIGN.md §12): apply
-            // each reduced row-range into the residual the moment the
-            // collective finalizes it, so segment k's epilogue hides
-            // behind the wire time of segments k+1.. — then one ack
-            // returns the finished tensor.
-            debug_assert_eq!(res.len(), rows * cols, "residual shape");
-            let mut epi_ms = 0.0f64;
-            let b = {
-                let mut epilogue = FusedEpilogue::residual_only(&mut res, cols);
-                handle.allreduce_seg_with(
-                    &mut data,
-                    rows,
-                    cols,
-                    quant,
-                    segments.max(1),
-                    |row_start, row_end, vals| {
-                        let te = Timer::start();
-                        epilogue.apply(row_start, row_end, vals);
-                        epi_ms += te.elapsed_ms();
-                    },
-                )
-            };
-            stats.fused_epilogue_ms += epi_ms;
-            stats.fused_epilogue_rows += rows as u64;
-            let ack = SegAck { row_start: 0, rows, data: res, fused: true, spent: Some(data) };
-            hung_up = acks.send(ack).is_err();
-            b
-        } else if segments <= 1 {
-            // Single segment: hand the whole payload over, no copy.
-            let b = handle.allreduce_seg(&mut data, rows, cols, quant, 1);
-            let ack = SegAck { row_start: 0, rows, data, fused: false, spent: None };
-            hung_up = acks.send(ack).is_err();
-            b
-        } else {
-            let acks_ref = &acks;
-            let recycled_ref = &recycled;
-            let ack_pool_ref = &mut ack_pool;
-            let hung_up_ref = &mut hung_up;
-            let b = handle.allreduce_seg_with(
-                &mut data,
-                rows,
-                cols,
-                quant,
-                segments,
-                |row_start, row_end, vals| {
-                    // Pool first, then buffers the compute thread has
-                    // already returned mid-collective, then allocate.
-                    let mut buf = ack_pool_ref
-                        .pop()
-                        .or_else(|| recycled_ref.try_recv().ok())
-                        .unwrap_or_default();
-                    buf.clear();
-                    buf.extend_from_slice(vals);
-                    let ack = SegAck {
-                        row_start,
-                        rows: row_end - row_start,
-                        data: buf,
-                        fused: false,
-                        spent: None,
-                    };
-                    if acks_ref.send(ack).is_err() {
-                        *hung_up_ref = true;
-                    }
-                },
-            );
-            // The job payload stays on this side; feed it to the wire pool.
-            handle.recycle_f32(data);
-            b
         };
         stats.comm_ms += t.elapsed_ms();
         stats.wire_bytes += bytes;
@@ -1456,6 +1572,24 @@ fn comm_main(
 
 /// Compute-thread main loop.
 #[allow(clippy::too_many_arguments)]
+/// Turn a caught panic payload into a human-readable detail string.
+fn panic_detail(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Supervised compute-thread entry point (DESIGN.md §14): runs
+/// [`compute_loop`] under `catch_unwind` so a worker panic or typed
+/// fault becomes a [`SupervisionEvent`] for the leader instead of a
+/// silently poisoned channel. The thread then exits; its dropped
+/// channel endpoints cascade the failure to the comm thread and ring
+/// peers so nobody blocks forever.
+#[allow(clippy::too_many_arguments)]
 fn compute_main(
     rank: usize,
     cfg: EngineConfig,
@@ -1466,9 +1600,51 @@ fn compute_main(
     to_comm: Sender<CommJob>,
     from_comm: Receiver<SegAck>,
     recycle_tx: Sender<Vec<f32>>,
+    injector: Arc<FaultInjector>,
+    events: Sender<SupervisionEvent>,
 ) -> Result<WorkerStats> {
-    let mut w = ComputeWorker::build(rank, &cfg, manifest, port, to_comm, from_comm, recycle_tx)
-        .with_context(|| format!("building worker {rank}"))?;
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        compute_loop(
+            rank, cfg, manifest, jobs, reply, port, to_comm, from_comm, recycle_tx, injector,
+        )
+    }));
+    match outcome {
+        Ok(Ok(stats)) => Ok(stats),
+        Ok(Err(e)) => {
+            // Typed `EngineError`s were lifted into `anyhow::Error` on the
+            // way up; their Display (e.g. "injected kill") survives in the
+            // chain-formatted detail, which is what the leader logs.
+            let error = EngineError::WorkerPanic { rank, detail: format!("{e:#}") };
+            events.send(SupervisionEvent { rank, error }).ok();
+            Err(e)
+        }
+        Err(payload) => {
+            let detail = panic_detail(payload);
+            let error = EngineError::WorkerPanic { rank, detail: detail.clone() };
+            events.send(SupervisionEvent { rank, error }).ok();
+            Err(anyhow!("worker {rank} panicked: {detail}"))
+        }
+    }
+}
+
+/// The un-supervised body of a compute thread: build the worker, then
+/// drain jobs until shutdown or a channel peer dies.
+#[allow(clippy::too_many_arguments)]
+fn compute_loop(
+    rank: usize,
+    cfg: EngineConfig,
+    manifest: Manifest,
+    jobs: Receiver<Job>,
+    reply: Option<Sender<Reply>>,
+    port: StagePort,
+    to_comm: Sender<CommJob>,
+    from_comm: Receiver<SegAck>,
+    recycle_tx: Sender<Vec<f32>>,
+    injector: Arc<FaultInjector>,
+) -> Result<WorkerStats> {
+    let mut w =
+        ComputeWorker::build(rank, &cfg, manifest, port, to_comm, from_comm, recycle_tx, injector)
+            .with_context(|| format!("building worker {rank}"))?;
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Step { prefill, decode, spec } => {
@@ -1503,6 +1679,126 @@ fn compute_main(
 }
 
 // ---------------------------------------------------------------------------
+// Mesh (one spawned generation of worker threads)
+// ---------------------------------------------------------------------------
+
+/// One spawned generation of the rank mesh: every compute/comm thread
+/// pair, the leader-facing channels, and the supervision event queue.
+/// Recovery (DESIGN.md §14) tears a generation down wholesale and
+/// spawns a fresh one — rebuilding weight shards, KV slabs, ring
+/// membership, and stage ports in one move — rather than surgically
+/// splicing a replacement rank into a half-dead ring.
+struct Mesh {
+    job_txs: Vec<Sender<Job>>,
+    reply_rx: Receiver<Reply>,
+    event_rx: Receiver<SupervisionEvent>,
+    compute_joins: Vec<JoinHandle<Result<WorkerStats>>>,
+    comm_joins: Vec<JoinHandle<WorkerStats>>,
+}
+
+impl Mesh {
+    /// Spawn `pp × tp` compute/comm thread pairs: one TP ring per
+    /// stage, stages chained by p2p activation ports (stage s rank r →
+    /// stage s+1 rank r). The emulated link speed, when set, throttles
+    /// both fabrics.
+    fn spawn(cfg: &EngineConfig, manifest: &Manifest, injector: &Arc<FaultInjector>) -> Mesh {
+        let pp = cfg.pp_stages;
+        let tp = cfg.tp;
+        let throttle = cfg.link_mbps.map(|mbps| crate::collective::Throttle {
+            alpha_s: cfg.link_alpha_us * 1e-6,
+            bytes_per_s: mbps * 1e6,
+        });
+        let (reply_tx, reply_rx) = channel();
+        let (event_tx, event_rx) = channel();
+        let mut job_txs = Vec::new();
+        let mut compute_joins = Vec::new();
+        let mut comm_joins = Vec::new();
+        for (stage, ports_s) in stage_grid(pp, tp).into_iter().enumerate() {
+            let rings = ring(tp);
+            for (r, (mut ring_handle, mut port)) in rings.into_iter().zip(ports_s).enumerate() {
+                let rank = stage * tp + r;
+                let (job_tx, job_rx) = channel();
+                let (to_comm, comm_rx) = channel();
+                let (ack_tx, from_comm) = channel();
+                let (recycle_tx, recycle_rx) = channel();
+                let quant = cfg.comm_quant;
+                if let Some(t) = throttle {
+                    ring_handle.throttle = Some(t);
+                    port.throttle = Some(t);
+                }
+                let inj_comm = Arc::clone(injector);
+                let ev_comm = event_tx.clone();
+                comm_joins.push(
+                    std::thread::Builder::new()
+                        .name(format!("iso-comm-{rank}"))
+                        .spawn(move || {
+                            comm_main(
+                                rank, ring_handle, quant, comm_rx, ack_tx, recycle_rx, inj_comm,
+                                ev_comm,
+                            )
+                        })
+                        .expect("spawn comm thread"),
+                );
+                let reply = if stage == pp - 1 && r == 0 { Some(reply_tx.clone()) } else { None };
+                let cfg_c = cfg.clone();
+                let manifest_c = manifest.clone();
+                let inj_compute = Arc::clone(injector);
+                let ev_compute = event_tx.clone();
+                compute_joins.push(
+                    std::thread::Builder::new()
+                        .name(format!("iso-compute-{rank}"))
+                        .spawn(move || {
+                            compute_main(
+                                rank, cfg_c, manifest_c, job_rx, reply, port, to_comm, from_comm,
+                                recycle_tx, inj_compute, ev_compute,
+                            )
+                        })
+                        .expect("spawn compute thread"),
+                );
+                job_txs.push(job_tx);
+            }
+        }
+        Mesh { job_txs, reply_rx, event_rx, compute_joins, comm_joins }
+    }
+
+    /// Tear the generation down and collect every worker's stats. Drops
+    /// all job senders first so each compute loop's `jobs.recv()` errors
+    /// out, then joins. Termination argument (DESIGN.md §14): mpsc sends
+    /// never block, so every loop either drains its finite buffered work
+    /// or errors on a dead peer; a stalled rank bounds the join by its
+    /// stall duration, it cannot extend it forever.
+    fn join_all(mut self) -> (Vec<Result<WorkerStats>>, Vec<WorkerStats>) {
+        self.job_txs.clear();
+        drop(self.reply_rx);
+        drop(self.event_rx);
+        let computes: Vec<Result<WorkerStats>> = self
+            .compute_joins
+            .into_iter()
+            .enumerate()
+            .map(|(rank, j)| {
+                j.join().unwrap_or_else(|p| {
+                    Err(anyhow!("worker {rank} panicked: {}", panic_detail(p)))
+                })
+            })
+            .collect();
+        let comms: Vec<WorkerStats> =
+            self.comm_joins.into_iter().map(|j| j.join().unwrap_or_default()).collect();
+        (computes, comms)
+    }
+}
+
+/// A live sequence's replay record for checkpoint-free recovery:
+/// everything needed to rebuild its KV bit-identically on a fresh mesh
+/// (DESIGN.md §14). `tokens` are the sequence's emissions so far; the
+/// last one has not been fed back yet and is re-fed by the resumed
+/// serving loop, not the replay.
+struct ReplaySeq {
+    slot: usize,
+    prompt: Vec<i32>,
+    tokens: Vec<i32>,
+}
+
+// ---------------------------------------------------------------------------
 // Engine (leader)
 // ---------------------------------------------------------------------------
 
@@ -1511,10 +1807,23 @@ pub struct Engine {
     cfg: EngineConfig,
     /// The loaded artifact manifest (model geometry, compiled sizes).
     pub manifest: Manifest,
-    job_txs: Vec<Sender<Job>>,
-    reply_rx: Receiver<Reply>,
-    compute_joins: Vec<JoinHandle<Result<WorkerStats>>>,
-    comm_joins: Vec<JoinHandle<WorkerStats>>,
+    /// Current mesh generation; `None` only transiently inside
+    /// recovery/shutdown (and permanently after shutdown consumed it).
+    mesh: Option<Mesh>,
+    /// Shared fault injector — the same plan survives mesh respawns so
+    /// a multi-event plan keeps firing across recoveries.
+    injector: Arc<FaultInjector>,
+    /// EMA of observed iteration wall time, the base of the leader's
+    /// detection deadline (DESIGN.md §14).
+    iter_ema_ms: f64,
+    /// True while recovery replays KV; suppresses request metrics so a
+    /// recovered run reports the same counters as a fault-free one.
+    replaying: bool,
+    /// Worker stats folded out of dead mesh generations, absorbed into
+    /// the final report at shutdown.
+    prior_workers: Vec<WorkerStats>,
+    /// Recoveries performed so far (bounded by `cfg.max_recoveries`).
+    recoveries_used: usize,
     /// Live engine counters (folded with worker stats at shutdown).
     pub metrics: EngineMetrics,
     free_slots: Vec<usize>,
@@ -1593,71 +1902,27 @@ impl Engine {
         if prefill_chunks.is_empty() {
             bail!("no prefill chunk sizes <= max_chunk {}", cfg.max_chunk);
         }
-        let smallest_chunk = *prefill_chunks.iter().min().unwrap();
+        let smallest_chunk =
+            *prefill_chunks.iter().min().expect("invariant: non-empty (checked above)");
 
-        let pp = cfg.pp_stages;
-        let tp = cfg.tp;
-        let throttle = cfg.link_mbps.map(|mbps| crate::collective::Throttle {
-            alpha_s: cfg.link_alpha_us * 1e-6,
-            bytes_per_s: mbps * 1e6,
-        });
-        let (reply_tx, reply_rx) = channel();
-        let mut job_txs = Vec::new();
-        let mut compute_joins = Vec::new();
-        let mut comm_joins = Vec::new();
-
-        // One TP ring per stage; stages chained by p2p activation ports
-        // (stage s rank r → stage s+1 rank r). The emulated link speed,
-        // when set, throttles both fabrics.
-        for (stage, ports_s) in stage_grid(pp, tp).into_iter().enumerate() {
-            let rings = ring(tp);
-            for (r, (mut ring_handle, mut port)) in
-                rings.into_iter().zip(ports_s).enumerate()
-            {
-                let rank = stage * tp + r;
-                let (job_tx, job_rx) = channel();
-                let (to_comm, comm_rx) = channel();
-                let (ack_tx, from_comm) = channel();
-                let (recycle_tx, recycle_rx) = channel();
-                let quant = cfg.comm_quant;
-                if let Some(t) = throttle {
-                    ring_handle.throttle = Some(t);
-                    port.throttle = Some(t);
-                }
-                comm_joins.push(
-                    std::thread::Builder::new()
-                        .name(format!("iso-comm-{rank}"))
-                        .spawn(move || comm_main(ring_handle, quant, comm_rx, ack_tx, recycle_rx))
-                        .expect("spawn comm thread"),
-                );
-                let reply =
-                    if stage == pp - 1 && r == 0 { Some(reply_tx.clone()) } else { None };
-                let cfg_c = cfg.clone();
-                let manifest_c = manifest.clone();
-                compute_joins.push(
-                    std::thread::Builder::new()
-                        .name(format!("iso-compute-{rank}"))
-                        .spawn(move || {
-                            compute_main(
-                                rank, cfg_c, manifest_c, job_rx, reply, port, to_comm,
-                                from_comm, recycle_tx,
-                            )
-                        })
-                        .expect("spawn compute thread"),
-                );
-                job_txs.push(job_tx);
-            }
-        }
+        let plan = match &cfg.fault_plan {
+            Some(spec) => FaultPlan::parse(spec).map_err(|e| anyhow!("bad fault plan: {e}"))?,
+            None => FaultPlan::empty(),
+        };
+        let injector = Arc::new(FaultInjector::new(plan));
+        let mesh = Mesh::spawn(&cfg, &manifest, &injector);
 
         let free_slots = (0..cfg.max_batch).rev().collect();
         let split_ctx = SplitContext::engine(&cfg);
         Ok(Engine {
             cfg,
             manifest,
-            job_txs,
-            reply_rx,
-            compute_joins,
-            comm_joins,
+            mesh: Some(mesh),
+            injector,
+            iter_ema_ms: 0.0,
+            replaying: false,
+            prior_workers: Vec::new(),
+            recoveries_used: 0,
             metrics: EngineMetrics::default(),
             free_slots,
             smallest_chunk,
@@ -1666,19 +1931,71 @@ impl Engine {
         })
     }
 
+    /// The current mesh generation (present outside recovery/shutdown).
+    fn mesh(&self) -> &Mesh {
+        self.mesh.as_ref().expect("engine mesh present outside recovery/shutdown")
+    }
+
     /// Send one job to every rank. Bulky payloads are `Arc`-shared, so
-    /// the per-rank clone is cheap.
-    fn broadcast(&self, job: Job) {
-        for tx in &self.job_txs {
-            tx.send(job.clone()).expect("worker hung up");
+    /// the per-rank clone is cheap. A dead rank's dropped receiver turns
+    /// into a typed [`EngineError::RankDead`] instead of a panic.
+    fn broadcast(&self, job: Job) -> Result<()> {
+        for (i, tx) in self.mesh().job_txs.iter().enumerate() {
+            tx.send(job.clone()).map_err(|_| EngineError::RankDead { rank: i, link: "job" })?;
+        }
+        Ok(())
+    }
+
+    /// Global rank of the reply-owning worker (last stage, ring rank 0).
+    fn reply_rank(&self) -> usize {
+        (self.cfg.pp_stages - 1) * self.cfg.tp
+    }
+
+    /// Leader detection deadline for one iteration (DESIGN.md §14):
+    /// `fault_slack ×` the observed iteration EMA, floored so cold
+    /// starts and compilation pauses don't trip false positives.
+    fn deadline_ms(&self) -> f64 {
+        self.cfg.fault_slack * self.iter_ema_ms.max(self.cfg.deadline_floor_ms)
+    }
+
+    /// Fold an observed iteration wall time into the deadline EMA.
+    fn note_iteration_ms(&mut self, ms: f64) {
+        if self.iter_ema_ms <= 0.0 {
+            self.iter_ema_ms = ms;
+        } else {
+            self.iter_ema_ms = 0.8 * self.iter_ema_ms + 0.2 * ms;
         }
     }
 
-    fn recv_logits(&self) -> Result<Vec<f32>> {
-        match self.reply_rx.recv() {
-            Ok(Reply::Logits(v)) => Ok(v),
-            Ok(other) => bail!("unexpected reply {other:?}"),
-            Err(_) => bail!("rank0 worker died — check earlier errors"),
+    /// Await one reply under the detection deadline. On timeout or a
+    /// dead reply channel, prefer the supervision queue's typed event
+    /// for attribution (it names the faulting rank) over the generic
+    /// link error, and count a detected fault.
+    fn recv_reply(&mut self) -> Result<Reply, EngineError> {
+        let deadline = self.deadline_ms();
+        let mesh = self.mesh.as_ref().expect("engine mesh present outside recovery/shutdown");
+        let err = match mesh.reply_rx.recv_timeout(Duration::from_secs_f64(deadline / 1e3)) {
+            Ok(reply) => return Ok(reply),
+            Err(RecvTimeoutError::Timeout) => EngineError::CollectiveTimeout {
+                iteration: self.injector.current_iteration(),
+                deadline_ms: deadline,
+            },
+            Err(RecvTimeoutError::Disconnected) => {
+                EngineError::RankDead { rank: self.reply_rank(), link: "reply" }
+            }
+        };
+        let err = match mesh.event_rx.try_recv() {
+            Ok(ev) => ev.error,
+            Err(_) => err,
+        };
+        self.metrics.faults_detected += 1;
+        Err(err)
+    }
+
+    fn recv_logits(&mut self) -> Result<Vec<f32>> {
+        match self.recv_reply()? {
+            Reply::Logits(v) => Ok(v),
+            other => bail!("unexpected reply {other:?}"),
         }
     }
 
@@ -1706,9 +2023,9 @@ impl Engine {
 
     /// Release a slot's KV caches on every rank and return it to the pool.
     pub fn free_slot(&mut self, slot: usize) -> Result<()> {
-        self.broadcast(Job::Release { slot });
-        match self.reply_rx.recv() {
-            Ok(Reply::Released) => {}
+        self.broadcast(Job::Release { slot })?;
+        match self.recv_reply()? {
+            Reply::Released => {}
             other => bail!("bad release reply: {other:?}"),
         }
         self.free_slots.push(slot);
@@ -1751,7 +2068,8 @@ impl Engine {
             Some(&self.split_ctx),
             self.micro_batch_depth(),
         );
-        let last = chunks.iter().find(|c| c.last).unwrap();
+        let last =
+            chunks.iter().find(|c| c.last).expect("invariant: planner marks one last chunk");
         let true_last = prompt.len() - 1;
         if true_last < last.offset {
             bail!("internal: true last token not in final chunk");
@@ -1945,17 +2263,18 @@ impl Engine {
         let n_chunks = prefill.as_ref().map_or(0, |p| p.chunks.len());
         let spec_rows: usize = spec.iter().map(SpecSlot::width).sum();
         let timer = Timer::start();
+        self.injector.begin_iteration();
         self.broadcast(Job::Step {
             prefill: prefill.clone(),
             decode: Arc::new(decode.to_vec()),
             spec: Arc::new(spec.to_vec()),
-        });
-        let (prefill_logits, decode_logits) = match self.reply_rx.recv() {
-            Ok(Reply::Step { prefill, decode }) => (prefill, decode),
-            Ok(other) => bail!("unexpected step reply {other:?}"),
-            Err(_) => bail!("rank0 worker died — check earlier errors"),
+        })?;
+        let (prefill_logits, decode_logits) = match self.recv_reply()? {
+            Reply::Step { prefill, decode } => (prefill, decode),
+            other => bail!("unexpected step reply {other:?}"),
         };
         let elapsed = timer.elapsed_ms();
+        self.note_iteration_ms(elapsed);
 
         if count_iteration {
             self.metrics.iterations += 1;
@@ -1971,9 +2290,14 @@ impl Engine {
 
         let prefill_out = match (prefill, prefill_logits) {
             (Some(p), Some(logits)) => {
-                self.metrics.ttft_ms.record(elapsed);
-                self.metrics.prefill_chunks += p.chunks.len() as u64;
-                self.metrics.generated_tokens += 1;
+                // Replayed prefills rebuild KV, they don't serve a new
+                // request — keep them out of the request metrics so a
+                // recovered run reports like a fault-free one.
+                if !self.replaying {
+                    self.metrics.ttft_ms.record(elapsed);
+                    self.metrics.prefill_chunks += p.chunks.len() as u64;
+                    self.metrics.generated_tokens += 1;
+                }
                 let first_token = argmax(&logits);
                 Some(PrefillOut { first_token, ttft_ms: elapsed, logits })
             }
@@ -1997,8 +2321,99 @@ impl Engine {
     /// One legacy per-sequence decode step on an engine-managed slot —
     /// the un-fused baseline the decode lane is tested bit-identical to.
     pub fn decode_one(&mut self, slot: usize, token: i32, offset: usize) -> Result<Vec<f32>> {
-        self.broadcast(Job::Decode { slot, token, offset });
-        self.recv_logits()
+        let timer = Timer::start();
+        self.injector.begin_iteration();
+        self.broadcast(Job::Decode { slot, token, offset })?;
+        let logits = self.recv_logits()?;
+        self.note_iteration_ms(timer.elapsed_ms());
+        Ok(logits)
+    }
+
+    /// Fold a dead mesh generation's stats into `prior_workers` so the
+    /// shutdown report covers the whole run. Ranks that died before
+    /// returning stats contribute zeros (their partial iteration never
+    /// landed anywhere observable).
+    fn absorb_mesh(&mut self, mesh: Mesh) {
+        let tp = self.cfg.tp.max(1);
+        let (computes, comms) = mesh.join_all();
+        let mut workers: Vec<WorkerStats> = computes
+            .into_iter()
+            .enumerate()
+            .map(|(rank, r)| {
+                r.unwrap_or(WorkerStats { rank, stage: rank / tp, ..Default::default() })
+            })
+            .collect();
+        for (w, comm) in workers.iter_mut().zip(comms.iter()) {
+            w.fold_comm(comm);
+        }
+        if self.prior_workers.is_empty() {
+            self.prior_workers = workers;
+        } else {
+            for (acc, w) in self.prior_workers.iter_mut().zip(workers.iter()) {
+                acc.absorb(w);
+            }
+        }
+    }
+
+    /// Rebuild every affected sequence's KV on the fresh mesh by
+    /// re-prefilling its prompt and re-feeding its emitted tokens
+    /// (checkpoint-free recompute). Bit-identical by the lane-equals-
+    /// chain invariant: KV contents don't depend on how the prefill was
+    /// chunked or how decodes were batched.
+    fn replay_sequences(&mut self, live: &[ReplaySeq]) -> Result<()> {
+        for seq in live {
+            self.prefill_in_slot(seq.slot, &seq.prompt)?;
+            for j in 0..seq.tokens.len().saturating_sub(1) {
+                self.decode_one(seq.slot, seq.tokens[j], seq.prompt.len() + j)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One recovery round (DESIGN.md §14): tear down the dead mesh
+    /// generation, spawn a fresh one (weight shards, KV slabs, ring
+    /// membership, stage ports all rebuilt), and replay every live
+    /// sequence's KV. The failed iteration landed nothing on the leader,
+    /// so resuming from the iteration boundary drops zero sequences.
+    fn recover(&mut self, cause: &anyhow::Error, live: &[ReplaySeq]) -> Result<()> {
+        if self.recoveries_used >= self.cfg.max_recoveries {
+            bail!("fault recovery limit ({}) exhausted: {cause:#}", self.cfg.max_recoveries);
+        }
+        self.recoveries_used += 1;
+        let timer = Timer::start();
+        let dead = self.mesh.take().expect("engine mesh present outside recovery/shutdown");
+        self.absorb_mesh(dead);
+        self.mesh = Some(Mesh::spawn(&self.cfg, &self.manifest, &self.injector));
+        self.replaying = true;
+        let replayed = self.replay_sequences(live);
+        self.replaying = false;
+        replayed?;
+        self.metrics.recoveries += 1;
+        self.metrics.replayed_seqs += live.len() as u64;
+        self.metrics.replayed_tokens += live
+            .iter()
+            .map(|s| (s.prompt.len() + s.tokens.len().saturating_sub(1)) as u64)
+            .sum::<u64>();
+        self.metrics.recovery_ms.record(timer.elapsed_ms());
+        Ok(())
+    }
+
+    /// Recover, retrying if another planned fault fires mid-replay
+    /// (multi-event plans keep firing across mesh generations). Bounded
+    /// by `cfg.max_recoveries`, after which the last cause is returned.
+    fn recover_with_retry(&mut self, cause: anyhow::Error, live: &[ReplaySeq]) -> Result<()> {
+        let mut cause = cause;
+        loop {
+            match self.recover(&cause, live) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if self.recoveries_used >= self.cfg.max_recoveries {
+                        return Err(e);
+                    }
+                    cause = e;
+                }
+            }
+        }
     }
 
     /// Prefill + `steps` greedy decode steps.
@@ -2011,9 +2426,11 @@ impl Engine {
             let mut offset = prompt.len();
             for _ in 0..steps.min(self.manifest.config.max_seq - offset) {
                 let t = Timer::start();
-                let logits = self.decode_one(slot, *tokens.last().unwrap(), offset)?;
-                decode_ms.push(t.elapsed_ms());
-                self.metrics.decode_ms.record(*decode_ms.last().unwrap());
+                let last = *tokens.last().expect("invariant: tokens seeded with first_token");
+                let logits = self.decode_one(slot, last, offset)?;
+                let ms = t.elapsed_ms();
+                decode_ms.push(ms);
+                self.metrics.decode_ms.record(ms);
                 self.metrics.generated_tokens += 1;
                 tokens.push(argmax(&logits));
                 offset += 1;
@@ -2096,7 +2513,7 @@ impl Engine {
                         next.arrival_s - now_s,
                     ));
                 }
-                let r = pending.pop_front().unwrap();
+                let r = pending.pop_front().expect("invariant: front peeked above");
                 let padded_len =
                     crate::workload::pad_to_chunk(r.prompt.len().max(2), self.smallest_chunk);
                 if r.prompt.is_empty() || padded_len > self.manifest.config.max_seq {
@@ -2208,7 +2625,28 @@ impl Engine {
                 }
                 None => None,
             };
-            let mut out = self.run_step(prefill_job, &plan.decode, &plan.spec, true)?;
+            let mut out = match self.run_step(prefill_job, &plan.decode, &plan.spec, true) {
+                Ok(out) => out,
+                Err(e) => {
+                    // Fault mid-iteration (DESIGN.md §14). The failed
+                    // iteration landed nothing on the leader — lane
+                    // state, the paged mirror, and the planner all still
+                    // describe the last good iteration boundary — so
+                    // replay every prefilled live sequence onto a fresh
+                    // mesh and re-plan the iteration from scratch.
+                    let replay: Vec<ReplaySeq> = live
+                        .iter()
+                        .filter(|l| l.lane.prefilled)
+                        .map(|l| ReplaySeq {
+                            slot: l.lane.slot,
+                            prompt: l.prompt.clone(),
+                            tokens: l.tokens.clone(),
+                        })
+                        .collect();
+                    self.recover_with_retry(e, &replay)?;
+                    continue;
+                }
+            };
             let now_ms = clock.elapsed_ms();
             report.iterations += 1;
             let occupancy = plan.prefill.as_ref().map_or(0, |p| p.chunks.len())
@@ -2264,7 +2702,8 @@ impl Engine {
                     for &tok in &em[..take] {
                         l.tokens.push(tok);
                     }
-                    l.lane.last_token = *l.tokens.last().unwrap();
+                    l.lane.last_token =
+                        *l.tokens.last().expect("invariant: live lane holds >=1 token");
                     l.lane.offset += take;
                     l.lane.decode_left -= take;
                     // One iteration emitted `take` tokens for this
@@ -2294,11 +2733,23 @@ impl Engine {
         struct Live {
             slot: usize,
             id: u64,
+            prompt: Vec<i32>,
             tokens: Vec<i32>,
             prompt_len: usize,
             decode_left: usize,
             arrival_s: f64,
             last_emit_ms: f64,
+        }
+
+        /// Snapshot every live sequence for checkpoint-free replay.
+        fn replay_set(live: &[Live]) -> Vec<ReplaySeq> {
+            live.iter()
+                .map(|l| ReplaySeq {
+                    slot: l.slot,
+                    prompt: l.prompt.clone(),
+                    tokens: l.tokens.clone(),
+                })
+                .collect()
         }
 
         let mut pending = sort_by_arrival(reqs);
@@ -2323,15 +2774,27 @@ impl Engine {
                         next.arrival_s - now_s,
                     ));
                 }
-                let r = pending.pop_front().unwrap();
+                let r = pending.pop_front().expect("invariant: front peeked above");
                 let slot = self.alloc_slot()?;
-                let out = self.prefill_in_slot(slot, &r.prompt)?;
+                // A fault here landed nothing for the new sequence:
+                // recover (replaying the already-live set) and re-run
+                // the admission prefill on the fresh mesh.
+                let out = loop {
+                    match self.prefill_in_slot(slot, &r.prompt) {
+                        Ok(out) => break out,
+                        Err(e) => {
+                            let replay = replay_set(&live);
+                            self.recover_with_retry(e, &replay)?;
+                        }
+                    }
+                };
                 report
                     .ttft_ms
                     .record(clock.elapsed_ms() - r.arrival_s * 1e3);
                 live.push(Live {
                     slot,
                     id: r.id,
+                    prompt: r.prompt.clone(),
                     tokens: vec![out.first_token],
                     prompt_len: r.prompt.len(),
                     decode_left: r.decode_steps,
@@ -2358,9 +2821,20 @@ impl Engine {
                     self.free_slot(l.slot)?;
                     continue;
                 }
-                let token = *l.tokens.last().unwrap();
+                let token = *l.tokens.last().expect("invariant: live seq holds >=1 token");
                 let slot = l.slot;
-                let logits = self.decode_one(slot, token, offset)?;
+                // A fault here landed nothing: the live set (including
+                // this sequence) still describes the last good boundary,
+                // so replay it all and retry the same decode.
+                let logits = loop {
+                    match self.decode_one(slot, token, offset) {
+                        Ok(v) => break v,
+                        Err(e) => {
+                            let replay = replay_set(&live);
+                            self.recover_with_retry(e, &replay)?;
+                        }
+                    }
+                };
                 let now_ms = clock.elapsed_ms();
                 let l = &mut live[i];
                 l.tokens.push(argmax(&logits));
@@ -2376,24 +2850,29 @@ impl Engine {
         Ok(report)
     }
 
-    /// Graceful shutdown; returns metrics + per-worker stats.
+    /// Graceful shutdown; returns metrics + per-worker stats. Always
+    /// terminates, fault or no fault (DESIGN.md §14): shutdown sends are
+    /// best-effort (a dead rank's closed channel is ignored), and
+    /// [`Mesh::join_all`] drops every job sender before joining so no
+    /// worker can block forever on a peer that already exited.
     pub fn shutdown(mut self) -> Result<EngineReport> {
-        self.broadcast(Job::Shutdown);
+        let mesh = self.mesh.take().expect("engine mesh present until shutdown");
+        for tx in &mesh.job_txs {
+            tx.send(Job::Shutdown).ok();
+        }
+        let (computes, comms) = mesh.join_all();
         let mut workers = Vec::new();
-        for j in self.compute_joins.drain(..) {
-            workers.push(j.join().map_err(|_| anyhow!("compute thread panicked"))??);
+        for r in computes {
+            workers.push(r?);
         }
         // Comm threads exit when their compute thread drops the sender.
-        for (w, j) in workers.iter_mut().zip(self.comm_joins.drain(..)) {
-            let comm = j.join().map_err(|_| anyhow!("comm thread panicked"))?;
-            w.comm_ms = comm.comm_ms;
-            w.allreduces = comm.allreduces;
-            w.fused_allreduces = comm.fused_allreduces;
-            w.fused_rows = comm.fused_rows;
-            w.wire_bytes = comm.wire_bytes;
-            w.wire_msgs = comm.wire_msgs;
-            w.fused_epilogue_rows = comm.fused_epilogue_rows;
-            w.fused_epilogue_ms = comm.fused_epilogue_ms;
+        for (w, comm) in workers.iter_mut().zip(comms.iter()) {
+            w.fold_comm(comm);
+        }
+        // Fold in the stats of mesh generations recovery tore down, so
+        // the report covers the whole run, not just the last generation.
+        for (w, prior) in workers.iter_mut().zip(std::mem::take(&mut self.prior_workers)) {
+            w.absorb(&prior);
         }
         // Fold worker counters into the final metrics without cloning the
         // histograms (§Perf: `metrics` can hold thousands of samples).
@@ -2437,10 +2916,27 @@ impl Engine {
     }
 }
 
+impl Drop for Engine {
+    /// Last-resort teardown for engines dropped without `shutdown()`
+    /// (early `?` returns, panicking tests): best-effort shutdown sends,
+    /// then the same sender-drop drain as [`Mesh::join_all`], so dropping
+    /// an engine can never hang even with a rank already dead
+    /// (DESIGN.md §14). `shutdown()` consumed the mesh, so this is a
+    /// no-op on the normal path.
+    fn drop(&mut self) {
+        if let Some(mesh) = self.mesh.take() {
+            for tx in &mesh.job_txs {
+                tx.send(Job::Shutdown).ok();
+            }
+            let _ = mesh.join_all();
+        }
+    }
+}
+
 /// Requests ordered by arrival time, ready for FIFO admission.
 fn sort_by_arrival(reqs: &[crate::workload::Request]) -> VecDeque<&crate::workload::Request> {
     let mut v: Vec<&crate::workload::Request> = reqs.iter().collect();
-    v.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    v.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
     v.into_iter().collect()
 }
 
@@ -2543,6 +3039,48 @@ mod tests {
             }
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn worker_stats_absorb_sums_generations() {
+        // Recovery folds dead-generation stats via absorb(); the final
+        // report must sum counters across mesh generations.
+        let mut a = WorkerStats {
+            compute_ms: 1.0,
+            comm_ms: 2.0,
+            wire_bytes: 10,
+            allreduces: 3,
+            ..Default::default()
+        };
+        let b = WorkerStats {
+            compute_ms: 4.0,
+            comm_ms: 8.0,
+            wire_bytes: 30,
+            allreduces: 5,
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.compute_ms, 5.0);
+        assert_eq!(a.comm_ms, 10.0);
+        assert_eq!(a.wire_bytes, 40);
+        assert_eq!(a.allreduces, 8);
+    }
+
+    #[test]
+    fn worker_stats_fold_comm_copies_wire_counters() {
+        let mut w = WorkerStats::default();
+        let comm = WorkerStats {
+            comm_ms: 7.0,
+            allreduces: 2,
+            wire_bytes: 99,
+            wire_msgs: 4,
+            ..Default::default()
+        };
+        w.fold_comm(&comm);
+        assert_eq!(w.comm_ms, 7.0);
+        assert_eq!(w.allreduces, 2);
+        assert_eq!(w.wire_bytes, 99);
+        assert_eq!(w.wire_msgs, 4);
     }
 
     #[test]

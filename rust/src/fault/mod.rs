@@ -1,0 +1,464 @@
+//! Fault injection, failure taxonomy, and supervision (DESIGN.md §14).
+//!
+//! Three pieces:
+//! * [`EngineError`] — the typed failure taxonomy carried by supervised
+//!   links. Implements `std::error::Error`, so `?` lifts it into
+//!   `anyhow::Result` at the leader boundary while match-based recovery
+//!   code keeps the structured variants.
+//! * [`FaultPlan`] — a deterministic, seedable schedule of injected
+//!   faults (`kill` / `stall` / `poison`), parsed from the
+//!   `engine.fault_plan` config key or the `--fault-plan` CLI flag.
+//!   Same spec string → same event list, always; that determinism is
+//!   what makes chaos runs reproducible and bit-identity checkable.
+//! * [`FaultInjector`] — the runtime half: one `Arc`-shared injector
+//!   threaded through compute workers, comm threads, and PP stage
+//!   ports. The leader advances its iteration clock; workers poll it at
+//!   layer boundaries (kill/stall) and before wire sends (poison).
+//!
+//! Injection is modeled, not violent: a "killed" rank returns
+//! [`EngineError::InjectedKill`] from its compute loop, which takes the
+//! exact exit path a real panic or device loss would (sender drop →
+//! ring cascade → leader detection), so the recovery machinery under
+//! test is the production path.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Typed failure taxonomy for the supervised mesh (DESIGN.md §14).
+///
+/// Every supervised link (leader↔worker, compute↔comm, ring, stage
+/// port) surfaces one of these instead of panicking. `link` names which
+/// fabric failed: `"ring"` (TP all-reduce), `"stage"` (PP activation
+/// port), `"comm"` (compute↔comm ack path), `"job"` (leader→worker
+/// queue), or `"reply"` (worker→leader).
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineError {
+    /// A peer's channel disconnected: the rank behind it is gone.
+    RankDead {
+        /// Rank (or, for leader-side detection, the closest known rank)
+        /// whose link dropped.
+        rank: usize,
+        /// Which fabric the disconnect was observed on.
+        link: &'static str,
+    },
+    /// The leader's per-iteration deadline expired with no reply.
+    CollectiveTimeout {
+        /// Leader iteration number (1-based) that timed out.
+        iteration: u64,
+        /// The deadline that expired, in milliseconds.
+        deadline_ms: f64,
+    },
+    /// A wire segment arrived corrupted (modeled CRC failure).
+    WireCorrupt {
+        /// Rank that received the corrupt segment.
+        rank: usize,
+        /// Which fabric carried it (`"ring"` or `"stage"`).
+        link: &'static str,
+    },
+    /// A worker thread panicked; the panic was caught and converted.
+    WorkerPanic {
+        /// Rank whose thread panicked.
+        rank: usize,
+        /// Stringified panic payload.
+        detail: String,
+    },
+    /// A planned [`FaultKind::Kill`] fired on this rank.
+    InjectedKill {
+        /// Rank the plan killed.
+        rank: usize,
+        /// Leader iteration (1-based) the kill fired in.
+        iteration: u64,
+    },
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::RankDead { rank, link } => {
+                write!(f, "rank {rank} dead ({link} link disconnected)")
+            }
+            EngineError::CollectiveTimeout { iteration, deadline_ms } => {
+                write!(f, "iteration {iteration} missed its {deadline_ms:.1} ms deadline")
+            }
+            EngineError::WireCorrupt { rank, link } => {
+                write!(f, "rank {rank} received a corrupt {link} segment")
+            }
+            EngineError::WorkerPanic { rank, detail } => {
+                write!(f, "rank {rank} panicked: {detail}")
+            }
+            EngineError::InjectedKill { rank, iteration } => {
+                write!(f, "rank {rank} killed by fault plan at iteration {iteration}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// A supervision event: which rank failed, and how. Workers push these
+/// onto the leader's event queue as they exit; the leader drains the
+/// queue to attribute a detected fault before recovering.
+#[derive(Clone, Debug)]
+pub struct SupervisionEvent {
+    /// Rank reporting the failure.
+    pub rank: usize,
+    /// The failure itself.
+    pub error: EngineError,
+}
+
+/// What a planned fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The rank's compute loop exits with [`EngineError::InjectedKill`].
+    Kill,
+    /// The rank sleeps for the given modeled duration, then continues.
+    Stall {
+        /// Stall duration in milliseconds.
+        ms: f64,
+    },
+    /// The rank's next wire send is flagged corrupt; the receiver
+    /// surfaces [`EngineError::WireCorrupt`]. `p2p` selects the stage
+    /// port instead of the TP ring.
+    Poison {
+        /// Poison the PP stage port (`true`) or the TP ring (`false`).
+        p2p: bool,
+    },
+}
+
+/// One planned fault: fires once, on `rank`, in leader iteration
+/// `iteration` (1-based), optionally gated to a specific local layer
+/// index (kill/stall only; `None` fires at the rank's first poll of
+/// that iteration).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Rank the fault targets (global rank = stage × tp + tp_rank).
+    pub rank: usize,
+    /// Leader iteration (1-based) the fault fires in.
+    pub iteration: u64,
+    /// Local layer index the fault is gated to, if any.
+    pub layer: Option<usize>,
+    /// What happens when it fires.
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of injected faults.
+///
+/// Spec grammar (events separated by `;`, fields by `:`):
+///
+/// * `kill:rank=R:iter=I[:layer=L]` — kill rank R in iteration I.
+/// * `stall:rank=R:iter=I:ms=M[:layer=L]` — stall rank R for M ms.
+/// * `poison:rank=R:iter=I[:p2p]` — corrupt rank R's next ring (or,
+///   with `p2p`, stage-port) send in iteration I.
+/// * `seed=S:ranks=R:iters=I[:n=N]` — N (default 1) pseudo-random
+///   events over ranks `0..R` and iterations `1..=I`, derived from S
+///   via the crate's SplitMix64 stream — same spec, same events.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The planned events, in spec order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Plan with no events (the fault-free default).
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when the plan holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a plan spec (see the type-level grammar). Errors name the
+    /// offending token so config typos fail loudly at startup.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = part.split(':').map(str::trim).collect();
+            if toks[0].starts_with("seed=") {
+                events.extend(Self::parse_seeded(&toks)?);
+                continue;
+            }
+            let kind_tok = toks[0];
+            let mut rank = None;
+            let mut iter = None;
+            let mut layer = None;
+            let mut ms = None;
+            let mut p2p = false;
+            for t in &toks[1..] {
+                match t.split_once('=') {
+                    Some(("rank", v)) => rank = Some(parse_num::<usize>("rank", v)?),
+                    Some(("iter", v)) => iter = Some(parse_num::<u64>("iter", v)?),
+                    Some(("layer", v)) => layer = Some(parse_num::<usize>("layer", v)?),
+                    Some(("ms", v)) => ms = Some(parse_num::<f64>("ms", v)?),
+                    None if *t == "p2p" => p2p = true,
+                    _ => return Err(format!("fault plan: unknown field {t:?} in {part:?}")),
+                }
+            }
+            let rank = rank.ok_or_else(|| format!("fault plan: {part:?} needs rank="))?;
+            let iteration = iter.ok_or_else(|| format!("fault plan: {part:?} needs iter="))?;
+            if iteration == 0 {
+                return Err(format!("fault plan: {part:?} iter is 1-based (got 0)"));
+            }
+            let kind = match kind_tok {
+                "kill" => FaultKind::Kill,
+                "stall" => FaultKind::Stall {
+                    ms: ms.ok_or_else(|| format!("fault plan: {part:?} needs ms="))?,
+                },
+                "poison" => FaultKind::Poison { p2p },
+                other => return Err(format!("fault plan: unknown kind {other:?}")),
+            };
+            events.push(FaultEvent { rank, iteration, layer, kind });
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Expand a `seed=…` generator token list into concrete events.
+    fn parse_seeded(toks: &[&str]) -> Result<Vec<FaultEvent>, String> {
+        let mut seed = None;
+        let mut n = 1usize;
+        let mut ranks = None;
+        let mut iters = None;
+        for t in toks {
+            match t.split_once('=') {
+                Some(("seed", v)) => seed = Some(parse_num::<u64>("seed", v)?),
+                Some(("n", v)) => n = parse_num::<usize>("n", v)?,
+                Some(("ranks", v)) => ranks = Some(parse_num::<usize>("ranks", v)?),
+                Some(("iters", v)) => iters = Some(parse_num::<u64>("iters", v)?),
+                _ => return Err(format!("fault plan: unknown seeded field {t:?}")),
+            }
+        }
+        let seed = seed.ok_or_else(|| "fault plan: seeded spec needs seed=".to_string())?;
+        let ranks = ranks.ok_or_else(|| "fault plan: seeded spec needs ranks=".to_string())?;
+        let iters = iters.ok_or_else(|| "fault plan: seeded spec needs iters=".to_string())?;
+        if ranks == 0 || iters == 0 {
+            return Err("fault plan: seeded spec needs ranks >= 1 and iters >= 1".to_string());
+        }
+        let mut rng = crate::util::Rng::new(seed);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rank = rng.below(ranks as u64) as usize;
+            let iteration = 1 + rng.below(iters);
+            let kind = match rng.below(3) {
+                0 => FaultKind::Kill,
+                1 => FaultKind::Stall { ms: 1.0 + rng.below(10) as f64 },
+                _ => FaultKind::Poison { p2p: false },
+            };
+            out.push(FaultEvent { rank, iteration, layer: None, kind });
+        }
+        Ok(out)
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T, String> {
+    v.parse().map_err(|_| format!("fault plan: bad {key} value {v:?}"))
+}
+
+/// Runtime fault injector: one per engine, `Arc`-shared with every
+/// worker. The leader advances the iteration clock with
+/// [`FaultInjector::begin_iteration`]; workers poll at layer boundaries
+/// ([`FaultInjector::poll_compute`]) and before wire sends
+/// ([`FaultInjector::poll_wire`]). Each planned event fires exactly
+/// once (atomic claim), so a recovered mesh replaying the same
+/// iteration numbers does not re-fire a consumed fault.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    fired: Vec<AtomicBool>,
+    iteration: AtomicU64,
+}
+
+impl FaultInjector {
+    /// An injector over `plan`, with the iteration clock at 0 (no
+    /// event fires before the first [`FaultInjector::begin_iteration`]).
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let fired = plan.events.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultInjector { plan, fired, iteration: AtomicU64::new(0) }
+    }
+
+    /// Advance the iteration clock; returns the new (1-based) iteration
+    /// number. The leader calls this once per broadcast step.
+    pub fn begin_iteration(&self) -> u64 {
+        self.iteration.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// The current (1-based) iteration number; 0 before the first step.
+    pub fn current_iteration(&self) -> u64 {
+        self.iteration.load(Ordering::SeqCst)
+    }
+
+    /// Claim event `i` if it matches (rank, iteration, layer-gate,
+    /// predicate); returns the kind on the one winning claim.
+    fn claim(
+        &self,
+        rank: usize,
+        layer: Option<usize>,
+        want: impl Fn(&FaultKind) -> bool,
+    ) -> Option<FaultKind> {
+        let iter = self.iteration.load(Ordering::SeqCst);
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if ev.rank != rank || ev.iteration != iter || !want(&ev.kind) {
+                continue;
+            }
+            if let (Some(gate), Some(at)) = (ev.layer, layer) {
+                if gate != at {
+                    continue;
+                }
+            }
+            if self.fired[i]
+                .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                return Some(ev.kind);
+            }
+        }
+        None
+    }
+
+    /// Compute-side poll, called at each local layer boundary. A
+    /// matching `Stall` sleeps here and continues; a matching `Kill`
+    /// returns the error the worker exits with.
+    pub fn poll_compute(&self, rank: usize, layer: usize) -> Result<(), EngineError> {
+        if let Some(kind) = self.claim(rank, Some(layer), |k| {
+            matches!(k, FaultKind::Kill | FaultKind::Stall { .. })
+        }) {
+            match kind {
+                FaultKind::Kill => {
+                    return Err(EngineError::InjectedKill {
+                        rank,
+                        iteration: self.current_iteration(),
+                    });
+                }
+                FaultKind::Stall { ms } => {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+                }
+                FaultKind::Poison { .. } => unreachable!("claim filtered to kill/stall"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Wire-side poll, called before a send on the named fabric; true
+    /// means "flag the next send corrupt". `p2p` selects the stage port
+    /// fabric, `!p2p` the TP ring.
+    pub fn poll_wire(&self, rank: usize, p2p: bool) -> bool {
+        self.claim(rank, None, |k| matches!(k, FaultKind::Poison { p2p: wire } if *wire == p2p))
+            .is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_explicit_events() {
+        let plan = FaultPlan::parse("kill:rank=1:iter=3:layer=2; stall:rank=0:iter=2:ms=5")
+            .expect("valid spec");
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent {
+                    rank: 1,
+                    iteration: 3,
+                    layer: Some(2),
+                    kind: FaultKind::Kill
+                },
+                FaultEvent {
+                    rank: 0,
+                    iteration: 2,
+                    layer: None,
+                    kind: FaultKind::Stall { ms: 5.0 }
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_poison_p2p_flag() {
+        let plan = FaultPlan::parse("poison:rank=2:iter=1:p2p;poison:rank=0:iter=4").unwrap();
+        assert_eq!(plan.events[0].kind, FaultKind::Poison { p2p: true });
+        assert_eq!(plan.events[1].kind, FaultKind::Poison { p2p: false });
+    }
+
+    #[test]
+    fn parse_rejects_typos() {
+        for bad in [
+            "kill:rank=1",                  // missing iter
+            "kill:iter=2",                  // missing rank
+            "stall:rank=0:iter=1",          // missing ms
+            "explode:rank=0:iter=1",        // unknown kind
+            "kill:rank=0:iter=0",           // iter is 1-based
+            "kill:rank=0:iter=1:color=red", // unknown field
+            "seed=7:ranks=4",               // missing iters
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic() {
+        let a = FaultPlan::parse("seed=7:n=5:ranks=4:iters=10").unwrap();
+        let b = FaultPlan::parse("seed=7:n=5:ranks=4:iters=10").unwrap();
+        assert_eq!(a, b, "same seed must give the same event sequence");
+        assert_eq!(a.events.len(), 5);
+        for ev in &a.events {
+            assert!(ev.rank < 4);
+            assert!((1..=10).contains(&ev.iteration));
+        }
+        let c = FaultPlan::parse("seed=8:n=5:ranks=4:iters=10").unwrap();
+        assert_ne!(a, c, "different seeds must diverge");
+    }
+
+    #[test]
+    fn injector_fires_once_at_the_planned_point() {
+        let plan = FaultPlan::parse("kill:rank=1:iter=2").unwrap();
+        let inj = FaultInjector::new(plan);
+        assert!(inj.poll_compute(1, 0).is_ok(), "clock at 0: nothing fires");
+        assert_eq!(inj.begin_iteration(), 1);
+        assert!(inj.poll_compute(1, 0).is_ok(), "iteration 1: not yet");
+        assert_eq!(inj.begin_iteration(), 2);
+        assert!(inj.poll_compute(0, 0).is_ok(), "wrong rank: no fire");
+        let err = inj.poll_compute(1, 3).expect_err("planned kill fires");
+        assert_eq!(err, EngineError::InjectedKill { rank: 1, iteration: 2 });
+        assert!(inj.poll_compute(1, 4).is_ok(), "events fire exactly once");
+    }
+
+    #[test]
+    fn injector_layer_gate() {
+        let plan = FaultPlan::parse("kill:rank=0:iter=1:layer=2").unwrap();
+        let inj = FaultInjector::new(plan);
+        inj.begin_iteration();
+        assert!(inj.poll_compute(0, 0).is_ok());
+        assert!(inj.poll_compute(0, 1).is_ok());
+        assert!(inj.poll_compute(0, 2).is_err(), "fires only at its layer");
+    }
+
+    #[test]
+    fn injector_wire_poison_selects_fabric() {
+        let plan = FaultPlan::parse("poison:rank=0:iter=1;poison:rank=0:iter=1:p2p").unwrap();
+        let inj = FaultInjector::new(plan);
+        inj.begin_iteration();
+        assert!(!inj.poll_wire(1, false), "wrong rank");
+        assert!(inj.poll_wire(0, false), "ring poison fires");
+        assert!(!inj.poll_wire(0, false), "only once");
+        assert!(inj.poll_wire(0, true), "p2p poison fires independently");
+    }
+
+    #[test]
+    fn errors_display_and_convert() {
+        let e = EngineError::RankDead { rank: 3, link: "ring" };
+        assert_eq!(e.to_string(), "rank 3 dead (ring link disconnected)");
+        // The taxonomy lifts into anyhow at the leader boundary via `?`.
+        fn lift() -> anyhow::Result<()> {
+            Err(EngineError::CollectiveTimeout { iteration: 7, deadline_ms: 250.0 })?;
+            Ok(())
+        }
+        let msg = format!("{:#}", lift().unwrap_err());
+        assert!(msg.contains("iteration 7"), "{msg}");
+    }
+}

@@ -153,9 +153,9 @@ impl KvManager {
         if need_blocks > self.free.len() {
             return Err(KvError::OutOfBlocks { need: need_blocks, free: self.free.len() });
         }
-        let e = self.seqs.get_mut(&seq).unwrap();
+        let e = self.seqs.get_mut(&seq).expect("invariant: seq present (checked above)");
         for _ in 0..need_blocks {
-            e.blocks.push(self.free.pop().unwrap());
+            e.blocks.push(self.free.pop().expect("invariant: free list sized by capacity check"));
         }
         let start = e.len;
         e.len += tokens;
@@ -175,7 +175,7 @@ impl KvManager {
         }
         let keep_blocks = new_len.div_ceil(self.block_tokens);
         while e.blocks.len() > keep_blocks {
-            self.free.push(e.blocks.pop().unwrap());
+            self.free.push(e.blocks.pop().expect("invariant: block table covers len"));
         }
         e.len = new_len;
         Ok(())

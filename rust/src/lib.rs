@@ -34,6 +34,7 @@ pub mod cli;
 pub mod collective;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod hw;
 pub mod kv;
 pub mod metrics;

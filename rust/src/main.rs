@@ -89,6 +89,19 @@ fn serve(cli: &Cli) -> Result<()> {
         cfg.ladder_residual =
             iso::config::parse_bool(v, "--ladder-residual").map_err(|e| anyhow!(e))?;
     }
+    if let Some(plan) = cli.get("fault-plan") {
+        // Validate eagerly so a typo'd plan fails before engine start.
+        iso::fault::FaultPlan::parse(plan).map_err(|e| anyhow!("bad --fault-plan: {e}"))?;
+        cfg.fault_plan = Some(plan.to_string());
+    }
+    if cli.has("fault-slack") {
+        let v = cli.get("fault-slack").unwrap();
+        cfg.fault_slack = v.parse().map_err(|_| anyhow!("bad --fault-slack {v:?}"))?;
+    }
+    if cli.has("max-recoveries") {
+        cfg.max_recoveries =
+            cli.usize_or("max-recoveries", cfg.max_recoveries).map_err(|e| anyhow!(e))?;
+    }
     let n_requests = cli.usize_or("requests", 8).map_err(|e| anyhow!(e))?;
     let prompt_len = cli.usize_or("prompt-len", 128).map_err(|e| anyhow!(e))?;
     let decode = cli.usize_or("decode", 0).map_err(|e| anyhow!(e))?;

@@ -204,6 +204,17 @@ pub struct EngineMetrics {
     /// the stage-occupancy histogram; its min/max spread shows layer-
     /// assignment imbalance. Empty when `pp_stages = 1`.
     pub stage_compute_ms: Histogram,
+    /// Faults the leader detected (deadline expiry or a dead link),
+    /// including injected ones (DESIGN.md §14). 0 on fault-free runs.
+    pub faults_detected: u64,
+    /// Successful mesh respawn + replay rounds.
+    pub recoveries: u64,
+    /// Live sequences whose KV was rebuilt by recovery replay.
+    pub replayed_seqs: u64,
+    /// Tokens recomputed by recovery replay (prompt + emitted so far).
+    pub replayed_tokens: u64,
+    /// Wall time of each recovery round (teardown → respawn → replay).
+    pub recovery_ms: Histogram,
 }
 
 impl EngineMetrics {
@@ -293,6 +304,16 @@ impl EngineMetrics {
             s.push_str(&self.pp_bubble_ms.summary("pp_bubble_ms"));
             s.push('\n');
             s.push_str(&self.stage_compute_ms.summary("stage_compute_ms"));
+        }
+        // Fault counters appear only when a fault was actually detected,
+        // so fault-free reports stay byte-identical to pre-fault output.
+        if self.faults_detected > 0 || self.recoveries > 0 {
+            s.push_str(&format!(
+                "\nfaults_detected={} recoveries={} replayed_seqs={} replayed_tokens={}",
+                self.faults_detected, self.recoveries, self.replayed_seqs, self.replayed_tokens
+            ));
+            s.push('\n');
+            s.push_str(&self.recovery_ms.summary("recovery_ms"));
         }
         s
     }
@@ -402,6 +423,25 @@ mod tests {
         assert!(after.contains("pp_bubble_ms"));
         assert!(after.contains("stage_compute_ms"));
         assert!(after.starts_with(&before), "pp lines must only append");
+    }
+
+    #[test]
+    fn fault_counters_absent_until_faults() {
+        // Satellite (PR 6): fault-free reports stay byte-identical to
+        // the pre-fault format — fault lines appear only on detection.
+        let mut m = EngineMetrics::default();
+        let before = m.report();
+        assert!(!before.contains("faults_detected"), "fault lines must be opt-in");
+        m.faults_detected = 2;
+        m.recoveries = 1;
+        m.replayed_seqs = 3;
+        m.replayed_tokens = 120;
+        m.recovery_ms.record(42.0);
+        let after = m.report();
+        assert!(after.contains("faults_detected=2 recoveries=1 replayed_seqs=3"));
+        assert!(after.contains("replayed_tokens=120"));
+        assert!(after.contains("recovery_ms"));
+        assert!(after.starts_with(&before), "fault lines must only append");
     }
 
     #[test]

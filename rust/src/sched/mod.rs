@@ -684,6 +684,45 @@ pub fn pp_best_config(
         .unwrap()
 }
 
+// ---------------------------------------------------------------------------
+// Recovery cost model (DESIGN.md §14)
+// ---------------------------------------------------------------------------
+
+/// The leader's detection deadline for one iteration: `slack ×` the
+/// modeled (or observed) iteration time. The engine uses the same form
+/// over its measured EMA; the simulator uses it over the cost model, so
+/// the two sides price detection latency identically.
+pub fn iteration_deadline_s(iter_s: f64, slack: f64) -> f64 {
+    assert!(iter_s >= 0.0 && slack >= 1.0);
+    iter_s * slack
+}
+
+/// Modeled wall time of one recovery round (DESIGN.md §14): worst-case
+/// detection (a full deadline), mesh respawn, then checkpoint-free
+/// replay of `replay_tokens` at the node's prefill throughput. The
+/// engine's `recovery_ms` histogram measures the real counterpart.
+pub fn recovery_s(
+    deadline_s: f64,
+    respawn_s: f64,
+    replay_tokens: usize,
+    prefill_tok_s: f64,
+) -> f64 {
+    assert!(prefill_tok_s > 0.0);
+    deadline_s + respawn_s + replay_tokens as f64 / prefill_tok_s
+}
+
+/// Expected fraction of wall time lost to recovery at a per-iteration
+/// fault rate: each iteration costs `iter_s` and, with probability
+/// `rate`, an extra `recovery_s` — so the overhead share is
+/// `rate·R / (iter_s + rate·R)`. This is the checkpoint-free analogue
+/// of the classic checkpoint-restart overhead formula: recompute cost
+/// scales with live context, not with a checkpoint interval.
+pub fn expected_overhead_frac(rate: f64, iter_s: f64, recovery_s: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&rate) && iter_s > 0.0 && recovery_s >= 0.0);
+    let overhead = rate * recovery_s;
+    overhead / (iter_s + overhead)
+}
+
 /// Lower an experiment to its op graph.
 pub fn build(exp: &SimExperiment) -> OpGraph {
     let c = Coster::new(exp);
@@ -1105,5 +1144,32 @@ mod tests {
             let g = build(&exp(strat));
             assert_eq!(tl.spans.len(), g.ops.len(), "{strat}");
         }
+    }
+
+    #[test]
+    fn recovery_model_pinned() {
+        // The PR-6 recovery cost model, pinned (DESIGN.md §14): these
+        // exact values feed the BENCH_PR6.json sim_fault section.
+        assert_eq!(iteration_deadline_s(0.03, 4.0), 0.12);
+        // deadline 0.12 s + respawn 2 s + 512 tokens @ 20k tok/s.
+        let r = recovery_s(0.12, 2.0, 512, 20_000.0);
+        assert!((r - 2.1456).abs() < 1e-12, "{r}");
+        let r = recovery_s(0.12, 2.0, 4096, 20_000.0);
+        assert!((r - 2.3248).abs() < 1e-12, "{r}");
+        // Fault-free limit: zero rate, zero overhead.
+        assert_eq!(expected_overhead_frac(0.0, 0.03, 2.1456), 0.0);
+        // rate·R / (iter + rate·R), exact.
+        let f = expected_overhead_frac(1e-3, 0.03, 2.1456);
+        let want = 1e-3 * 2.1456 / (0.03 + 1e-3 * 2.1456);
+        assert!((f - want).abs() < 1e-15);
+        // Overhead grows with both rate and context (replay length).
+        assert!(
+            expected_overhead_frac(1e-4, 0.03, 2.1456)
+                < expected_overhead_frac(1e-3, 0.03, 2.1456)
+        );
+        assert!(
+            expected_overhead_frac(1e-3, 0.03, 2.1456)
+                < expected_overhead_frac(1e-3, 0.03, 2.3248)
+        );
     }
 }

@@ -1,0 +1,364 @@
+//! CHAOS — seeded fault plans swept across scheduler shapes (PR-6
+//! satellite): a miniature supervised mesh built from the production
+//! fabric (`collective::ring` / `collective::stage_grid`, the `try_*`
+//! supervised collectives, and the real `FaultPlan` / `FaultInjector`)
+//! exercises the same detect → teardown → respawn → replay protocol the
+//! engine runs, without needing model artifacts. Properties asserted
+//! per (shape × plan):
+//!
+//! * **no hang** — every run finishes under a wall-clock bound, and
+//!   teardown mid-iteration terminates (the sender-drop cascade of
+//!   DESIGN.md §14);
+//! * **zero dropped sequences** — every sequence reaches its target
+//!   length despite kills, stalls, and poisoned wire segments;
+//! * **token identity** — token streams are bit-identical to the
+//!   fault-free run of the same shape (tokens commit only on a
+//!   successful reply, so replaying the uncommitted iteration is
+//!   checkpoint-free and exact);
+//! * **determinism** — the same seeded plan spec reproduces the same
+//!   outcome.
+
+use std::collections::BTreeSet;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use iso::collective::{ring, stage_grid, RingHandle, StagePort};
+use iso::config::CommQuant;
+use iso::fault::{EngineError, FaultInjector, FaultPlan, SupervisionEvent};
+
+/// Sequences per run; every one must reach `TARGET` tokens (zero-drop).
+const N_SEQS: usize = 3;
+/// Tokens each sequence must complete.
+const TARGET: usize = 6;
+/// Columns per activation row.
+const COLS: usize = 4;
+/// Leader-side detection deadline; generous, since supervision events
+/// and the sender-drop cascade detect real faults in milliseconds.
+const DEADLINE: Duration = Duration::from_secs(5);
+
+/// A scheduler shape in miniature: how the mesh is factored and how
+/// many rows each iteration carries.
+#[derive(Clone, Copy)]
+struct Shape {
+    name: &'static str,
+    pp: usize,
+    tp: usize,
+    /// Sequences advanced per iteration (1 = sequential admission,
+    /// >1 = fused decode lane).
+    lane: usize,
+    /// Tokens per sequence per iteration (speculative drafts).
+    k: usize,
+}
+
+const SHAPES: [Shape; 4] = [
+    Shape { name: "sequential", pp: 1, tp: 2, lane: 1, k: 1 },
+    Shape { name: "mixed", pp: 1, tp: 2, lane: 3, k: 1 },
+    Shape { name: "spec", pp: 1, tp: 2, lane: 3, k: 2 },
+    Shape { name: "pp2xtp2", pp: 2, tp: 2, lane: 3, k: 1 },
+];
+
+/// One leader→worker step: `rows × cols` of activation input.
+struct StepJob {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+/// One mini-mesh rank: real ring handle + stage port + shared injector.
+struct Worker {
+    rank: usize,
+    tp_rank: usize,
+    ring: RingHandle,
+    port: StagePort,
+    inj: Arc<FaultInjector>,
+}
+
+impl Worker {
+    /// Two toy "layers", each an injector poll + deterministic scale +
+    /// supervised ring all-reduce, with stage chaining over the real
+    /// port — the same poll points as the engine: layer boundaries
+    /// (kill/stall), ring and stage sends (poison).
+    fn step(&mut self, job: StepJob) -> Result<Option<Vec<i32>>, EngineError> {
+        let (rows, cols, mut data) = if self.port.has_prev() {
+            self.port.try_recv_prev()?
+        } else {
+            (job.rows, job.cols, job.data)
+        };
+        for layer in 0..2usize {
+            self.inj.poll_compute(self.rank, layer)?;
+            for v in data.iter_mut() {
+                *v = (*v + layer as f32 * 0.125) * (self.tp_rank as f32 + 1.0) * 0.25;
+            }
+            if self.inj.poll_wire(self.rank, false) {
+                self.ring.poison_next_send();
+            }
+            self.ring.try_allreduce(&mut data, rows, cols, CommQuant::F32)?;
+        }
+        if self.port.has_next() {
+            if self.inj.poll_wire(self.rank, true) {
+                self.port.poison_next_send();
+            }
+            self.port.try_send_next(data, rows, cols)?;
+            return Ok(None);
+        }
+        if self.tp_rank != 0 {
+            return Ok(None);
+        }
+        let tokens: Vec<i32> =
+            data.chunks_exact(cols).map(|row| (row.iter().sum::<f32>() * 64.0) as i32).collect();
+        Ok(Some(tokens))
+    }
+
+    /// Worker loop: exits when the leader drops the job sender, or on
+    /// the first fault — which it reports as a supervision event before
+    /// dropping its fabric ends (unblocking its peers).
+    fn run(
+        mut self,
+        jobs: Receiver<StepJob>,
+        reply: Sender<Vec<i32>>,
+        events: Sender<SupervisionEvent>,
+    ) {
+        while let Ok(job) = jobs.recv() {
+            match self.step(job) {
+                Ok(Some(tokens)) => {
+                    reply.send(tokens).ok();
+                }
+                Ok(None) => {}
+                Err(error) => {
+                    events.send(SupervisionEvent { rank: self.rank, error }).ok();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Leader-side mesh handle: job fan-out, reply, supervision queue.
+struct MiniMesh {
+    job_txs: Vec<Sender<StepJob>>,
+    reply_rx: Receiver<Vec<i32>>,
+    event_rx: Receiver<SupervisionEvent>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl MiniMesh {
+    /// Spawn a `pp × tp` grid of workers over fresh per-stage rings and
+    /// stage-chained ports, all sharing one injector.
+    fn spawn(shape: Shape, injector: &Arc<FaultInjector>) -> MiniMesh {
+        let (reply_tx, reply_rx) = channel();
+        let (event_tx, event_rx) = channel();
+        let mut job_txs = Vec::new();
+        let mut joins = Vec::new();
+        for (s, ports) in stage_grid(shape.pp, shape.tp).into_iter().enumerate() {
+            for (r, (port, handle)) in ports.into_iter().zip(ring(shape.tp)).enumerate() {
+                let worker = Worker {
+                    rank: s * shape.tp + r,
+                    tp_rank: r,
+                    ring: handle,
+                    port,
+                    inj: Arc::clone(injector),
+                };
+                let (tx, rx) = channel();
+                let (reply, events) = (reply_tx.clone(), event_tx.clone());
+                job_txs.push(tx);
+                joins.push(std::thread::spawn(move || worker.run(rx, reply, events)));
+            }
+        }
+        MiniMesh { job_txs, reply_rx, event_rx, joins }
+    }
+
+    /// Fan one step out to every rank; a dead rank surfaces as
+    /// `RankDead` on the job link.
+    fn broadcast(&self, rows: usize, cols: usize, data: &[f32]) -> Result<(), EngineError> {
+        for (rank, tx) in self.job_txs.iter().enumerate() {
+            tx.send(StepJob { rows, cols, data: data.to_vec() })
+                .map_err(|_| EngineError::RankDead { rank, link: "job" })?;
+        }
+        Ok(())
+    }
+
+    /// Drain one queued supervision event, if any.
+    fn first_event(&self) -> Option<EngineError> {
+        self.event_rx.try_recv().ok().map(|ev| ev.error)
+    }
+
+    /// Await the iteration's reply, preferring a worker's attributed
+    /// supervision event over the bare disconnect/timeout when one is
+    /// queued (the engine's leader does the same).
+    fn await_reply(&self, iteration: u64) -> Result<Vec<i32>, EngineError> {
+        let start = Instant::now();
+        loop {
+            match self.reply_rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(tokens) => return Ok(tokens),
+                Err(RecvTimeoutError::Disconnected) => {
+                    let dead = EngineError::RankDead { rank: 0, link: "reply" };
+                    return Err(self.first_event().unwrap_or(dead));
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(error) = self.first_event() {
+                        return Err(error);
+                    }
+                    if start.elapsed() >= DEADLINE {
+                        return Err(EngineError::CollectiveTimeout {
+                            iteration,
+                            deadline_ms: DEADLINE.as_secs_f64() * 1e3,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tear the mesh down: dropping every job sender unblocks all idle
+    /// workers, exiting workers drop their ring/port ends, and that
+    /// cascade unblocks any peer still inside a collective — so the
+    /// joins below are bounded (DESIGN.md §14).
+    fn teardown(mut self) {
+        self.job_txs.clear();
+        drop(self.reply_rx);
+        drop(self.event_rx);
+        for j in self.joins {
+            let _ = j.join();
+        }
+    }
+}
+
+/// What a run produced: per-sequence token streams plus how many mesh
+/// respawns it took to get there.
+struct RunOutcome {
+    seqs: Vec<Vec<i32>>,
+    recoveries: usize,
+}
+
+/// Serve `N_SEQS` sequences to `TARGET` tokens each through the mini
+/// mesh, recovering from injected faults by respawn + replay of the
+/// uncommitted iteration.
+fn run_shape(shape: Shape, plan: FaultPlan) -> RunOutcome {
+    let max_recoveries = plan.events.len() + 2;
+    let injector = Arc::new(FaultInjector::new(plan));
+    let mut mesh = MiniMesh::spawn(shape, &injector);
+    let mut seqs: Vec<Vec<i32>> = vec![Vec::new(); N_SEQS];
+    let mut recoveries = 0usize;
+    while seqs.iter().any(|s| s.len() < TARGET) {
+        // Pack this iteration's rows: up to `lane` unfinished sequences,
+        // `k` positions each — a pure function of committed state, which
+        // is what makes replay bit-exact.
+        let mut owners = Vec::new();
+        let mut data = Vec::new();
+        let mut picked = 0usize;
+        for (id, s) in seqs.iter().enumerate() {
+            if s.len() >= TARGET {
+                continue;
+            }
+            if picked == shape.lane {
+                break;
+            }
+            picked += 1;
+            for d in 0..shape.k.min(TARGET - s.len()) {
+                let pos = s.len() + d;
+                owners.push(id);
+                data.extend((0..COLS).map(|c| ((id * 31 + pos * 7 + c * 3) % 13) as f32 / 13.0));
+            }
+        }
+        let iteration = injector.begin_iteration();
+        let outcome =
+            mesh.broadcast(owners.len(), COLS, &data).and_then(|()| mesh.await_reply(iteration));
+        match outcome {
+            Ok(tokens) => {
+                assert_eq!(tokens.len(), owners.len(), "reply row count mismatch");
+                for (id, tok) in owners.iter().zip(&tokens) {
+                    seqs[*id].push(*tok);
+                }
+            }
+            Err(error) => {
+                recoveries += 1;
+                assert!(
+                    recoveries <= max_recoveries,
+                    "{}: recovery limit exhausted after {error}",
+                    shape.name
+                );
+                // Checkpoint-free recovery in miniature: tear down,
+                // respawn, re-run the uncommitted iteration. Consumed
+                // fault events never re-fire (atomic claim), so the
+                // retry loop always converges.
+                mesh.teardown();
+                mesh = MiniMesh::spawn(shape, &injector);
+            }
+        }
+    }
+    mesh.teardown();
+    RunOutcome { seqs, recoveries }
+}
+
+#[test]
+fn chaos_sweep_zero_drops_and_token_identity() {
+    for shape in SHAPES {
+        let baseline = run_shape(shape, FaultPlan::empty());
+        assert_eq!(baseline.recoveries, 0, "{}: fault-free run recovered", shape.name);
+        let distinct: BTreeSet<i32> = baseline.seqs.iter().flatten().copied().collect();
+        assert!(distinct.len() > 1, "{}: degenerate token stream", shape.name);
+        let world = shape.pp * shape.tp;
+        let mut plans = vec![
+            "kill:rank=0:iter=2".to_string(),
+            format!("kill:rank={}:iter=3", world - 1),
+            "kill:rank=1:iter=2;kill:rank=0:iter=4".to_string(),
+            "stall:rank=1:iter=2:ms=3".to_string(),
+            "poison:rank=0:iter=2".to_string(),
+        ];
+        if shape.pp > 1 {
+            plans.push("poison:rank=0:iter=2:p2p".to_string());
+        }
+        for seed in 1..=4u64 {
+            plans.push(format!("seed={seed}:n=2:ranks={world}:iters=6"));
+        }
+        for spec in &plans {
+            let plan = FaultPlan::parse(spec).expect("sweep specs are valid");
+            let clock = Instant::now();
+            let out = run_shape(shape, plan);
+            assert!(
+                clock.elapsed() < Duration::from_secs(60),
+                "{} × {spec:?}: wall-clock bound blown",
+                shape.name
+            );
+            for (id, s) in out.seqs.iter().enumerate() {
+                assert_eq!(s.len(), TARGET, "{} × {spec:?}: seq {id} dropped tokens", shape.name);
+            }
+            assert_eq!(out.seqs, baseline.seqs, "{} × {spec:?}: tokens diverged", shape.name);
+            if spec.starts_with("kill:") {
+                assert!(out.recoveries >= 1, "{} × {spec:?}: kill did not recover", shape.name);
+            }
+            if spec.starts_with("stall:") {
+                assert_eq!(out.recoveries, 0, "{} × {spec:?}: stall forced respawn", shape.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_chaos_run_is_reproducible() {
+    let shape = SHAPES[1]; // mixed
+    let spec = "seed=9:n=3:ranks=2:iters=5";
+    let a = run_shape(shape, FaultPlan::parse(spec).unwrap());
+    let b = run_shape(shape, FaultPlan::parse(spec).unwrap());
+    assert_eq!(a.seqs, b.seqs, "same seeded plan must reproduce the same tokens");
+}
+
+#[test]
+fn teardown_mid_iteration_terminates() {
+    // Shutdown-hang regression in miniature: tear the mesh down while
+    // an iteration (with a stalled rank) is still in flight. The
+    // sender-drop cascade must unblock every thread; a hang here trips
+    // the chaos CI job's hard timeout.
+    let shape = SHAPES[1];
+    let plan = FaultPlan::parse("stall:rank=1:iter=1:ms=50").unwrap();
+    let injector = Arc::new(FaultInjector::new(plan));
+    let mesh = MiniMesh::spawn(shape, &injector);
+    injector.begin_iteration();
+    let data = vec![0.5f32; 2 * COLS];
+    mesh.broadcast(2, COLS, &data).expect("fresh mesh accepts jobs");
+    let clock = Instant::now();
+    mesh.teardown();
+    assert!(clock.elapsed() < Duration::from_secs(5), "teardown did not terminate promptly");
+}

@@ -525,6 +525,109 @@ fn short_prompt_iso_prefill_matches_serial() {
 }
 
 #[test]
+fn kill_rank_recovery_token_identical_across_shapes() {
+    // The PR-6 acceptance criterion end-to-end: a seeded kill-rank fault
+    // under every scheduler shape is detected, the mesh respawns, the
+    // live sequences replay from their prompts (checkpoint-free), and
+    // the served tokens are bit-identical to the fault-free run — with
+    // zero dropped sequences.
+    if !have_artifacts() {
+        return;
+    }
+    use iso::workload::{LenDist, TraceGen};
+    // (name, mixed iterations, spec_k, pp_stages)
+    let shapes = [
+        ("sequential", false, 0usize, 1usize),
+        ("mixed", true, 0, 1),
+        ("spec", true, 2, 1),
+        ("pp2xtp2", true, 0, 2),
+    ];
+    for (name, mixed, spec_k, pp) in shapes {
+        let reqs = TraceGen::new(17, 512, LenDist::Fixed(24)).decode_steps(6).generate(3);
+        let mut base_cfg = cfg(Strategy::Iso, 2);
+        base_cfg.mixed_iterations = mixed;
+        base_cfg.spec_k = spec_k;
+        base_cfg.pp_stages = pp;
+        base_cfg.decode_batch = 2;
+
+        let mut base = Engine::start(base_cfg.clone()).unwrap();
+        let clean = base.serve_trace(&reqs).unwrap();
+        let clean_rep = base.shutdown().unwrap();
+        assert_eq!(clean.completed, 3, "{name}: fault-free run incomplete");
+        assert_eq!(clean_rep.metrics.recoveries, 0, "{name}: fault-free run recovered");
+
+        let mut c = base_cfg;
+        c.fault_plan = Some("kill:rank=1:iter=3".into());
+        let mut e = Engine::start(c).unwrap();
+        let faulted = e.serve_trace(&reqs).unwrap();
+        let rep = e.shutdown().unwrap();
+        assert_eq!(faulted.completed, 3, "{name}: dropped sequences under fault");
+        assert!(rep.metrics.faults_detected >= 1, "{name}: kill went undetected");
+        assert!(rep.metrics.recoveries >= 1, "{name}: kill did not trigger recovery");
+        assert!(!rep.metrics.recovery_ms.is_empty(), "{name}: recovery latency unrecorded");
+        let sort = |mut v: Vec<(u64, Vec<i32>)>| {
+            v.sort_by_key(|(id, _)| *id);
+            v
+        };
+        assert_eq!(
+            sort(clean.completions.clone()),
+            sort(faulted.completions.clone()),
+            "{name}: recovery changed served tokens"
+        );
+    }
+}
+
+#[test]
+fn shutdown_after_fault_terminates() {
+    // Shutdown-hang regression (PR-6 satellite): after a mid-trace kill
+    // and recovery, both `shutdown` and `Drop` must terminate promptly —
+    // the sender-drop cascade, not a blocking join on a dead rank.
+    if !have_artifacts() {
+        return;
+    }
+    use iso::workload::{LenDist, TraceGen};
+    use std::time::{Duration, Instant};
+    let reqs = TraceGen::new(29, 512, LenDist::Fixed(24)).decode_steps(4).generate(2);
+    for explicit_shutdown in [true, false] {
+        let mut c = cfg(Strategy::Iso, 2);
+        c.decode_batch = 2;
+        c.fault_plan = Some("kill:rank=0:iter=2".into());
+        let mut e = Engine::start(c).unwrap();
+        let trace = e.serve_trace(&reqs).unwrap();
+        assert_eq!(trace.completed, 2);
+        let clock = Instant::now();
+        if explicit_shutdown {
+            let rep = e.shutdown().unwrap();
+            assert!(rep.metrics.recoveries >= 1);
+        } else {
+            drop(e); // Engine::drop must also terminate the mesh
+        }
+        assert!(
+            clock.elapsed() < Duration::from_secs(30),
+            "engine teardown hung after fault (explicit_shutdown={explicit_shutdown})"
+        );
+    }
+}
+
+#[test]
+fn fault_free_paths_report_zero_recovery() {
+    // Fault machinery off by default: no plan → the supervision layer is
+    // pure bookkeeping, and every recovery counter reports zero.
+    if !have_artifacts() {
+        return;
+    }
+    let prompt: Vec<i32> = (0..48).map(|i| (i * 31 % 512) as i32).collect();
+    let mut e = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
+    e.generate(&prompt, 3).unwrap();
+    let rep = e.shutdown().unwrap();
+    assert_eq!(rep.metrics.faults_detected, 0);
+    assert_eq!(rep.metrics.recoveries, 0);
+    assert_eq!(rep.metrics.replayed_seqs, 0);
+    assert_eq!(rep.metrics.replayed_tokens, 0);
+    assert!(rep.metrics.recovery_ms.is_empty());
+}
+
+#[test]
 fn iso_overlap_is_real() {
     // The point of the paper: the comm stream's time must be (partially)
     // hidden behind compute under ISO, and visibly less hidden in serial.
