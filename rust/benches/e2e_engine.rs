@@ -9,10 +9,11 @@
 //! `BENCH_PR4.json` (`ISO_PERF_SNAPSHOT_PR4`, the PP×TP sweep CI gates
 //! against `BENCH_BASELINE.json`), `BENCH_PR5.json`
 //! (`ISO_PERF_SNAPSHOT_PR5`, the fused-epilogue sweep, also CI-gated),
-//! and `BENCH_PR6.json` (`ISO_PERF_SNAPSHOT_PR6`, the fault-rate ×
-//! recovery-overhead sweep, also CI-gated): each engine sweep is
-//! recorded next to the simulator's prediction, so the sim-vs-engine
-//! trend direction is recorded per PR.
+//! `BENCH_PR6.json` (`ISO_PERF_SNAPSHOT_PR6`, the fault-rate ×
+//! recovery-overhead sweep, also CI-gated), and `BENCH_SLO.json`
+//! (`ISO_PERF_SNAPSHOT_SLO`, the PR-7 offered-load SLO frontier, also
+//! CI-gated): each engine sweep is recorded next to the simulator's
+//! prediction, so the sim-vs-engine trend direction is recorded per PR.
 //!
 //! Requires `make artifacts` for the engine sections; the simulator
 //! sections always run.
@@ -24,9 +25,10 @@ use iso::model::ModelSpec;
 use iso::report::{append_perf_records, PerfRecord};
 use iso::runtime::Manifest;
 use iso::sched::{
-    epilogue_exposed_s, epilogue_s, expected_overhead_frac, fused_epilogue_iteration_s,
-    iteration_deadline_s, mixed_iteration_s, pp_best_config, pp_bubble_fraction, pp_iteration_s,
-    recovery_s, Coster, MixedIteration,
+    bounded_tbt_s, epilogue_exposed_s, epilogue_s, expected_overhead_frac,
+    fused_epilogue_iteration_s, iteration_deadline_s, mixed_iteration_s, pp_best_config,
+    pp_bubble_fraction, pp_iteration_s, recovery_s, slo_admitted_frac, slo_ttft_s, Coster,
+    MixedIteration,
 };
 use iso::util::bench::{bench, section};
 use iso::workload::{LenDist, TraceGen};
@@ -61,6 +63,10 @@ fn pr5_snapshot_path() -> String {
 
 fn pr6_snapshot_path() -> String {
     std::env::var("ISO_PERF_SNAPSHOT_PR6").unwrap_or_else(|_| "../BENCH_PR6.json".into())
+}
+
+fn slo_snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT_SLO").unwrap_or_else(|_| "../BENCH_SLO.json".into())
 }
 
 /// The PP×TP factorizations of a 4-device node that the deterministic
@@ -525,6 +531,106 @@ fn engine_fault_sweep(path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Simulator side of the PR-7 sweep (no artifacts needed, fully
+/// deterministic — gated against `BENCH_BASELINE.json` by
+/// `scripts/check_bench_regression.py` in CI): the pinned overload model
+/// (DESIGN.md §15) over offered load. Admission clamps utilization at
+/// `rho_max` and sheds the excess, queueing delay follows the M/D/1
+/// waiting time, and the bounded-prefill TBT is the unbounded mixed
+/// iteration clamped to the budget. The directions the gate pins: TTFT
+/// saturates (instead of diverging) past the knee, goodput plateaus at
+/// the admitted ceiling, and the p99 TBT stays pinned at the budget even
+/// with a 4096-token prompt in flight.
+fn sim_slo_sweep(path: &str) {
+    // Modeled serving point: 30 ms decode iterations over an 8-wide
+    // fused lane (knee at 8/0.03 tok/s), a 50 ms TBT budget, admission
+    // ceiling rho_max = 0.9, 20k tok/s prefill, 4096-token worst prompt.
+    let (iter_s, budget_ms, decode_batch, rho_max) = (0.03f64, 50.0f64, 8usize, 0.9f64);
+    let capacity = decode_batch as f64 / iter_s;
+    let prefill_tok_s = 20_000.0f64;
+    let unbounded_s = 4096.0 / prefill_tok_s + iter_s;
+    section("simulator: SLO frontier vs offered load (8-lane 30ms iterations, 50ms budget)");
+    let mut records = Vec::new();
+    for (label, m) in [("0.5", 0.5f64), ("0.9", 0.9), ("1.0", 1.0), ("2.0", 2.0)] {
+        let rho = m;
+        let admitted = slo_admitted_frac(rho, rho_max);
+        let ttft_ms = slo_ttft_s(iter_s, rho, rho_max) * 1e3;
+        let p99_tbt_ms = bounded_tbt_s(iter_s, unbounded_s, budget_ms / 1e3) * 1e3;
+        let goodput = m * capacity * admitted;
+        let shed_frac = 1.0 - admitted;
+        println!(
+            "  load {label}x: ttft {ttft_ms:6.1}ms  p99 tbt {p99_tbt_ms:5.1}ms  \
+             goodput {goodput:6.1} tok/s  shed {shed_frac:.2}"
+        );
+        records.push(
+            PerfRecord::new(&format!("sim slo load{label}"), ttft_ms, ttft_ms, ttft_ms)
+                .with("rho", rho)
+                .with("pred_ttft_ms", ttft_ms)
+                .with("pred_p99_tbt_ms", p99_tbt_ms)
+                .with("pred_goodput_tok_s", goodput)
+                .with("shed_frac", shed_frac),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "sim_slo", &records) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
+/// Engine side of the PR-7 sweep (artifact-gated, not in the baseline):
+/// serve a heavy-tailed lognormal burst at roughly twice the fused
+/// lane's knee with every overload knob armed, next to the same trace
+/// with the knobs off. The frontier table (EXPERIMENTS.md) records the
+/// shape this sweep must keep: the armed engine finishes everything it
+/// admits and sheds, rejects, or preempts the excess instead of letting
+/// a giant prompt stall the decode lane.
+fn engine_overload_sweep(path: &str) -> anyhow::Result<()> {
+    section("engine: overload knobs on a heavy-tailed burst (tp=2, mixed db4)");
+    let mut records = Vec::new();
+    for (label, armed) in [("open-loop", false), ("slo-armed", true)] {
+        let mut c = cfg(Strategy::Iso, 2, CommQuant::F32, None);
+        c.decode_batch = 4;
+        c.max_batch = 8;
+        if armed {
+            c.tbt_budget_ms = 50.0;
+            c.kv_high_water = 0.75;
+            c.queue_bound = 8;
+            c.ttft_deadline_ms = 2_000.0;
+        }
+        let mut engine = Engine::start(c)?;
+        let reqs = TraceGen::new(17, 512, LenDist::Lognormal { mu: 3.2, sigma: 0.8, cap: 96 })
+            .rate(200.0)
+            .decode_steps(8)
+            .generate(12);
+        let clock = std::time::Instant::now();
+        let mut trace = engine.serve_trace(&reqs)?;
+        let wall_ms = clock.elapsed().as_secs_f64() * 1e3;
+        let report = engine.shutdown()?;
+        let accounted = trace.completed as u64 + trace.shed + trace.rejected;
+        assert_eq!(accounted, 12, "dropped sequences in {label}");
+        let tbt_p50 = if trace.tbt_ms.is_empty() { 0.0 } else { trace.tbt_ms.p50() };
+        println!(
+            "  {label:<10} wall {wall_ms:8.1}ms  completed {} shed {} rejected {} \
+             preemptions {}  tbt p50 {tbt_p50:.2}ms",
+            trace.completed, trace.shed, trace.rejected, trace.preemptions
+        );
+        records.push(
+            PerfRecord::new(&format!("engine overload {label}"), wall_ms, wall_ms, wall_ms)
+                .with("completed", trace.completed as f64)
+                .with("preemptions", trace.preemptions as f64)
+                .with("shed", trace.shed as f64)
+                .with("rejected", trace.rejected as f64)
+                .with("tok_s", trace.throughput_tok_s())
+                .with("preempted_tokens", report.metrics.preempted_tokens as f64),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "e2e_engine_overload", &records) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("  wrote overload sweep to {path}");
+    }
+    Ok(())
+}
+
 /// Simulator prediction for the exposed (un-hidden) time of one
 /// segment-streamed all-reduce: the first comm tile is always exposed;
 /// each later tile hides up to one compute tile behind it (paper §3.2,
@@ -543,6 +649,7 @@ fn main() -> anyhow::Result<()> {
     let pr4_path = pr4_snapshot_path();
     let pr5_path = pr5_snapshot_path();
     let pr6_path = pr6_snapshot_path();
+    let slo_path = slo_snapshot_path();
 
     // --- PR-2: simulator-predicted mixed-batching direction (no
     // artifacts needed).
@@ -559,6 +666,10 @@ fn main() -> anyhow::Result<()> {
     // --- PR-6: pinned recovery cost model over fault rate × context
     // (no artifacts needed; gated against BENCH_BASELINE.json in CI).
     sim_fault_sweep(&pr6_path);
+
+    // --- PR-7: pinned overload/SLO frontier over offered load (no
+    // artifacts needed; gated against BENCH_BASELINE.json in CI).
+    sim_slo_sweep(&slo_path);
 
     // --- simulator side of the segment sweep (no artifacts needed).
     let sim_exp = SimExperiment::new(
@@ -686,6 +797,11 @@ fn main() -> anyhow::Result<()> {
     // --- PR-6 tentpole: seeded kill-rank faults on the real engine —
     // measured detection + respawn + replay latency vs fault-free.
     engine_fault_sweep(&pr6_path)?;
+
+    // --- PR-7 tentpole: overload knobs on the real engine — bounded
+    // queue, KV-pressure preemption, and TBT-budgeted prefill under a
+    // heavy-tailed burst past the knee.
+    engine_overload_sweep(&slo_path)?;
 
     Ok(())
 }

@@ -340,9 +340,12 @@ pub fn accept_count(drafts: &[i32], rows: &[i32]) -> usize {
 pub struct PrefillPlan {
     /// Engine slot being prefilled.
     pub slot: usize,
-    /// Padded prompt length the chunks tile exactly.
+    /// Padded prompt length of the whole sequence.
     pub prompt_len: usize,
-    /// The ISO chunk set tiling the padded prompt.
+    /// The ISO chunk set this iteration executes. Without a prefill
+    /// budget it tiles the padded prompt exactly; under `tbt_budget_ms`
+    /// bounding it is a contiguous resumable slice of that tiling
+    /// (DESIGN.md §15), and the rest streams in later iterations.
     pub chunks: Vec<ChunkJob>,
 }
 
@@ -367,10 +370,12 @@ impl StepPlan {
         self.prefill.is_none() && self.decode.is_empty() && self.spec.is_empty()
     }
 
-    /// Tokens this iteration advances (prefill tokens + decode lane rows
-    /// + verify window rows).
+    /// Tokens this iteration advances (prefill chunk tokens + decode
+    /// lane rows + verify window rows). Counts the chunks actually
+    /// scheduled, so a budget-bounded partial prefill is priced at its
+    /// slice, not the whole prompt.
     pub fn tokens(&self) -> usize {
-        self.prefill.as_ref().map_or(0, |p| p.prompt_len)
+        self.prefill.as_ref().map_or(0, |p| p.chunks.iter().map(|c| c.len).sum())
             + self.decode.len()
             + self.spec.iter().map(SpecSlot::width).sum::<usize>()
     }
@@ -386,6 +391,10 @@ pub struct LaneSeq {
     pub prompt_len: usize,
     /// Whether the prefill has completed.
     pub prefilled: bool,
+    /// Prompt tokens already written into the worker KV by earlier
+    /// bounded-prefill iterations (DESIGN.md §15); equals `prompt_len`
+    /// once `prefilled`. Always 0 when `tbt_budget_ms` is off.
+    pub prefill_done: usize,
     /// Latest emitted token (valid once `prefilled`).
     pub last_token: i32,
     /// Absolute position `last_token` will occupy — the next decode
@@ -423,8 +432,8 @@ impl LaneSeq {
 /// );
 /// let live = vec![
 ///     // Slot 0 still needs its prefill; slot 1 is decoding.
-///     LaneSeq { slot: 0, prompt_len: 64, prefilled: false, last_token: 0, offset: 0, decode_left: 4 },
-///     LaneSeq { slot: 1, prompt_len: 64, prefilled: true, last_token: 7, offset: 64, decode_left: 4 },
+///     LaneSeq { slot: 0, prompt_len: 64, prefilled: false, prefill_done: 0, last_token: 0, offset: 0, decode_left: 4 },
+///     LaneSeq { slot: 1, prompt_len: 64, prefilled: true, prefill_done: 64, last_token: 7, offset: 64, decode_left: 4 },
 /// ];
 /// let plan = planner.plan(&live, None);
 /// let prefill = plan.prefill.expect("head-of-line prefill");
@@ -448,6 +457,12 @@ pub struct MixedPlanner {
     /// Minimum prefill chunks per plan (pipeline micro-batch depth,
     /// DESIGN.md §11); 1 = the single-stage default.
     pub min_chunks: usize,
+    /// Per-iteration prefill token cap derived from `tbt_budget_ms`
+    /// (DESIGN.md §15). 0 = unbounded: whole prompts prefill in one
+    /// iteration, exactly the pre-overload behavior. Non-zero plans
+    /// carry a resumable slice of the chunk set, always at least one
+    /// chunk (anti-starvation: prefill never stalls outright).
+    pub prefill_token_budget: usize,
     cursor: usize,
 }
 
@@ -469,6 +484,7 @@ impl MixedPlanner {
             decode_batch,
             max_seq,
             min_chunks: 1,
+            prefill_token_budget: 0,
             cursor: 0,
         }
     }
@@ -479,6 +495,14 @@ impl MixedPlanner {
     /// every stage fed (DESIGN.md §11).
     pub fn with_min_chunks(mut self, min_chunks: usize) -> Self {
         self.min_chunks = min_chunks.max(1);
+        self
+    }
+
+    /// Cap prefill work per iteration at `tokens` (builder style); the
+    /// engine derives the cap from `tbt_budget_ms` via the cost model
+    /// (`sched::budgeted_prefill_tokens`). 0 = unbounded.
+    pub fn with_prefill_budget(mut self, tokens: usize) -> Self {
+        self.prefill_token_budget = tokens;
         self
     }
 
@@ -501,10 +525,8 @@ impl MixedPlanner {
         spec_k: usize,
         drafts: &mut dyn FnMut(usize, usize) -> Vec<i32>,
     ) -> StepPlan {
-        let prefill = live.iter().find(|s| !s.prefilled).map(|s| PrefillPlan {
-            slot: s.slot,
-            prompt_len: s.prompt_len,
-            chunks: plan_prefill_pp(
+        let prefill = live.iter().find(|s| !s.prefilled).map(|s| {
+            let chunks = plan_prefill_pp(
                 s.slot as u64,
                 s.prompt_len,
                 self.strategy,
@@ -512,7 +534,12 @@ impl MixedPlanner {
                 &self.chunk_sizes,
                 ctx,
                 self.min_chunks,
-            ),
+            );
+            PrefillPlan {
+                slot: s.slot,
+                prompt_len: s.prompt_len,
+                chunks: self.budget_slice(chunks, s.prefill_done),
+            }
         });
         let eligible: Vec<&LaneSeq> =
             live.iter().filter(|s| s.decoding(self.max_seq)).collect();
@@ -551,32 +578,160 @@ impl MixedPlanner {
         }
         plan
     }
+
+    /// Bounded chunked prefill (DESIGN.md §15): drop the chunks already
+    /// executed by earlier iterations (`offset + len <= done`; chunks
+    /// are taken whole, so `done` always lands on a chunk boundary) and
+    /// keep whole chunks while the slice fits `prefill_token_budget` —
+    /// always at least one, so prefill never starves. The slice's final
+    /// chunk is re-marked `last` so the worker computes a logits row for
+    /// the iteration; the coordinator treats that row as the first
+    /// emission only when the slice completes the prompt.
+    fn budget_slice(&self, chunks: Vec<ChunkJob>, done: usize) -> Vec<ChunkJob> {
+        if self.prefill_token_budget == 0 && done == 0 {
+            return chunks; // bounding off: byte-identical plans
+        }
+        let mut out: Vec<ChunkJob> = Vec::new();
+        let mut taken = 0usize;
+        for mut c in chunks {
+            if c.offset + c.len <= done {
+                continue; // prefilled by an earlier iteration
+            }
+            if self.prefill_token_budget > 0
+                && !out.is_empty()
+                && taken + c.len > self.prefill_token_budget
+            {
+                break;
+            }
+            taken += c.len;
+            c.last = false;
+            out.push(c);
+        }
+        if let Some(c) = out.last_mut() {
+            c.last = true;
+        }
+        out
+    }
 }
 
-/// FIFO admission queue with a live-sequence cap.
+/// Priority class of a request (DESIGN.md §15). Classes drain strictly
+/// in order: no batch request is admitted while an interactive one
+/// waits, and best-effort traffic is the first shed under pressure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive traffic (chat turns); admitted first.
+    Interactive,
+    /// The default class: throughput-oriented traffic.
+    Batch,
+    /// Background traffic; admitted last, shed first.
+    BestEffort,
+}
+
+impl Priority {
+    /// All classes, highest priority first (queue drain order).
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Batch, Priority::BestEffort];
+}
+
+/// One queued request with its admission metadata.
+#[derive(Clone, Debug)]
+struct Queued {
+    req: Request,
+    tenant: u64,
+}
+
+/// SLO admission gate (DESIGN.md §15): a priority-classed queue with a
+/// live-sequence cap, an optional queue bound (backpressure — submits
+/// beyond it are rejected with [`EngineError::Overloaded`] instead of
+/// queueing without limit), per-tenant token-rate fairness inside each
+/// class, and optional deadline-based shedding of requests that can no
+/// longer meet their TTFT target.
+///
+/// With `bound = 0` and `ttft_deadline_s = 0.0` (the defaults) it
+/// behaves exactly like the old unbounded FIFO queue.
+///
+/// [`EngineError::Overloaded`]: crate::fault::EngineError::Overloaded
 #[derive(Debug)]
 pub struct Admission {
-    queue: VecDeque<Request>,
+    /// One FIFO queue per priority class, drained in class order.
+    queues: [VecDeque<Queued>; 3],
     /// Live-sequence cap.
     pub max_live: usize,
     /// Sequences currently admitted and not yet completed.
     pub live: usize,
+    /// Queue bound across all classes; 0 = unbounded.
+    pub bound: usize,
+    /// TTFT deadline (seconds); queued requests that have waited longer
+    /// are shed by [`Admission::shed_stale`]. 0.0 = shedding off.
+    pub ttft_deadline_s: f64,
+    /// Submits rejected for backpressure since construction.
+    pub rejected: u64,
+    /// Requests shed for a blown TTFT deadline since construction.
+    pub shed: u64,
+    /// Prompt tokens admitted per tenant — the fairness ledger.
+    tenant_tokens: std::collections::BTreeMap<u64, u64>,
 }
 
 impl Admission {
-    /// An empty queue admitting at most `max_live` concurrent sequences.
+    /// An empty gate admitting at most `max_live` concurrent sequences,
+    /// with an unbounded queue and shedding off.
     pub fn new(max_live: usize) -> Self {
-        Admission { queue: VecDeque::new(), max_live, live: 0 }
+        Admission {
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            max_live,
+            live: 0,
+            bound: 0,
+            ttft_deadline_s: 0.0,
+            rejected: 0,
+            shed: 0,
+            tenant_tokens: std::collections::BTreeMap::new(),
+        }
     }
 
-    /// Enqueue a request (FIFO).
-    pub fn submit(&mut self, r: Request) {
-        self.queue.push_back(r);
+    /// Bound the total queue depth (builder style); 0 = unbounded.
+    pub fn with_bound(mut self, bound: usize) -> Self {
+        self.bound = bound;
+        self
     }
 
-    /// Requests queued but not yet admitted.
+    /// Shed queued requests older than `deadline_s` (builder style);
+    /// 0.0 = shedding off.
+    pub fn with_ttft_deadline_s(mut self, deadline_s: f64) -> Self {
+        self.ttft_deadline_s = deadline_s;
+        self
+    }
+
+    /// Enqueue a request in the default [`Priority::Batch`] class under
+    /// tenant 0. Fails with [`EngineError::Overloaded`] when the queue
+    /// bound is hit.
+    ///
+    /// [`EngineError::Overloaded`]: crate::fault::EngineError::Overloaded
+    pub fn submit(&mut self, r: Request) -> Result<(), crate::fault::EngineError> {
+        self.submit_classed(r, Priority::Batch, 0)
+    }
+
+    /// Enqueue a request under an explicit priority class and tenant id.
+    /// Rejects with [`EngineError::Overloaded`] — backpressure, not
+    /// failure — when `bound > 0` and the queue is already full.
+    ///
+    /// [`EngineError::Overloaded`]: crate::fault::EngineError::Overloaded
+    pub fn submit_classed(
+        &mut self,
+        r: Request,
+        prio: Priority,
+        tenant: u64,
+    ) -> Result<(), crate::fault::EngineError> {
+        let queued = self.pending();
+        if self.bound > 0 && queued >= self.bound {
+            self.rejected += 1;
+            return Err(crate::fault::EngineError::Overloaded { queued, bound: self.bound });
+        }
+        self.queues[prio as usize].push_back(Queued { req: r, tenant });
+        Ok(())
+    }
+
+    /// Requests queued but not yet admitted, across all classes.
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(VecDeque::len).sum()
     }
 
     /// Requests queued but not yet admitted — the saturation signal
@@ -584,7 +739,7 @@ impl Admission {
     /// counter). The serving loop records the same arrived-but-unadmitted
     /// count into `metrics.queue_depth` every iteration.
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.pending()
     }
 
     /// How long (seconds) the *oldest* queued request has been waiting at
@@ -592,20 +747,60 @@ impl Admission {
     /// without bound when the live cap is saturated — the head-of-line
     /// companion to [`Admission::queue_depth`].
     pub fn oldest_wait_s(&self, now_s: f64) -> Option<f64> {
-        self.queue.front().map(|r| (now_s - r.arrival_s).max(0.0))
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|e| (now_s - e.req.arrival_s).max(0.0)))
+            .fold(None, |acc: Option<f64>, w| Some(acc.map_or(w, |a| a.max(w))))
     }
 
-    /// Admit as many requests as capacity allows.
+    /// Shed every queued request that has already waited past the TTFT
+    /// deadline at engine clock `now_s` — serving it would blow its SLO
+    /// anyway, and shedding it early frees queue space for requests that
+    /// can still make theirs. Returns the shed requests (best-effort
+    /// classes shed like any other; a request already admitted is never
+    /// shed). No-op when shedding is off.
+    pub fn shed_stale(&mut self, now_s: f64) -> Vec<Request> {
+        if self.ttft_deadline_s <= 0.0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for q in &mut self.queues {
+            let mut keep = VecDeque::with_capacity(q.len());
+            for e in q.drain(..) {
+                if now_s - e.req.arrival_s > self.ttft_deadline_s {
+                    out.push(e.req);
+                } else {
+                    keep.push_back(e);
+                }
+            }
+            *q = keep;
+        }
+        self.shed += out.len() as u64;
+        out
+    }
+
+    /// Admit as many requests as capacity allows: classes drain in
+    /// priority order; within a class the request whose tenant has been
+    /// admitted the fewest prompt tokens goes first (FIFO among equals),
+    /// so one chatty tenant cannot starve the rest of its class.
     pub fn admit(&mut self) -> Vec<Request> {
         let mut out = Vec::new();
         while self.live < self.max_live {
-            match self.queue.pop_front() {
-                Some(r) => {
-                    self.live += 1;
-                    out.push(r);
-                }
-                None => break,
-            }
+            let Some(qi) = (0..self.queues.len()).find(|&i| !self.queues[i].is_empty())
+            else {
+                break;
+            };
+            let ledger = &self.tenant_tokens;
+            let pick = self.queues[qi]
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, e)| (ledger.get(&e.tenant).copied().unwrap_or(0), *i))
+                .map(|(i, _)| i)
+                .expect("non-empty queue");
+            let e = self.queues[qi].remove(pick).expect("picked index in range");
+            *self.tenant_tokens.entry(e.tenant).or_insert(0) += e.req.prompt.len() as u64;
+            self.live += 1;
+            out.push(e.req);
         }
         out
     }
@@ -720,7 +915,8 @@ mod tests {
     fn admission_respects_cap() {
         let mut a = Admission::new(2);
         for i in 0..5 {
-            a.submit(Request { id: i, arrival_s: 0.0, prompt: vec![0; 4], decode_steps: 0 });
+            a.submit(Request { id: i, arrival_s: 0.0, prompt: vec![0; 4], decode_steps: 0 })
+                .unwrap();
         }
         assert_eq!(a.admit().len(), 2);
         assert_eq!(a.pending(), 3);
@@ -735,6 +931,133 @@ mod tests {
         Admission::new(1).complete();
     }
 
+    fn req(id: u64, len: usize) -> Request {
+        Request { id, arrival_s: 0.0, prompt: vec![0; len], decode_steps: 0 }
+    }
+
+    #[test]
+    fn admission_bound_rejects_with_overloaded() {
+        use crate::fault::EngineError;
+        let mut a = Admission::new(1).with_bound(2);
+        a.submit(req(0, 4)).unwrap();
+        a.submit(req(1, 4)).unwrap();
+        let err = a.submit(req(2, 4)).unwrap_err();
+        assert_eq!(err, EngineError::Overloaded { queued: 2, bound: 2 });
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.pending(), 2, "rejected request never entered the queue");
+        // Draining the queue reopens admission.
+        assert_eq!(a.admit().len(), 1);
+        a.submit(req(3, 4)).unwrap();
+    }
+
+    #[test]
+    fn admission_drains_classes_in_priority_order() {
+        let mut a = Admission::new(3);
+        a.submit_classed(req(0, 4), Priority::BestEffort, 0).unwrap();
+        a.submit_classed(req(1, 4), Priority::Batch, 0).unwrap();
+        a.submit_classed(req(2, 4), Priority::Interactive, 0).unwrap();
+        a.submit_classed(req(3, 4), Priority::Interactive, 0).unwrap();
+        let ids: Vec<u64> = a.admit().iter().map(|r| r.id).collect();
+        // Interactive first (FIFO within class), then batch; best-effort
+        // is still queued when the cap bites.
+        assert_eq!(ids, vec![2, 3, 1]);
+        assert_eq!(a.pending(), 1);
+    }
+
+    #[test]
+    fn admission_balances_tenant_tokens_within_class() {
+        let mut a = Admission::new(1);
+        // Tenant 7 floods the queue with big prompts; tenant 8 trickles
+        // small ones in behind it.
+        for i in 0..3 {
+            a.submit_classed(req(i, 64), Priority::Batch, 7).unwrap();
+        }
+        a.submit_classed(req(10, 8), Priority::Batch, 8).unwrap();
+        a.submit_classed(req(11, 8), Priority::Batch, 8).unwrap();
+        let mut order = Vec::new();
+        for _ in 0..5 {
+            let got = a.admit();
+            assert_eq!(got.len(), 1);
+            order.push(got[0].id);
+            a.complete();
+        }
+        // The ledger alternates tenants instead of serving 7's backlog
+        // first: 7 (ties broken FIFO), then 8 twice (8 tokens < 64),
+        // then the rest of 7.
+        assert_eq!(order, vec![0, 10, 11, 1, 2]);
+    }
+
+    #[test]
+    fn admission_sheds_stale_requests() {
+        let mut a = Admission::new(1).with_ttft_deadline_s(2.0);
+        a.submit(Request { id: 0, arrival_s: 0.0, prompt: vec![0; 4], decode_steps: 0 })
+            .unwrap();
+        a.submit(Request { id: 1, arrival_s: 3.5, prompt: vec![0; 4], decode_steps: 0 })
+            .unwrap();
+        assert!(a.shed_stale(1.0).is_empty(), "nothing stale yet");
+        let shed = a.shed_stale(4.0); // id 0 has waited 4s > 2s deadline
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 0);
+        assert_eq!(a.shed, 1);
+        assert_eq!(a.pending(), 1);
+        // Shedding off (deadline 0) is a no-op regardless of age.
+        let mut b = Admission::new(1);
+        b.submit(req(0, 4)).unwrap();
+        assert!(b.shed_stale(1e9).is_empty());
+    }
+
+    #[test]
+    fn budget_slices_resume_and_cover_prompt_exactly() {
+        // Bounded chunked prefill: iterating plan() with prefill_done
+        // advanced by each slice walks the whole prompt — whole chunks,
+        // contiguous, exactly one `last` per slice, final slice ends at
+        // prompt_len.
+        for budget in [16usize, 32, 48, 64, 100] {
+            let mut p =
+                MixedPlanner::new(Strategy::Iso, SplitPolicy::Even, SIZES.to_vec(), 8, 512)
+                    .with_prefill_budget(budget);
+            let mut seq = lane_seq_unprefilled(0, 192);
+            let mut iterations = 0;
+            while seq.prefill_done < 192 {
+                iterations += 1;
+                assert!(iterations <= 192 / 16 + 1, "budget slicing must terminate");
+                let plan = p.plan(std::slice::from_ref(&seq), None);
+                let pf = plan.prefill.expect("prefill until done");
+                assert!(!pf.chunks.is_empty(), "anti-starvation: at least one chunk");
+                assert_eq!(pf.chunks.iter().filter(|c| c.last).count(), 1);
+                assert!(pf.chunks.last().unwrap().last, "last marks the slice tail");
+                let tokens: usize = pf.chunks.iter().map(|c| c.len).sum();
+                assert_eq!(plan.tokens(), tokens, "tokens() prices the slice");
+                // Over budget only when a single chunk alone exceeds it.
+                assert!(tokens <= budget.max(pf.chunks[0].len));
+                // The slice resumes exactly where the last one stopped.
+                assert_eq!(pf.chunks[0].offset, seq.prefill_done);
+                let mut pos = seq.prefill_done;
+                for c in &pf.chunks {
+                    assert_eq!(c.offset, pos, "slice must stay contiguous");
+                    pos += c.len;
+                }
+                seq.prefill_done = pos;
+            }
+            assert_eq!(seq.prefill_done, 192, "slices cover the prompt exactly");
+        }
+    }
+
+    #[test]
+    fn zero_budget_plans_are_identical() {
+        // Budget off ⇒ plans byte-identical to a budget-less planner.
+        let mut plain =
+            MixedPlanner::new(Strategy::Iso, SplitPolicy::Even, SIZES.to_vec(), 4, 256);
+        let mut budgeted = plain.clone().with_prefill_budget(0);
+        let live = vec![lane_seq_unprefilled(0, 128), lane_seq(1, true, 70, 3)];
+        for _ in 0..4 {
+            let a = plain.plan(&live, None);
+            let b = budgeted.plan(&live, None);
+            assert_eq!(a.prefill.as_ref().unwrap().chunks, b.prefill.as_ref().unwrap().chunks);
+            assert_eq!(a.decode, b.decode);
+        }
+    }
+
     #[test]
     fn admission_exposes_depth_and_oldest_wait() {
         // Satellite: saturation is observable — depth counts the queue,
@@ -743,7 +1066,8 @@ mod tests {
         assert_eq!(a.queue_depth(), 0);
         assert_eq!(a.oldest_wait_s(5.0), None);
         for (i, arr) in [(0u64, 1.0f64), (1, 2.0), (2, 3.0)] {
-            a.submit(Request { id: i, arrival_s: arr, prompt: vec![0; 4], decode_steps: 0 });
+            a.submit(Request { id: i, arrival_s: arr, prompt: vec![0; 4], decode_steps: 0 })
+                .unwrap();
         }
         assert_eq!(a.queue_depth(), 3);
         assert_eq!(a.oldest_wait_s(4.0), Some(3.0)); // head arrived at t=1
@@ -902,6 +1226,7 @@ mod tests {
             slot,
             prompt_len,
             prefilled: false,
+            prefill_done: 0,
             last_token: 0,
             offset: 0,
             decode_left: 4,
@@ -971,6 +1296,7 @@ mod tests {
             slot,
             prompt_len: 64,
             prefilled,
+            prefill_done: if prefilled { 64 } else { 0 },
             last_token: slot as i32 + 100,
             offset,
             decode_left: left,
@@ -1060,6 +1386,7 @@ mod tests {
                     slot: s,
                     prompt_len: rng.range(1, 12) * 16,
                     prefilled: rng.f64() < 0.7,
+                    prefill_done: 0,
                     last_token: rng.range(0, 512) as i32,
                     offset: rng.range(1, 256),
                     decode_left: rng.range(0, 5),

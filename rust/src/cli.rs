@@ -105,6 +105,18 @@ COMMANDS:
                 see DESIGN.md §14; default off)
               --fault-slack X (detection deadline = X × iteration EMA)
               --max-recoveries N (mesh respawns before giving up)
+              --tbt-budget-ms X (bounded chunked prefill: cap each
+                iteration's prefill work so decode TBT stays under X ms;
+                giant prompts stream across iterations; 0 = off)
+              --kv-high-water F (KV-pressure preemption: past this
+                fraction of KV blocks, evict the youngest sequence and
+                re-prefill it later, checkpoint-free; 1.0 = off)
+              --queue-bound N (bounded admission queue; requests past N
+                are rejected with a typed overload error; 0 = unbounded)
+              --max-preemptions N (per-sequence eviction cap; anti-
+                livelock, default 2)
+              --ttft-deadline-ms X (shed queued requests whose wait
+                exceeds X ms before they start; 0 = off)
               --config FILE (e.g. configs/engine-iso.conf; flags override)
   table1      print the paper's Table 1 from the calibrated simulator
               --strategy iso|gemm-overlap|request-overlap  --csv FILE

@@ -225,6 +225,27 @@ pub struct EngineConfig {
     /// Mesh respawns the engine will attempt before giving up and
     /// surfacing the fault to the caller.
     pub max_recoveries: usize,
+    /// Per-iteration decode-TBT budget (ms) enforced by bounding how
+    /// many prefill chunks the mixed planner admits per iteration
+    /// (DESIGN.md §15). `0.0` disables the bound: whole prompts prefill
+    /// in one iteration, exactly the pre-overload behavior.
+    pub tbt_budget_ms: f64,
+    /// Paged-KV high-water mark as a fraction of the pool in `(0, 1]`.
+    /// When used blocks exceed it, the engine preempts the youngest
+    /// prefilled sequence to free pages. `1.0` disables preemption
+    /// (usage can never exceed the whole pool).
+    pub kv_high_water: f64,
+    /// Admission queue bound; requests beyond it are rejected with
+    /// `EngineError::Overloaded` instead of queueing without limit.
+    /// `0` = unbounded (pre-overload behavior).
+    pub queue_bound: usize,
+    /// Preemptions allowed per sequence before it becomes unevictable;
+    /// the anti-livelock cap of DESIGN.md §15.
+    pub max_preemptions: usize,
+    /// TTFT deadline (ms): queued requests that have already waited
+    /// longer are shed at admission time rather than served late.
+    /// `0.0` disables shedding.
+    pub ttft_deadline_ms: f64,
 }
 
 impl Default for EngineConfig {
@@ -254,6 +275,11 @@ impl Default for EngineConfig {
             fault_slack: 32.0,
             deadline_floor_ms: 250.0,
             max_recoveries: 4,
+            tbt_budget_ms: 0.0,
+            kv_high_water: 1.0,
+            queue_bound: 0,
+            max_preemptions: 2,
+            ttft_deadline_ms: 0.0,
         }
     }
 }
@@ -416,6 +442,25 @@ impl EngineConfig {
                     cfg.max_recoveries =
                         v.parse().map_err(|_| format!("bad max_recoveries {v:?}"))?
                 }
+                "engine.tbt_budget_ms" => {
+                    cfg.tbt_budget_ms =
+                        v.parse().map_err(|_| format!("bad tbt_budget_ms {v:?}"))?
+                }
+                "engine.kv_high_water" => {
+                    cfg.kv_high_water =
+                        v.parse().map_err(|_| format!("bad kv_high_water {v:?}"))?
+                }
+                "engine.queue_bound" => {
+                    cfg.queue_bound = v.parse().map_err(|_| format!("bad queue_bound {v:?}"))?
+                }
+                "engine.max_preemptions" => {
+                    cfg.max_preemptions =
+                        v.parse().map_err(|_| format!("bad max_preemptions {v:?}"))?
+                }
+                "engine.ttft_deadline_ms" => {
+                    cfg.ttft_deadline_ms =
+                        v.parse().map_err(|_| format!("bad ttft_deadline_ms {v:?}"))?
+                }
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -436,6 +481,15 @@ impl EngineConfig {
         }
         if cfg.fault_slack < 1.0 {
             return Err("fault_slack must be >= 1".into());
+        }
+        if cfg.tbt_budget_ms < 0.0 {
+            return Err("tbt_budget_ms must be >= 0".into());
+        }
+        if !(cfg.kv_high_water > 0.0 && cfg.kv_high_water <= 1.0) {
+            return Err("kv_high_water must be in (0, 1]".into());
+        }
+        if cfg.ttft_deadline_ms < 0.0 {
+            return Err("ttft_deadline_ms must be >= 0".into());
         }
         if let Some(plan) = &cfg.fault_plan {
             // Parse eagerly so a typo'd plan fails at startup.
@@ -598,6 +652,42 @@ mod tests {
         let bad = parse_config_str("[engine]\nfault_plan = kill:rank=1").unwrap();
         assert!(EngineConfig::from_map(&bad).is_err());
         let bad = parse_config_str("[engine]\nfault_slack = 0.5").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+    }
+
+    #[test]
+    fn overload_knobs_default_off_and_parse() {
+        // Every overload knob defaults off: an unconfigured engine
+        // behaves byte-identically to the pre-overload scheduler.
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.tbt_budget_ms, 0.0, "prefill bounding must be opt-in");
+        assert_eq!(cfg.kv_high_water, 1.0, "preemption must be opt-in");
+        assert_eq!(cfg.queue_bound, 0, "backpressure must be opt-in");
+        assert_eq!(cfg.ttft_deadline_ms, 0.0, "shedding must be opt-in");
+        assert!(cfg.max_preemptions >= 1);
+
+        let map = parse_config_str(
+            "[engine]\ntbt_budget_ms = 50\nkv_high_water = 0.85\n\
+             queue_bound = 64\nmax_preemptions = 3\nttft_deadline_ms = 500",
+        )
+        .unwrap();
+        let cfg = EngineConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.tbt_budget_ms, 50.0);
+        assert_eq!(cfg.kv_high_water, 0.85);
+        assert_eq!(cfg.queue_bound, 64);
+        assert_eq!(cfg.max_preemptions, 3);
+        assert_eq!(cfg.ttft_deadline_ms, 500.0);
+    }
+
+    #[test]
+    fn overload_knobs_validated() {
+        let bad = parse_config_str("[engine]\nkv_high_water = 0").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+        let bad = parse_config_str("[engine]\nkv_high_water = 1.5").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+        let bad = parse_config_str("[engine]\ntbt_budget_ms = -1").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+        let bad = parse_config_str("[engine]\nttft_deadline_ms = -5").unwrap();
         assert!(EngineConfig::from_map(&bad).is_err());
     }
 

@@ -111,11 +111,17 @@ use crate::split::SplitContext;
 #[derive(Debug)]
 struct StepPrefill {
     slot: usize,
-    /// Padded prompt the chunks tile exactly.
+    /// Padded prompt the full chunk tiling covers.
     tokens: Vec<i32>,
     chunks: Vec<ChunkJob>,
-    /// True-last-token row within the final chunk.
+    /// True-last-token row within the final chunk (the slice tail's
+    /// last row for a budget-bounded partial slice, whose logits the
+    /// leader discards).
     logits_row: usize,
+    /// Whether this chunk set finishes the sequence's prefill. `false`
+    /// only under bounded chunked prefill (DESIGN.md §15), when the
+    /// slice stops short and the rest streams in later iterations.
+    completes: bool,
 }
 
 /// Jobs broadcast from the leader to every rank (identical stream).
@@ -355,6 +361,16 @@ pub struct TraceReport {
     /// `(request id, emitted tokens)` per completed request — lets tests
     /// and benches assert scheduling changes never change the tokens.
     pub completions: Vec<(u64, Vec<i32>)>,
+    /// Sequences evicted by KV-pressure preemption and re-enqueued for
+    /// checkpoint-free re-prefill (DESIGN.md §15); 0 with
+    /// `kv_high_water = 1.0`.
+    pub preemptions: u64,
+    /// Queued requests shed for a blown TTFT deadline; 0 with
+    /// `ttft_deadline_ms = 0`.
+    pub shed: u64,
+    /// Arrivals rejected at the bounded admission queue; 0 with
+    /// `queue_bound = 0`.
+    pub rejected: u64,
 }
 
 impl TraceReport {
@@ -1882,6 +1898,17 @@ impl Engine {
         if cfg.pp_stages == 0 {
             bail!("pp_stages must be >= 1");
         }
+        // Overload knobs are validated here too because benches and
+        // tests construct EngineConfig directly, bypassing from_map.
+        if cfg.tbt_budget_ms < 0.0 {
+            bail!("tbt_budget_ms must be >= 0");
+        }
+        if !(cfg.kv_high_water > 0.0 && cfg.kv_high_water <= 1.0) {
+            bail!("kv_high_water must be in (0, 1]");
+        }
+        if cfg.ttft_deadline_ms < 0.0 {
+            bail!("ttft_deadline_ms must be >= 0");
+        }
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         if !manifest.tp_degrees.contains(&cfg.tp) {
             bail!("tp={} not in artifacts (have {:?})", cfg.tp, manifest.tp_degrees);
@@ -2075,7 +2102,7 @@ impl Engine {
             bail!("internal: true last token not in final chunk");
         }
         let logits_row = true_last - last.offset;
-        Ok(StepPrefill { slot, tokens: padded, chunks, logits_row })
+        Ok(StepPrefill { slot, tokens: padded, chunks, logits_row, completes: true })
     }
 
     /// One mixed iteration (DESIGN.md §9): at most one prefill plus a
@@ -2292,11 +2319,16 @@ impl Engine {
             (Some(p), Some(logits)) => {
                 // Replayed prefills rebuild KV, they don't serve a new
                 // request — keep them out of the request metrics so a
-                // recovered run reports like a fault-free one.
+                // recovered run reports like a fault-free one. A partial
+                // budget-bounded slice executed chunks but emitted no
+                // token yet, so only a completing slice counts toward
+                // TTFT and the token tally.
                 if !self.replaying {
-                    self.metrics.ttft_ms.record(elapsed);
                     self.metrics.prefill_chunks += p.chunks.len() as u64;
-                    self.metrics.generated_tokens += 1;
+                    if p.completes {
+                        self.metrics.ttft_ms.record(elapsed);
+                        self.metrics.generated_tokens += 1;
+                    }
                 }
                 let first_token = argmax(&logits);
                 Some(PrefillOut { first_token, ttft_ms: elapsed, logits })
@@ -2468,6 +2500,21 @@ impl Engine {
             arrival_s: f64,
             /// Engine-clock ms of the last emitted token (drives TBT).
             last_emit_ms: f64,
+            /// Times this sequence has been preempted (anti-livelock
+            /// cap, DESIGN.md §15).
+            preemptions: usize,
+        }
+
+        /// A sequence evicted by KV pressure, waiting to re-enter via
+        /// checkpoint-free re-prefill of prompt + committed tokens.
+        struct Preempted {
+            id: u64,
+            prompt: Vec<i32>,
+            tokens: Vec<i32>,
+            prompt_len: usize,
+            decode_left: usize,
+            arrival_s: f64,
+            preemptions: usize,
         }
 
         let mut pending = sort_by_arrival(reqs);
@@ -2479,6 +2526,28 @@ impl Engine {
             self.manifest.config.max_seq,
         )
         .with_min_chunks(self.micro_batch_depth());
+        if self.cfg.tbt_budget_ms > 0.0 {
+            // Lower the wall-clock TBT budget onto a per-iteration
+            // prefill token cap via the cost model (DESIGN.md §15):
+            // largest multiple of the smallest compiled chunk whose
+            // worst-case mixed iteration still fits the budget.
+            let candidates: Vec<usize> = (1..=self.manifest.config.max_seq
+                / self.smallest_chunk)
+                .map(|i| i * self.smallest_chunk)
+                .collect();
+            let budget_tokens = crate::sched::budgeted_prefill_tokens(
+                &self.split_ctx.node,
+                &self.split_ctx.model,
+                self.cfg.split,
+                self.cfg.decode_batch,
+                self.manifest.config.max_seq,
+                self.cfg.comm_segments,
+                self.cfg.comm_quant == CommQuant::Int8,
+                self.cfg.tbt_budget_ms / 1e3,
+                &candidates,
+            );
+            planner = planner.with_prefill_budget(budget_tokens);
+        }
         let spec_k = self.cfg.spec_k;
         let mut proposer = NGramProposer::new(self.cfg.spec_ngram);
         // Paged KV accounting mirroring the workers' dense caches: one
@@ -2492,11 +2561,100 @@ impl Engine {
             self.cfg.max_batch * self.manifest.config.max_seq.div_ceil(kv_block) * kv_block;
         let mut kvm = KvManager::new(kv_cap, kv_block);
         let mut live: Vec<Live> = Vec::new();
+        let mut preempted: std::collections::VecDeque<Preempted> =
+            std::collections::VecDeque::new();
         let mut report = TraceReport::default();
         let clock = Timer::start();
 
-        while !pending.is_empty() || !live.is_empty() {
+        while !pending.is_empty() || !live.is_empty() || !preempted.is_empty() {
             let now_s = clock.elapsed_ms() / 1e3;
+
+            // Overload gate (DESIGN.md §15), applied to arrived-but-
+            // unserved requests before admission. Shedding: the queue is
+            // arrival-sorted, so waits decrease front-to-back and stale
+            // requests pop from the front. Backpressure: arrivals beyond
+            // the queue bound are rejected newest-first — the submit
+            // that would have overflowed the bounded queue.
+            if self.cfg.ttft_deadline_ms > 0.0 {
+                let deadline_s = self.cfg.ttft_deadline_ms / 1e3;
+                while let Some(front) = pending.front() {
+                    if front.arrival_s <= now_s && now_s - front.arrival_s > deadline_s {
+                        pending.pop_front();
+                        report.shed += 1;
+                        self.metrics.sheds += 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            if self.cfg.queue_bound > 0 {
+                let mut arrived =
+                    pending.iter().take_while(|r| r.arrival_s <= now_s).count();
+                while arrived > self.cfg.queue_bound {
+                    pending.remove(arrived - 1);
+                    arrived -= 1;
+                    report.rejected += 1;
+                    self.metrics.rejected += 1;
+                }
+            }
+
+            // Re-admit preempted sequences before fresh arrivals: their
+            // re-prefill is owed work, and starving them would turn
+            // preemption into silent drop. The PR-6 replay path rebuilds
+            // prompt + committed tokens bit-identically (KV contents
+            // don't depend on how prefill was chunked or interrupted).
+            while !preempted.is_empty() && !self.free_slots.is_empty() {
+                let p = preempted.pop_front().expect("checked non-empty");
+                let slot = self.alloc_slot()?;
+                kvm.add_seq(slot as u64);
+                let replay =
+                    vec![ReplaySeq { slot, prompt: p.prompt.clone(), tokens: p.tokens.clone() }];
+                self.replaying = true;
+                let replayed = self.replay_sequences(&replay);
+                self.replaying = false;
+                if let Err(e) = replayed {
+                    // Fault mid-restore: recover the whole mesh with the
+                    // prefilled live set plus this sequence.
+                    let mut all: Vec<ReplaySeq> = live
+                        .iter()
+                        .filter(|l| l.lane.prefilled)
+                        .map(|l| ReplaySeq {
+                            slot: l.lane.slot,
+                            prompt: l.prompt.clone(),
+                            tokens: l.tokens.clone(),
+                        })
+                        .collect();
+                    all.extend(replay);
+                    self.recover_with_retry(e, &all)?;
+                    for l in live.iter_mut().filter(|l| !l.lane.prefilled) {
+                        l.lane.prefill_done = 0; // partial worker KV lost
+                    }
+                }
+                // Committed state re-enters the lane exactly where it
+                // left: offset = prompt + emissions − 1 (the last token
+                // is fed by the next decode step, same as live flow).
+                let committed = p.prompt.len() + p.tokens.len() - 1;
+                kvm.append(slot as u64, committed)?;
+                let last =
+                    *p.tokens.last().expect("preempted sequences hold >= 1 token");
+                live.push(Live {
+                    lane: LaneSeq {
+                        slot,
+                        prompt_len: p.prompt_len,
+                        prefilled: true,
+                        prefill_done: p.prompt_len,
+                        last_token: last,
+                        offset: committed,
+                        decode_left: p.decode_left,
+                    },
+                    id: p.id,
+                    prompt: p.prompt,
+                    tokens: p.tokens,
+                    arrival_s: p.arrival_s,
+                    last_emit_ms: clock.elapsed_ms(),
+                    preemptions: p.preemptions,
+                });
+            }
 
             // Admission: claim a slot per arrived request; the prefill
             // itself is scheduled into a later iteration.
@@ -2531,6 +2689,7 @@ impl Engine {
                         slot,
                         prompt_len: padded_len,
                         prefilled: false,
+                        prefill_done: 0,
                         last_token: 0,
                         offset: 0,
                         decode_left: r.decode_steps,
@@ -2540,6 +2699,7 @@ impl Engine {
                     tokens: Vec::new(),
                     arrival_s: r.arrival_s,
                     last_emit_ms: 0.0,
+                    preemptions: 0,
                 });
             }
 
@@ -2563,6 +2723,45 @@ impl Engine {
                 }
                 i += 1;
             }
+
+            // KV-pressure preemption (DESIGN.md §15): past the
+            // high-water mark, evict the youngest prefilled sequence —
+            // it has the least committed work to recompute — and
+            // re-enqueue it for checkpoint-free re-prefill. Anti-livelock
+            // guards: never the last prefilled sequence (someone must
+            // keep draining KV), and at most `max_preemptions` evictions
+            // per sequence (a hot sequence eventually pins).
+            if self.cfg.kv_high_water < 1.0 {
+                let high_water =
+                    (kvm.total_blocks() as f64 * self.cfg.kv_high_water) as usize;
+                while kvm.total_blocks() - kvm.free_blocks() > high_water {
+                    if live.iter().filter(|l| l.lane.prefilled).count() <= 1 {
+                        break;
+                    }
+                    let Some(vi) = live.iter().rposition(|l| {
+                        l.lane.prefilled && l.preemptions < self.cfg.max_preemptions
+                    }) else {
+                        break;
+                    };
+                    let v = live.remove(vi);
+                    kvm.release(v.lane.slot as u64)?;
+                    self.free_slot(v.lane.slot)?;
+                    report.preemptions += 1;
+                    self.metrics.preemptions += 1;
+                    self.metrics.preempted_tokens +=
+                        (v.prompt.len() + v.tokens.len().saturating_sub(1)) as u64;
+                    preempted.push_back(Preempted {
+                        id: v.id,
+                        prompt: v.prompt,
+                        tokens: v.tokens,
+                        prompt_len: v.lane.prompt_len,
+                        decode_left: v.lane.decode_left,
+                        arrival_s: v.arrival_s,
+                        preemptions: v.preemptions + 1,
+                    });
+                }
+            }
+
             if live.is_empty() {
                 continue; // next lap admits (and sleeps for) the next arrival
             }
@@ -2610,17 +2809,29 @@ impl Engine {
                     let l =
                         live.iter().find(|l| l.lane.slot == pf.slot).expect("planned slot");
                     let last = pf.chunks.iter().find(|c| c.last).expect("plan has last chunk");
+                    let slice_end = last.offset + last.len;
+                    let completes = slice_end >= pf.prompt_len;
                     let true_last = l.prompt.len() - 1;
-                    if true_last < last.offset {
-                        bail!("internal: true last token not in final chunk");
-                    }
+                    // A partial slice stops before the prompt's true last
+                    // token; the worker still needs *a* logits row (its
+                    // step contract), so point at the slice tail and
+                    // discard the result below.
+                    let logits_row = if completes {
+                        if true_last < last.offset {
+                            bail!("internal: true last token not in final chunk");
+                        }
+                        true_last - last.offset
+                    } else {
+                        last.len - 1
+                    };
                     let mut tokens = l.prompt.clone();
                     tokens.resize(pf.prompt_len, 0);
                     Some(Arc::new(StepPrefill {
                         slot: pf.slot,
                         tokens,
                         chunks: pf.chunks.clone(),
-                        logits_row: true_last - last.offset,
+                        logits_row,
+                        completes,
                     }))
                 }
                 None => None,
@@ -2644,6 +2855,13 @@ impl Engine {
                         })
                         .collect();
                     self.recover_with_retry(e, &replay)?;
+                    // Partially-prefilled sequences lost their worker KV
+                    // with the old mesh; their bounded prefill restarts
+                    // from token 0 (nothing was committed to the paged
+                    // mirror, so only the planner cursor rolls back).
+                    for l in live.iter_mut().filter(|l| !l.lane.prefilled) {
+                        l.lane.prefill_done = 0;
+                    }
                     continue;
                 }
             };
@@ -2660,14 +2878,29 @@ impl Engine {
                     .iter_mut()
                     .find(|l| l.lane.slot == pf.slot)
                     .expect("prefilled slot is live");
-                l.lane.prefilled = true;
-                l.lane.last_token = pre.first_token;
-                l.lane.offset = l.prompt.len();
-                l.tokens.push(pre.first_token);
-                l.last_emit_ms = now_ms;
-                // The paged mirror tracks logical (unpadded) lengths.
-                kvm.append(pf.slot as u64, l.prompt.len())?;
-                report.ttft_ms.record(now_ms - l.arrival_s * 1e3);
+                let slice_end = pf
+                    .chunks
+                    .last()
+                    .map(|c| c.offset + c.len)
+                    .expect("plan carries >= 1 chunk");
+                if slice_end >= pf.prompt_len {
+                    l.lane.prefilled = true;
+                    l.lane.prefill_done = pf.prompt_len;
+                    l.lane.last_token = pre.first_token;
+                    l.lane.offset = l.prompt.len();
+                    l.tokens.push(pre.first_token);
+                    l.last_emit_ms = now_ms;
+                    // The paged mirror tracks logical (unpadded) lengths.
+                    kvm.append(pf.slot as u64, l.prompt.len())?;
+                    report.ttft_ms.record(now_ms - l.arrival_s * 1e3);
+                } else {
+                    // Bounded chunked prefill: the slice advanced the
+                    // worker KV but emitted nothing; the next iteration
+                    // resumes at `prefill_done`. The slice-tail logits
+                    // row is discarded — only the true last token's row
+                    // is an emission.
+                    l.lane.prefill_done = slice_end;
+                }
             }
             for (j, d) in plan.decode.iter().enumerate() {
                 let l = live

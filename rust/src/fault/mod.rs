@@ -69,6 +69,15 @@ pub enum EngineError {
         /// Leader iteration (1-based) the kill fired in.
         iteration: u64,
     },
+    /// Admission rejected a request because the bounded queue is full
+    /// (DESIGN.md §15). Backpressure, not failure: the caller should
+    /// retry later or route elsewhere; nothing in the engine is broken.
+    Overloaded {
+        /// Requests already waiting when the rejection happened.
+        queued: usize,
+        /// The configured queue bound that was hit.
+        bound: usize,
+    },
 }
 
 impl fmt::Display for EngineError {
@@ -88,6 +97,9 @@ impl fmt::Display for EngineError {
             }
             EngineError::InjectedKill { rank, iteration } => {
                 write!(f, "rank {rank} killed by fault plan at iteration {iteration}")
+            }
+            EngineError::Overloaded { queued, bound } => {
+                write!(f, "admission queue full ({queued} queued, bound {bound})")
             }
         }
     }
@@ -460,5 +472,7 @@ mod tests {
         }
         let msg = format!("{:#}", lift().unwrap_err());
         assert!(msg.contains("iteration 7"), "{msg}");
+        let o = EngineError::Overloaded { queued: 12, bound: 8 };
+        assert_eq!(o.to_string(), "admission queue full (12 queued, bound 8)");
     }
 }

@@ -466,6 +466,75 @@ mod tests {
     }
 
     #[test]
+    fn prop_preempt_restore_matches_uninterrupted_twin() {
+        // Satellite (DESIGN.md §15): KV-pressure preemption evicts a
+        // sequence mid-decode (release) and later restores it by
+        // re-registering and re-appending its committed prefix in one go —
+        // the serve loop's `add_seq` + `append(slot, committed)` motion.
+        // Drive twin managers with identical traffic, preempt/restore one
+        // of them at random points, and require the allocator state they
+        // expose (lengths, block-table sizes, free counts, and the start
+        // offsets of every subsequent append) to stay identical.
+        Prop::new(103).cases(200).run("kv preempt/restore equivalence", |rng: &mut Rng| {
+            let block = 16;
+            let mut a = KvManager::new(2048, block); // uninterrupted twin
+            let mut b = KvManager::new(2048, block); // preempted twin
+            let n_seqs = rng.range(2, 5) as u64;
+            for s in 0..n_seqs {
+                a.add_seq(s);
+                b.add_seq(s);
+                let prefill = rng.range(8, 96);
+                a.append(s, prefill).map_err(|e| e.to_string())?;
+                b.append(s, prefill).map_err(|e| e.to_string())?;
+            }
+            for _ in 0..80 {
+                let s = rng.below(n_seqs);
+                match rng.range(0, 4) {
+                    // Decode step: both twins append one token.
+                    0..=2 => {
+                        if !a.can_append(s, 1) {
+                            continue;
+                        }
+                        let oa = a.append(s, 1).map_err(|e| e.to_string())?;
+                        let ob = b.append(s, 1).map_err(|e| e.to_string())?;
+                        if oa != ob {
+                            return Err(format!("append offsets diverged: {oa} vs {ob}"));
+                        }
+                    }
+                    // Preempt + immediate restore on twin B only.
+                    _ => {
+                        let committed = b.seq_len(s).unwrap();
+                        b.release(s).map_err(|e| e.to_string())?;
+                        b.add_seq(s);
+                        let start = b.append(s, committed).map_err(|e| e.to_string())?;
+                        if start != 0 {
+                            return Err(format!("restore append started at {start}"));
+                        }
+                    }
+                }
+                for s in 0..n_seqs {
+                    if a.seq_len(s) != b.seq_len(s) {
+                        return Err(format!("seq {s} lengths diverged"));
+                    }
+                    let (ba, bb) = (
+                        a.block_table(s).unwrap().len(),
+                        b.block_table(s).unwrap().len(),
+                    );
+                    if ba != bb {
+                        return Err(format!("seq {s} block counts diverged: {ba} vs {bb}"));
+                    }
+                }
+                if a.free_blocks() != b.free_blocks() {
+                    return Err("free-block counts diverged".into());
+                }
+                a.check_invariants()?;
+                b.check_invariants()?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn dense_kv_store_and_zero() {
         let mut kv = DenseKv::new(2, 8, 4);
         let k: Vec<f32> = (0..2 * 8 * 4).map(|i| i as f32).collect();

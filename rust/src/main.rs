@@ -102,6 +102,25 @@ fn serve(cli: &Cli) -> Result<()> {
         cfg.max_recoveries =
             cli.usize_or("max-recoveries", cfg.max_recoveries).map_err(|e| anyhow!(e))?;
     }
+    if cli.has("tbt-budget-ms") {
+        let v = cli.get("tbt-budget-ms").unwrap();
+        cfg.tbt_budget_ms = v.parse().map_err(|_| anyhow!("bad --tbt-budget-ms {v:?}"))?;
+    }
+    if cli.has("kv-high-water") {
+        let v = cli.get("kv-high-water").unwrap();
+        cfg.kv_high_water = v.parse().map_err(|_| anyhow!("bad --kv-high-water {v:?}"))?;
+    }
+    if cli.has("queue-bound") {
+        cfg.queue_bound = cli.usize_or("queue-bound", cfg.queue_bound).map_err(|e| anyhow!(e))?;
+    }
+    if cli.has("max-preemptions") {
+        cfg.max_preemptions =
+            cli.usize_or("max-preemptions", cfg.max_preemptions).map_err(|e| anyhow!(e))?;
+    }
+    if cli.has("ttft-deadline-ms") {
+        let v = cli.get("ttft-deadline-ms").unwrap();
+        cfg.ttft_deadline_ms = v.parse().map_err(|_| anyhow!("bad --ttft-deadline-ms {v:?}"))?;
+    }
     let n_requests = cli.usize_or("requests", 8).map_err(|e| anyhow!(e))?;
     let prompt_len = cli.usize_or("prompt-len", 128).map_err(|e| anyhow!(e))?;
     let decode = cli.usize_or("decode", 0).map_err(|e| anyhow!(e))?;

@@ -215,6 +215,17 @@ pub struct EngineMetrics {
     pub replayed_tokens: u64,
     /// Wall time of each recovery round (teardown → respawn → replay).
     pub recovery_ms: Histogram,
+    /// Sequences evicted by KV-pressure preemption (DESIGN.md §15). A
+    /// sequence preempted twice counts twice.
+    pub preemptions: u64,
+    /// Tokens (prompt + committed emissions) queued for checkpoint-free
+    /// re-prefill by preemption.
+    pub preempted_tokens: u64,
+    /// Queued requests shed for a blown TTFT deadline.
+    pub sheds: u64,
+    /// Submits rejected with `Overloaded` backpressure at the bounded
+    /// admission queue.
+    pub rejected: u64,
 }
 
 impl EngineMetrics {
@@ -314,6 +325,14 @@ impl EngineMetrics {
             ));
             s.push('\n');
             s.push_str(&self.recovery_ms.summary("recovery_ms"));
+        }
+        // Overload counters appear only when the overload machinery
+        // actually fired, so unloaded reports stay byte-identical.
+        if self.preemptions > 0 || self.sheds > 0 || self.rejected > 0 {
+            s.push_str(&format!(
+                "\npreemptions={} preempted_tokens={} sheds={} rejected={}",
+                self.preemptions, self.preempted_tokens, self.sheds, self.rejected
+            ));
         }
         s
     }
@@ -442,6 +461,22 @@ mod tests {
         assert!(after.contains("replayed_tokens=120"));
         assert!(after.contains("recovery_ms"));
         assert!(after.starts_with(&before), "fault lines must only append");
+    }
+
+    #[test]
+    fn overload_counters_absent_until_overload() {
+        // Satellite (PR 7): unloaded reports stay byte-identical to the
+        // pre-overload format — the line appears only under pressure.
+        let mut m = EngineMetrics::default();
+        let before = m.report();
+        assert!(!before.contains("preemptions"), "overload lines must be opt-in");
+        m.preemptions = 2;
+        m.preempted_tokens = 160;
+        m.sheds = 3;
+        m.rejected = 5;
+        let after = m.report();
+        assert!(after.contains("preemptions=2 preempted_tokens=160 sheds=3 rejected=5"));
+        assert!(after.starts_with(&before), "overload lines must only append");
     }
 
     #[test]

@@ -723,6 +723,100 @@ pub fn expected_overhead_frac(rate: f64, iter_s: f64, recovery_s: f64) -> f64 {
     overhead / (iter_s + overhead)
 }
 
+// ---------------------------------------------------------------------------
+// Overload / SLO cost model (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// Fraction of offered load an SLO-guarding gate admits at utilization
+/// `rho` (offered / capacity) with an admission ceiling `rho_max`: all
+/// of it below the ceiling, `rho_max / rho` above — the rest is shed or
+/// rejected, which is what keeps the served tail latency finite past
+/// saturation.
+pub fn slo_admitted_frac(rho: f64, rho_max: f64) -> f64 {
+    assert!(rho >= 0.0, "rho must be >= 0");
+    assert!(rho_max > 0.0 && rho_max < 1.0, "rho_max must be in (0, 1)");
+    if rho <= rho_max {
+        1.0
+    } else {
+        rho_max / rho
+    }
+}
+
+/// Predicted mean TTFT (seconds) at admitted utilization `rho`: one
+/// scheduling iteration plus the M/D/1 mean wait `rho / (2·(1 − rho))`
+/// iterations (Poisson arrivals, deterministic iteration-sized service).
+/// Admission clamps utilization at `rho_max`, so the prediction stays
+/// finite past saturation — the modeled payoff of shedding.
+pub fn slo_ttft_s(iter_s: f64, rho: f64, rho_max: f64) -> f64 {
+    assert!(iter_s > 0.0, "iter_s must be > 0");
+    assert!(rho >= 0.0, "rho must be >= 0");
+    assert!(rho_max > 0.0 && rho_max < 1.0, "rho_max must be in (0, 1)");
+    let r = rho.min(rho_max);
+    iter_s * (1.0 + r / (2.0 * (1.0 - r)))
+}
+
+/// Predicted worst-case decode TBT (seconds) under bounded chunked
+/// prefill: without a budget the lane waits for the whole head-of-line
+/// prefill (`unbounded_s`); with one, the iteration is capped at the
+/// budget but can never drop below the decode-only floor
+/// (`decode_only_s`) — the budget bounds prefill work, it does not
+/// shrink the lane itself.
+pub fn bounded_tbt_s(decode_only_s: f64, unbounded_s: f64, budget_s: f64) -> f64 {
+    assert!(decode_only_s >= 0.0 && budget_s >= 0.0);
+    assert!(
+        unbounded_s >= decode_only_s,
+        "adding prefill work cannot make an iteration faster"
+    );
+    if budget_s == 0.0 {
+        unbounded_s
+    } else {
+        unbounded_s.min(budget_s.max(decode_only_s))
+    }
+}
+
+/// The largest prefill chunk budget (tokens per iteration) whose mixed
+/// iteration still fits `budget_s`, chosen from `candidates` (the
+/// engine passes multiples of its smallest compiled chunk). Falls back
+/// to the smallest candidate when none fit — the anti-starvation floor:
+/// prefill always makes progress, even if that iteration runs over
+/// budget. This is how `tbt_budget_ms` is lowered onto
+/// [`MixedPlanner::with_prefill_budget`].
+///
+/// [`MixedPlanner::with_prefill_budget`]: crate::batch::MixedPlanner::with_prefill_budget
+#[allow(clippy::too_many_arguments)]
+pub fn budgeted_prefill_tokens(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    policy: crate::config::SplitPolicy,
+    decode_batch: usize,
+    decode_ctx: usize,
+    segments: usize,
+    int8_wire: bool,
+    budget_s: f64,
+    candidates: &[usize],
+) -> usize {
+    assert!(budget_s > 0.0, "budget_s must be > 0 (0 disables bounding upstream)");
+    assert!(!candidates.is_empty());
+    let mut sorted: Vec<usize> = candidates.to_vec();
+    sorted.sort_unstable();
+    assert!(sorted[0] >= 2, "a 1-token prefill cannot be costed");
+    let fits = |tokens: usize| {
+        let mix = MixedIteration {
+            prefill_tokens: tokens,
+            decode_batch,
+            decode_ctx,
+            fused: true,
+        };
+        mixed_iteration_s(node, model, policy, &mix, segments, int8_wire) <= budget_s
+    };
+    sorted
+        .iter()
+        .rev()
+        .find(|&&t| fits(t))
+        .copied()
+        .unwrap_or(sorted[0])
+}
+
 /// Lower an experiment to its op graph.
 pub fn build(exp: &SimExperiment) -> OpGraph {
     let c = Coster::new(exp);
@@ -1171,5 +1265,57 @@ mod tests {
             expected_overhead_frac(1e-3, 0.03, 2.1456)
                 < expected_overhead_frac(1e-3, 0.03, 2.3248)
         );
+    }
+
+    #[test]
+    fn slo_model_pinned() {
+        // The PR-7 overload cost model, pinned (DESIGN.md §15): these
+        // exact values feed the BENCH_SLO.json sim_slo section.
+        assert_eq!(slo_admitted_frac(0.5, 0.9), 1.0);
+        assert_eq!(slo_admitted_frac(0.9, 0.9), 1.0);
+        assert_eq!(slo_admitted_frac(2.0, 0.9), 0.45);
+        // M/D/1 wait: rho 0.5 → 1.5 iterations total; clamped at
+        // rho_max past saturation so TTFT stays finite.
+        assert_eq!(slo_ttft_s(0.03, 0.5, 0.9), 0.03 * 1.5);
+        let sat = slo_ttft_s(0.03, 0.9, 0.9);
+        assert!((sat - 0.03 * 5.5).abs() < 1e-12, "{sat}");
+        assert_eq!(slo_ttft_s(0.03, 2.0, 0.9), sat, "clamped past saturation");
+        // Bounded TBT: budget off passes the unbounded time through;
+        // budget on clamps it but never below the decode-only floor.
+        assert_eq!(bounded_tbt_s(0.03, 0.2348, 0.0), 0.2348);
+        assert_eq!(bounded_tbt_s(0.03, 0.2348, 0.05), 0.05);
+        assert_eq!(bounded_tbt_s(0.03, 0.2348, 0.01), 0.03);
+        // A budget looser than the unbounded iteration changes nothing.
+        assert_eq!(bounded_tbt_s(0.02, 0.025, 0.05), 0.025);
+    }
+
+    #[test]
+    fn budgeted_prefill_tokens_monotone_and_floored() {
+        let node = NodeProfile::cpu_engine(2, None, 50.0);
+        let model = ModelSpec::tiny_gqa();
+        let candidates: Vec<usize> = (1..=8).map(|i| i * 16).collect();
+        let pick = |budget_s: f64| {
+            budgeted_prefill_tokens(
+                &node,
+                &model,
+                crate::config::SplitPolicy::AttnBalanced,
+                4,
+                64,
+                1,
+                false,
+                budget_s,
+                &candidates,
+            )
+        };
+        // A huge budget admits the largest candidate; a tiny one floors
+        // at the smallest (anti-starvation) rather than returning zero.
+        assert_eq!(pick(1e6), 128);
+        assert_eq!(pick(1e-12), 16);
+        // Monotone: more budget never means fewer tokens.
+        let budgets = [1e-12, 1e-6, 1e-3, 0.1, 10.0, 1e6];
+        let picks: Vec<usize> = budgets.iter().map(|&b| pick(b)).collect();
+        for w in picks.windows(2) {
+            assert!(w[0] <= w[1], "non-monotone: {picks:?}");
+        }
     }
 }

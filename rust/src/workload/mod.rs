@@ -30,6 +30,10 @@ pub enum LenDist {
     Uniform(usize, usize),
     /// Mixture: short chats + long documents (serving-realistic).
     Bimodal { short: usize, long: usize, long_frac: f64 },
+    /// Heavy-tailed lognormal: `exp(mu + sigma·N(0,1))`, clamped to
+    /// `[2, cap]`. The overload sweep's long-prompt regime: most
+    /// prompts are short, a deterministic seeded tail is huge.
+    Lognormal { mu: f64, sigma: f64, cap: usize },
 }
 
 impl LenDist {
@@ -47,6 +51,10 @@ impl LenDist {
                     let j = 0.75 + rng.f64() * 0.5;
                     ((short as f64 * j) as usize).max(2)
                 }
+            }
+            LenDist::Lognormal { mu, sigma, cap } => {
+                let len = (mu + sigma * rng.normal()).exp();
+                (len as usize).clamp(2, cap.max(2))
             }
         }
     }
@@ -139,6 +147,23 @@ mod tests {
         let reqs = g.generate(500);
         let longs = reqs.iter().filter(|r| r.prompt.len() > 128).count();
         assert!((100..250).contains(&longs), "got {longs} long prompts");
+    }
+
+    #[test]
+    fn lognormal_heavy_tail_clamped_and_deterministic() {
+        let dist = LenDist::Lognormal { mu: 4.0, sigma: 1.2, cap: 4096 };
+        let mut g = TraceGen::new(11, 512, dist);
+        let reqs = g.generate(1000);
+        assert!(reqs.iter().all(|r| (2..=4096).contains(&r.prompt.len())));
+        // Heavy tail: median near exp(4)≈55, but a real fraction lands
+        // far above it — the regime that stresses bounded prefill.
+        let median_ish = reqs.iter().filter(|r| r.prompt.len() <= 64).count();
+        let tail = reqs.iter().filter(|r| r.prompt.len() >= 512).count();
+        assert!(median_ish > 400, "body too thin: {median_ish}");
+        assert!(tail > 10, "tail too thin: {tail}");
+        // Seeded: same seed, same trace.
+        let again = TraceGen::new(11, 512, dist).generate(1000);
+        assert_eq!(reqs, again);
     }
 
     #[test]

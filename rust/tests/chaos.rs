@@ -236,12 +236,37 @@ struct RunOutcome {
 /// mesh, recovering from injected faults by respawn + replay of the
 /// uncommitted iteration.
 fn run_shape(shape: Shape, plan: FaultPlan) -> RunOutcome {
+    run_shape_preempting(shape, plan, 0)
+}
+
+/// Like [`run_shape`], but every `preempt_period` iterations the
+/// least-advanced unfinished sequence is evicted from the packing set
+/// for that iteration — the KV-pressure preemption motion (DESIGN.md
+/// §15) in miniature. The victim re-enters on the next iteration from
+/// its committed length, checkpoint-free; at least one sequence always
+/// stays packed (the serve loop's anti-livelock guard). `0` disables
+/// preemption.
+fn run_shape_preempting(shape: Shape, plan: FaultPlan, preempt_period: usize) -> RunOutcome {
     let max_recoveries = plan.events.len() + 2;
     let injector = Arc::new(FaultInjector::new(plan));
     let mut mesh = MiniMesh::spawn(shape, &injector);
     let mut seqs: Vec<Vec<i32>> = vec![Vec::new(); N_SEQS];
     let mut recoveries = 0usize;
+    let mut tick = 0usize;
     while seqs.iter().any(|s| s.len() < TARGET) {
+        tick += 1;
+        let victim = if preempt_period > 0 && tick % preempt_period == 0 {
+            let unfinished: Vec<usize> = (0..N_SEQS).filter(|&i| seqs[i].len() < TARGET).collect();
+            if unfinished.len() > 1 {
+                unfinished
+                    .into_iter()
+                    .min_by_key(|&i| (seqs[i].len(), std::cmp::Reverse(i)))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
         // Pack this iteration's rows: up to `lane` unfinished sequences,
         // `k` positions each — a pure function of committed state, which
         // is what makes replay bit-exact.
@@ -249,7 +274,7 @@ fn run_shape(shape: Shape, plan: FaultPlan) -> RunOutcome {
         let mut data = Vec::new();
         let mut picked = 0usize;
         for (id, s) in seqs.iter().enumerate() {
-            if s.len() >= TARGET {
+            if s.len() >= TARGET || Some(id) == victim {
                 continue;
             }
             if picked == shape.lane {
@@ -332,6 +357,40 @@ fn chaos_sweep_zero_drops_and_token_identity() {
             if spec.starts_with("stall:") {
                 assert_eq!(out.recoveries, 0, "{} × {spec:?}: stall forced respawn", shape.name);
             }
+        }
+    }
+}
+
+#[test]
+fn preemption_under_overload_with_kills_zero_drops() {
+    // PR-7 satellite: preemption-heavy overload combined with kill-rank
+    // plans. Every other iteration evicts the least-advanced live
+    // sequence from the packing set; it resumes from its committed
+    // length the next iteration. Because tokens commit only on a
+    // successful reply and each row is a pure function of (id, pos),
+    // preempted sequences must still finish with streams bit-identical
+    // to the undisturbed fault-free run — zero drops, including the
+    // sequences that were mid-eviction when a rank died.
+    let shape = SHAPES[1]; // mixed: the lane-3 fused decode shape
+    let baseline = run_shape(shape, FaultPlan::empty());
+    for spec in ["", "kill:rank=1:iter=2", "kill:rank=0:iter=3;kill:rank=1:iter=5"] {
+        let plan = if spec.is_empty() {
+            FaultPlan::empty()
+        } else {
+            FaultPlan::parse(spec).expect("sweep specs are valid")
+        };
+        let clock = Instant::now();
+        let out = run_shape_preempting(shape, plan, 2);
+        assert!(
+            clock.elapsed() < Duration::from_secs(60),
+            "preempting × {spec:?}: wall-clock bound blown"
+        );
+        for (id, s) in out.seqs.iter().enumerate() {
+            assert_eq!(s.len(), TARGET, "preempting × {spec:?}: seq {id} dropped tokens");
+        }
+        assert_eq!(out.seqs, baseline.seqs, "preempting × {spec:?}: tokens diverged");
+        if spec.starts_with("kill:") {
+            assert!(out.recoveries >= 1, "preempting × {spec:?}: kill did not recover");
         }
     }
 }

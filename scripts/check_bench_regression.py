@@ -17,7 +17,10 @@ Semantics:
   * extra sections or cases in the snapshot (e.g. the artifact-gated
     engine sweeps on a machine with `make artifacts`) are ignored, so
     the committed baseline only needs the deterministic simulator
-    sections that CI reproduces;
+    sections that CI reproduces — EXCEPT `sim_*` sections, which are
+    deterministic by construction: a `sim_*` section present in a
+    snapshot but absent from the baseline fails with a clear message
+    (PR-7 satellite; previously the new section was silently ungated);
   * a zero baseline for a lower-is-better metric demands the snapshot
     stay ~zero (absolute epsilon); for higher-is-better it always
     passes.
@@ -71,6 +74,16 @@ def by_case(records):
 def gate(baseline, snapshot, tol):
     failures = []
     compared = 0
+    for section, snap_records in snapshot.items():
+        if (
+            section.startswith("sim_")
+            and isinstance(snap_records, list)
+            and section not in baseline
+        ):
+            failures.append(
+                f"{section}: sim section missing from baseline — deterministic "
+                "simulator sections must be gated (add it to BENCH_BASELINE.json)"
+            )
     for section, base_records in baseline.items():
         snap_records = snapshot.get(section)
         if not isinstance(base_records, list):
