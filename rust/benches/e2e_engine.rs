@@ -10,8 +10,10 @@
 //! against `BENCH_BASELINE.json`), `BENCH_PR5.json`
 //! (`ISO_PERF_SNAPSHOT_PR5`, the fused-epilogue sweep, also CI-gated),
 //! `BENCH_PR6.json` (`ISO_PERF_SNAPSHOT_PR6`, the fault-rate ×
-//! recovery-overhead sweep, also CI-gated), and `BENCH_SLO.json`
+//! recovery-overhead sweep, also CI-gated), `BENCH_SLO.json`
 //! (`ISO_PERF_SNAPSHOT_SLO`, the PR-7 offered-load SLO frontier, also
+//! CI-gated), and `BENCH_PRECISION.json`
+//! (`ISO_PERF_SNAPSHOT_PRECISION`, the PR-8 wire-precision ladder, also
 //! CI-gated): each engine sweep is recorded next to the simulator's
 //! prediction, so the sim-vs-engine trend direction is recorded per PR.
 //!
@@ -67,6 +69,11 @@ fn pr6_snapshot_path() -> String {
 
 fn slo_snapshot_path() -> String {
     std::env::var("ISO_PERF_SNAPSHOT_SLO").unwrap_or_else(|_| "../BENCH_SLO.json".into())
+}
+
+fn precision_snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT_PRECISION")
+        .unwrap_or_else(|_| "../BENCH_PRECISION.json".into())
 }
 
 /// The PP×TP factorizations of a 4-device node that the deterministic
@@ -631,6 +638,84 @@ fn engine_overload_sweep(path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One rung's wire round-trip, exactly as `collective::send_segment` /
+/// `recv_apply` encode and decode it (f32 and fp16 move raw f32 on the
+/// CPU wire, so they are lossless here).
+fn rung_roundtrip(q: CommQuant, x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    match q {
+        CommQuant::F32 | CommQuant::Fp16 => x.to_vec(),
+        CommQuant::Int8 => iso::quant::dequantize_rows(&iso::quant::quantize_rows(x, rows, cols)),
+        CommQuant::Fp8 => iso::quant::fp8_decode_rows(&iso::quant::fp8_encode_rows(x, rows, cols)),
+        CommQuant::Int4 => {
+            iso::quant::dequantize4_rows(&iso::quant::quantize4_rows(x, rows, cols))
+        }
+    }
+}
+
+/// Simulator side of the PR-8 sweep (no artifacts needed, fully
+/// deterministic — gated against `BENCH_BASELINE.json` by
+/// `scripts/check_bench_regression.py` in CI): the wire-precision
+/// ladder's three axes on the modeled 4-card 4090 (DESIGN.md §16). Per
+/// rung: engine-exact bytes per collective
+/// (`sched::wire_bytes_per_collective`), measured logit drift of a
+/// 4-rank rank-ordered ring reduce vs the f32 golden (seeded inputs;
+/// ungated — pinned by `tests/wire_precision.rs`, recorded here for the
+/// EXPERIMENTS.md table), and the predicted blocking-iteration
+/// throughput (`sched::ladder_iteration_s`, gated: tok/s must not fall,
+/// iteration ms must not rise).
+fn sim_precision_sweep(path: &str) {
+    let node = NodeProfile::rtx4090(4);
+    let model = ModelSpec::mha_30b();
+    let t = 4096usize;
+    let (ranks, rows, cols) = (4usize, 8usize, model.d_model);
+    // Seeded activation-scale parts; each rank contributes rows×cols.
+    let parts: Vec<Vec<f32>> = (0..ranks)
+        .map(|r| iso::util::rng::Rng::new(0x9c0 + r as u64).normal_vec(rows * cols, 1.0))
+        .collect();
+    let golden: Vec<f32> = (0..rows * cols)
+        .map(|i| parts.iter().map(|p| p[i] as f64).sum::<f64>() as f32)
+        .collect();
+    let gmax = golden.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    section("simulator: wire-precision ladder (4090-4, 30b, t=4096; drift on 4-rank ring)");
+    let mut records = Vec::new();
+    for q in CommQuant::LADDER {
+        // Rank-ordered fused reduce: every hop re-encodes the running
+        // partial sum; the broadcast re-encodes the final sum once more.
+        let mut acc = parts[0].clone();
+        for part in parts.iter().skip(1) {
+            acc = rung_roundtrip(q, &acc, rows, cols);
+            for (a, &p) in acc.iter_mut().zip(part.iter()) {
+                *a += p;
+            }
+        }
+        acc = rung_roundtrip(q, &acc, rows, cols);
+        let drift = acc
+            .iter()
+            .zip(golden.iter())
+            .fold(0.0f32, |m, (&a, &g)| m.max((a - g).abs()));
+        let bytes = iso::sched::wire_bytes_per_collective(&model, t, q);
+        let iter_s = iso::sched::ladder_iteration_s(&node, &model, t, q);
+        let pred_ms = iter_s * 1e3;
+        let tok_s = t as f64 / iter_s;
+        println!(
+            "  {:>4}: {bytes:>9} B/ar  iter {pred_ms:8.2}ms  {tok_s:7.0} tok/s  \
+             max drift {drift:.3e} ({:.2e} rel)",
+            q.label(),
+            drift / gmax
+        );
+        records.push(
+            PerfRecord::new(&format!("sim precision {}", q.label()), pred_ms, pred_ms, pred_ms)
+                .with("wire_bytes_per_ar", bytes as f64)
+                .with("pred_prefill_tok_s", tok_s)
+                .with("max_abs_drift", drift as f64)
+                .with("rel_drift", (drift / gmax) as f64),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "sim_precision", &records) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
 /// Simulator prediction for the exposed (un-hidden) time of one
 /// segment-streamed all-reduce: the first comm tile is always exposed;
 /// each later tile hides up to one compute tile behind it (paper §3.2,
@@ -643,6 +728,46 @@ fn sim_exposed_ar_s(c: &Coster, t: usize, segments: usize) -> f64 {
     ar_tile + (segments as f64 - 1.0) * (ar_tile - gemm_tile).max(0.0)
 }
 
+/// Engine side of the PR-8 sweep (artifact-gated, not in the baseline):
+/// measured ISO prefill on the throttled link at every rung of
+/// `--wire-precision`, recording wall time and the per-rung wire-byte
+/// counters so the measured byte ratios sit next to the simulator's
+/// predicted ladder.
+fn engine_precision_sweep(path: &str) -> anyhow::Result<()> {
+    let prompt: Vec<i32> = (0..128).map(|i| ((i * 31) % 512) as i32).collect();
+    section("engine: prefill vs --wire-precision (tp=2, pcie-emu 40 MB/s, α=5µs)");
+    let mut records = Vec::new();
+    for q in CommQuant::LADDER {
+        let mut c = cfg(Strategy::Iso, 2, CommQuant::F32, Some(40.0));
+        c.link_alpha_us = 5.0;
+        c.wire_precision = Some(q);
+        let mut engine = Engine::start(c)?;
+        engine.prefill(&prompt)?; // warmup
+        let r = bench(&format!("tp2 iso wire={}", q.label()), 1, 6, || {
+            engine.prefill(&prompt).unwrap();
+        });
+        let report = engine.shutdown()?;
+        let m = report.metrics;
+        println!(
+            "    comm_bytes {}  rung[{}] {}",
+            m.comm_bytes,
+            q.label(),
+            m.comm_bytes_by_rung[q.index()]
+        );
+        records.push(
+            PerfRecord::new(&format!("engine wire {}", q.label()), r.mean_ms, r.p50_ms, r.p95_ms)
+                .with("comm_bytes", m.comm_bytes as f64)
+                .with("rung_bytes", m.comm_bytes_by_rung[q.index()] as f64),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "e2e_engine_precision", &records) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("  wrote wire-precision sweep to {path}");
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let path = snapshot_path();
     let pr2_path = pr2_snapshot_path();
@@ -650,6 +775,7 @@ fn main() -> anyhow::Result<()> {
     let pr5_path = pr5_snapshot_path();
     let pr6_path = pr6_snapshot_path();
     let slo_path = slo_snapshot_path();
+    let precision_path = precision_snapshot_path();
 
     // --- PR-2: simulator-predicted mixed-batching direction (no
     // artifacts needed).
@@ -670,6 +796,10 @@ fn main() -> anyhow::Result<()> {
     // --- PR-7: pinned overload/SLO frontier over offered load (no
     // artifacts needed; gated against BENCH_BASELINE.json in CI).
     sim_slo_sweep(&slo_path);
+
+    // --- PR-8: wire-precision ladder — bytes × drift × predicted tok/s
+    // (no artifacts needed; gated against BENCH_BASELINE.json in CI).
+    sim_precision_sweep(&precision_path);
 
     // --- simulator side of the segment sweep (no artifacts needed).
     let sim_exp = SimExperiment::new(
@@ -802,6 +932,10 @@ fn main() -> anyhow::Result<()> {
     // queue, KV-pressure preemption, and TBT-budgeted prefill under a
     // heavy-tailed burst past the knee.
     engine_overload_sweep(&slo_path)?;
+
+    // --- PR-8 tentpole: every rung of --wire-precision on the real
+    // engine next to the simulator's predicted ladder.
+    engine_precision_sweep(&precision_path)?;
 
     Ok(())
 }

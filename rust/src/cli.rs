@@ -86,6 +86,12 @@ COMMANDS:
                 ISO chunks double as pipeline micro-batches)
               --strategy iso|serial --requests N --prompt-len N
               --decode N --comm-quant f32|int8 --split even|ratio:X|balanced
+              --wire-precision f32|fp16|int8|fp8|int4 (NUMERICS-CHANGING:
+                wire rung for every collective; overrides --comm-quant;
+                see DESIGN.md §16)
+              --decode-wire-precision f32|fp16|int8|fp8|int4 (wire rung
+                for the fused decode/verify lane only; prefill keeps the
+                base rung; default: same as the base rung)
               --rate R (req/s Poisson arrivals → continuous batching)
               --decode-batch N (fused decode lane width per iteration)
               --mixed true|false (iteration-level mixed batching; default on)

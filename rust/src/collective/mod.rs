@@ -10,7 +10,11 @@
 //! activations; `Int8` quantizes each hop's segment with per-row scales
 //! (`quant::quantize_rows_into`), cutting wire bytes ~4× at a bounded,
 //! tested accuracy cost — the CPU analogue of the paper's fp16→int8
-//! compression.
+//! compression. PR 8 extends the ladder downward (DESIGN.md §16): `Fp8`
+//! moves software-emulated e5m2 bytes (elementwise, no scale vector) and
+//! `I4` packs two's-complement nibbles with per-row scales. Every rung's
+//! encoding is row-local, so segmentation stays bit-exact and the fused
+//! B-row lane collective stays bit-identical to B single-row calls.
 //!
 //! Segmented streaming (DESIGN.md §4): `allreduce_seg` splits every hop's
 //! chunk into `segments` sub-messages sent double-buffered — one message
@@ -34,13 +38,24 @@ use crate::quant::quantize_rows_into;
 enum Wire {
     F32(Vec<f32>),
     I8 { rows: usize, cols: usize, scales: Vec<f32>, data: Vec<i8> },
+    Fp8 { rows: usize, cols: usize, data: Vec<u8> },
+    I4 { rows: usize, cols: usize, scales: Vec<f32>, data: Vec<u8> },
 }
 
 impl Wire {
+    /// Wire size: every variant counts its scale vector (4 bytes per
+    /// scale) plus its packed payload — int4 is `ceil(cols/2)` bytes per
+    /// row, already reflected in `data.len()`. Pinned against hand
+    /// arithmetic by `wire_bytes_count_scales_and_packing` below and the
+    /// matching `config::CommQuant::wire_bytes` table, so the engine's
+    /// `comm_bytes` counters and the BENCH_PRECISION.json bytes columns
+    /// agree.
     fn bytes(&self) -> usize {
         match self {
             Wire::F32(v) => v.len() * 4,
             Wire::I8 { scales, data, .. } => scales.len() * 4 + data.len(),
+            Wire::Fp8 { data, .. } => data.len(),
+            Wire::I4 { scales, data, .. } => scales.len() * 4 + data.len(),
         }
     }
 }
@@ -63,6 +78,7 @@ struct Packet {
 pub struct BufferPool {
     f32_free: Vec<Vec<f32>>,
     i8_free: Vec<Vec<i8>>,
+    u8_free: Vec<Vec<u8>>,
     /// Buffers created because the pool was empty.
     pub allocs: u64,
     /// Buffers served from the free list.
@@ -114,6 +130,29 @@ impl BufferPool {
         if self.i8_free.len() < Self::MAX_FREE {
             v.clear();
             self.i8_free.push(v);
+        }
+    }
+
+    /// An empty u8 buffer (fp8 codes / packed int4 nibbles), pooled when
+    /// available.
+    pub fn take_u8(&mut self) -> Vec<u8> {
+        match self.u8_free.pop() {
+            Some(v) => {
+                self.reuses += 1;
+                v
+            }
+            None => {
+                self.allocs += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a u8 buffer to the pool (dropped past the cap).
+    pub fn put_u8(&mut self, mut v: Vec<u8>) {
+        if self.u8_free.len() < Self::MAX_FREE {
+            v.clear();
+            self.u8_free.push(v);
         }
     }
 }
@@ -438,6 +477,17 @@ impl RingHandle {
                 quantize_rows_into(seg, rows, cols, &mut scales, &mut data);
                 Wire::I8 { rows, cols, scales, data }
             }
+            CommQuant::Fp8 => {
+                let mut data = self.pool.take_u8();
+                crate::quant::fp8_encode_rows_into(seg, rows, cols, &mut data);
+                Wire::Fp8 { rows, cols, data }
+            }
+            CommQuant::Int4 => {
+                let mut scales = self.pool.take_f32();
+                let mut data = self.pool.take_u8();
+                crate::quant::quantize4_rows_into(seg, rows, cols, &mut scales, &mut data);
+                Wire::I4 { rows, cols, scales, data }
+            }
             // fp16 wire is modeled as f32 on CPU (same algorithm; the
             // byte accounting for fp16 lives in the simulator).
             CommQuant::Fp16 | CommQuant::F32 => {
@@ -516,6 +566,27 @@ impl RingHandle {
                 }
                 self.pool.put_f32(q.scales);
                 self.pool.put_i8(q.data);
+            }
+            Wire::Fp8 { rows: qr, cols: qc, data } => {
+                debug_assert_eq!((qr, qc), (rows, cols));
+                let q = crate::quant::Fp8Rows { rows: qr, cols: qc, data };
+                if add {
+                    crate::quant::fp8_decode_add(&q, out);
+                } else {
+                    crate::quant::fp8_decode_into(&q, out);
+                }
+                self.pool.put_u8(q.data);
+            }
+            Wire::I4 { rows: qr, cols: qc, scales, data } => {
+                debug_assert_eq!((qr, qc), (rows, cols));
+                let q = crate::quant::Quant4Rows { rows: qr, cols: qc, scales, data };
+                if add {
+                    crate::quant::dequantize4_add(&q, out);
+                } else {
+                    crate::quant::dequantize4_into(&q, out);
+                }
+                self.pool.put_f32(q.scales);
+                self.pool.put_u8(q.data);
             }
         }
         Ok(())
@@ -1095,7 +1166,9 @@ mod tests {
 
     #[test]
     fn segmented_matches_gold_all_quants() {
-        for quant in [CommQuant::F32, CommQuant::Int8] {
+        for quant in
+            [CommQuant::F32, CommQuant::Int8, CommQuant::Fp8, CommQuant::Int4]
+        {
             for segments in [1usize, 2, 3, 8] {
                 let n = 3;
                 let (rows, cols) = (10, 6);
@@ -1104,7 +1177,21 @@ mod tests {
                     (0..n).map(|_| rng.normal_vec(rows * cols, 1.0)).collect();
                 let want = gold_sum(&parts);
                 let amax = want.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-                let tol = if quant == CommQuant::Int8 { amax * 0.05 } else { 1e-4 };
+                // Loose plumbing tolerances; the tight per-rung analytic
+                // bounds are pinned in tests/wire_precision.rs. Lower
+                // rungs get an absolute term scaled by the largest
+                // partial-sum magnitude (pmax · n) since per-hop error
+                // tracks the values on the wire, not the final sum.
+                let pmax = parts
+                    .iter()
+                    .flat_map(|p| p.iter())
+                    .fold(0.0f32, |m, v| m.max(v.abs()));
+                let tol = match quant {
+                    CommQuant::Int8 => amax * 0.05,
+                    CommQuant::Fp8 => 0.30 * n as f32 * pmax,
+                    CommQuant::Int4 => 0.30 * n as f32 * pmax,
+                    _ => 1e-4,
+                };
                 let results = run_on_ring(n, |r, h| {
                     let mut d = parts[r].clone();
                     h.allreduce_seg(&mut d, rows, cols, quant, segments);
@@ -1161,6 +1248,56 @@ mod tests {
         for (f, q) in bytes.iter().zip(&bytes_q) {
             let ratio = *q as f64 / *f as f64;
             assert!((0.24..0.30).contains(&ratio), "wire ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn wire_bytes_count_scales_and_packing() {
+        // Accounting audit (PR 8 satellite): every Wire variant must
+        // count its scale vector, and int4 must count ceil(cols/2)
+        // packed bytes per row. 8×17 picked for the odd-cols edge; all
+        // numbers below are hand arithmetic.
+        let (rows, cols) = (8usize, 17usize);
+        let f = Wire::F32(vec![0.0; rows * cols]);
+        assert_eq!(f.bytes(), 8 * 17 * 4); // 544
+        let i8w =
+            Wire::I8 { rows, cols, scales: vec![0.0; rows], data: vec![0; rows * cols] };
+        assert_eq!(i8w.bytes(), 8 * 4 + 8 * 17); // 32 scale + 136 data
+        let f8 = Wire::Fp8 { rows, cols, data: vec![0; rows * cols] };
+        assert_eq!(f8.bytes(), 8 * 17); // no scales: 136
+        let i4 = Wire::I4 { rows, cols, scales: vec![0.0; rows], data: vec![0; rows * 9] };
+        assert_eq!(i4.bytes(), 8 * 4 + 8 * 9); // 32 scale + 72 packed
+        // The config-side table (used by the sched cost model and the
+        // BENCH_PRECISION bytes columns) must agree exactly.
+        for (q, want) in [
+            (CommQuant::F32, 544),
+            (CommQuant::Fp16, 544), // fp16 moves raw f32 on the CPU wire
+            (CommQuant::Int8, 168),
+            (CommQuant::Fp8, 136),
+            (CommQuant::Int4, 104),
+        ] {
+            assert_eq!(q.wire_bytes(rows, cols), want, "{q:?}");
+        }
+    }
+
+    #[test]
+    fn fused_ring_bytes_match_wire_table() {
+        // Measured fused-lane traffic is exactly 2(R−1) full-payload
+        // messages at the rung's wire size — the counters feeding
+        // comm_bytes and BENCH_PRECISION.json are trustworthy per rung.
+        let n = 3;
+        let (rows, cols) = (4usize, 17usize);
+        for q in [CommQuant::F32, CommQuant::Int8, CommQuant::Fp8, CommQuant::Int4] {
+            let sent = run_on_ring(n, |r, h| {
+                let mut d = vec![r as f32 + 1.0; rows * cols];
+                h.allreduce_rows_fused(&mut d, rows, cols, q)
+            });
+            let total: u64 = sent.iter().sum();
+            assert_eq!(
+                total,
+                2 * (n as u64 - 1) * q.wire_bytes(rows, cols) as u64,
+                "{q:?}"
+            );
         }
     }
 
@@ -1291,9 +1428,12 @@ mod tests {
     fn fused_rows_bit_identical_to_per_row() {
         // The PR-2 invariant: reducing a B-row decode lane in one fused
         // call equals B independent single-row all-reduces bit for bit,
-        // for both wire formats (per-row int8 scales are row-local and
-        // the per-element accumulation order matches rank order in both).
-        for quant in [CommQuant::F32, CommQuant::Int8] {
+        // for every wire rung (per-row int8/int4 scales are row-local,
+        // fp8 is elementwise, int4 packing restarts each row, and the
+        // per-element accumulation order matches rank order in all).
+        for quant in
+            [CommQuant::F32, CommQuant::Int8, CommQuant::Fp8, CommQuant::Int4]
+        {
             for n in [2usize, 3, 4] {
                 for rows in [1usize, 3, 8] {
                     let cols = 16;
@@ -1546,7 +1686,9 @@ mod tests {
         // callbacks equals reducing first and applying once — bit for
         // bit, for every wire format and segment count.
         let (rows, cols, n_out) = (11usize, 6usize, 4usize);
-        for quant in [CommQuant::F32, CommQuant::Int8] {
+        for quant in
+            [CommQuant::F32, CommQuant::Int8, CommQuant::Fp8, CommQuant::Int4]
+        {
             for n in [1usize, 2, 4] {
                 let mut rng = Rng::new(600 + n as u64);
                 let parts: Vec<Vec<f32>> =

@@ -93,7 +93,8 @@ impl SplitPolicy {
     }
 }
 
-/// Wire format of the tensor-parallel collectives.
+/// Wire format of the tensor-parallel collectives — the precision
+/// ladder, top to bottom (DESIGN.md §16).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommQuant {
     /// fp16 activations on the wire (A800 default).
@@ -102,18 +103,88 @@ pub enum CommQuant {
     Int8,
     /// f32 (the CPU engine's native dtype; no quant).
     F32,
+    /// fp8 e5m2, software-emulated, elementwise (no scale vector).
+    Fp8,
+    /// int4 packed nibbles + per-row scales.
+    Int4,
 }
 
 impl CommQuant {
-    /// Parse a CLI/config spelling (`f32`, `fp16`, `int8`).
+    /// Parse a CLI/config spelling (`f32`, `fp16`, `int8`, `fp8`, `int4`).
     pub fn parse(s: &str) -> Option<CommQuant> {
         match s.to_ascii_lowercase().as_str() {
             "fp16" | "f16" => Some(CommQuant::Fp16),
             "int8" | "i8" => Some(CommQuant::Int8),
             "f32" | "fp32" | "none" => Some(CommQuant::F32),
+            "fp8" | "f8" | "e5m2" => Some(CommQuant::Fp8),
+            "int4" | "i4" => Some(CommQuant::Int4),
             _ => None,
         }
     }
+
+    /// Engine wire bytes of a `rows × cols` f32 payload at this rung, as
+    /// the ring actually moves it (`collective::Wire::bytes`): fp16 is
+    /// modeled on the CPU testbed (raw f32 travels), int8/int4 add
+    /// 4 bytes/row of scales, int4 packs two nibbles per byte per row.
+    pub fn wire_bytes(self, rows: usize, cols: usize) -> usize {
+        match self {
+            CommQuant::F32 | CommQuant::Fp16 => rows * cols * 4,
+            CommQuant::Int8 => rows * 4 + rows * cols,
+            CommQuant::Fp8 => rows * cols,
+            CommQuant::Int4 => rows * 4 + rows * cols.div_ceil(2),
+        }
+    }
+
+    /// Every rung, ladder order (full → coarsest) — sweep/report order.
+    pub const LADDER: [CommQuant; 5] =
+        [CommQuant::F32, CommQuant::Fp16, CommQuant::Int8, CommQuant::Fp8, CommQuant::Int4];
+
+    /// Stable position in [`CommQuant::LADDER`] — the index of the
+    /// per-rung wire-byte counters (`WorkerStats::wire_bytes_by_rung`,
+    /// `EngineMetrics::comm_bytes_by_rung`).
+    pub fn index(self) -> usize {
+        match self {
+            CommQuant::F32 => 0,
+            CommQuant::Fp16 => 1,
+            CommQuant::Int8 => 2,
+            CommQuant::Fp8 => 3,
+            CommQuant::Int4 => 4,
+        }
+    }
+
+    /// Canonical lowercase spelling (accepted back by
+    /// [`CommQuant::parse`]) for reports and bench case names.
+    pub fn label(self) -> &'static str {
+        match self {
+            CommQuant::F32 => "f32",
+            CommQuant::Fp16 => "fp16",
+            CommQuant::Int8 => "int8",
+            CommQuant::Fp8 => "fp8",
+            CommQuant::Int4 => "int4",
+        }
+    }
+
+    /// Whether the rung re-encodes the payload below fp16 (lossy on the
+    /// engine's f32 wire). The TBT-budget cost model prices every
+    /// quantized rung at the int8 wire factor — conservative for
+    /// fp8/int4, which move fewer bytes still.
+    pub fn is_quantized(self) -> bool {
+        matches!(self, CommQuant::Int8 | CommQuant::Fp8 | CommQuant::Int4)
+    }
+}
+
+/// Per-phase wire-precision policy (DESIGN.md §16): which ladder rung
+/// prefill collectives use, and which — usually lower — rung the fused
+/// decode/verify lane uses. Decode-lane activations tolerate a coarser
+/// wire than prefill logits (one token's drift vs a whole prompt's),
+/// which is the ladder's whole point: resolve via
+/// [`EngineConfig::precision`], never from `comm_quant` directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrecisionPolicy {
+    /// Rung for prefill (and every other non-lane) collective.
+    pub prefill: CommQuant,
+    /// Rung for fused decode/verify-lane collectives.
+    pub decode: CommQuant,
 }
 
 /// Number of segments the pre-collective GEMM is split into when compute
@@ -246,6 +317,13 @@ pub struct EngineConfig {
     /// longer are shed at admission time rather than served late.
     /// `0.0` disables shedding.
     pub ttft_deadline_ms: f64,
+    /// Wire-precision override for *all* collectives (`--wire-precision`,
+    /// DESIGN.md §16). `None` = use `comm_quant`, byte-identical to the
+    /// pre-ladder engine.
+    pub wire_precision: Option<CommQuant>,
+    /// Wire-precision override for the fused decode/verify lane only
+    /// (`--decode-wire-precision`). `None` = same rung as prefill.
+    pub decode_wire_precision: Option<CommQuant>,
 }
 
 impl Default for EngineConfig {
@@ -280,7 +358,20 @@ impl Default for EngineConfig {
             queue_bound: 0,
             max_preemptions: 2,
             ttft_deadline_ms: 0.0,
+            wire_precision: None,
+            decode_wire_precision: None,
         }
+    }
+}
+
+impl EngineConfig {
+    /// Resolve the per-phase precision policy: `wire_precision` (else
+    /// `comm_quant`) for prefill, `decode_wire_precision` (else the
+    /// prefill rung) for the fused decode/verify lane.
+    pub fn precision(&self) -> PrecisionPolicy {
+        let prefill = self.wire_precision.unwrap_or(self.comm_quant);
+        let decode = self.decode_wire_precision.unwrap_or(prefill);
+        PrecisionPolicy { prefill, decode }
     }
 }
 
@@ -461,6 +552,17 @@ impl EngineConfig {
                     cfg.ttft_deadline_ms =
                         v.parse().map_err(|_| format!("bad ttft_deadline_ms {v:?}"))?
                 }
+                "engine.wire_precision" => {
+                    cfg.wire_precision = Some(
+                        CommQuant::parse(v).ok_or_else(|| format!("bad wire_precision {v:?}"))?,
+                    )
+                }
+                "engine.decode_wire_precision" => {
+                    cfg.decode_wire_precision = Some(
+                        CommQuant::parse(v)
+                            .ok_or_else(|| format!("bad decode_wire_precision {v:?}"))?,
+                    )
+                }
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -603,6 +705,62 @@ mod tests {
         assert!(EngineConfig::from_map(&bad).is_err());
         let bad = parse_config_str("[engine]\npp_stages = two").unwrap();
         assert!(EngineConfig::from_map(&bad).is_err());
+    }
+
+    #[test]
+    fn comm_quant_ladder_parses() {
+        assert_eq!(CommQuant::parse("fp8"), Some(CommQuant::Fp8));
+        assert_eq!(CommQuant::parse("E5M2"), Some(CommQuant::Fp8));
+        assert_eq!(CommQuant::parse("int4"), Some(CommQuant::Int4));
+        assert_eq!(CommQuant::parse("i4"), Some(CommQuant::Int4));
+        assert!(CommQuant::parse("int2").is_none());
+    }
+
+    #[test]
+    fn precision_policy_defaults_to_comm_quant() {
+        // Acceptance pin: with neither override set, the policy is
+        // `comm_quant` on both phases — byte-identical pre-ladder
+        // behavior, including the existing int8 opt-in.
+        let mut cfg = EngineConfig::default();
+        let p = cfg.precision();
+        assert_eq!((p.prefill, p.decode), (CommQuant::F32, CommQuant::F32));
+        cfg.comm_quant = CommQuant::Int8;
+        let p = cfg.precision();
+        assert_eq!((p.prefill, p.decode), (CommQuant::Int8, CommQuant::Int8));
+    }
+
+    #[test]
+    fn precision_policy_overrides_cascade() {
+        let map = parse_config_str("[engine]\nwire_precision = fp8").unwrap();
+        let p = EngineConfig::from_map(&map).unwrap().precision();
+        assert_eq!((p.prefill, p.decode), (CommQuant::Fp8, CommQuant::Fp8));
+
+        // decode override alone lowers only the lane rung.
+        let map = parse_config_str("[engine]\ndecode_wire_precision = int4").unwrap();
+        let p = EngineConfig::from_map(&map).unwrap().precision();
+        assert_eq!((p.prefill, p.decode), (CommQuant::F32, CommQuant::Int4));
+
+        let map = parse_config_str(
+            "[engine]\ncomm_quant = int8\nwire_precision = fp8\n\
+             decode_wire_precision = int4",
+        )
+        .unwrap();
+        let p = EngineConfig::from_map(&map).unwrap().precision();
+        assert_eq!((p.prefill, p.decode), (CommQuant::Fp8, CommQuant::Int4));
+
+        let bad = parse_config_str("[engine]\nwire_precision = int2").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+    }
+
+    #[test]
+    fn comm_quant_wire_bytes_hand_arithmetic() {
+        // The bytes columns of BENCH_PRECISION.json trace to this table.
+        let (r, c) = (8, 17); // odd cols exercise the int4 ceil
+        assert_eq!(CommQuant::F32.wire_bytes(r, c), 8 * 17 * 4);
+        assert_eq!(CommQuant::Fp16.wire_bytes(r, c), 8 * 17 * 4); // modeled
+        assert_eq!(CommQuant::Int8.wire_bytes(r, c), 8 * 4 + 8 * 17);
+        assert_eq!(CommQuant::Fp8.wire_bytes(r, c), 8 * 17);
+        assert_eq!(CommQuant::Int4.wire_bytes(r, c), 8 * 4 + 8 * 9);
     }
 
     #[test]

@@ -100,7 +100,7 @@ use crate::batch::{
     NGramProposer, SpecSlot,
 };
 use crate::collective::{ring, seg_range, stage_grid, FusedEpilogue, RingHandle, StagePort};
-use crate::config::{CommQuant, EngineConfig, Strategy};
+use crate::config::{CommQuant, EngineConfig, PrecisionPolicy, Strategy};
 use crate::fault::{EngineError, FaultInjector, FaultPlan, SupervisionEvent};
 use crate::kv::KvManager;
 use crate::metrics::{EngineMetrics, Timer};
@@ -170,6 +170,11 @@ struct CommJob {
     segments: usize,
     fused: bool,
     residual: Option<Vec<f32>>,
+    /// Wire rung this collective runs at (DESIGN.md §16): the compute
+    /// thread resolves the per-phase `PrecisionPolicy` — prefill rung
+    /// for chunked prefill reduces, decode rung for the fused lane — so
+    /// one rank can mix rungs job by job.
+    quant: CommQuant,
 }
 
 /// Rank-0 logits produced by one worker-side step: the prefill's
@@ -221,6 +226,11 @@ pub struct WorkerStats {
     pub wire_bytes: u64,
     /// Wire messages sent by the ring (grows with `comm_segments`).
     pub wire_msgs: u64,
+    /// `wire_bytes` split by wire rung, indexed by
+    /// [`CommQuant::index`] (f32, fp16, int8, fp8, int4) — the
+    /// per-phase precision policy (DESIGN.md §16) mixes rungs on one
+    /// rank, so a single total can't show where the bytes went.
+    pub wire_bytes_by_rung: [u64; 5],
     /// All-reduce invocations.
     pub allreduces: u64,
     /// Fused B-row lane collectives (subset of `allreduces`).
@@ -275,6 +285,7 @@ impl WorkerStats {
         self.fused_rows = comm.fused_rows;
         self.wire_bytes = comm.wire_bytes;
         self.wire_msgs = comm.wire_msgs;
+        self.wire_bytes_by_rung = comm.wire_bytes_by_rung;
         self.fused_epilogue_rows = comm.fused_epilogue_rows;
         self.fused_epilogue_ms = comm.fused_epilogue_ms;
     }
@@ -289,6 +300,9 @@ impl WorkerStats {
         self.comm_ms += o.comm_ms;
         self.wire_bytes += o.wire_bytes;
         self.wire_msgs += o.wire_msgs;
+        for (a, b) in self.wire_bytes_by_rung.iter_mut().zip(&o.wire_bytes_by_rung) {
+            *a += *b;
+        }
         self.allreduces += o.allreduces;
         self.fused_allreduces += o.fused_allreduces;
         self.fused_rows += o.fused_rows;
@@ -406,6 +420,10 @@ struct ComputeWorker {
     port: StagePort,
     /// Row-segments per collective (config `comm_segments`).
     comm_segments: usize,
+    /// Resolved per-phase wire rungs (DESIGN.md §16): prefill reduces
+    /// ride `precision.prefill`, the fused decode/verify lane rides
+    /// `precision.decode`.
+    precision: PrecisionPolicy,
     /// B-row lane-MLP GEMM fusion (config `lane_gemm`).
     lane_gemm: bool,
     /// Comm-side fused epilogue (config `fused_epilogue`, DESIGN.md §12):
@@ -543,6 +561,7 @@ impl ComputeWorker {
             d_model: geo.d_model,
             port,
             comm_segments: cfg.comm_segments.max(1),
+            precision: cfg.precision(),
             lane_gemm: cfg.lane_gemm,
             fused_epilogue: cfg.fused_epilogue,
             ladder: cfg.ladder_residual,
@@ -638,22 +657,24 @@ impl ComputeWorker {
     /// the collective's in-flight tail instead of running after it.
     fn submit(&mut self, data: Vec<f32>, rows: usize, x: &mut Tensor) -> Result<()> {
         let residual = self.take_residual(x, rows);
-        self.submit_with(data, rows, self.comm_segments, false, residual)
+        self.submit_with(data, rows, self.comm_segments, false, residual, self.precision.prefill)
     }
 
     /// [`ComputeWorker::submit`] without the residual payload — the
     /// ladder-residual paths keep the tensor compute-side because the
     /// next block still reads it while the collective is in flight.
     fn submit_plain(&mut self, data: Vec<f32>, rows: usize) -> Result<()> {
-        self.submit_with(data, rows, self.comm_segments, false, None)
+        self.submit_with(data, rows, self.comm_segments, false, None, self.precision.prefill)
     }
 
     /// Submit a fused decode-lane batch: one rank-ordered B-row
     /// collective whose result is bit-identical to B per-row collectives.
-    /// The lane's residual rides along under the fused epilogue.
+    /// The lane's residual rides along under the fused epilogue. Rides
+    /// the policy's decode rung (DESIGN.md §16), which may sit below the
+    /// prefill rung — decode activations tolerate a coarser wire.
     fn submit_fused(&mut self, data: Vec<f32>, rows: usize, x: &mut Tensor) -> Result<()> {
         let residual = self.take_residual(x, rows);
-        self.submit_with(data, rows, 1, true, residual)
+        self.submit_with(data, rows, 1, true, residual, self.precision.decode)
     }
 
     /// Detach `x`'s buffer as the job's residual payload when the fused
@@ -674,11 +695,12 @@ impl ComputeWorker {
         segments: usize,
         fused: bool,
         residual: Option<Vec<f32>>,
+        quant: CommQuant,
     ) -> Result<()> {
         let cols = self.d_model;
         self.stats.allreduces += 1;
         self.to_comm
-            .send(CommJob { data, rows, cols, segments, fused, residual })
+            .send(CommJob { data, rows, cols, segments, fused, residual, quant })
             .map_err(|_| EngineError::RankDead { rank: self.stats.rank, link: "comm" })?;
         Ok(())
     }
@@ -1409,7 +1431,6 @@ impl ComputeWorker {
 #[allow(clippy::too_many_arguments)]
 fn comm_reduce(
     handle: &mut RingHandle,
-    quant: CommQuant,
     job: CommJob,
     stats: &mut WorkerStats,
     acks: &Sender<SegAck>,
@@ -1417,7 +1438,7 @@ fn comm_reduce(
     ack_pool: &mut Vec<Vec<f32>>,
     hung_up: &mut bool,
 ) -> Result<u64, EngineError> {
-    let CommJob { mut data, rows, cols, segments, fused, residual } = job;
+    let CommJob { mut data, rows, cols, segments, fused, residual, quant } = job;
     if fused {
         // Decode lane: rank-ordered fused-rows reduce, bit-identical
         // to per-row collectives; one ack for the whole lane.
@@ -1536,7 +1557,6 @@ fn comm_reduce(
 fn comm_main(
     rank: usize,
     mut handle: RingHandle,
-    quant: CommQuant,
     jobs: Receiver<CommJob>,
     acks: Sender<SegAck>,
     recycled: Receiver<Vec<f32>>,
@@ -1559,9 +1579,9 @@ fn comm_main(
         }
         let t = Timer::start();
         let mut hung_up = false;
+        let rung = job.quant;
         let bytes = match comm_reduce(
             &mut handle,
-            quant,
             job,
             &mut stats,
             &acks,
@@ -1577,6 +1597,7 @@ fn comm_main(
         };
         stats.comm_ms += t.elapsed_ms();
         stats.wire_bytes += bytes;
+        stats.wire_bytes_by_rung[rung.index()] += bytes;
         stats.allreduces += 1;
         if hung_up {
             break; // compute thread gone (shutdown)
@@ -1737,7 +1758,6 @@ impl Mesh {
                 let (to_comm, comm_rx) = channel();
                 let (ack_tx, from_comm) = channel();
                 let (recycle_tx, recycle_rx) = channel();
-                let quant = cfg.comm_quant;
                 if let Some(t) = throttle {
                     ring_handle.throttle = Some(t);
                     port.throttle = Some(t);
@@ -1749,8 +1769,7 @@ impl Mesh {
                         .name(format!("iso-comm-{rank}"))
                         .spawn(move || {
                             comm_main(
-                                rank, ring_handle, quant, comm_rx, ack_tx, recycle_rx, inj_comm,
-                                ev_comm,
+                                rank, ring_handle, comm_rx, ack_tx, recycle_rx, inj_comm, ev_comm,
                             )
                         })
                         .expect("spawn comm thread"),
@@ -2542,7 +2561,10 @@ impl Engine {
                 self.cfg.decode_batch,
                 self.manifest.config.max_seq,
                 self.cfg.comm_segments,
-                self.cfg.comm_quant == CommQuant::Int8,
+                // The TBT budget prices any quantized prefill rung at the
+                // int8 wire factor — conservative for fp8/int4, which
+                // move fewer bytes still (CommQuant::is_quantized).
+                self.cfg.precision().prefill.is_quantized(),
                 self.cfg.tbt_budget_ms / 1e3,
                 &candidates,
             );
@@ -3113,6 +3135,11 @@ impl Engine {
         metrics.allreduces = workers.iter().map(|w| w.allreduces).sum();
         metrics.comm_bytes = workers.iter().map(|w| w.wire_bytes).sum();
         metrics.comm_msgs = workers.iter().map(|w| w.wire_msgs).sum();
+        for w in workers.iter() {
+            for (tot, b) in metrics.comm_bytes_by_rung.iter_mut().zip(w.wire_bytes_by_rung) {
+                *tot += b;
+            }
+        }
         metrics.seg_acks = workers.iter().map(|w| w.seg_acks).sum();
         metrics.fused_allreduces = workers.iter().map(|w| w.fused_allreduces).sum();
         let n_workers = workers.len().max(1) as f64;
@@ -3282,6 +3309,7 @@ mod tests {
             compute_ms: 1.0,
             comm_ms: 2.0,
             wire_bytes: 10,
+            wire_bytes_by_rung: [10, 0, 0, 0, 0],
             allreduces: 3,
             ..Default::default()
         };
@@ -3289,6 +3317,7 @@ mod tests {
             compute_ms: 4.0,
             comm_ms: 8.0,
             wire_bytes: 30,
+            wire_bytes_by_rung: [20, 0, 0, 6, 4],
             allreduces: 5,
             ..Default::default()
         };
@@ -3296,6 +3325,7 @@ mod tests {
         assert_eq!(a.compute_ms, 5.0);
         assert_eq!(a.comm_ms, 10.0);
         assert_eq!(a.wire_bytes, 40);
+        assert_eq!(a.wire_bytes_by_rung, [30, 0, 0, 6, 4]);
         assert_eq!(a.allreduces, 8);
     }
 
@@ -3306,6 +3336,7 @@ mod tests {
             comm_ms: 7.0,
             allreduces: 2,
             wire_bytes: 99,
+            wire_bytes_by_rung: [0, 0, 90, 0, 9],
             wire_msgs: 4,
             ..Default::default()
         };
@@ -3313,6 +3344,7 @@ mod tests {
         assert_eq!(w.comm_ms, 7.0);
         assert_eq!(w.allreduces, 2);
         assert_eq!(w.wire_bytes, 99);
+        assert_eq!(w.wire_bytes_by_rung, [0, 0, 90, 0, 9]);
         assert_eq!(w.wire_msgs, 4);
     }
 

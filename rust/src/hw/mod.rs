@@ -18,6 +18,29 @@
 /// the benches so a recalibration is a single-point change.
 pub const INT8_WIRE_FACTOR: f64 = 0.51;
 
+/// Wire-size factor of fp8 (e5m2) relative to fp16: half the bytes and,
+/// being elementwise, no scale vector at all (DESIGN.md §16).
+pub const FP8_WIRE_FACTOR: f64 = 0.5;
+
+/// Wire-size factor of packed int4 relative to fp16: a quarter of the
+/// bytes plus the same ~2%-of-fp16 per-row scale overhead int8 carries.
+pub const INT4_WIRE_FACTOR: f64 = 0.26;
+
+/// Bytes each precision-ladder rung puts on the wire relative to the
+/// fp16 activation payload (DESIGN.md §16). f32 doubles fp16; the
+/// quantized rungs reuse the calibrated `*_WIRE_FACTOR` constants so a
+/// recalibration stays a single-point change.
+pub fn wire_factor(q: crate::config::CommQuant) -> f64 {
+    use crate::config::CommQuant;
+    match q {
+        CommQuant::F32 => 2.0,
+        CommQuant::Fp16 => 1.0,
+        CommQuant::Int8 => INT8_WIRE_FACTOR,
+        CommQuant::Fp8 => FP8_WIRE_FACTOR,
+        CommQuant::Int4 => INT4_WIRE_FACTOR,
+    }
+}
+
 /// Interconnect profile for a ring collective.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LinkProfile {
@@ -252,6 +275,14 @@ impl NodeProfile {
         };
         self.link.ring_allreduce_s(wire, self.cards)
     }
+
+    /// All-reduce wall time for `fp16_bytes` of activations at precision
+    /// rung `q` — the ladder generalization of
+    /// [`NodeProfile::allreduce_s`] (whose `int8_wire = true/false` is
+    /// exactly the `Int8`/`Fp16` rung).
+    pub fn allreduce_rung_s(&self, fp16_bytes: usize, q: crate::config::CommQuant) -> f64 {
+        self.link.ring_allreduce_s(fp16_bytes as f64 * wire_factor(q), self.cards)
+    }
 }
 
 #[cfg(test)]
@@ -333,6 +364,27 @@ mod tests {
         let fp16 = node.allreduce_s(100 << 20, false);
         let int8 = node.allreduce_s(100 << 20, true);
         assert!((0.45..0.60).contains(&(int8 / fp16)));
+    }
+
+    #[test]
+    fn wire_factor_ladder_monotone_and_anchored() {
+        use crate::config::CommQuant;
+        // Walking down the ladder strictly shrinks the wire.
+        let f: Vec<f64> = CommQuant::LADDER.iter().map(|&q| wire_factor(q)).collect();
+        for w in f.windows(2) {
+            assert!(w[1] < w[0], "ladder factor not decreasing: {f:?}");
+        }
+        // The bool API is exactly the Fp16/Int8 rungs of the rung API.
+        let node = NodeProfile::rtx4090(4);
+        let b = 100 << 20;
+        assert_eq!(node.allreduce_s(b, false), node.allreduce_rung_s(b, CommQuant::Fp16));
+        assert_eq!(node.allreduce_s(b, true), node.allreduce_rung_s(b, CommQuant::Int8));
+        // fp8 halves fp16; int4 is int8 minus half the payload share.
+        let fp16 = node.allreduce_rung_s(b, CommQuant::Fp16);
+        let fp8 = node.allreduce_rung_s(b, CommQuant::Fp8);
+        assert!((0.45..0.60).contains(&(fp8 / fp16)), "{}", fp8 / fp16);
+        let int4 = node.allreduce_rung_s(b, CommQuant::Int4);
+        assert!(int4 < node.allreduce_rung_s(b, CommQuant::Int8));
     }
 
     #[test]

@@ -61,6 +61,15 @@ fn serve(cli: &Cli) -> Result<()> {
     if let Some(q) = cli.get("comm-quant") {
         cfg.comm_quant = CommQuant::parse(q).ok_or_else(|| anyhow!("bad --comm-quant {q:?}"))?;
     }
+    if let Some(q) = cli.get("wire-precision") {
+        cfg.wire_precision =
+            Some(CommQuant::parse(q).ok_or_else(|| anyhow!("bad --wire-precision {q:?}"))?);
+    }
+    if let Some(q) = cli.get("decode-wire-precision") {
+        cfg.decode_wire_precision = Some(
+            CommQuant::parse(q).ok_or_else(|| anyhow!("bad --decode-wire-precision {q:?}"))?,
+        );
+    }
     if let Some(s) = cli.get("split") {
         cfg.split = SplitPolicy::parse(s).ok_or_else(|| anyhow!("bad --split {s:?}"))?;
     }
@@ -140,6 +149,12 @@ fn serve(cli: &Cli) -> Result<()> {
         cfg.ladder_residual,
         cfg.artifacts_dir
     );
+    // Opt-in banner line: absent unless a precision override is set, so
+    // legacy invocations keep byte-identical stdout (DESIGN.md §16).
+    if cfg.wire_precision.is_some() || cfg.decode_wire_precision.is_some() {
+        let p = cfg.precision();
+        println!("wire_precision: prefill={} decode={}", p.prefill.label(), p.decode.label());
+    }
     let mut engine = Engine::start(cfg)?;
     let vocab = engine.manifest.config.vocab;
     let max_seq = engine.manifest.config.max_seq;

@@ -151,6 +151,12 @@ pub struct EngineMetrics {
     /// Wire messages sent by the rings; grows with `comm_segments`
     /// (per-segment wire accounting: bytes/messages ≈ segment size).
     pub comm_msgs: u64,
+    /// `comm_bytes` split by wire rung, indexed by
+    /// [`crate::config::CommQuant::index`] (f32, fp16, int8, fp8, int4).
+    /// The per-phase precision policy (DESIGN.md §16) can put prefill
+    /// and decode collectives on different rungs, so the single total
+    /// no longer says where the bytes went.
+    pub comm_bytes_by_rung: [u64; 5],
     /// Per-segment acks streamed from comm to compute threads: one per
     /// collective for residual-carrying jobs under the fused epilogue
     /// (DESIGN.md §12), per-segment otherwise (`fused_epilogue = false`,
@@ -303,6 +309,23 @@ impl EngineMetrics {
             s.push_str(&self.queue_depth.summary("queue_depth"));
             s.push('\n');
             s.push_str(&self.queue_wait_ms.summary("queue_wait_ms"));
+        }
+        // The per-rung wire split appears only when the ladder is in
+        // play — two rungs live at once (per-phase policy) or a
+        // sub-int8 rung on the wire. Uniform legacy configs (all bytes
+        // on one of f32/fp16/int8) keep byte-identical reports.
+        let rungs_live = self.comm_bytes_by_rung.iter().filter(|&&b| b > 0).count();
+        if rungs_live > 1
+            || self.comm_bytes_by_rung[crate::config::CommQuant::Fp8.index()] > 0
+            || self.comm_bytes_by_rung[crate::config::CommQuant::Int4.index()] > 0
+        {
+            s.push_str("\nwire_rungs:");
+            for q in crate::config::CommQuant::LADDER {
+                let b = self.comm_bytes_by_rung[q.index()];
+                if b > 0 {
+                    s.push_str(&format!(" {}={b}", q.label()));
+                }
+            }
         }
         // Pipeline counters appear only when stages actually ran, so
         // single-stage reports stay byte-identical to the pre-PP output.
@@ -477,6 +500,27 @@ mod tests {
         let after = m.report();
         assert!(after.contains("preemptions=2 preempted_tokens=160 sheds=3 rejected=5"));
         assert!(after.starts_with(&before), "overload lines must only append");
+    }
+
+    #[test]
+    fn wire_rungs_absent_until_ladder_in_play() {
+        // Satellite (PR 8): a uniform legacy wire (all bytes on one of
+        // f32/fp16/int8) keeps the report byte-identical — the per-rung
+        // split appears only with a mixed policy or a sub-int8 rung.
+        let mut m = EngineMetrics::default();
+        m.comm_bytes_by_rung[0] = 4096; // uniform f32: legacy shape
+        let before = m.report();
+        assert!(!before.contains("wire_rungs"), "rung line must be opt-in");
+        let mut int8 = EngineMetrics::default();
+        int8.comm_bytes_by_rung[2] = 4096; // uniform int8: also legacy
+        assert!(!int8.report().contains("wire_rungs"));
+        m.comm_bytes_by_rung[4] = 512; // decode lane dropped to int4
+        let after = m.report();
+        assert!(after.contains("wire_rungs: f32=4096 int4=512"));
+        assert!(after.starts_with(&before), "rung line must only append");
+        let mut solo = EngineMetrics::default();
+        solo.comm_bytes_by_rung[3] = 64; // fp8 alone is still non-legacy
+        assert!(solo.report().contains("wire_rungs: fp8=64"));
     }
 
     #[test]

@@ -1,14 +1,23 @@
-//! Symmetric per-row int8 quantization — the paper's §3.2 wire format.
+//! Wire-precision ladder — the paper's §3.2 wire format, extended.
 //!
 //! On the 4090 the all-reduced activations are converted fp16→int8 before
 //! hitting the ring, dropping the communication share from ~75% to ~50%
-//! (paper Fig 2a). This module is the rust half of that path; it matches
-//! `python/compile/kernels/quant.py` (and `ref.quantize_int8_ref`)
-//! bit-for-bit under round-half-to-even.
+//! (paper Fig 2a). This module is the rust half of that path; the int8
+//! rung matches `python/compile/kernels/quant.py` (and
+//! `ref.quantize_int8_ref`) bit-for-bit under round-half-to-even.
 //!
-//! Layout of a quantized block of `rows × cols` f32: `rows` f32 scales
-//! followed by `rows*cols` int8 payload — 1 byte/element + 4 bytes/row,
-//! i.e. ~4× smaller than f32 and ~2× smaller than fp16 wire formats.
+//! PR 8 extends the ladder downward (ROADMAP item 3, DESIGN.md §16):
+//!
+//! * **int8** — symmetric per-row scales, 1 byte/element + 4 bytes/row;
+//! * **fp8 (e5m2)** — software-emulated 1-5-2 floats, elementwise (the
+//!   exponent travels in every byte, no scale vector), 1 byte/element;
+//! * **int4** — symmetric per-row scales, two's-complement nibbles packed
+//!   two per byte *per row*: `ceil(cols/2)` bytes/row + 4 bytes/row.
+//!
+//! Every rung keeps the collective's bit-exact-under-segmentation
+//! invariant: scales are per-row (fp8 needs none) and int4 packing
+//! restarts at each row boundary, so encoding a payload segment-by-
+//! segment is bit-identical to encoding it whole.
 
 /// Quantized rows: `scales.len() == rows`, `data.len() == rows * cols`.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,11 +39,80 @@ impl QuantizedRows {
     }
 }
 
+/// fp8-e5m2 rows: `data.len() == rows * cols`, elementwise codes — no
+/// scale vector (each byte carries its own 5-bit exponent).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fp8Rows {
+    /// Row count.
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    /// e5m2 payload, row-major.
+    pub data: Vec<u8>,
+}
+
+impl Fp8Rows {
+    /// Wire size in bytes (payload only; fp8 has no scales).
+    pub fn wire_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// int4 rows: per-row scales, nibbles packed two per byte per row —
+/// `data.len() == rows * cols.div_ceil(2)`. Each row starts a fresh
+/// byte (odd `cols` leaves the last high nibble zero), so slicing a
+/// payload into row segments re-packs to identical bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Quant4Rows {
+    /// Row count.
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    /// Per-row dequantization scales.
+    pub scales: Vec<f32>,
+    /// Packed two's-complement nibbles, row-major, low nibble first.
+    pub data: Vec<u8>,
+}
+
+impl Quant4Rows {
+    /// Wire size in bytes (scales + packed payload, `ceil(cols/2)`/row).
+    pub fn wire_bytes(&self) -> usize {
+        self.scales.len() * 4 + self.data.len()
+    }
+}
+
 /// Round-half-to-even, matching jnp.round / IEEE default.
 #[inline]
 fn round_ties_even(x: f32) -> f32 {
     // f32::round_ties_even is stable since 1.77.
     x.round_ties_even()
+}
+
+/// 2^e as f32 (e in the normal-exponent range).
+#[inline]
+fn exp2i(e: i32) -> f32 {
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Per-row symmetric scale for a `grid_max`-step integer grid, guarding
+/// the degenerate rows: an all-zero row, a denormal amax whose
+/// reciprocal overflows to inf, or ±inf elements must never put NaN on
+/// either side of the wire. Returns `(scale, 1/scale)`; scale 0 means
+/// the row encodes — and decodes — as exact zeros. A non-finite amax
+/// saturates to `f32::MAX`, so ±inf elements clamp to full scale.
+fn row_scale(row: &[f32], grid_max: f32) -> (f32, f32) {
+    // f32::max ignores a NaN operand, so NaN elements never poison amax.
+    let mut amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if !amax.is_finite() {
+        amax = f32::MAX;
+    }
+    let scale = amax / grid_max;
+    let inv = 1.0 / scale;
+    if scale > 0.0 && inv.is_finite() {
+        (scale, inv)
+    } else {
+        (0.0, 0.0)
+    }
 }
 
 /// Quantize `rows × cols` row-major f32 into int8 with per-row scales.
@@ -64,11 +142,9 @@ pub fn quantize_rows_into(
     data.resize(rows * cols, 0);
     for r in 0..rows {
         let row = &x[r * cols..(r + 1) * cols];
-        let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-        let scale = amax / 127.0;
+        let (scale, inv) = row_scale(row, 127.0);
         scales.push(scale);
         if scale > 0.0 {
-            let inv = 1.0 / scale;
             for (d, &v) in data[r * cols..(r + 1) * cols].iter_mut().zip(row) {
                 *d = round_ties_even(v * inv).clamp(-127.0, 127.0) as i8;
             }
@@ -79,15 +155,7 @@ pub fn quantize_rows_into(
 /// Dequantize back to f32 (lossy inverse of `quantize_rows`).
 pub fn dequantize_rows(q: &QuantizedRows) -> Vec<f32> {
     let mut out = vec![0.0f32; q.rows * q.cols];
-    for r in 0..q.rows {
-        let s = q.scales[r];
-        for (o, &d) in out[r * q.cols..(r + 1) * q.cols]
-            .iter_mut()
-            .zip(&q.data[r * q.cols..(r + 1) * q.cols])
-        {
-            *o = d as f32 * s;
-        }
-    }
+    dequantize_into(q, &mut out);
     out
 }
 
@@ -127,6 +195,204 @@ pub fn dequantize_into(q: &QuantizedRows, out: &mut [f32]) {
 /// Max absolute error bound of one quantize/dequantize round trip:
 /// half a quantization step per row.
 pub fn max_roundtrip_error(q: &QuantizedRows) -> f32 {
+    q.scales.iter().fold(0.0f32, |m, &s| m.max(s * 0.5))
+}
+
+// ---------------------------------------------------------------- fp8 --
+
+/// Largest finite e5m2 magnitude: 1.75 · 2^15. The encoder saturates
+/// here (inf included) so adversarial magnitudes stay finite on the
+/// wire.
+pub const FP8_MAX: f32 = 57344.0;
+
+/// Smallest positive e5m2 normal: 2^-14.
+pub const FP8_MIN_NORMAL: f32 = 6.103_515_6e-5;
+
+/// Relative round-trip error bound for e5m2 in the normal range: half a
+/// 2-bit-mantissa ulp, 2^-3.
+pub const FP8_REL_ERR: f32 = 0.125;
+
+/// Absolute round-trip error bound below [`FP8_MIN_NORMAL`]: half the
+/// denormal step, 2^-17.
+pub const FP8_ABS_ERR: f32 = 7.629_394_5e-6;
+
+/// e5m2 code of +[`FP8_MAX`] (exponent 30, mantissa 0b11).
+const FP8_MAX_CODE: u8 = 0x7b;
+
+/// Encode one f32 as e5m2 (1 sign / 5 exponent / 2 mantissa), round to
+/// nearest ties-to-even, **saturating**: ±inf and magnitudes at or past
+/// [`FP8_MAX`] encode as ±[`FP8_MAX`]; NaN keeps a NaN code. The
+/// conversion is elementwise — no scales — so any row/segment grouping
+/// of a payload encodes bit-identically.
+pub fn fp8_from_f32(v: f32) -> u8 {
+    let sign = ((v.to_bits() >> 24) & 0x80) as u8;
+    if v.is_nan() {
+        return sign | 0x7f;
+    }
+    let a = v.abs();
+    if a >= FP8_MAX {
+        return sign | FP8_MAX_CODE;
+    }
+    if a < FP8_MIN_NORMAL {
+        // Denormal grid m · 2^-16, m ∈ 0..=3; m = 4 is exactly the
+        // smallest normal and its code continues the sequence.
+        return sign | round_ties_even(a * 65536.0) as u8;
+    }
+    let e = ((a.to_bits() >> 23) as i32) - 127; // unbiased, in [-14, 15]
+    let m = round_ties_even(a / exp2i(e) * 4.0) as u32; // in [4, 8]
+    // m = 8 carries into the exponent field: the encoding is monotone.
+    sign | ((((e + 15) as u32) << 2) + (m - 4)) as u8
+}
+
+/// Decode one e5m2 byte (exact: every e5m2 value is representable in
+/// f32). Inf/NaN codes decode faithfully — our encoder never emits them,
+/// but a poisoned wire byte must not map to a silently-wrong finite.
+pub fn fp8_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((b >> 2) & 0x1f) as i32;
+    let man = (b & 0x03) as f32;
+    if exp == 31 {
+        return if man == 0.0 { sign * f32::INFINITY } else { f32::NAN };
+    }
+    if exp == 0 {
+        return sign * man * FP8_MIN_NORMAL * 0.25; // man · 2^-16
+    }
+    sign * (4.0 + man) * exp2i(exp - 17) // (1 + man/4) · 2^(exp-15)
+}
+
+/// Encode `rows × cols` f32 as e5m2.
+pub fn fp8_encode_rows(x: &[f32], rows: usize, cols: usize) -> Fp8Rows {
+    let mut data = Vec::new();
+    fp8_encode_rows_into(x, rows, cols, &mut data);
+    Fp8Rows { rows, cols, data }
+}
+
+/// Encode into a caller-provided buffer (cleared first) — the wire hot
+/// path. Elementwise, so trivially bit-exact under segmentation.
+pub fn fp8_encode_rows_into(x: &[f32], rows: usize, cols: usize, data: &mut Vec<u8>) {
+    assert_eq!(x.len(), rows * cols, "shape mismatch");
+    data.clear();
+    data.reserve(rows * cols);
+    data.extend(x.iter().map(|&v| fp8_from_f32(v)));
+}
+
+/// Decode back to f32 (lossy inverse of `fp8_encode_rows`).
+pub fn fp8_decode_rows(q: &Fp8Rows) -> Vec<f32> {
+    let mut out = vec![0.0f32; q.rows * q.cols];
+    fp8_decode_into(q, &mut out);
+    out
+}
+
+/// Decode-and-accumulate — the all-reduce hot path.
+pub fn fp8_decode_add(q: &Fp8Rows, acc: &mut [f32]) {
+    assert_eq!(acc.len(), q.rows * q.cols);
+    for (o, &b) in acc.iter_mut().zip(&q.data) {
+        *o += fp8_to_f32(b);
+    }
+}
+
+/// Decode into an existing buffer (overwrite) — the all-gather hot path.
+pub fn fp8_decode_into(q: &Fp8Rows, out: &mut [f32]) {
+    assert_eq!(out.len(), q.rows * q.cols);
+    for (o, &b) in out.iter_mut().zip(&q.data) {
+        *o = fp8_to_f32(b);
+    }
+}
+
+// --------------------------------------------------------------- int4 --
+
+/// Quantize `rows × cols` row-major f32 into packed int4 with per-row
+/// scales.
+pub fn quantize4_rows(x: &[f32], rows: usize, cols: usize) -> Quant4Rows {
+    let mut scales = Vec::new();
+    let mut data = Vec::new();
+    quantize4_rows_into(x, rows, cols, &mut scales, &mut data);
+    Quant4Rows { rows, cols, scales, data }
+}
+
+/// Quantize into caller-provided buffers (cleared first). The grid is
+/// symmetric ±7 (the -8 code is unused, keeping negation exact) and
+/// packing restarts at every row, so segment-by-segment encoding is
+/// bit-identical to whole-payload encoding.
+pub fn quantize4_rows_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    scales: &mut Vec<f32>,
+    data: &mut Vec<u8>,
+) {
+    assert_eq!(x.len(), rows * cols, "shape mismatch");
+    let rb = cols.div_ceil(2);
+    scales.clear();
+    scales.reserve(rows);
+    data.clear();
+    data.resize(rows * rb, 0);
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let (scale, inv) = row_scale(row, 7.0);
+        scales.push(scale);
+        if scale == 0.0 {
+            continue;
+        }
+        let packed = &mut data[r * rb..(r + 1) * rb];
+        for (c, &v) in row.iter().enumerate() {
+            let q = round_ties_even(v * inv).clamp(-7.0, 7.0) as i8;
+            let nib = (q as u8) & 0x0f;
+            if c % 2 == 0 {
+                packed[c / 2] = nib;
+            } else {
+                packed[c / 2] |= nib << 4;
+            }
+        }
+    }
+}
+
+/// Unpack one nibble (low first) and sign-extend it.
+#[inline]
+fn nib4(packed: &[u8], c: usize) -> i8 {
+    let nib = (packed[c / 2] >> ((c % 2) * 4)) & 0x0f;
+    ((nib << 4) as i8) >> 4
+}
+
+/// Dequantize back to f32 (lossy inverse of `quantize4_rows`).
+pub fn dequantize4_rows(q: &Quant4Rows) -> Vec<f32> {
+    let mut out = vec![0.0f32; q.rows * q.cols];
+    dequantize4_into(q, &mut out);
+    out
+}
+
+/// Dequantize-and-accumulate — the all-reduce hot path.
+pub fn dequantize4_add(q: &Quant4Rows, acc: &mut [f32]) {
+    assert_eq!(acc.len(), q.rows * q.cols);
+    let rb = q.cols.div_ceil(2);
+    for r in 0..q.rows {
+        let s = q.scales[r];
+        if s == 0.0 {
+            continue;
+        }
+        let packed = &q.data[r * rb..(r + 1) * rb];
+        for (c, o) in acc[r * q.cols..(r + 1) * q.cols].iter_mut().enumerate() {
+            *o += nib4(packed, c) as f32 * s;
+        }
+    }
+}
+
+/// Dequantize into an existing buffer (overwrite) — the all-gather hot
+/// path.
+pub fn dequantize4_into(q: &Quant4Rows, out: &mut [f32]) {
+    assert_eq!(out.len(), q.rows * q.cols);
+    let rb = q.cols.div_ceil(2);
+    for r in 0..q.rows {
+        let s = q.scales[r];
+        let packed = &q.data[r * rb..(r + 1) * rb];
+        for (c, o) in out[r * q.cols..(r + 1) * q.cols].iter_mut().enumerate() {
+            *o = nib4(packed, c) as f32 * s;
+        }
+    }
+}
+
+/// Max absolute error bound of one int4 round trip: half a step per row.
+pub fn max_roundtrip_error4(q: &Quant4Rows) -> f32 {
     q.scales.iter().fold(0.0f32, |m, &s| m.max(s * 0.5))
 }
 
@@ -260,6 +526,225 @@ mod tests {
             for (a, b) in x.iter().zip(&back) {
                 if (a - b).abs() > scale * 1e-3 {
                     return Err(format!("{a} != {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    // ---- degenerate-row regression (ISSUE-8 satellite) ----
+
+    #[test]
+    fn degenerate_rows_never_nan() {
+        // Row 0: all zero. Row 1: single-ULP denormal amax — the scale
+        // itself underflows to 0. Row 2: a denormal amax whose scale
+        // stays positive but whose reciprocal overflows to inf — this
+        // used to turn the row into NaN-saturated garbage. Row 3:
+        // ±inf-adjacent (f32::MAX) must quantize normally. Row 4: actual
+        // ±inf saturates to full scale instead of poisoning the scale.
+        let tiny = f32::from_bits(1); // smallest positive denormal
+        let denorm = f32::from_bits(1000); // scale > 0 but 1/scale = inf
+        let x = [
+            [0.0f32, 0.0, 0.0, 0.0],
+            [tiny, -tiny, 0.0, tiny],
+            [denorm, -denorm, 0.0, denorm],
+            [f32::MAX, -f32::MAX, 0.5, 0.0],
+            [f32::INFINITY, f32::NEG_INFINITY, 1.0, 0.0],
+        ]
+        .concat();
+        let q = quantize_rows(&x, 5, 4);
+        assert_eq!(q.scales[0], 0.0);
+        assert_eq!(q.scales[1], 0.0, "underflowed scale must stay 0");
+        assert_eq!(q.scales[2], 0.0, "denormal amax must collapse to scale 0");
+        assert!(q.data[4..12].iter().all(|&d| d == 0));
+        assert!(q.scales[3] > 0.0 && q.scales[3].is_finite());
+        assert_eq!(q.data[12], 127);
+        assert_eq!(q.data[13], -127);
+        assert!(q.scales[4].is_finite(), "inf row must saturate, not poison");
+        assert_eq!(q.data[16], 127);
+        assert_eq!(q.data[17], -127);
+        let back = dequantize_rows(&q);
+        assert!(back.iter().all(|v| v.is_finite()), "NaN/inf leaked: {back:?}");
+
+        let q4 = quantize4_rows(&x, 5, 4);
+        assert_eq!(q4.scales[0], 0.0);
+        assert_eq!(q4.scales[1], 0.0);
+        assert_eq!(q4.scales[2], 0.0);
+        assert!(q4.scales[4].is_finite());
+        let back4 = dequantize4_rows(&q4);
+        assert!(back4.iter().all(|v| v.is_finite()), "int4 NaN/inf leaked: {back4:?}");
+
+        let q8f = fp8_encode_rows(&x, 5, 4);
+        let backf = fp8_decode_rows(&q8f);
+        assert!(backf.iter().all(|v| v.is_finite()), "fp8 NaN/inf leaked: {backf:?}");
+        assert_eq!(backf[16], FP8_MAX, "fp8 saturates inf to max finite");
+    }
+
+    #[test]
+    fn nan_input_rows_stay_finite() {
+        // Garbage in, finite out: NaN elements encode as 0 on every rung
+        // and never poison the row's scale.
+        let x = [f32::NAN, 1.0, -1.0, f32::NAN];
+        let q = quantize_rows(&x, 1, 4);
+        assert!(q.scales[0].is_finite());
+        assert!(dequantize_rows(&q).iter().all(|v| v.is_finite()));
+        let q4 = quantize4_rows(&x, 1, 4);
+        assert!(dequantize4_rows(&q4).iter().all(|v| v.is_finite()));
+    }
+
+    // ---- fp8 (e5m2) ----
+
+    #[test]
+    fn fp8_exact_on_representable_values() {
+        // Every e5m2 code round-trips f32 → fp8 → f32 exactly (the
+        // codec is a bijection on its own grid).
+        for code in 0u16..=255 {
+            let b = code as u8;
+            let v = fp8_to_f32(b);
+            if !v.is_finite() {
+                continue; // inf/NaN codes are never emitted by encode
+            }
+            let back = fp8_to_f32(fp8_from_f32(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "code {b:#x}: {v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn fp8_saturates_and_preserves_sign_and_zero() {
+        assert_eq!(fp8_to_f32(fp8_from_f32(f32::INFINITY)), FP8_MAX);
+        assert_eq!(fp8_to_f32(fp8_from_f32(f32::NEG_INFINITY)), -FP8_MAX);
+        assert_eq!(fp8_to_f32(fp8_from_f32(1e9)), FP8_MAX);
+        assert_eq!(fp8_to_f32(fp8_from_f32(0.0)), 0.0);
+        assert_eq!(fp8_to_f32(fp8_from_f32(-0.0)), 0.0);
+        assert!(fp8_to_f32(fp8_from_f32(f32::NAN)).is_nan());
+        // Below half the smallest denormal flushes to zero.
+        assert_eq!(fp8_to_f32(fp8_from_f32(1e-9)), 0.0);
+    }
+
+    #[test]
+    fn fp8_rounds_ties_to_even() {
+        // Midpoint between 1.0 (code exp=15,m=0) and 1.25 (m=1) is
+        // 1.125 → ties to even mantissa (1.0). Midpoint 1.375 → 1.5.
+        assert_eq!(fp8_to_f32(fp8_from_f32(1.125)), 1.0);
+        assert_eq!(fp8_to_f32(fp8_from_f32(1.375)), 1.5);
+        assert_eq!(fp8_to_f32(fp8_from_f32(-1.125)), -1.0);
+    }
+
+    #[test]
+    fn prop_fp8_relative_error_bound() {
+        Prop::new(17).cases(128).run("fp8 rel error", |rng| {
+            let n = rng.range(1, 200);
+            let scale = rng.f32_range(1e-3, 1000.0);
+            let x = rng.normal_vec(n, scale);
+            for &v in &x {
+                let back = fp8_to_f32(fp8_from_f32(v));
+                let bound = (v.abs() * FP8_REL_ERR).max(FP8_ABS_ERR);
+                if (v - back).abs() > bound {
+                    return Err(format!("{v} -> {back}, bound {bound}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fp8_monotone() {
+        // Encoding preserves order — a sanity property that catches
+        // exponent/mantissa packing mistakes.
+        Prop::new(19).cases(128).run("fp8 monotone", |rng| {
+            let a = rng.f32_range(-60000.0, 60000.0);
+            let b = rng.f32_range(-60000.0, 60000.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let (dl, dh) = (fp8_to_f32(fp8_from_f32(lo)), fp8_to_f32(fp8_from_f32(hi)));
+            if dl <= dh {
+                Ok(())
+            } else {
+                Err(format!("{lo}->{dl} > {hi}->{dh}"))
+            }
+        });
+    }
+
+    #[test]
+    fn fp8_segmentwise_matches_whole() {
+        let mut rng = Rng::new(29);
+        let (rows, cols) = (9, 12);
+        let x = rng.normal_vec(rows * cols, 3.0);
+        let whole = fp8_encode_rows(&x, rows, cols);
+        let head = fp8_encode_rows(&x[..4 * cols], 4, cols);
+        let tail = fp8_encode_rows(&x[4 * cols..], rows - 4, cols);
+        assert_eq!(&whole.data[..4 * cols], &head.data[..]);
+        assert_eq!(&whole.data[4 * cols..], &tail.data[..]);
+    }
+
+    // ---- int4 ----
+
+    #[test]
+    fn int4_extremes_and_zero() {
+        let x = [1.0f32, -1.0, 0.5, 0.0];
+        let q = quantize4_rows(&x, 1, 4);
+        let back = dequantize4_rows(&q);
+        assert_eq!(back[0], 1.0);
+        assert_eq!(back[1], -1.0);
+        assert_eq!(back[3], 0.0);
+        assert_eq!(q.data.len(), 2); // 4 nibbles packed into 2 bytes
+    }
+
+    #[test]
+    fn int4_odd_cols_pack_per_row() {
+        // 3 cols → 2 bytes per row; the dangling high nibble stays 0, so
+        // rows never share a byte and wire bytes are rows·ceil(cols/2).
+        let x = [1.0f32, -1.0, 0.25, 2.0, 0.5, -2.0];
+        let q = quantize4_rows(&x, 2, 3);
+        assert_eq!(q.data.len(), 4);
+        assert_eq!(q.wire_bytes(), 2 * 4 + 4);
+        assert_eq!(q.data[1] >> 4, 0, "row 0 dangling nibble");
+        assert_eq!(q.data[3] >> 4, 0, "row 1 dangling nibble");
+    }
+
+    #[test]
+    fn int4_segmentwise_matches_whole() {
+        let mut rng = Rng::new(31);
+        let (rows, cols) = (11, 7); // odd cols on purpose
+        let x = rng.normal_vec(rows * cols, 2.0);
+        let whole = quantize4_rows(&x, rows, cols);
+        let split = 4;
+        let head = quantize4_rows(&x[..split * cols], split, cols);
+        let tail = quantize4_rows(&x[split * cols..], rows - split, cols);
+        assert_eq!(&whole.scales[..split], &head.scales[..]);
+        assert_eq!(&whole.scales[split..], &tail.scales[..]);
+        let rb = cols.div_ceil(2);
+        assert_eq!(&whole.data[..split * rb], &head.data[..]);
+        assert_eq!(&whole.data[split * rb..], &tail.data[..]);
+    }
+
+    #[test]
+    fn int4_add_equals_decode_then_add() {
+        let mut rng = Rng::new(37);
+        let x = rng.normal_vec(5 * 9, 1.0);
+        let q = quantize4_rows(&x, 5, 9);
+        let mut acc = rng.normal_vec(5 * 9, 1.0);
+        let expect: Vec<f32> =
+            acc.iter().zip(dequantize4_rows(&q)).map(|(a, b)| a + b).collect();
+        dequantize4_add(&q, &mut acc);
+        assert_eq!(acc, expect);
+    }
+
+    #[test]
+    fn prop_int4_roundtrip_error_bound() {
+        Prop::new(41).cases(128).run("int4 roundtrip bound", |rng| {
+            let rows = rng.range(1, 12);
+            let cols = rng.range(1, 40);
+            let scale = rng.f32_range(1e-3, 100.0);
+            let x = rng.normal_vec(rows * cols, scale);
+            let q = quantize4_rows(&x, rows, cols);
+            let back = dequantize4_rows(&q);
+            for r in 0..rows {
+                let bound = q.scales[r] * 0.5 + scale * 1e-5;
+                for c in 0..cols {
+                    let err = (x[r * cols + c] - back[r * cols + c]).abs();
+                    if err > bound {
+                        return Err(format!("err {err} > bound {bound}"));
+                    }
                 }
             }
             Ok(())

@@ -10,7 +10,7 @@
 
 pub mod spec_decode;
 
-use crate::config::{SimExperiment, Strategy};
+use crate::config::{CommQuant, SimExperiment, Strategy};
 use crate::hw::NodeProfile;
 use crate::model::ModelSpec;
 use crate::sim::{simulate, OpGraph, OpKind, Timeline};
@@ -122,6 +122,39 @@ impl Coster {
         2.0 * (r as f64 - 1.0)
             * (self.node.link.alpha_s + wire / self.node.link.link_bytes_per_s)
     }
+}
+
+/// Post-quantization bytes one TP collective of `t` tokens puts on the
+/// wire at rung `q` — exactly the engine's accounting
+/// (`collective::Wire::bytes` via [`CommQuant::wire_bytes`], scale
+/// vectors and nibble packing included), evaluated at the model's
+/// `d_model`. The bytes axis of the `sim_precision` sweep
+/// (BENCH_PRECISION.json): multiply by `2·n_layers·allreduces` for an
+/// iteration's wire volume.
+pub fn wire_bytes_per_collective(model: &ModelSpec, t: usize, q: CommQuant) -> usize {
+    q.wire_bytes(t, model.d_model)
+}
+
+/// Predicted wall time of one blocking TP pass over a `t`-token prefill
+/// chunk with both per-layer collectives priced at wire rung `q` — the
+/// tok/s axis of the `sim_precision` sweep. The blocking skeleton (no
+/// cross-chunk overlap) isolates the rung effect: walking down the
+/// ladder changes only the `2·n_layers` collective terms, so the
+/// iteration time is monotone down the ladder and the Fp16→Int8 gap
+/// equals the legacy `int8_wire` gap exactly
+/// ([`NodeProfile::allreduce_rung_s`]).
+pub fn ladder_iteration_s(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    t: usize,
+    q: CommQuant,
+) -> f64 {
+    assert!(t >= 1);
+    let c = Coster { node: node.clone(), model: model.clone(), int8_wire: false };
+    let bytes = t * model.d_model * model.act_bytes;
+    let ar = node.allreduce_rung_s(bytes, q);
+    let layer = c.attn_block_s(t, 0) + c.mlp_block_s(t) + 2.0 * ar;
+    model.n_layers as f64 * layer
 }
 
 /// Push a compute block as `segments` chained launches; returns the id of
@@ -1012,6 +1045,52 @@ mod tests {
         e.int8_wire = true;
         let int8 = reduction_vs_serial(&e);
         assert!(int8 > fp16, "int8 wire gain {int8} !> fp16 {fp16}");
+    }
+
+    fn wire_case(q: CommQuant) -> usize {
+        wire_bytes_per_collective(&ModelSpec::tiny_gqa(), 7, q)
+    }
+
+    #[test]
+    fn wire_bytes_per_collective_hand_arithmetic() {
+        // tiny_gqa d_model = 128; t = 7 rows. Hand arithmetic per rung:
+        // f32/fp16 raw f32 wire 7·128·4; int8 7 scales + 7·128 bytes;
+        // fp8 7·128 bytes, no scales; int4 7 scales + 7·64 packed bytes.
+        assert_eq!(wire_case(CommQuant::F32), 7 * 128 * 4);
+        assert_eq!(wire_case(CommQuant::Fp16), 7 * 128 * 4);
+        assert_eq!(wire_case(CommQuant::Int8), 7 * 4 + 7 * 128);
+        assert_eq!(wire_case(CommQuant::Fp8), 7 * 128);
+        assert_eq!(wire_case(CommQuant::Int4), 7 * 4 + 7 * 64);
+        // Odd cols: packing rounds up per row.
+        let mut m = ModelSpec::tiny_gqa();
+        m.d_model = 129;
+        assert_eq!(wire_bytes_per_collective(&m, 3, CommQuant::Int4), 3 * 4 + 3 * 65);
+    }
+
+    #[test]
+    fn ladder_iteration_monotone_down_the_ladder() {
+        // The sim_precision tok/s axis: on the comm-dominated 4090
+        // profile every step down the ladder must strictly shrink the
+        // iteration, and the Fp16→Int8 step reproduces the legacy
+        // int8_wire gap exactly.
+        let node = NodeProfile::rtx4090(4);
+        let model = ModelSpec::mha_30b();
+        let s: Vec<f64> =
+            CommQuant::LADDER.iter().map(|&q| ladder_iteration_s(&node, &model, 4096, q)).collect();
+        for (w, q) in s.windows(2).zip(CommQuant::LADDER.windows(2)) {
+            assert!(w[1] < w[0], "{:?} -> {:?} did not shrink: {s:?}", q[0], q[1]);
+        }
+        let c = Coster { node: node.clone(), model: model.clone(), int8_wire: false };
+        let legacy_gap = 2.0 * model.n_layers as f64 * (c.ar_s(4096, 1) - {
+            let c8 = Coster { node: node.clone(), model: model.clone(), int8_wire: true };
+            c8.ar_s(4096, 1)
+        });
+        let ladder_gap = ladder_iteration_s(&node, &model, 4096, CommQuant::Fp16)
+            - ladder_iteration_s(&node, &model, 4096, CommQuant::Int8);
+        assert!(
+            (ladder_gap - legacy_gap).abs() <= 1e-9 * legacy_gap.max(1e-12),
+            "ladder {ladder_gap} vs legacy {legacy_gap}"
+        );
     }
 
     fn mix(prefill: usize, b: usize, fused: bool) -> MixedIteration {

@@ -17,6 +17,12 @@
 //!   checkpoint-free and exact);
 //! * **determinism** — the same seeded plan spec reproduces the same
 //!   outcome.
+//!
+//! PR-8 extends the sweep down the wire-precision ladder: poisoned
+//! fp8/int4 ring segments must surface as the same typed
+//! [`EngineError::WireCorrupt`] and replay to token identity at the
+//! same rung (the quantized codecs are deterministic, so replay stays
+//! checkpoint-free and exact — DESIGN.md §16).
 
 use std::collections::BTreeSet;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -73,6 +79,9 @@ struct Worker {
     ring: RingHandle,
     port: StagePort,
     inj: Arc<FaultInjector>,
+    /// Wire rung for this worker's ring collectives (PR-8: the chaos
+    /// protocol must hold on the quantized rungs too).
+    rung: CommQuant,
 }
 
 impl Worker {
@@ -94,7 +103,7 @@ impl Worker {
             if self.inj.poll_wire(self.rank, false) {
                 self.ring.poison_next_send();
             }
-            self.ring.try_allreduce(&mut data, rows, cols, CommQuant::F32)?;
+            self.ring.try_allreduce(&mut data, rows, cols, self.rung)?;
         }
         if self.port.has_next() {
             if self.inj.poll_wire(self.rank, true) {
@@ -145,8 +154,9 @@ struct MiniMesh {
 
 impl MiniMesh {
     /// Spawn a `pp × tp` grid of workers over fresh per-stage rings and
-    /// stage-chained ports, all sharing one injector.
-    fn spawn(shape: Shape, injector: &Arc<FaultInjector>) -> MiniMesh {
+    /// stage-chained ports, all sharing one injector; every ring
+    /// collective runs at `rung`.
+    fn spawn(shape: Shape, injector: &Arc<FaultInjector>, rung: CommQuant) -> MiniMesh {
         let (reply_tx, reply_rx) = channel();
         let (event_tx, event_rx) = channel();
         let mut job_txs = Vec::new();
@@ -159,6 +169,7 @@ impl MiniMesh {
                     ring: handle,
                     port,
                     inj: Arc::clone(injector),
+                    rung,
                 };
                 let (tx, rx) = channel();
                 let (reply, events) = (reply_tx.clone(), event_tx.clone());
@@ -225,18 +236,28 @@ impl MiniMesh {
     }
 }
 
-/// What a run produced: per-sequence token streams plus how many mesh
-/// respawns it took to get there.
+/// What a run produced: per-sequence token streams, how many mesh
+/// respawns it took to get there, and the typed error behind each one
+/// (in detection order — PR-8 asserts poisoned quantized segments
+/// surface as `WireCorrupt`, not as a generic disconnect).
 struct RunOutcome {
     seqs: Vec<Vec<i32>>,
     recoveries: usize,
+    errors: Vec<EngineError>,
 }
 
 /// Serve `N_SEQS` sequences to `TARGET` tokens each through the mini
 /// mesh, recovering from injected faults by respawn + replay of the
 /// uncommitted iteration.
 fn run_shape(shape: Shape, plan: FaultPlan) -> RunOutcome {
-    run_shape_preempting(shape, plan, 0)
+    run_shape_at(shape, plan, CommQuant::F32)
+}
+
+/// [`run_shape`] with an explicit wire rung for every ring collective
+/// (PR-8: the recovery protocol is rung-agnostic; replay determinism
+/// must hold even when the wire rounds).
+fn run_shape_at(shape: Shape, plan: FaultPlan, rung: CommQuant) -> RunOutcome {
+    run_shape_preempting_at(shape, plan, 0, rung)
 }
 
 /// Like [`run_shape`], but every `preempt_period` iterations the
@@ -247,11 +268,22 @@ fn run_shape(shape: Shape, plan: FaultPlan) -> RunOutcome {
 /// stays packed (the serve loop's anti-livelock guard). `0` disables
 /// preemption.
 fn run_shape_preempting(shape: Shape, plan: FaultPlan, preempt_period: usize) -> RunOutcome {
+    run_shape_preempting_at(shape, plan, preempt_period, CommQuant::F32)
+}
+
+/// [`run_shape_preempting`] with an explicit wire rung.
+fn run_shape_preempting_at(
+    shape: Shape,
+    plan: FaultPlan,
+    preempt_period: usize,
+    rung: CommQuant,
+) -> RunOutcome {
     let max_recoveries = plan.events.len() + 2;
     let injector = Arc::new(FaultInjector::new(plan));
-    let mut mesh = MiniMesh::spawn(shape, &injector);
+    let mut mesh = MiniMesh::spawn(shape, &injector, rung);
     let mut seqs: Vec<Vec<i32>> = vec![Vec::new(); N_SEQS];
     let mut recoveries = 0usize;
+    let mut errors = Vec::new();
     let mut tick = 0usize;
     while seqs.iter().any(|s| s.len() < TARGET) {
         tick += 1;
@@ -308,13 +340,14 @@ fn run_shape_preempting(shape: Shape, plan: FaultPlan, preempt_period: usize) ->
                 // respawn, re-run the uncommitted iteration. Consumed
                 // fault events never re-fire (atomic claim), so the
                 // retry loop always converges.
+                errors.push(error);
                 mesh.teardown();
-                mesh = MiniMesh::spawn(shape, &injector);
+                mesh = MiniMesh::spawn(shape, &injector, rung);
             }
         }
     }
     mesh.teardown();
-    RunOutcome { seqs, recoveries }
+    RunOutcome { seqs, recoveries, errors }
 }
 
 #[test]
@@ -405,6 +438,80 @@ fn seeded_chaos_run_is_reproducible() {
 }
 
 #[test]
+fn poisoned_quantized_segments_typed_corrupt_and_token_identity() {
+    // PR-8 satellite: the sub-int8 wire rungs (fp8 e5m2, packed int4)
+    // ride the same supervised frames as f32, so a poisoned segment at
+    // those rungs must (a) surface as a *typed* `WireCorrupt`, not a
+    // generic disconnect, (b) cost zero sequences, and (c) replay to
+    // token streams bit-identical to the fault-free run at the *same*
+    // rung. Identity across rungs is not expected — lower rungs round
+    // the wire (rust/tests/wire_precision.rs pins that drift) — so the
+    // fault-free baseline is re-run per rung.
+    for shape in [SHAPES[1], SHAPES[3]] {
+        let world = shape.pp * shape.tp;
+        for rung in [CommQuant::Fp8, CommQuant::Int4] {
+            let baseline = run_shape_at(shape, FaultPlan::empty(), rung);
+            assert_eq!(
+                baseline.recoveries,
+                0,
+                "{} @ {}: fault-free run recovered",
+                shape.name,
+                rung.label()
+            );
+            let mut plans = vec![
+                "poison:rank=0:iter=2".to_string(),
+                format!("poison:rank={}:iter=3", world - 1),
+            ];
+            if shape.pp > 1 {
+                plans.push("poison:rank=0:iter=2:p2p".to_string());
+            }
+            plans.push(format!("seed=11:n=2:ranks={world}:iters=6"));
+            for spec in &plans {
+                let plan = FaultPlan::parse(spec).expect("sweep specs are valid");
+                let clock = Instant::now();
+                let out = run_shape_at(shape, plan, rung);
+                assert!(
+                    clock.elapsed() < Duration::from_secs(60),
+                    "{} @ {} × {spec:?}: wall-clock bound blown",
+                    shape.name,
+                    rung.label()
+                );
+                for (id, s) in out.seqs.iter().enumerate() {
+                    assert_eq!(
+                        s.len(),
+                        TARGET,
+                        "{} @ {} × {spec:?}: seq {id} dropped tokens",
+                        shape.name,
+                        rung.label()
+                    );
+                }
+                assert_eq!(
+                    out.seqs, baseline.seqs,
+                    "{} @ {} × {spec:?}: tokens diverged from the fault-free run at this rung",
+                    shape.name,
+                    rung.label()
+                );
+                if spec.starts_with("poison:") {
+                    assert!(
+                        out.recoveries >= 1,
+                        "{} @ {} × {spec:?}: poison did not force a recovery",
+                        shape.name,
+                        rung.label()
+                    );
+                    assert!(
+                        out.errors.iter().any(|e| matches!(e, EngineError::WireCorrupt { .. })),
+                        "{} @ {} × {spec:?}: poison surfaced as {:?}, not WireCorrupt",
+                        shape.name,
+                        rung.label(),
+                        out.errors
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn teardown_mid_iteration_terminates() {
     // Shutdown-hang regression in miniature: tear the mesh down while
     // an iteration (with a stalled rank) is still in flight. The
@@ -413,7 +520,7 @@ fn teardown_mid_iteration_terminates() {
     let shape = SHAPES[1];
     let plan = FaultPlan::parse("stall:rank=1:iter=1:ms=50").unwrap();
     let injector = Arc::new(FaultInjector::new(plan));
-    let mesh = MiniMesh::spawn(shape, &injector);
+    let mesh = MiniMesh::spawn(shape, &injector, CommQuant::F32);
     injector.begin_iteration();
     let data = vec![0.5f32; 2 * COLS];
     mesh.broadcast(2, COLS, &data).expect("fresh mesh accepts jobs");

@@ -1,0 +1,458 @@
+//! WIRE-PRECISION LADDER — the PR-8 property harness. Pins the error
+//! contract of every rung of the wire ladder (DESIGN.md §16) at three
+//! levels, all pure rust (no model artifacts):
+//!
+//! * **codec round trips** — per-rung quantize→dequantize error bounds
+//!   over random segment widths, rank counts, and adversarial
+//!   magnitudes (denormals, zeros, ±inf, values past the fp8 saturation
+//!   point), plus bit-exactness under row segmentation — the property
+//!   that makes segment-streamed collectives byte-identical to
+//!   monolithic ones;
+//! * **ring reduction** — measured error of the segment-streamed and
+//!   fused-rows all-reduces against an f64 golden stays under an
+//!   analytic bound that is explicit in the world size (each of the
+//!   ≤ 2(R−1) encode/decode events contributes at most one half-step at
+//!   the partial-sum magnitude);
+//! * **end to end** — a miniature pp×tp mesh (the chaos-harness shape
+//!   set: sequential / mixed / spec / pp2×tp2) runs greedy decoding
+//!   under a per-phase [`PrecisionPolicy`]: lossless rungs are
+//!   bit-identical to the f32 baseline, int8 keeps token identity, and
+//!   the sub-int8 rungs stay inside pinned drift bounds and are
+//!   deterministic run to run.
+
+use iso::collective::{ring, run_on_ring, stage_grid, RingHandle, StagePort};
+use iso::config::{CommQuant, PrecisionPolicy};
+use iso::quant;
+use iso::util::prop::Prop;
+use iso::util::rng::Rng;
+
+// ------------------------------------------------------------- codecs --
+
+/// A row magnitude from an adversarial exponent range: denormal-scale
+/// through overflow-scale, plus exact zero.
+fn adversarial_magnitude(rng: &mut Rng) -> f32 {
+    match rng.range(0, 6) {
+        0 => 0.0,
+        1 => 1e-38,                          // denormal-scale rows
+        2 => quant::FP8_MIN_NORMAL * 0.5,    // below the fp8 normal range
+        3 => rng.f32_range(0.5, 2.0),        // activation scale
+        4 => rng.f32_range(1e3, 6e4),        // near fp8 saturation
+        _ => 1e30,                           // far past fp8 saturation
+    }
+}
+
+fn fill_row(rng: &mut Rng, mag: f32, cols: usize) -> Vec<f32> {
+    (0..cols).map(|_| rng.f32_range(-1.0, 1.0) * mag).collect()
+}
+
+#[test]
+fn int8_roundtrip_half_step_per_row_any_magnitude() {
+    Prop::new(0x81).cases(200).run("int8 round trip", |rng| {
+        let (rows, cols) = (rng.range(1, 6), rng.range(1, 48));
+        let mut x = Vec::new();
+        for _ in 0..rows {
+            let mag = adversarial_magnitude(rng);
+            x.extend(fill_row(rng, mag, cols));
+        }
+        let q = quant::quantize_rows(&x, rows, cols);
+        let y = quant::dequantize_rows(&q);
+        for r in 0..rows {
+            // Half a step per row, plus f32 slop proportional to the
+            // row magnitude (v·inv and code·scale each round once).
+            // The 1e-36 term covers the degenerate-scale contract: a
+            // denormal row scale encodes the row as exact zeros
+            // (`quant::row_scale`), leaving |v| ≤ ~4e-37 of error.
+            let bound = q.scales[r] * 0.5 * 1.001 + q.scales[r] * 127.0 * 1e-5 + 1e-36;
+            for c in 0..cols {
+                let (v, d) = (x[r * cols + c], y[r * cols + c]);
+                if !v.is_finite() {
+                    continue; // ±inf clamps to full scale by contract
+                }
+                if (d - v).abs() > bound {
+                    return Err(format!("row {r}: |{d} - {v}| > {bound}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn int4_roundtrip_half_step_per_row_any_magnitude() {
+    Prop::new(0x41).cases(200).run("int4 round trip", |rng| {
+        let (rows, cols) = (rng.range(1, 6), rng.range(1, 48));
+        let mut x = Vec::new();
+        for _ in 0..rows {
+            let mag = adversarial_magnitude(rng);
+            x.extend(fill_row(rng, mag, cols));
+        }
+        let q = quant::quantize4_rows(&x, rows, cols);
+        let y = quant::dequantize4_rows(&q);
+        let err = quant::max_roundtrip_error4(&q);
+        for (i, (&v, &d)) in x.iter().zip(y.iter()).enumerate() {
+            if !v.is_finite() {
+                continue;
+            }
+            let bound = err * 1.001 + v.abs() * 1e-5 + 1e-36;
+            if (d - v).abs() > bound {
+                return Err(format!("elem {i}: |{d} - {v}| > {bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fp8_roundtrip_format_bound_and_saturation() {
+    Prop::new(0xF8).cases(400).run("fp8 round trip", |rng| {
+        let mag = adversarial_magnitude(rng);
+        let v = rng.f32_range(-1.0, 1.0) * mag;
+        let d = quant::fp8_to_f32(quant::fp8_from_f32(v));
+        let a = v.abs();
+        if a > quant::FP8_MAX {
+            // Saturating encode: adversarial magnitudes stay finite and
+            // sign-correct on the wire.
+            if d.abs() != quant::FP8_MAX || d.signum() != v.signum() {
+                return Err(format!("{v} must saturate to ±FP8_MAX, got {d}"));
+            }
+        } else {
+            let bound = (a * quant::FP8_REL_ERR).max(quant::FP8_ABS_ERR);
+            if (d - v).abs() > bound {
+                return Err(format!("|{d} - {v}| > {bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Row-local encodings are the property the segmented collectives rely
+/// on: encoding a payload segment-by-segment, at any split, is
+/// bit-identical to encoding it whole. Pinned for both scaled rungs
+/// (fp8 is elementwise, so it holds trivially).
+#[test]
+fn segmentation_bit_exactness_any_split() {
+    Prop::new(0x5E6).cases(100).run("segmented encode ==", |rng| {
+        let (rows, cols) = (rng.range(2, 9), rng.range(1, 33));
+        let mut x = Vec::new();
+        for _ in 0..rows {
+            let mag = adversarial_magnitude(rng);
+            x.extend(fill_row(rng, mag, cols));
+        }
+        let cut = rng.range(1, rows);
+        let whole8 = quant::quantize_rows(&x, rows, cols);
+        let lo8 = quant::quantize_rows(&x[..cut * cols], cut, cols);
+        let hi8 = quant::quantize_rows(&x[cut * cols..], rows - cut, cols);
+        if [&lo8.data[..], &hi8.data[..]].concat() != whole8.data
+            || [&lo8.scales[..], &hi8.scales[..]].concat() != whole8.scales
+        {
+            return Err(format!("int8 split at {cut} not bit-identical"));
+        }
+        let whole4 = quant::quantize4_rows(&x, rows, cols);
+        let lo4 = quant::quantize4_rows(&x[..cut * cols], cut, cols);
+        let hi4 = quant::quantize4_rows(&x[cut * cols..], rows - cut, cols);
+        if [&lo4.data[..], &hi4.data[..]].concat() != whole4.data
+            || [&lo4.scales[..], &hi4.scales[..]].concat() != whole4.scales
+        {
+            return Err(format!("int4 split at {cut} not bit-identical (nibble restart)"));
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------- ring --
+
+/// Elementwise error of one encode/decode event at partial-sum
+/// magnitude `m`, per rung. Lossless rungs get the f32-accumulation
+/// term only.
+fn event_error(q: CommQuant, m: f32) -> f32 {
+    match q {
+        CommQuant::F32 | CommQuant::Fp16 => 0.0,
+        CommQuant::Int8 => m / 127.0 * 0.5,
+        CommQuant::Fp8 => (m * quant::FP8_REL_ERR).max(quant::FP8_ABS_ERR),
+        CommQuant::Int4 => m / 7.0 * 0.5,
+    }
+}
+
+/// Analytic ring bound: ≤ 2(R−1) encode/decode events (reduce-scatter
+/// hops plus all-gather re-encodes), each at most one event error at
+/// the largest partial-sum magnitude (R·pmax, with 1.5× slack for error
+/// feedback into later scales), plus f32 accumulation slop.
+fn ring_bound(q: CommQuant, n: usize, pmax: f32) -> f32 {
+    let events = 2.0 * (n as f32 - 1.0);
+    events * event_error(q, 1.5 * n as f32 * pmax) + n as f32 * pmax * 1e-5
+}
+
+fn rank_parts(n: usize, rows: usize, cols: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Rng::new(seed ^ (r as u64 + 1).wrapping_mul(0x9E37));
+            (0..rows * cols).map(|_| rng.f32_range(-1.0, 1.0)).collect()
+        })
+        .collect()
+}
+
+fn golden_sum(parts: &[Vec<f32>]) -> Vec<f64> {
+    (0..parts[0].len())
+        .map(|i| parts.iter().map(|p| p[i] as f64).sum::<f64>())
+        .collect()
+}
+
+#[test]
+fn segmented_ring_error_within_analytic_bound_in_world_size() {
+    for n in [2usize, 4, 8] {
+        let (rows, cols) = (8usize, 16usize);
+        let parts = rank_parts(n, rows, cols, 0x517E);
+        let golden = golden_sum(&parts);
+        let pmax = parts.iter().flatten().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for q in CommQuant::LADDER {
+            let segments = if n <= 4 { 2 } else { 1 };
+            let results = run_on_ring(n, |r, h| {
+                let mut data = parts[r].clone();
+                h.allreduce_seg(&mut data, rows, cols, q, segments);
+                data
+            });
+            let bound = ring_bound(q, n, pmax);
+            for (rank, out) in results.iter().enumerate() {
+                let err = out
+                    .iter()
+                    .zip(golden.iter())
+                    .fold(0.0f32, |m, (&a, &g)| m.max((a as f64 - g).abs() as f32));
+                assert!(
+                    err <= bound,
+                    "{}: rank {rank}/{n} seg ring err {err} > analytic {bound}",
+                    q.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_ring_error_within_analytic_bound_in_world_size() {
+    for n in [2usize, 3, 4, 8] {
+        let (rows, cols) = (5usize, 9usize); // deliberately ragged
+        let parts = rank_parts(n, rows, cols, 0xF05E);
+        let golden = golden_sum(&parts);
+        let pmax = parts.iter().flatten().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for q in CommQuant::LADDER {
+            let results = run_on_ring(n, |r, h| {
+                let mut data = parts[r].clone();
+                h.allreduce_rows_fused(&mut data, rows, cols, q);
+                data
+            });
+            let bound = ring_bound(q, n, pmax);
+            for (rank, out) in results.iter().enumerate() {
+                let err = out
+                    .iter()
+                    .zip(golden.iter())
+                    .fold(0.0f32, |m, (&a, &g)| m.max((a as f64 - g).abs() as f32));
+                assert!(
+                    err <= bound,
+                    "{}: rank {rank}/{n} fused ring err {err} > analytic {bound}",
+                    q.label()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- mini mesh --
+
+const COLS: usize = 8;
+const ITERS: usize = 4;
+
+#[derive(Clone, Copy)]
+struct Shape {
+    name: &'static str,
+    pp: usize,
+    tp: usize,
+    lane: usize,
+    k: usize,
+}
+
+/// The chaos-harness shape set: every scheduler the coordinator runs,
+/// in miniature.
+const SHAPES: [Shape; 4] = [
+    Shape { name: "sequential", pp: 1, tp: 2, lane: 1, k: 1 },
+    Shape { name: "mixed", pp: 1, tp: 2, lane: 3, k: 1 },
+    Shape { name: "spec", pp: 1, tp: 2, lane: 3, k: 2 },
+    Shape { name: "pp2xtp2", pp: 2, tp: 2, lane: 3, k: 1 },
+];
+
+/// Deterministic "activation" input for one iteration. The 7/16 offset
+/// and mod-19 grid keep every greedy row sum at least ~0.05 token
+/// quanta away from a rounding boundary in the f32 run — an order of
+/// magnitude more than the int8 rung can drift it, so the int8
+/// token-identity assertion has real margin rather than luck.
+fn mesh_input(iter: usize, rows: usize) -> Vec<f32> {
+    (0..rows * COLS)
+        .map(|i| 0.4375 + ((i * 31 + iter * 13) % 19) as f32 / 19.0)
+        .collect()
+}
+
+/// Run the mini mesh under a wire-precision policy and return the
+/// concatenated last-stage logits and greedy tokens. The step mirrors
+/// the coordinator's split: per-layer collectives ride
+/// `policy.prefill` through the segment-streamed path; the final
+/// lane-fused collective rides `policy.decode` through
+/// `allreduce_rows_fused` (DESIGN.md §16).
+fn run_mesh(shape: Shape, policy: PrecisionPolicy) -> (Vec<f32>, Vec<i32>) {
+    let rows = shape.lane * shape.k;
+    let mut rings: Vec<Vec<RingHandle>> = (0..shape.pp).map(|_| ring(shape.tp)).collect();
+    let mut grid: Vec<Vec<StagePort>> = stage_grid(shape.pp, shape.tp);
+    let mut workers = Vec::new();
+    for s in (0..shape.pp).rev() {
+        for t in (0..shape.tp).rev() {
+            workers.push((s, t, rings[s].pop().unwrap(), grid[s].pop().unwrap()));
+        }
+    }
+    let mut result = None;
+    std::thread::scope(|scope| {
+        let mut join = Vec::new();
+        for (s, t, mut rh, mut port) in workers {
+            join.push(scope.spawn(move || {
+                let mut logits = Vec::new();
+                let mut tokens = Vec::new();
+                for iter in 0..ITERS {
+                    let mut data = if port.has_prev() {
+                        port.recv_prev().2
+                    } else {
+                        mesh_input(iter, rows)
+                    };
+                    for layer in 0..2usize {
+                        for v in data.iter_mut() {
+                            *v = (*v + layer as f32 * 0.125) * (t as f32 + 1.0) * 0.25;
+                        }
+                        rh.allreduce_seg(&mut data, rows, COLS, policy.prefill, 2);
+                    }
+                    for v in data.iter_mut() {
+                        *v *= 0.5;
+                    }
+                    rh.allreduce_rows_fused(&mut data, rows, COLS, policy.decode);
+                    if port.has_next() {
+                        port.send_next(data, rows, COLS);
+                    } else if t == 0 {
+                        tokens.extend(
+                            data.chunks_exact(COLS)
+                                .map(|row| (row.iter().sum::<f32>() / 8.0).round() as i32),
+                        );
+                        logits.extend_from_slice(&data);
+                    }
+                }
+                (s, t, logits, tokens)
+            }));
+        }
+        for j in join {
+            let (s, t, logits, tokens) = j.join().expect("mesh rank panicked");
+            if s == shape.pp - 1 && t == 0 {
+                result = Some((logits, tokens));
+            }
+        }
+    });
+    result.expect("last stage produced output")
+}
+
+fn uniform(q: CommQuant) -> PrecisionPolicy {
+    PrecisionPolicy { prefill: q, decode: q }
+}
+
+#[test]
+fn e2e_lossless_rungs_bit_identical_to_f32() {
+    for shape in SHAPES {
+        let (gold_logits, gold_tokens) = run_mesh(shape, uniform(CommQuant::F32));
+        let (fp16_logits, fp16_tokens) = run_mesh(shape, uniform(CommQuant::Fp16));
+        // fp16 moves raw f32 on the CPU wire (DESIGN.md §16), so it is
+        // a rung of the *cost* ladder only — numerics are identical.
+        assert_eq!(gold_tokens, fp16_tokens, "{}", shape.name);
+        assert_eq!(
+            gold_logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            fp16_logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{}: fp16 logits must be bit-identical",
+            shape.name
+        );
+        assert_eq!(gold_tokens.len(), ITERS * shape.lane * shape.k, "{}", shape.name);
+    }
+}
+
+#[test]
+fn e2e_int8_token_identity_and_pinned_drift() {
+    for shape in SHAPES {
+        let (gold_logits, gold_tokens) = run_mesh(shape, uniform(CommQuant::F32));
+        let (logits, tokens) = run_mesh(shape, uniform(CommQuant::Int8));
+        let gmax = gold_logits.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let drift = logits
+            .iter()
+            .zip(gold_logits.iter())
+            .fold(0.0f32, |m, (&a, &g)| m.max((a - g).abs()));
+        // ≤ 6 encode/decode events on this 2-rank mesh, each a half
+        // int8 step of the running magnitude — far under the 8.0 token
+        // quantum, so greedy tokens must survive the rung exactly.
+        assert!(drift <= 0.30 * gmax.max(1.0), "{}: int8 drift {drift}", shape.name);
+        assert_eq!(gold_tokens, tokens, "{}: int8 must keep token identity", shape.name);
+    }
+}
+
+#[test]
+fn e2e_sub_int8_rungs_pinned_drift_and_deterministic() {
+    for shape in SHAPES {
+        let (gold_logits, _) = run_mesh(shape, uniform(CommQuant::F32));
+        let gmax = gold_logits.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for q in [CommQuant::Fp8, CommQuant::Int4] {
+            let (logits, tokens) = run_mesh(shape, uniform(q));
+            let (logits2, tokens2) = run_mesh(shape, uniform(q));
+            assert_eq!(tokens, tokens2, "{} {}: rung must be deterministic", shape.name, q.label());
+            assert_eq!(
+                logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                logits2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{} {}: reruns must be bit-identical",
+                shape.name,
+                q.label()
+            );
+            let drift = logits
+                .iter()
+                .zip(gold_logits.iter())
+                .fold(0.0f32, |m, (&a, &g)| m.max((a - g).abs()));
+            assert!(
+                logits.iter().all(|v| v.is_finite()),
+                "{} {}: non-finite logit",
+                shape.name,
+                q.label()
+            );
+            assert!(
+                drift <= 1.5 * gmax.max(1.0),
+                "{} {}: drift {drift} past pinned bound",
+                shape.name,
+                q.label()
+            );
+            assert_eq!(tokens.len(), ITERS * shape.lane * shape.k);
+        }
+    }
+}
+
+#[test]
+fn e2e_mixed_policy_decode_rung_only_bounds_drift_tighter() {
+    // Per-phase policy: prefill stays on the exact f32 rung, only the
+    // fused decode collective drops down the ladder — the drift must be
+    // no worse than running the whole mesh at the low rung.
+    for shape in SHAPES {
+        let (gold_logits, _) = run_mesh(shape, uniform(CommQuant::F32));
+        let gmax = gold_logits.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for q in [CommQuant::Int8, CommQuant::Fp8, CommQuant::Int4] {
+            let mixed = PrecisionPolicy { prefill: CommQuant::F32, decode: q };
+            let (logits, _) = run_mesh(shape, mixed);
+            let (uni_logits, _) = run_mesh(shape, uniform(q));
+            let drift = |xs: &[f32]| {
+                xs.iter()
+                    .zip(gold_logits.iter())
+                    .fold(0.0f32, |m, (&a, &g)| m.max((a - g).abs()))
+            };
+            let (d_mixed, d_uni) = (drift(&logits), drift(&uni_logits));
+            assert!(
+                d_mixed <= d_uni + 0.25 * gmax.max(1.0),
+                "{} {}: mixed-policy drift {d_mixed} worse than uniform {d_uni}",
+                shape.name,
+                q.label()
+            );
+        }
+    }
+}
