@@ -12,10 +12,12 @@
 //! `BENCH_PR6.json` (`ISO_PERF_SNAPSHOT_PR6`, the fault-rate ×
 //! recovery-overhead sweep, also CI-gated), `BENCH_SLO.json`
 //! (`ISO_PERF_SNAPSHOT_SLO`, the PR-7 offered-load SLO frontier, also
-//! CI-gated), and `BENCH_PRECISION.json`
-//! (`ISO_PERF_SNAPSHOT_PRECISION`, the PR-8 wire-precision ladder, also
-//! CI-gated): each engine sweep is recorded next to the simulator's
-//! prediction, so the sim-vs-engine trend direction is recorded per PR.
+//! CI-gated), `BENCH_PRECISION.json` (`ISO_PERF_SNAPSHOT_PRECISION`,
+//! the PR-8 wire-precision ladder, also CI-gated), and `BENCH_CP.json`
+//! (`ISO_PERF_SNAPSHOT_CP`, the PR-9 context-parallel factorization
+//! sweep, also CI-gated): each engine sweep is recorded next to the
+//! simulator's prediction, so the sim-vs-engine trend direction is
+//! recorded per PR.
 //!
 //! Requires `make artifacts` for the engine sections; the simulator
 //! sections always run.
@@ -27,10 +29,10 @@ use iso::model::ModelSpec;
 use iso::report::{append_perf_records, PerfRecord};
 use iso::runtime::Manifest;
 use iso::sched::{
-    bounded_tbt_s, epilogue_exposed_s, epilogue_s, expected_overhead_frac,
-    fused_epilogue_iteration_s, iteration_deadline_s, mixed_iteration_s, pp_best_config,
-    pp_bubble_fraction, pp_iteration_s, recovery_s, slo_admitted_frac, slo_ttft_s, Coster,
-    MixedIteration,
+    bounded_tbt_s, cp_best_config, cp_iteration_s, epilogue_exposed_s, epilogue_s,
+    expected_overhead_frac, fused_epilogue_iteration_s, iteration_deadline_s, mixed_iteration_s,
+    pp_best_config, pp_bubble_fraction, pp_iteration_s, recovery_s, slo_admitted_frac, slo_ttft_s,
+    Coster, MixedIteration,
 };
 use iso::util::bench::{bench, section};
 use iso::workload::{LenDist, TraceGen};
@@ -74,6 +76,10 @@ fn slo_snapshot_path() -> String {
 fn precision_snapshot_path() -> String {
     std::env::var("ISO_PERF_SNAPSHOT_PRECISION")
         .unwrap_or_else(|_| "../BENCH_PRECISION.json".into())
+}
+
+fn cp_snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT_CP").unwrap_or_else(|_| "../BENCH_CP.json".into())
 }
 
 /// The PP×TP factorizations of a 4-device node that the deterministic
@@ -768,6 +774,105 @@ fn engine_precision_sweep(path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The CP×TP factorizations of a 4-device node that the deterministic
+/// (CI-gated) simulator sweep exercises.
+const CP_CONFIGS: [(usize, usize); 3] = [(1, 4), (2, 2), (4, 1)];
+
+/// Simulator side of the PR-9 sweep (no artifacts needed, fully
+/// deterministic — gated against `BENCH_BASELINE.json` by
+/// `scripts/check_bench_regression.py` in CI): predicted prefill time of
+/// the third parallelism axis (`sched::cp_iteration_s`, DESIGN.md §17)
+/// across the CP×TP factorizations of a 4-device node, on both modeled
+/// platforms and three prompt lengths up to 1M tokens. The directions
+/// the gate pins: in the comm-bound regime (short and medium prompts on
+/// the PCIe 4090) the context-sharded configs beat the wide flat ring,
+/// while compute-dominated points (the NVLink A800 past ~64k, and the
+/// quadratic-attention-heavy 1M case on both platforms) favor flat TP,
+/// which divides every FLOP instead of sharding rows — the pp-vs-tp
+/// crossover one axis over.
+fn sim_cp_sweep(path: &str) {
+    let model = ModelSpec::mha_30b();
+    section("simulator: CP×TP factorization vs prompt length (30b, 4 devices)");
+    let mut records = Vec::new();
+    for (node_name, node) in [("4090-4", NodeProfile::rtx4090(4)), ("a800-4", NodeProfile::a800(4))]
+    {
+        let p2p = node.link;
+        let int8 = node.int8_wire_default;
+        for prompt in [4096usize, 65536, 1_048_576] {
+            for (cp, tp) in CP_CONFIGS {
+                let s = cp_iteration_s(&node, &model, prompt, cp, tp, &p2p, int8);
+                let pred_ms = s * 1e3;
+                let tok_s = prompt as f64 / s;
+                println!(
+                    "  {node_name} t={prompt:>7} cp{cp}×tp{tp}: {pred_ms:10.2}ms  {tok_s:8.0} tok/s"
+                );
+                records.push(
+                    PerfRecord::new(
+                        &format!("sim cp{cp} tp{tp} {node_name} t{prompt}"),
+                        pred_ms,
+                        pred_ms,
+                        pred_ms,
+                    )
+                    .with("cp", cp as f64)
+                    .with("tp", tp as f64)
+                    .with("prompt", prompt as f64)
+                    .with("pred_prefill_tok_s", tok_s),
+                );
+            }
+            let best = cp_best_config(&node, &model, prompt, &CP_CONFIGS, &p2p, int8);
+            println!(
+                "  → {node_name} t={prompt}: predicted fastest factorization cp{}×tp{}",
+                best.0, best.1
+            );
+        }
+    }
+    if let Err(e) = append_perf_records(path, "sim_cp", &records) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
+/// Engine side of the PR-9 sweep (artifact-gated, not in the baseline):
+/// measured prefill across CP×TP factorizations on the throttled link,
+/// with the shard-ring byte/stall counters recorded next to the wall
+/// time so the prefix-forward cost of each factorization is visible in
+/// the snapshot.
+fn engine_cp_sweep(path: &str) -> anyhow::Result<()> {
+    let prompt: Vec<i32> = (0..128).map(|i| ((i * 31) % 512) as i32).collect();
+    section("engine: prefill CP×TP sweep (tiny model, pcie-emu 40 MB/s, α=5µs)");
+    let mut records = Vec::new();
+    for (cp, tp) in [(1usize, 2usize), (2, 1), (2, 2)] {
+        let mut c = cfg(Strategy::Iso, tp, CommQuant::F32, Some(40.0));
+        c.link_alpha_us = 5.0;
+        c.cp = cp;
+        let mut engine = Engine::start(c)?;
+        engine.prefill(&prompt)?; // warmup
+        let r = bench(&format!("cp{cp}×tp{tp} iso pcie-emu"), 1, 6, || {
+            engine.prefill(&prompt).unwrap();
+        });
+        let report = engine.shutdown()?;
+        let m = report.metrics;
+        let tok_s = 128.0 / (r.mean_ms / 1e3);
+        println!(
+            "    {tok_s:7.0} tok/s  cp_shard {}B in {} msgs  cp_stall {:.2}ms",
+            m.cp_shard_bytes, m.cp_shard_msgs, m.cp_stall_ms
+        );
+        records.push(
+            PerfRecord::new(&format!("engine cp{cp} tp{tp}"), r.mean_ms, r.p50_ms, r.p95_ms)
+                .with("cp", cp as f64)
+                .with("tp", tp as f64)
+                .with("prefill_tok_s", tok_s)
+                .with("cp_shard_bytes", m.cp_shard_bytes as f64)
+                .with("cp_stall_ms", m.cp_stall_ms),
+        );
+    }
+    if let Err(e) = append_perf_records(path, "e2e_engine_cp", &records) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("  wrote CP×TP sweep to {path}");
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let path = snapshot_path();
     let pr2_path = pr2_snapshot_path();
@@ -776,6 +881,7 @@ fn main() -> anyhow::Result<()> {
     let pr6_path = pr6_snapshot_path();
     let slo_path = slo_snapshot_path();
     let precision_path = precision_snapshot_path();
+    let cp_path = cp_snapshot_path();
 
     // --- PR-2: simulator-predicted mixed-batching direction (no
     // artifacts needed).
@@ -800,6 +906,11 @@ fn main() -> anyhow::Result<()> {
     // --- PR-8: wire-precision ladder — bytes × drift × predicted tok/s
     // (no artifacts needed; gated against BENCH_BASELINE.json in CI).
     sim_precision_sweep(&precision_path);
+
+    // --- PR-9: CP×TP factorization × prompt length on both modeled
+    // platforms (no artifacts needed; gated against BENCH_BASELINE.json
+    // in CI).
+    sim_cp_sweep(&cp_path);
 
     // --- simulator side of the segment sweep (no artifacts needed).
     let sim_exp = SimExperiment::new(
@@ -936,6 +1047,10 @@ fn main() -> anyhow::Result<()> {
     // --- PR-8 tentpole: every rung of --wire-precision on the real
     // engine next to the simulator's predicted ladder.
     engine_precision_sweep(&precision_path)?;
+
+    // --- PR-9 tentpole: CP×TP factorizations on the real engine with
+    // the shard-ring counters next to the simulator's predicted sweep.
+    engine_cp_sweep(&cp_path)?;
 
     Ok(())
 }

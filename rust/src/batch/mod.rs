@@ -142,6 +142,45 @@ pub fn plan_prefill_pp(
     }
 }
 
+/// One CP group's assignment under [`cp_shard_spans`]: a contiguous
+/// run of chunk indices and the token span those chunks cover.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CpShardSpan {
+    /// First chunk index of the group's slice (inclusive).
+    pub chunk_lo: usize,
+    /// One past the last chunk index of the group's slice.
+    pub chunk_hi: usize,
+    /// First token of the group's shard within the padded prompt.
+    pub tok_lo: usize,
+    /// One past the last token of the group's shard.
+    pub tok_hi: usize,
+}
+
+/// Shard a chunk plan across `cp` ring context-parallel groups
+/// (DESIGN.md §17): group `c` owns the contiguous chunk slice
+/// `seg_range(chunks.len(), cp, c)` and therefore the token span between
+/// that slice's chunk boundaries. Chunks are never split mid-chunk — the
+/// shard cut always lands on a chunk boundary, so every group's slice
+/// runs through the unchanged prefill machinery. The spans partition the
+/// plan exactly (chunk and token ranges are gap-free and disjoint, the
+/// last group ends at the padded prompt length); when `cp` exceeds the
+/// chunk count the trailing groups hold empty slices and merely relay
+/// the full KV prefix along the shard ring. This is the leader-
+/// side mirror of the worker's slicing, so plans, workers, and the
+/// `sched::cp_iteration_s` cost model agree on shard boundaries.
+pub fn cp_shard_spans(chunks: &[ChunkJob], cp: usize) -> Vec<CpShardSpan> {
+    let cp = cp.max(1);
+    let k = chunks.len();
+    let total = chunks.last().map_or(0, |c| c.offset + c.len);
+    let tok = |i: usize| if i < k { chunks[i].offset } else { total };
+    (0..cp)
+        .map(|c| {
+            let (lo, hi) = crate::collective::seg_range(k, cp, c);
+            CpShardSpan { chunk_lo: lo, chunk_hi: hi, tok_lo: tok(lo), tok_hi: tok(hi) }
+        })
+        .collect()
+}
+
 /// The tiling body shared by [`plan_prefill`]/[`plan_prefill_pp`];
 /// `sizes` must be sorted ascending.
 fn plan_prefill_sized(
@@ -1207,6 +1246,60 @@ mod tests {
             plan_prefill_pp(1, 32, Strategy::Iso, SplitPolicy::Even, SIZES, None, 99);
         assert_eq!(jobs.len(), 2); // 32 tokens / 16-token smallest tile
         assert_eq!(jobs.iter().map(|j| j.len).sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn cp_shard_spans_partition_chunks_and_tokens() {
+        // Tentpole (PR 9): the leader-side shard map must tile the chunk
+        // plan exactly — chunk ranges gap-free and disjoint, token spans
+        // meeting at chunk boundaries, last group ending at the padded
+        // prompt length — for every strategy and any cp, including
+        // cp > chunk count (leading groups empty, relay-only).
+        for strategy in [Strategy::Iso, Strategy::Serial] {
+            for prompt_len in [16usize, 96, 128, 131] {
+                let jobs = plan_prefill(1, prompt_len, strategy, SplitPolicy::Even, SIZES, None);
+                let total: usize = jobs.last().map_or(0, |c| c.offset + c.len);
+                for cp in [1usize, 2, 3, 4, 7, 16] {
+                    let spans = cp_shard_spans(&jobs, cp);
+                    assert_eq!(spans.len(), cp);
+                    assert_eq!(spans[0].chunk_lo, 0);
+                    assert_eq!(spans[0].tok_lo, 0);
+                    assert_eq!(spans[cp - 1].chunk_hi, jobs.len());
+                    assert_eq!(spans[cp - 1].tok_hi, total);
+                    for w in spans.windows(2) {
+                        assert_eq!(w[0].chunk_hi, w[1].chunk_lo, "{strategy:?} chunk gap");
+                        assert_eq!(w[0].tok_hi, w[1].tok_lo, "{strategy:?} token gap");
+                    }
+                    for s in &spans {
+                        // Shard cuts land on chunk boundaries: a non-empty
+                        // slice starts exactly at its first chunk's offset.
+                        if s.chunk_lo < s.chunk_hi {
+                            assert_eq!(s.tok_lo, jobs[s.chunk_lo].offset);
+                        } else {
+                            assert_eq!(s.tok_lo, s.tok_hi, "empty slice must span 0 tokens");
+                        }
+                    }
+                    // With at least one chunk per group nobody idles; when
+                    // cp exceeds the chunk count the empty slices are the
+                    // trailing groups (`seg_range` front-loads extras) —
+                    // they still hold the full relayed prefix, so decode
+                    // on the last group stays correct (DESIGN.md §17).
+                    if jobs.len() >= cp {
+                        for s in &spans {
+                            assert!(s.chunk_lo < s.chunk_hi);
+                        }
+                    }
+                }
+            }
+        }
+        // Degenerate: no chunks at all.
+        assert_eq!(
+            cp_shard_spans(&[], 3),
+            vec![
+                CpShardSpan { chunk_lo: 0, chunk_hi: 0, tok_lo: 0, tok_hi: 0 };
+                3
+            ]
+        );
     }
 
     #[test]

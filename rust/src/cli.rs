@@ -80,10 +80,22 @@ USAGE:
 
 COMMANDS:
   serve       run the real engine on a synthetic trace
-              --tp N (tensor-parallel width per stage)
-              --pp-stages N (pipeline stages; layers split contiguously,
-                stages chained by bit-exact p2p activation handoffs;
-                ISO chunks double as pipeline micro-batches)
+              --topology ppP.tpT.cpC (the rank grid in one flag, e.g.
+                pp2.tp2.cp1; axes may be omitted — tp4 = pp1.tp4.cp1.
+                pp: pipeline stages, layers split contiguously, stages
+                chained by bit-exact p2p activation handoffs; tp: tensor-
+                parallel width per stage; cp: ring context-parallel
+                groups — each owns a contiguous KV shard of every
+                sequence during prefill, decode runs on the last group)
+              --tp N / --pp-stages N (deprecated aliases for the tp/pp
+                axes; --topology wins when both are given)
+              --kv-offload true|false (cold-KV tier: spill least-recently-
+                needed KV pages to host memory, prefetch ahead of the
+                decode cursor; opens prompts past the resident pool)
+              --kv-resident-tokens N (device-resident KV pool cap in
+                tokens; 0 = unbounded, the all-resident default)
+              --kv-prefetch-pages N (pages fetched ahead of the decode
+                cursor; default 2)
               --strategy iso|serial --requests N --prompt-len N
               --decode N --comm-quant f32|int8 --split even|ratio:X|balanced
               --wire-precision f32|fp16|int8|fp8|int4 (NUMERICS-CHANGING:
@@ -124,6 +136,7 @@ COMMANDS:
               --ttft-deadline-ms X (shed queued requests whose wait
                 exceeds X ms before they start; 0 = off)
               --config FILE (e.g. configs/engine-iso.conf; flags override)
+              --verbose (deprecation notes for alias flags, stderr only)
   table1      print the paper's Table 1 from the calibrated simulator
               --strategy iso|gemm-overlap|request-overlap  --csv FILE
   timeline    ASCII Gantt of one prefill (Figure 1)

@@ -1066,6 +1066,294 @@ pub fn run_on_ring<T: Send>(
     out.into_iter().map(|v| v.expect("invariant: every rank joined above")).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Context-parallel ring pass (DESIGN.md §17)
+// ---------------------------------------------------------------------------
+
+/// One KV-shard message on the context-parallel ring: the K and V rows
+/// for tokens `[row_start, row_start + rows)` of one sequence slot at one
+/// layer, moved verbatim (f32, no quantization — shard handoffs are
+/// **bit-exact** so CP composes with every drift pin; the precision
+/// ladder applies to the *collectives inside* each group, not to the
+/// shard chain).
+pub struct ShardMsg {
+    /// Engine slot of the sequence this shard belongs to.
+    pub slot: usize,
+    /// Layer the K/V rows were produced at.
+    pub layer: usize,
+    /// Token offset of the first row.
+    pub row_start: usize,
+    /// Token count of the shard.
+    pub rows: usize,
+    /// K rows, `rows × cols` flattened.
+    pub k: Vec<f32>,
+    /// V rows, `rows × cols` flattened.
+    pub v: Vec<f32>,
+}
+
+/// Like [`P2pPacket`] but for the CP ring: a [`ShardMsg`] plus the
+/// modeled arrival deadline and fault flag.
+struct ShardPacket {
+    arrive_at: Option<Instant>,
+    msg: ShardMsg,
+    poisoned: bool,
+}
+
+/// One context-parallel group's endpoint on the cyclic KV-shard ring
+/// (DESIGN.md §17). Built on the [`StagePort`] machinery: zero-copy
+/// ownership transfer, the same asynchronous-DMA [`Throttle`] model
+/// (sender stamps an arrival deadline and returns; receiver sleeps it
+/// out, so a group's layer compute genuinely overlaps the neighbor
+/// shard's wire time), and the same typed fault surface
+/// ([`EngineError::RankDead`] / [`EngineError::WireCorrupt`] with
+/// `link: "cp"`).
+///
+/// Unlike the stage chain this is a *ring*: group `c` sends to
+/// `(c + 1) % cp` and receives from `(c − 1) % cp`, so a full pass of
+/// `cp − 1` hops shows every group every shard. The prefill schedule
+/// only drives hops forward (group `c` needs exactly the prefix held by
+/// groups `< c`), but the ring closes so a future all-gather (e.g. a
+/// decode-side KV rebalance) needs no new wiring.
+pub struct RingPass {
+    /// This port's CP group index.
+    pub group: usize,
+    /// Total CP groups on the ring.
+    pub groups: usize,
+    tx_next: Option<Sender<ShardPacket>>,
+    rx_prev: Option<Receiver<ShardPacket>>,
+    /// Optional emulated link speed (same model as the ring's).
+    pub throttle: Option<Throttle>,
+    /// When this port's outgoing link frees up (throttled mode).
+    link_busy: Option<Instant>,
+    /// KV bytes this port has sent around the ring.
+    pub sent_bytes: u64,
+    /// Shard messages this port has sent around the ring.
+    pub sent_msgs: u64,
+    /// Fault injection: flag the next outgoing shard corrupt.
+    poison_next: bool,
+}
+
+impl RingPass {
+    /// A port with no neighbors (the `cp = 1` degenerate ring).
+    pub fn solo() -> RingPass {
+        RingPass {
+            group: 0,
+            groups: 1,
+            tx_next: None,
+            rx_prev: None,
+            throttle: None,
+            link_busy: None,
+            sent_bytes: 0,
+            sent_msgs: 0,
+            poison_next: false,
+        }
+    }
+
+    /// Whether a neighbor feeds this port (false only on the solo ring).
+    pub fn has_prev(&self) -> bool {
+        self.rx_prev.is_some()
+    }
+
+    /// Whether this port feeds a neighbor (false only on the solo ring).
+    pub fn has_next(&self) -> bool {
+        self.tx_next.is_some()
+    }
+
+    /// Fault injection: flag this port's next outgoing shard as corrupt
+    /// (a modeled CRC failure); the neighbor's [`RingPass::try_recv_prev`]
+    /// surfaces [`EngineError::WireCorrupt`]. Inert on the solo ring.
+    pub fn poison_next_send(&mut self) {
+        self.poison_next = true;
+    }
+
+    /// Send a shard to the next group, transferring ownership of the
+    /// buffers (zero-copy, bit-exact). Never blocks: the arrival
+    /// deadline is stamped and the transfer "flies" while this group
+    /// computes its next layer.
+    pub fn send_next(&mut self, msg: ShardMsg) {
+        self.try_send_next(msg).expect("cp peer hung up");
+    }
+
+    /// Supervised [`RingPass::send_next`]: a dead neighbor returns
+    /// [`EngineError::RankDead`] (the `rank` field carries the
+    /// downstream **group index**; the coordinator maps it to a global
+    /// rank). Calling on the solo ring is a programming-error panic.
+    pub fn try_send_next(&mut self, msg: ShardMsg) -> Result<(), EngineError> {
+        assert_eq!(msg.k.len(), msg.v.len(), "cp shard K/V shape mismatch");
+        let tx = self.tx_next.as_ref().expect("send_next on a solo cp ring");
+        let nbytes = (msg.k.len() + msg.v.len()) * 4;
+        self.sent_bytes += nbytes as u64;
+        self.sent_msgs += 1;
+        let arrive_at = match self.throttle {
+            Some(t) => {
+                let now = Instant::now();
+                let start = match self.link_busy {
+                    Some(busy) if busy > now => busy,
+                    _ => now,
+                };
+                let arrive = start + Duration::from_secs_f64(t.wire_s(nbytes));
+                self.link_busy = Some(arrive);
+                Some(arrive)
+            }
+            None => None,
+        };
+        let poisoned = std::mem::take(&mut self.poison_next);
+        tx.send(ShardPacket { arrive_at, msg, poisoned }).map_err(|_| EngineError::RankDead {
+            rank: (self.group + 1) % self.groups,
+            link: "cp",
+        })
+    }
+
+    /// Blocking receive of the previous group's next shard, in sender
+    /// order (the hop is a FIFO channel). Sleeps until the modeled
+    /// arrival deadline, then hands the buffers over verbatim.
+    pub fn recv_prev(&mut self) -> ShardMsg {
+        self.try_recv_prev().expect("cp peer hung up")
+    }
+
+    /// Supervised [`RingPass::recv_prev`]: a dead neighbor returns
+    /// [`EngineError::RankDead`] and a poisoned shard returns
+    /// [`EngineError::WireCorrupt`] (the `rank` field carries the
+    /// **group index** on this link). Calling on the solo ring is a
+    /// programming-error panic.
+    pub fn try_recv_prev(&mut self) -> Result<ShardMsg, EngineError> {
+        let rx = self.rx_prev.as_ref().expect("recv_prev on a solo cp ring");
+        let pkt = rx.recv().map_err(|_| EngineError::RankDead {
+            rank: (self.group + self.groups - 1) % self.groups,
+            link: "cp",
+        })?;
+        if pkt.poisoned {
+            return Err(EngineError::WireCorrupt { rank: self.group, link: "cp" });
+        }
+        if let Some(at) = pkt.arrive_at {
+            let now = Instant::now();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+        }
+        Ok(pkt.msg)
+    }
+}
+
+/// Build the cyclic KV-shard ring of a `cp`-group grid: port `c` sends
+/// to `(c + 1) % cp` and receives from `(c − 1) % cp`. A 1-group ring
+/// has no channels at all (every send/recv is a programming error,
+/// exactly like [`StagePort::solo`] — the `cp = 1` engine never touches
+/// the ring, which is what keeps it byte-identical to the pre-CP
+/// engine).
+pub fn cp_ring(groups: usize) -> Vec<RingPass> {
+    assert!(groups >= 1);
+    if groups == 1 {
+        return vec![RingPass::solo()];
+    }
+    let mut ports: Vec<RingPass> =
+        (0..groups).map(|c| RingPass { group: c, groups, ..RingPass::solo() }).collect();
+    for c in 0..groups {
+        let (tx, rx) = channel();
+        ports[c].tx_next = Some(tx);
+        ports[(c + 1) % groups].rx_prev = Some(rx);
+    }
+    ports
+}
+
+/// Running state of an online-softmax accumulation for one query row
+/// (DESIGN.md §17): the row max `m`, the exp-sum `l`, and the
+/// unnormalized weighted-V accumulator `o` — the flash/ring-attention
+/// invariant `softmax(s) · V = o / l` once every shard is absorbed.
+#[derive(Clone, Debug)]
+pub struct SoftmaxState {
+    /// Max score seen so far (−∞ before any shard).
+    pub m: f32,
+    /// Exp-sum of scores, rescaled to the current max.
+    pub l: f32,
+    /// Unnormalized output accumulator, `head_dim` long.
+    pub o: Vec<f32>,
+}
+
+impl SoftmaxState {
+    /// The empty state (absorbing into it copies the other side).
+    pub fn new(head_dim: usize) -> SoftmaxState {
+        SoftmaxState { m: f32::NEG_INFINITY, l: 0.0, o: vec![0.0; head_dim] }
+    }
+
+    /// Merge another shard's partial state into this one — the
+    /// numerically-stable two-way online-softmax combine. Associative
+    /// but **not** bitwise-commutative (f32 rescales reorder), which is
+    /// why [`merge_shards`] pins the combine order.
+    pub fn merge(&mut self, other: &SoftmaxState) {
+        if other.l == 0.0 {
+            return;
+        }
+        if self.l == 0.0 {
+            self.m = other.m;
+            self.l = other.l;
+            self.o.copy_from_slice(&other.o);
+            return;
+        }
+        let m = self.m.max(other.m);
+        let sa = (self.m - m).exp();
+        let sb = (other.m - m).exp();
+        self.l = self.l * sa + other.l * sb;
+        for (o, &x) in self.o.iter_mut().zip(other.o.iter()) {
+            *o = *o * sa + x * sb;
+        }
+        self.m = m;
+    }
+
+    /// Finalize: the attention output row `o / l` (zeros if no shard
+    /// ever matched — an empty causal window).
+    pub fn finish(&self) -> Vec<f32> {
+        if self.l == 0.0 {
+            return vec![0.0; self.o.len()];
+        }
+        self.o.iter().map(|&x| x / self.l).collect()
+    }
+}
+
+/// Partial attention of one query row over one KV shard: scores
+/// `scale · q·kⱼ` for every shard row `j`, folded into a fresh
+/// [`SoftmaxState`]. `k`/`v` are `rows × head_dim` flattened.
+pub fn attn_partial(q: &[f32], k: &[f32], v: &[f32], rows: usize, scale: f32) -> SoftmaxState {
+    let d = q.len();
+    assert_eq!(k.len(), rows * d, "K shard shape");
+    assert_eq!(v.len(), rows * d, "V shard shape");
+    let mut st = SoftmaxState::new(d);
+    if rows == 0 {
+        return st;
+    }
+    let scores: Vec<f32> = (0..rows)
+        .map(|j| scale * q.iter().zip(&k[j * d..(j + 1) * d]).map(|(a, b)| a * b).sum::<f32>())
+        .collect();
+    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut l = 0.0;
+    for (j, &s) in scores.iter().enumerate() {
+        let w = (s - m).exp();
+        l += w;
+        for (o, &x) in st.o.iter_mut().zip(&v[j * d..(j + 1) * d]) {
+            *o += w * x;
+        }
+    }
+    st.m = m;
+    st.l = l;
+    st
+}
+
+/// Combine per-shard partial states in **pinned shard order** (0, 1, …,
+/// cp−1) regardless of arrival order, and finalize. This is the CP
+/// determinism contract: the merge is associative but f32 rescaling is
+/// not bitwise-commutative, so fixing the fold order makes the merged
+/// row a pure function of the shard contents — two runs whose shards
+/// arrive in different orders still produce bit-identical output
+/// (pinned by `cp_merge_order_is_deterministic` below).
+pub fn merge_shards(states: &[SoftmaxState]) -> Vec<f32> {
+    assert!(!states.is_empty(), "merge_shards needs at least one shard");
+    let mut acc = SoftmaxState::new(states[0].o.len());
+    for st in states {
+        acc.merge(st);
+    }
+    acc.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1855,5 +2143,209 @@ mod tests {
             }
             Ok(())
         });
+    }
+}
+
+#[cfg(test)]
+mod cp_tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn cp_solo_has_no_neighbors() {
+        let ports = cp_ring(1);
+        assert_eq!(ports.len(), 1);
+        assert!(!ports[0].has_prev() && !ports[0].has_next());
+        assert_eq!((ports[0].sent_bytes, ports[0].sent_msgs), (0, 0));
+    }
+
+    #[test]
+    fn cp_ring_moves_shards_in_order_and_counts_bytes() {
+        // Channels are buffered, so a single thread can drive the whole
+        // ring: every group sends two shards forward, then drains its
+        // inbox in sender order.
+        let mut ports = cp_ring(3);
+        for c in 0..3 {
+            for layer in 0..2 {
+                let k: Vec<f32> = vec![c as f32; 4];
+                let v: Vec<f32> = vec![layer as f32; 4];
+                ports[c].send_next(ShardMsg { slot: 7, layer, row_start: c, rows: 2, k, v });
+            }
+            assert_eq!(ports[c].sent_msgs, 2);
+            assert_eq!(ports[c].sent_bytes, 2 * (4 + 4) * 4);
+        }
+        for c in 0..3 {
+            let from = (c + 2) % 3;
+            for layer in 0..2 {
+                let m = ports[c].recv_prev();
+                assert_eq!((m.slot, m.layer, m.row_start, m.rows), (7, layer, from, 2));
+                assert_eq!(m.k, vec![from as f32; 4]);
+                assert_eq!(m.v, vec![layer as f32; 4]);
+            }
+        }
+    }
+
+    #[test]
+    fn cp_prefix_chain_accumulates_forward() {
+        // The prefill schedule's forward pass: group c receives the
+        // prefix [0, c·2) from c−1, appends its own rows, and forwards
+        // [0, (c+1)·2). The last group ends holding the full sequence.
+        let mut ports = cp_ring(3);
+        let own = |c: usize| -> Vec<f32> { vec![c as f32; 2 * 4] };
+        let mut prefix: Vec<f32> = Vec::new();
+        for c in 0..2 {
+            if ports[c].has_prev() && c > 0 {
+                let m = ports[c].recv_prev();
+                assert_eq!(m.rows, 2 * c);
+                prefix = m.k;
+            }
+            prefix.extend_from_slice(&own(c));
+            let msg = ShardMsg {
+                slot: 0,
+                layer: 0,
+                row_start: 0,
+                rows: 2 * (c + 1),
+                k: prefix.clone(),
+                v: prefix.clone(),
+            };
+            ports[c].send_next(msg);
+        }
+        let m = ports[2].recv_prev();
+        assert_eq!(m.rows, 4);
+        let mut want = own(0);
+        want.extend_from_slice(&own(1));
+        assert_eq!(m.k, want);
+    }
+
+    #[test]
+    fn cp_poison_surfaces_wire_corrupt() {
+        let mut ports = cp_ring(2);
+        ports[0].poison_next_send();
+        ports[0]
+            .send_next(ShardMsg { slot: 0, layer: 0, row_start: 0, rows: 1, k: vec![1.0], v: vec![2.0] });
+        match ports[1].try_recv_prev() {
+            Err(EngineError::WireCorrupt { rank: 1, link: "cp" }) => {}
+            other => panic!("want WireCorrupt on cp link, got {other:?}"),
+        }
+        // The flag is one-shot: the next shard is clean.
+        ports[0]
+            .send_next(ShardMsg { slot: 0, layer: 1, row_start: 0, rows: 1, k: vec![3.0], v: vec![4.0] });
+        assert_eq!(ports[1].recv_prev().layer, 1);
+    }
+
+    #[test]
+    fn cp_dead_peer_is_rank_dead() {
+        let mut ports = cp_ring(3);
+        let dead = ports.remove(2); // group 2's rx drops with it
+        drop(dead);
+        let err = ports[1]
+            .try_send_next(ShardMsg { slot: 0, layer: 0, row_start: 0, rows: 1, k: vec![0.0], v: vec![0.0] })
+            .unwrap_err();
+        match err {
+            EngineError::RankDead { rank: 2, link: "cp" } => {}
+            other => panic!("want RankDead on cp link, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cp_throttled_shard_still_delivers_verbatim() {
+        let mut ports = cp_ring(2);
+        ports[0].throttle = Some(Throttle { alpha_s: 1e-4, bytes_per_s: 1e8 });
+        let k: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        ports[0].send_next(ShardMsg { slot: 3, layer: 5, row_start: 2, rows: 2, k: k.clone(), v: k.clone() });
+        let m = ports[1].recv_prev();
+        assert_eq!((m.slot, m.layer, m.row_start, m.rows), (3, 5, 2, 2));
+        assert_eq!(m.k, k);
+    }
+
+    /// Direct (one-pass) softmax attention for one query row — the
+    /// reference the sharded online merge must agree with.
+    fn direct_attention(q: &[f32], k: &[f32], v: &[f32], rows: usize, scale: f32) -> Vec<f32> {
+        let d = q.len();
+        let scores: Vec<f32> = (0..rows)
+            .map(|j| scale * q.iter().zip(&k[j * d..(j + 1) * d]).map(|(a, b)| a * b).sum::<f32>())
+            .collect();
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let ws: Vec<f32> = scores.iter().map(|&s| (s - m).exp()).collect();
+        let l: f32 = ws.iter().sum();
+        let mut out = vec![0.0; d];
+        for (j, &w) in ws.iter().enumerate() {
+            for (o, &x) in out.iter_mut().zip(&v[j * d..(j + 1) * d]) {
+                *o += w * x / l;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sharded_softmax_merge_matches_direct_attention() {
+        let mut rng = Rng::new(0x5EED);
+        for (rows, d, shards) in [(12, 8, 3), (7, 4, 2), (16, 16, 4), (5, 8, 5)] {
+            let q = rng.normal_vec(d, 1.0);
+            let k = rng.normal_vec(rows * d, 1.0);
+            let v = rng.normal_vec(rows * d, 1.0);
+            let scale = 1.0 / (d as f32).sqrt();
+            let want = direct_attention(&q, &k, &v, rows, scale);
+            // Split the rows into `shards` contiguous pieces (seg_range
+            // balance, like the engine's shard bounds) and merge the
+            // partials in pinned order.
+            let states: Vec<SoftmaxState> = (0..shards)
+                .map(|s| {
+                    let (lo, hi) = seg_range(rows, shards, s);
+                    attn_partial(&q, &k[lo * d..hi * d], &v[lo * d..hi * d], hi - lo, scale)
+                })
+                .collect();
+            let got = merge_shards(&states);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "{g} vs {w} (rows={rows} shards={shards})");
+            }
+        }
+    }
+
+    #[test]
+    fn cp_merge_order_is_deterministic() {
+        // Arrival order must not leak into the output: computing the
+        // partials in any order and folding them by shard index gives
+        // bit-identical f32s.
+        let mut rng = Rng::new(99);
+        let (rows, d, shards) = (24, 8, 4);
+        let q = rng.normal_vec(d, 1.0);
+        let k = rng.normal_vec(rows * d, 1.0);
+        let v = rng.normal_vec(rows * d, 1.0);
+        let scale = 0.25;
+        let partial = |s: usize| {
+            let (lo, hi) = seg_range(rows, shards, s);
+            attn_partial(&q, &k[lo * d..hi * d], &v[lo * d..hi * d], hi - lo, scale)
+        };
+        let in_order: Vec<SoftmaxState> = (0..shards).map(partial).collect();
+        for arrival in [[3, 1, 0, 2], [2, 3, 1, 0], [1, 0, 3, 2]] {
+            let mut by_index: Vec<Option<SoftmaxState>> = (0..shards).map(|_| None).collect();
+            for s in arrival {
+                by_index[s] = Some(partial(s));
+            }
+            let states: Vec<SoftmaxState> =
+                by_index.into_iter().map(|s| s.unwrap()).collect();
+            let a = merge_shards(&in_order);
+            let b = merge_shards(&states);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "pinned combine order must be arrival-invariant"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_shard_is_identity_in_merge() {
+        let d = 4;
+        let empty = SoftmaxState::new(d);
+        assert_eq!(empty.finish(), vec![0.0; d]);
+        let mut st = attn_partial(&[1.0; 4], &[0.5; 8], &[2.0; 8], 2, 1.0);
+        let before = st.finish();
+        st.merge(&SoftmaxState::new(d));
+        assert_eq!(st.finish(), before);
+        let mut acc = SoftmaxState::new(d);
+        acc.merge(&st);
+        assert_eq!(acc.finish(), before);
     }
 }

@@ -6,7 +6,16 @@
 //!   * `HardwareConfig`— which node profile (4090/A800 × cards) for the
 //!     simulator, or `CpuThreads` for the real engine;
 //!   * `EngineConfig`  — overlap strategy, split policy, quantization,
-//!     chunking, batching.
+//!     chunking, batching, topology.
+//!
+//! `EngineConfig` keeps its flat fields (every call site reads them
+//! directly) but is *viewed and built* through grouped sub-structs —
+//! [`Topology`], [`OverlapCfg`], [`WireCfg`], [`SloCfg`], [`FaultCfg`] —
+//! via [`EngineConfig::builder`], so every cross-field invariant lives in
+//! one place ([`EngineConfig::validate`]). Config files address the
+//! grouped keys (`topology.cp`, `slo.kv_offload`, …); the historical flat
+//! `engine.*` keys stay accepted as deprecated aliases with byte-identical
+//! defaults, pinned by the round-trip tests below.
 //!
 //! A small line-based config-file format (`key = value`, `#` comments,
 //! `[section]` headers) replaces TOML in the offline build; presets cover
@@ -15,9 +24,38 @@
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
+use std::str::FromStr;
 
 use crate::hw::NodeProfile;
 use crate::model::ModelSpec;
+
+/// Typed parse error for config enums and the `--topology` grammar: what
+/// was being parsed, the offending spelling, and the accepted spellings.
+/// `Display` renders the same `bad <what> <got>` shape the config-file
+/// errors always had, now uniformly suffixed with the valid values.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigParseError {
+    /// Which knob failed to parse (`"strategy"`, `"topology"`, …).
+    pub what: &'static str,
+    /// The rejected input, verbatim.
+    pub got: String,
+    /// Human-readable list of accepted spellings.
+    pub valid: &'static str,
+}
+
+impl ConfigParseError {
+    fn new(what: &'static str, got: &str, valid: &'static str) -> Self {
+        ConfigParseError { what, got: got.to_string(), valid }
+    }
+}
+
+impl fmt::Display for ConfigParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "bad {} {:?} (valid: {})", self.what, self.got, self.valid)
+    }
+}
+
+impl std::error::Error for ConfigParseError {}
 
 /// Which overlap strategy the scheduler runs (paper Fig 1 a–d).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -39,13 +77,26 @@ impl Strategy {
     }
 
     /// Parse a CLI/config spelling (`iso`, `serial`, `gemm-overlap`, …).
+    /// Thin wrapper over the [`FromStr`] impl, kept for call-site brevity.
     pub fn parse(s: &str) -> Option<Strategy> {
+        s.parse().ok()
+    }
+}
+
+impl FromStr for Strategy {
+    type Err = ConfigParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
-            "serial" => Some(Strategy::Serial),
-            "gemm" | "gemm-overlap" | "gemm_overlap" => Some(Strategy::GemmOverlap),
-            "request" | "request-overlap" | "request_overlap" => Some(Strategy::RequestOverlap),
-            "iso" => Some(Strategy::Iso),
-            _ => None,
+            "serial" => Ok(Strategy::Serial),
+            "gemm" | "gemm-overlap" | "gemm_overlap" => Ok(Strategy::GemmOverlap),
+            "request" | "request-overlap" | "request_overlap" => Ok(Strategy::RequestOverlap),
+            "iso" => Ok(Strategy::Iso),
+            _ => Err(ConfigParseError::new(
+                "strategy",
+                s,
+                "serial, gemm-overlap, request-overlap, iso",
+            )),
         }
     }
 }
@@ -78,17 +129,44 @@ pub enum SplitPolicy {
 
 impl SplitPolicy {
     /// Parse a CLI/config spelling (`even`, `balanced`, `ratio:0.6`, …).
+    /// Thin wrapper over the [`FromStr`] impl, kept for call-site brevity.
     pub fn parse(s: &str) -> Option<SplitPolicy> {
+        s.parse().ok()
+    }
+}
+
+impl FromStr for SplitPolicy {
+    type Err = ConfigParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
         let ls = s.to_ascii_lowercase();
         match ls.as_str() {
-            "even" => Some(SplitPolicy::Even),
-            "balanced" | "attn-balanced" => Some(SplitPolicy::AttnBalanced),
-            "adaptive" | "attn-mlp" => Some(SplitPolicy::AdaptiveAttnMlp),
+            "even" => Ok(SplitPolicy::Even),
+            "balanced" | "attn-balanced" => Ok(SplitPolicy::AttnBalanced),
+            "adaptive" | "attn-mlp" => Ok(SplitPolicy::AdaptiveAttnMlp),
             _ => ls
                 .strip_prefix("ratio:")
                 .and_then(|r| r.parse::<f64>().ok())
                 .filter(|r| (0.05..=0.95).contains(r))
-                .map(SplitPolicy::Ratio),
+                .map(SplitPolicy::Ratio)
+                .ok_or_else(|| {
+                    ConfigParseError::new(
+                        "split",
+                        s,
+                        "even, attn-balanced, attn-mlp, ratio:R with R in [0.05, 0.95]",
+                    )
+                }),
+        }
+    }
+}
+
+impl fmt::Display for SplitPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SplitPolicy::Even => write!(f, "even"),
+            SplitPolicy::Ratio(r) => write!(f, "ratio:{r}"),
+            SplitPolicy::AttnBalanced => write!(f, "attn-balanced"),
+            SplitPolicy::AdaptiveAttnMlp => write!(f, "attn-mlp"),
         }
     }
 }
@@ -111,15 +189,9 @@ pub enum CommQuant {
 
 impl CommQuant {
     /// Parse a CLI/config spelling (`f32`, `fp16`, `int8`, `fp8`, `int4`).
+    /// Thin wrapper over the [`FromStr`] impl, kept for call-site brevity.
     pub fn parse(s: &str) -> Option<CommQuant> {
-        match s.to_ascii_lowercase().as_str() {
-            "fp16" | "f16" => Some(CommQuant::Fp16),
-            "int8" | "i8" => Some(CommQuant::Int8),
-            "f32" | "fp32" | "none" => Some(CommQuant::F32),
-            "fp8" | "f8" | "e5m2" => Some(CommQuant::Fp8),
-            "int4" | "i4" => Some(CommQuant::Int4),
-            _ => None,
-        }
+        s.parse().ok()
     }
 
     /// Engine wire bytes of a `rows × cols` f32 payload at this rung, as
@@ -173,6 +245,27 @@ impl CommQuant {
     }
 }
 
+impl FromStr for CommQuant {
+    type Err = ConfigParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp16" | "f16" => Ok(CommQuant::Fp16),
+            "int8" | "i8" => Ok(CommQuant::Int8),
+            "f32" | "fp32" | "none" => Ok(CommQuant::F32),
+            "fp8" | "f8" | "e5m2" => Ok(CommQuant::Fp8),
+            "int4" | "i4" => Ok(CommQuant::Int4),
+            _ => Err(ConfigParseError::new("wire rung", s, "f32, fp16, int8, fp8, int4")),
+        }
+    }
+}
+
+impl fmt::Display for CommQuant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
 /// Per-phase wire-precision policy (DESIGN.md §16): which ladder rung
 /// prefill collectives use, and which — usually lower — rung the fused
 /// decode/verify lane uses. Decode-lane activations tolerate a coarser
@@ -192,8 +285,210 @@ pub struct PrecisionPolicy {
 /// so compute reclaims the SMs the moment comm ends).
 pub const DEFAULT_GEMM_SEGMENTS: usize = 4;
 
+/// The engine's rank grid, as one value: `pp` pipeline stages × `tp`
+/// tensor-parallel ranks per stage × `cp` context-parallel groups
+/// (DESIGN.md §17). The canonical CLI spelling is `ppP.tpT.cpC`
+/// (e.g. `pp2.tp2.cp1`); axes omitted from the string keep their
+/// defaults, so `tp4` alone means `pp1.tp4.cp1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Pipeline-parallel stage count (flat field `pp_stages`).
+    pub pp: usize,
+    /// Tensor-parallel width per stage (flat field `tp`).
+    pub tp: usize,
+    /// Context-parallel group count (flat field `cp`).
+    pub cp: usize,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology { pp: 1, tp: 2, cp: 1 }
+    }
+}
+
+impl Topology {
+    /// Total worker ranks the engine spawns: `pp × tp × cp`.
+    pub fn world(&self) -> usize {
+        self.pp * self.tp * self.cp
+    }
+}
+
+impl FromStr for Topology {
+    type Err = ConfigParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        const VALID: &str = "ppP.tpT.cpC, e.g. pp2.tp2.cp1 (axes may be omitted)";
+        let mut t = Topology::default();
+        if s.trim().is_empty() {
+            return Err(ConfigParseError::new("topology", s, VALID));
+        }
+        for part in s.to_ascii_lowercase().split('.') {
+            let (axis, digits) = if let Some(d) = part.strip_prefix("pp") {
+                (&mut t.pp, d)
+            } else if let Some(d) = part.strip_prefix("tp") {
+                (&mut t.tp, d)
+            } else if let Some(d) = part.strip_prefix("cp") {
+                (&mut t.cp, d)
+            } else {
+                return Err(ConfigParseError::new("topology", s, VALID));
+            };
+            *axis = digits
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| ConfigParseError::new("topology", s, VALID))?;
+        }
+        Ok(t)
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "pp{}.tp{}.cp{}", self.pp, self.tp, self.cp)
+    }
+}
+
+/// Grouped view of the overlap/scheduling knobs (config section
+/// `[overlap]`). Mirrors the flat `EngineConfig` fields of the same
+/// names — see those for full semantics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapCfg {
+    /// Overlap strategy (paper Fig 1 a–d).
+    pub strategy: Strategy,
+    /// ISO intra-sequence split policy.
+    pub split: SplitPolicy,
+    /// Segments for the computation-dominates mitigation (1 = off).
+    pub gemm_segments: usize,
+    /// Row-segments each engine collective is streamed in.
+    pub comm_segments: usize,
+    /// Max chunk length the engine schedules.
+    pub max_chunk: usize,
+    /// Iteration-level mixed scheduling in `serve_trace`.
+    pub mixed_iterations: bool,
+    /// Width cap of the fused decode lane per mixed iteration.
+    pub decode_batch: usize,
+    /// Run the decode lane's MLP as one B-row GEMM when compiled.
+    pub lane_gemm: bool,
+    /// Fused post-collective epilogue (DESIGN.md §12).
+    pub fused_epilogue: bool,
+    /// Ladder-residual reordering (numerics-changing, opt-in).
+    pub ladder_residual: bool,
+    /// Speculative-decoding draft count per lane sequence (0 = off).
+    pub spec_k: usize,
+    /// N-gram order of the self-draft proposer.
+    pub spec_ngram: usize,
+}
+
+impl Default for OverlapCfg {
+    fn default() -> Self {
+        OverlapCfg {
+            strategy: Strategy::Iso,
+            split: SplitPolicy::AttnBalanced,
+            gemm_segments: DEFAULT_GEMM_SEGMENTS,
+            comm_segments: 1,
+            max_chunk: 64,
+            mixed_iterations: true,
+            decode_batch: 8,
+            lane_gemm: true,
+            fused_epilogue: true,
+            ladder_residual: false,
+            spec_k: 0,
+            spec_ngram: 2,
+        }
+    }
+}
+
+/// Grouped view of the wire knobs (config section `[wire]`): base rung,
+/// per-phase overrides, and the emulated link. Mirrors the flat
+/// `EngineConfig` fields of the same names.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireCfg {
+    /// Wire format of the ring collectives.
+    pub comm_quant: CommQuant,
+    /// Override rung for *all* collectives (`wire.precision`).
+    pub wire_precision: Option<CommQuant>,
+    /// Override rung for the fused decode/verify lane only.
+    pub decode_wire_precision: Option<CommQuant>,
+    /// Emulated wire bandwidth (MB/s); `None` = full memory speed.
+    pub link_mbps: Option<f64>,
+    /// Emulated per-hop latency (µs) when `link_mbps` is set.
+    pub link_alpha_us: f64,
+}
+
+impl Default for WireCfg {
+    fn default() -> Self {
+        WireCfg {
+            comm_quant: CommQuant::F32,
+            wire_precision: None,
+            decode_wire_precision: None,
+            link_mbps: None,
+            link_alpha_us: 50.0,
+        }
+    }
+}
+
+/// Grouped view of the SLO / memory-pressure knobs (config section
+/// `[slo]`), including the cold-KV offload tier added with context
+/// parallelism (DESIGN.md §17). Mirrors the flat `EngineConfig` fields.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloCfg {
+    /// Per-iteration decode-TBT budget (ms); `0.0` = off.
+    pub tbt_budget_ms: f64,
+    /// Paged-KV high-water mark in `(0, 1]`; `1.0` = no preemption.
+    pub kv_high_water: f64,
+    /// Admission queue bound; `0` = unbounded.
+    pub queue_bound: usize,
+    /// Preemptions allowed per sequence (anti-livelock cap).
+    pub max_preemptions: usize,
+    /// TTFT shedding deadline (ms); `0.0` = off.
+    pub ttft_deadline_ms: f64,
+    /// Cold-KV offload: spill least-recently-needed pages to the host
+    /// tier instead of failing when the resident pool fills.
+    pub kv_offload: bool,
+    /// Resident-pool cap in tokens (`0` = uncapped, the whole pool).
+    pub kv_resident_tokens: usize,
+    /// Pages prefetched ahead of the decode cursor (`0` = none).
+    pub kv_prefetch_pages: usize,
+}
+
+impl Default for SloCfg {
+    fn default() -> Self {
+        SloCfg {
+            tbt_budget_ms: 0.0,
+            kv_high_water: 1.0,
+            queue_bound: 0,
+            max_preemptions: 2,
+            ttft_deadline_ms: 0.0,
+            kv_offload: false,
+            kv_resident_tokens: 0,
+            kv_prefetch_pages: 2,
+        }
+    }
+}
+
+/// Grouped view of the fault-tolerance knobs (config section `[fault]`).
+/// Mirrors the flat `EngineConfig` fields (`fault_plan`, `fault_slack`,
+/// `deadline_floor_ms`, `max_recoveries`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultCfg {
+    /// Seeded deterministic fault plan; `None` = fault-free.
+    pub plan: Option<String>,
+    /// Detection-deadline slack over the per-iteration EMA.
+    pub slack: f64,
+    /// Floor (ms) under the deadline EMA.
+    pub deadline_floor_ms: f64,
+    /// Mesh respawns attempted before giving up.
+    pub max_recoveries: usize,
+}
+
+impl Default for FaultCfg {
+    fn default() -> Self {
+        FaultCfg { plan: None, slack: 32.0, deadline_floor_ms: 250.0, max_recoveries: 4 }
+    }
+}
+
 /// Full engine configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EngineConfig {
     /// Overlap strategy (paper Fig 1 a–d).
     pub strategy: Strategy,
@@ -211,7 +506,7 @@ pub struct EngineConfig {
     pub comm_segments: usize,
     /// Tensor-parallel degree for the real CPU engine. With pipeline
     /// stages this is the TP width *per stage*; the engine spawns
-    /// `pp_stages × tp` worker pairs in total.
+    /// `pp_stages × tp × cp` worker pairs in total.
     pub tp: usize,
     /// Pipeline-parallel stage count (DESIGN.md §11). `1` = the classic
     /// single-stage TP engine. With `pp_stages > 1` the model's layers
@@ -220,6 +515,14 @@ pub struct EngineConfig {
     /// ring, stages connected by bit-exact point-to-point activation
     /// handoffs; ISO's sequence chunks double as pipeline micro-batches.
     pub pp_stages: usize,
+    /// Context-parallel group count (DESIGN.md §17). `1` = classic
+    /// behavior, byte-identical to the pre-CP engine. With `cp > 1`
+    /// each group owns a contiguous KV shard of every prefill, the
+    /// shards are chained group-to-group so prefill attention sees the
+    /// exact prefix while later groups' layers overlap earlier groups'
+    /// streaming, and decode runs CP-gathered on the last group
+    /// (SNIPPETS.md snippet 2: "SP is not allowed" in decode).
+    pub cp: usize,
     /// Max chunk length the engine schedules (must exist in artifacts).
     pub max_chunk: usize,
     /// Max concurrent sequences in a batch.
@@ -299,7 +602,8 @@ pub struct EngineConfig {
     /// Per-iteration decode-TBT budget (ms) enforced by bounding how
     /// many prefill chunks the mixed planner admits per iteration
     /// (DESIGN.md §15). `0.0` disables the bound: whole prompts prefill
-    /// in one iteration, exactly the pre-overload behavior.
+    /// in one iteration, exactly the pre-overload behavior. Requires
+    /// `cp = 1` — budget slices do not compose with sharded prefill.
     pub tbt_budget_ms: f64,
     /// Paged-KV high-water mark as a fraction of the pool in `(0, 1]`.
     /// When used blocks exceed it, the engine preempts the youngest
@@ -324,6 +628,19 @@ pub struct EngineConfig {
     /// Wire-precision override for the fused decode/verify lane only
     /// (`--decode-wire-precision`). `None` = same rung as prefill.
     pub decode_wire_precision: Option<CommQuant>,
+    /// Cold-KV offload (DESIGN.md §17): when the paged pool's resident
+    /// cap is exceeded, spill the pages farthest behind the decode
+    /// cursor to a modeled host tier and prefetch them back ahead of
+    /// the cursor, instead of failing allocation. `false` = resident
+    /// pool only (a prompt that cannot fit fails with a typed error).
+    pub kv_offload: bool,
+    /// Resident-pool cap in *tokens* for the offload model (`0` =
+    /// uncapped: the whole pool stays resident and offload never
+    /// triggers, byte-identical to the pre-offload engine).
+    pub kv_resident_tokens: usize,
+    /// KV pages prefetched ahead of the decode cursor per step when
+    /// offload is on (`0` = demand-fetch only).
+    pub kv_prefetch_pages: usize,
 }
 
 impl Default for EngineConfig {
@@ -336,6 +653,7 @@ impl Default for EngineConfig {
             comm_segments: 1,
             tp: 2,
             pp_stages: 1,
+            cp: 1,
             max_chunk: 64,
             max_batch: 8,
             decode_batch: 8,
@@ -360,6 +678,9 @@ impl Default for EngineConfig {
             ttft_deadline_ms: 0.0,
             wire_precision: None,
             decode_wire_precision: None,
+            kv_offload: false,
+            kv_resident_tokens: 0,
+            kv_prefetch_pages: 2,
         }
     }
 }
@@ -373,48 +694,172 @@ impl EngineConfig {
         let decode = self.decode_wire_precision.unwrap_or(prefill);
         PrecisionPolicy { prefill, decode }
     }
-}
 
-/// A fully-specified simulator experiment (one Table-1 cell).
-#[derive(Clone, Debug)]
-pub struct SimExperiment {
-    /// Modeled node (device × cards × interconnect).
-    pub node: NodeProfile,
-    /// Modeled transformer geometry.
-    pub model: ModelSpec,
-    /// Prefill prompt length.
-    pub prompt_len: usize,
-    /// Overlap strategy under test.
-    pub strategy: Strategy,
-    /// ISO split policy.
-    pub split: SplitPolicy,
-    /// Whether collectives quantize to int8 on the wire.
-    pub int8_wire: bool,
-    /// Launches the pre-collective GEMMs are segmented into.
-    pub gemm_segments: usize,
-}
+    /// The rank grid as one value (`pp × tp × cp`).
+    pub fn topology(&self) -> Topology {
+        Topology { pp: self.pp_stages, tp: self.tp, cp: self.cp }
+    }
 
-impl SimExperiment {
-    /// An experiment with the node's default wire format and balanced split.
-    pub fn new(node: NodeProfile, model: ModelSpec, prompt_len: usize, strategy: Strategy) -> Self {
-        let int8_wire = node.int8_wire_default;
-        SimExperiment {
-            node,
-            model,
-            prompt_len,
-            strategy,
-            split: SplitPolicy::AttnBalanced,
-            int8_wire,
-            gemm_segments: DEFAULT_GEMM_SEGMENTS,
+    /// Grouped view of the overlap/scheduling knobs.
+    pub fn overlap(&self) -> OverlapCfg {
+        OverlapCfg {
+            strategy: self.strategy,
+            split: self.split,
+            gemm_segments: self.gemm_segments,
+            comm_segments: self.comm_segments,
+            max_chunk: self.max_chunk,
+            mixed_iterations: self.mixed_iterations,
+            decode_batch: self.decode_batch,
+            lane_gemm: self.lane_gemm,
+            fused_epilogue: self.fused_epilogue,
+            ladder_residual: self.ladder_residual,
+            spec_k: self.spec_k,
+            spec_ngram: self.spec_ngram,
         }
+    }
+
+    /// Grouped view of the wire knobs.
+    pub fn wire(&self) -> WireCfg {
+        WireCfg {
+            comm_quant: self.comm_quant,
+            wire_precision: self.wire_precision,
+            decode_wire_precision: self.decode_wire_precision,
+            link_mbps: self.link_mbps,
+            link_alpha_us: self.link_alpha_us,
+        }
+    }
+
+    /// Grouped view of the SLO / memory-pressure knobs.
+    pub fn slo(&self) -> SloCfg {
+        SloCfg {
+            tbt_budget_ms: self.tbt_budget_ms,
+            kv_high_water: self.kv_high_water,
+            queue_bound: self.queue_bound,
+            max_preemptions: self.max_preemptions,
+            ttft_deadline_ms: self.ttft_deadline_ms,
+            kv_offload: self.kv_offload,
+            kv_resident_tokens: self.kv_resident_tokens,
+            kv_prefetch_pages: self.kv_prefetch_pages,
+        }
+    }
+
+    /// Grouped view of the fault-tolerance knobs.
+    pub fn fault(&self) -> FaultCfg {
+        FaultCfg {
+            plan: self.fault_plan.clone(),
+            slack: self.fault_slack,
+            deadline_floor_ms: self.deadline_floor_ms,
+            max_recoveries: self.max_recoveries,
+        }
+    }
+
+    /// A validating builder over the grouped sub-structs; the one
+    /// front door for constructing a checked config in code.
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder { cfg: EngineConfig::default() }
+    }
+}
+
+/// Builder over [`EngineConfig`]'s grouped sub-structs. Starts from the
+/// defaults, takes whole groups ([`Topology`], [`OverlapCfg`], …) plus
+/// the few run-level scalars, and runs every cross-field invariant in
+/// [`EngineConfig::validate`] at [`EngineConfigBuilder::build`] — the
+/// config-file path (`from_map`) funnels through the same validation,
+/// so an invariant holds everywhere or nowhere.
+#[derive(Clone, Debug)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    /// Set the rank grid (`pp × tp × cp`).
+    pub fn topology(mut self, t: Topology) -> Self {
+        self.cfg.pp_stages = t.pp;
+        self.cfg.tp = t.tp;
+        self.cfg.cp = t.cp;
+        self
+    }
+
+    /// Set the overlap/scheduling group.
+    pub fn overlap(mut self, o: OverlapCfg) -> Self {
+        self.cfg.strategy = o.strategy;
+        self.cfg.split = o.split;
+        self.cfg.gemm_segments = o.gemm_segments;
+        self.cfg.comm_segments = o.comm_segments;
+        self.cfg.max_chunk = o.max_chunk;
+        self.cfg.mixed_iterations = o.mixed_iterations;
+        self.cfg.decode_batch = o.decode_batch;
+        self.cfg.lane_gemm = o.lane_gemm;
+        self.cfg.fused_epilogue = o.fused_epilogue;
+        self.cfg.ladder_residual = o.ladder_residual;
+        self.cfg.spec_k = o.spec_k;
+        self.cfg.spec_ngram = o.spec_ngram;
+        self
+    }
+
+    /// Set the wire group.
+    pub fn wire(mut self, w: WireCfg) -> Self {
+        self.cfg.comm_quant = w.comm_quant;
+        self.cfg.wire_precision = w.wire_precision;
+        self.cfg.decode_wire_precision = w.decode_wire_precision;
+        self.cfg.link_mbps = w.link_mbps;
+        self.cfg.link_alpha_us = w.link_alpha_us;
+        self
+    }
+
+    /// Set the SLO / memory-pressure group.
+    pub fn slo(mut self, s: SloCfg) -> Self {
+        self.cfg.tbt_budget_ms = s.tbt_budget_ms;
+        self.cfg.kv_high_water = s.kv_high_water;
+        self.cfg.queue_bound = s.queue_bound;
+        self.cfg.max_preemptions = s.max_preemptions;
+        self.cfg.ttft_deadline_ms = s.ttft_deadline_ms;
+        self.cfg.kv_offload = s.kv_offload;
+        self.cfg.kv_resident_tokens = s.kv_resident_tokens;
+        self.cfg.kv_prefetch_pages = s.kv_prefetch_pages;
+        self
+    }
+
+    /// Set the fault-tolerance group.
+    pub fn fault(mut self, f: FaultCfg) -> Self {
+        self.cfg.fault_plan = f.plan;
+        self.cfg.fault_slack = f.slack;
+        self.cfg.deadline_floor_ms = f.deadline_floor_ms;
+        self.cfg.max_recoveries = f.max_recoveries;
+        self
+    }
+
+    /// Max concurrent sequences in a batch (run-level scalar).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    /// Decode steps per request after prefill (run-level scalar).
+    pub fn decode_steps(mut self, n: usize) -> Self {
+        self.cfg.decode_steps = n;
+        self
+    }
+
+    /// Artifact directory for the real engine (run-level scalar).
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Validate every cross-field invariant and return the config.
+    pub fn build(self) -> Result<EngineConfig, String> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
 /// Parse the line-based config format:
 /// ```text
-/// [engine]
-/// strategy = iso
+/// [topology]
 /// tp = 4
+/// [overlap]
+/// strategy = iso
 /// ```
 pub fn parse_config_file(path: &Path) -> Result<BTreeMap<String, String>, String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
@@ -458,152 +903,279 @@ pub fn parse_bool(v: &str, key: &str) -> Result<bool, String> {
 
 impl EngineConfig {
     /// Build from parsed `section.key` pairs; unknown keys are errors so
-    /// typos don't silently fall back to defaults.
+    /// typos don't silently fall back to defaults. Accepts the grouped
+    /// canonical keys (`topology.tp`, `overlap.strategy`, `wire.precision`,
+    /// `slo.kv_offload`, `fault.plan`, …) and, as deprecated aliases with
+    /// identical semantics, the historical flat `engine.*` spellings.
     pub fn from_map(map: &BTreeMap<String, String>) -> Result<Self, String> {
         let mut cfg = EngineConfig::default();
         for (k, v) in map {
             match k.as_str() {
-                "engine.strategy" => {
-                    cfg.strategy =
-                        Strategy::parse(v).ok_or_else(|| format!("bad strategy {v:?}"))?
+                "engine.strategy" | "overlap.strategy" => {
+                    cfg.strategy = v.parse::<Strategy>().map_err(|e| e.to_string())?
                 }
-                "engine.split" => {
-                    cfg.split = SplitPolicy::parse(v).ok_or_else(|| format!("bad split {v:?}"))?
+                "engine.split" | "overlap.split" => {
+                    cfg.split = v.parse::<SplitPolicy>().map_err(|e| e.to_string())?
                 }
-                "engine.comm_quant" => {
+                "engine.comm_quant" | "wire.comm_quant" => {
                     cfg.comm_quant =
                         CommQuant::parse(v).ok_or_else(|| format!("bad comm_quant {v:?}"))?
                 }
-                "engine.gemm_segments" => {
+                "engine.gemm_segments" | "overlap.gemm_segments" => {
                     cfg.gemm_segments = v.parse().map_err(|_| format!("bad gemm_segments {v:?}"))?
                 }
-                "engine.comm_segments" => {
+                "engine.comm_segments" | "overlap.comm_segments" => {
                     cfg.comm_segments = v.parse().map_err(|_| format!("bad comm_segments {v:?}"))?
                 }
-                "engine.tp" => cfg.tp = v.parse().map_err(|_| format!("bad tp {v:?}"))?,
-                "engine.pp_stages" => {
+                "engine.tp" | "topology.tp" => {
+                    cfg.tp = v.parse().map_err(|_| format!("bad tp {v:?}"))?
+                }
+                "engine.pp_stages" | "topology.pp" => {
                     cfg.pp_stages = v.parse().map_err(|_| format!("bad pp_stages {v:?}"))?
                 }
-                "engine.max_chunk" => {
+                "topology.cp" => cfg.cp = v.parse().map_err(|_| format!("bad cp {v:?}"))?,
+                "engine.max_chunk" | "overlap.max_chunk" => {
                     cfg.max_chunk = v.parse().map_err(|_| format!("bad max_chunk {v:?}"))?
                 }
                 "engine.max_batch" => {
                     cfg.max_batch = v.parse().map_err(|_| format!("bad max_batch {v:?}"))?
                 }
-                "engine.decode_batch" => {
+                "engine.decode_batch" | "overlap.decode_batch" => {
                     cfg.decode_batch =
                         v.parse().map_err(|_| format!("bad decode_batch {v:?}"))?
                 }
-                "engine.mixed_iterations" => {
+                "engine.mixed_iterations" | "overlap.mixed_iterations" => {
                     cfg.mixed_iterations = parse_bool(v, "mixed_iterations")?
                 }
-                "engine.lane_gemm" => cfg.lane_gemm = parse_bool(v, "lane_gemm")?,
-                "engine.fused_epilogue" => {
+                "engine.lane_gemm" | "overlap.lane_gemm" => {
+                    cfg.lane_gemm = parse_bool(v, "lane_gemm")?
+                }
+                "engine.fused_epilogue" | "overlap.fused_epilogue" => {
                     cfg.fused_epilogue = parse_bool(v, "fused_epilogue")?
                 }
-                "engine.ladder_residual" => {
+                "engine.ladder_residual" | "overlap.ladder_residual" => {
                     cfg.ladder_residual = parse_bool(v, "ladder_residual")?
                 }
-                "engine.spec_k" => {
+                "engine.spec_k" | "overlap.spec_k" => {
                     cfg.spec_k = v.parse().map_err(|_| format!("bad spec_k {v:?}"))?
                 }
-                "engine.spec_ngram" => {
+                "engine.spec_ngram" | "overlap.spec_ngram" => {
                     cfg.spec_ngram = v.parse().map_err(|_| format!("bad spec_ngram {v:?}"))?
                 }
                 "engine.decode_steps" => {
                     cfg.decode_steps = v.parse().map_err(|_| format!("bad decode_steps {v:?}"))?
                 }
                 "engine.artifacts_dir" => cfg.artifacts_dir = v.clone(),
-                "engine.link_mbps" => {
+                "engine.link_mbps" | "wire.link_mbps" => {
                     cfg.link_mbps =
                         Some(v.parse().map_err(|_| format!("bad link_mbps {v:?}"))?)
                 }
-                "engine.link_alpha_us" => {
+                "engine.link_alpha_us" | "wire.link_alpha_us" => {
                     cfg.link_alpha_us = v.parse().map_err(|_| format!("bad link_alpha_us {v:?}"))?
                 }
-                "engine.fault_plan" => cfg.fault_plan = Some(v.clone()),
-                "engine.fault_slack" => {
+                "engine.fault_plan" | "fault.plan" => cfg.fault_plan = Some(v.clone()),
+                "engine.fault_slack" | "fault.slack" => {
                     cfg.fault_slack = v.parse().map_err(|_| format!("bad fault_slack {v:?}"))?
                 }
-                "engine.deadline_floor_ms" => {
+                "engine.deadline_floor_ms" | "fault.deadline_floor_ms" => {
                     cfg.deadline_floor_ms =
                         v.parse().map_err(|_| format!("bad deadline_floor_ms {v:?}"))?
                 }
-                "engine.max_recoveries" => {
+                "engine.max_recoveries" | "fault.max_recoveries" => {
                     cfg.max_recoveries =
                         v.parse().map_err(|_| format!("bad max_recoveries {v:?}"))?
                 }
-                "engine.tbt_budget_ms" => {
+                "engine.tbt_budget_ms" | "slo.tbt_budget_ms" => {
                     cfg.tbt_budget_ms =
                         v.parse().map_err(|_| format!("bad tbt_budget_ms {v:?}"))?
                 }
-                "engine.kv_high_water" => {
+                "engine.kv_high_water" | "slo.kv_high_water" => {
                     cfg.kv_high_water =
                         v.parse().map_err(|_| format!("bad kv_high_water {v:?}"))?
                 }
-                "engine.queue_bound" => {
+                "engine.queue_bound" | "slo.queue_bound" => {
                     cfg.queue_bound = v.parse().map_err(|_| format!("bad queue_bound {v:?}"))?
                 }
-                "engine.max_preemptions" => {
+                "engine.max_preemptions" | "slo.max_preemptions" => {
                     cfg.max_preemptions =
                         v.parse().map_err(|_| format!("bad max_preemptions {v:?}"))?
                 }
-                "engine.ttft_deadline_ms" => {
+                "engine.ttft_deadline_ms" | "slo.ttft_deadline_ms" => {
                     cfg.ttft_deadline_ms =
                         v.parse().map_err(|_| format!("bad ttft_deadline_ms {v:?}"))?
                 }
-                "engine.wire_precision" => {
+                "engine.wire_precision" | "wire.precision" => {
                     cfg.wire_precision = Some(
                         CommQuant::parse(v).ok_or_else(|| format!("bad wire_precision {v:?}"))?,
                     )
                 }
-                "engine.decode_wire_precision" => {
+                "engine.decode_wire_precision" | "wire.decode_precision" => {
                     cfg.decode_wire_precision = Some(
                         CommQuant::parse(v)
                             .ok_or_else(|| format!("bad decode_wire_precision {v:?}"))?,
                     )
                 }
+                "slo.kv_offload" => cfg.kv_offload = parse_bool(v, "kv_offload")?,
+                "slo.kv_resident_tokens" => {
+                    cfg.kv_resident_tokens =
+                        v.parse().map_err(|_| format!("bad kv_resident_tokens {v:?}"))?
+                }
+                "slo.kv_prefetch_pages" => {
+                    cfg.kv_prefetch_pages =
+                        v.parse().map_err(|_| format!("bad kv_prefetch_pages {v:?}"))?
+                }
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
-        if cfg.gemm_segments == 0 {
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Every cross-field invariant, in one place: called by `from_map`
+    /// and [`EngineConfigBuilder::build`] alike. Invariants needing the
+    /// model manifest (`pp_stages ≤ n_layers`, chunk sizes compiled)
+    /// stay in `Engine::start`, which sees the artifacts.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.gemm_segments == 0 {
             return Err("gemm_segments must be >= 1".into());
         }
-        if cfg.comm_segments == 0 {
+        if self.comm_segments == 0 {
             return Err("comm_segments must be >= 1".into());
         }
-        if cfg.decode_batch == 0 {
+        if self.decode_batch == 0 {
             return Err("decode_batch must be >= 1".into());
         }
-        if cfg.spec_ngram == 0 {
+        if self.spec_ngram == 0 {
             return Err("spec_ngram must be >= 1".into());
         }
-        if cfg.pp_stages == 0 {
+        if self.tp == 0 {
+            return Err("tp must be >= 1".into());
+        }
+        if self.pp_stages == 0 {
             return Err("pp_stages must be >= 1".into());
         }
-        if cfg.fault_slack < 1.0 {
+        if self.cp == 0 {
+            return Err("cp must be >= 1".into());
+        }
+        if self.fault_slack < 1.0 {
             return Err("fault_slack must be >= 1".into());
         }
-        if cfg.tbt_budget_ms < 0.0 {
+        if self.tbt_budget_ms < 0.0 {
             return Err("tbt_budget_ms must be >= 0".into());
         }
-        if !(cfg.kv_high_water > 0.0 && cfg.kv_high_water <= 1.0) {
+        if self.cp > 1 && self.tbt_budget_ms > 0.0 {
+            return Err("tbt_budget_ms requires cp = 1 (bounded chunked prefill \
+                 does not compose with context parallelism)"
+                .into());
+        }
+        if !(self.kv_high_water > 0.0 && self.kv_high_water <= 1.0) {
             return Err("kv_high_water must be in (0, 1]".into());
         }
-        if cfg.ttft_deadline_ms < 0.0 {
+        if self.ttft_deadline_ms < 0.0 {
             return Err("ttft_deadline_ms must be >= 0".into());
         }
-        if let Some(plan) = &cfg.fault_plan {
+        if let Some(plan) = &self.fault_plan {
             // Parse eagerly so a typo'd plan fails at startup.
             crate::fault::FaultPlan::parse(plan).map_err(|e| format!("bad fault_plan: {e}"))?;
         }
-        Ok(cfg)
+        Ok(())
+    }
+
+    /// Re-emit the config as its canonical `section.key` map — the
+    /// fixed point of `from_map ∘ to_map` (pinned by the round-trip
+    /// property test). `None`-valued options are omitted, exactly as an
+    /// untouched config file leaves them unset.
+    pub fn to_map(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        let mut put = |k: &str, v: String| {
+            m.insert(k.to_string(), v);
+        };
+        put("topology.pp", self.pp_stages.to_string());
+        put("topology.tp", self.tp.to_string());
+        put("topology.cp", self.cp.to_string());
+        put("overlap.strategy", self.strategy.to_string());
+        put("overlap.split", self.split.to_string());
+        put("overlap.gemm_segments", self.gemm_segments.to_string());
+        put("overlap.comm_segments", self.comm_segments.to_string());
+        put("overlap.max_chunk", self.max_chunk.to_string());
+        put("overlap.mixed_iterations", self.mixed_iterations.to_string());
+        put("overlap.decode_batch", self.decode_batch.to_string());
+        put("overlap.lane_gemm", self.lane_gemm.to_string());
+        put("overlap.fused_epilogue", self.fused_epilogue.to_string());
+        put("overlap.ladder_residual", self.ladder_residual.to_string());
+        put("overlap.spec_k", self.spec_k.to_string());
+        put("overlap.spec_ngram", self.spec_ngram.to_string());
+        put("wire.comm_quant", self.comm_quant.to_string());
+        if let Some(p) = self.wire_precision {
+            put("wire.precision", p.to_string());
+        }
+        if let Some(p) = self.decode_wire_precision {
+            put("wire.decode_precision", p.to_string());
+        }
+        if let Some(mbps) = self.link_mbps {
+            put("wire.link_mbps", mbps.to_string());
+        }
+        put("wire.link_alpha_us", self.link_alpha_us.to_string());
+        put("slo.tbt_budget_ms", self.tbt_budget_ms.to_string());
+        put("slo.kv_high_water", self.kv_high_water.to_string());
+        put("slo.queue_bound", self.queue_bound.to_string());
+        put("slo.max_preemptions", self.max_preemptions.to_string());
+        put("slo.ttft_deadline_ms", self.ttft_deadline_ms.to_string());
+        put("slo.kv_offload", self.kv_offload.to_string());
+        put("slo.kv_resident_tokens", self.kv_resident_tokens.to_string());
+        put("slo.kv_prefetch_pages", self.kv_prefetch_pages.to_string());
+        if let Some(plan) = &self.fault_plan {
+            put("fault.plan", plan.clone());
+        }
+        put("fault.slack", self.fault_slack.to_string());
+        put("fault.deadline_floor_ms", self.deadline_floor_ms.to_string());
+        put("fault.max_recoveries", self.max_recoveries.to_string());
+        put("engine.max_batch", self.max_batch.to_string());
+        put("engine.decode_steps", self.decode_steps.to_string());
+        put("engine.artifacts_dir", self.artifacts_dir.clone());
+        m
+    }
+}
+
+/// A fully-specified simulator experiment (one Table-1 cell).
+#[derive(Clone, Debug)]
+pub struct SimExperiment {
+    /// Modeled node (device × cards × interconnect).
+    pub node: NodeProfile,
+    /// Modeled transformer geometry.
+    pub model: ModelSpec,
+    /// Prefill prompt length.
+    pub prompt_len: usize,
+    /// Overlap strategy under test.
+    pub strategy: Strategy,
+    /// ISO split policy.
+    pub split: SplitPolicy,
+    /// Whether collectives quantize to int8 on the wire.
+    pub int8_wire: bool,
+    /// Launches the pre-collective GEMMs are segmented into.
+    pub gemm_segments: usize,
+}
+
+impl SimExperiment {
+    /// An experiment with the node's default wire format and balanced split.
+    pub fn new(node: NodeProfile, model: ModelSpec, prompt_len: usize, strategy: Strategy) -> Self {
+        let int8_wire = node.int8_wire_default;
+        SimExperiment {
+            node,
+            model,
+            prompt_len,
+            strategy,
+            split: SplitPolicy::AttnBalanced,
+            int8_wire,
+            gemm_segments: DEFAULT_GEMM_SEGMENTS,
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::{Prop, Rng};
 
     #[test]
     fn strategy_parse_roundtrip() {
@@ -622,6 +1194,42 @@ mod tests {
         assert_eq!(SplitPolicy::parse("adaptive"), Some(SplitPolicy::AdaptiveAttnMlp));
         assert!(SplitPolicy::parse("ratio:1.5").is_none());
         assert!(SplitPolicy::parse("ratio:abc").is_none());
+    }
+
+    #[test]
+    fn from_str_errors_list_valid_values() {
+        // The typed error carries what/got/valid and renders them all;
+        // CLI and config-file paths surface the same message.
+        let e = "magic".parse::<Strategy>().unwrap_err();
+        assert_eq!(e.what, "strategy");
+        assert_eq!(e.got, "magic");
+        assert!(e.to_string().contains("bad strategy \"magic\""), "{e}");
+        assert!(e.to_string().contains("iso"), "{e}");
+        let e = "ratio:1.5".parse::<SplitPolicy>().unwrap_err();
+        assert!(e.to_string().contains("ratio:R"), "{e}");
+        let e = "int2".parse::<CommQuant>().unwrap_err();
+        assert!(e.to_string().contains("f32, fp16, int8, fp8, int4"), "{e}");
+        let e = "pp2.xx3".parse::<Topology>().unwrap_err();
+        assert!(e.to_string().contains("ppP.tpT.cpC"), "{e}");
+    }
+
+    #[test]
+    fn topology_parses_and_displays() {
+        let t: Topology = "pp2.tp2.cp1".parse().unwrap();
+        assert_eq!(t, Topology { pp: 2, tp: 2, cp: 1 });
+        assert_eq!(t.world(), 4);
+        assert_eq!(t.to_string(), "pp2.tp2.cp1");
+        // Omitted axes keep their defaults (pp 1, tp 2, cp 1).
+        assert_eq!("tp4".parse::<Topology>().unwrap(), Topology { pp: 1, tp: 4, cp: 1 });
+        assert_eq!("cp2.tp2".parse::<Topology>().unwrap(), Topology { pp: 1, tp: 2, cp: 2 });
+        // Display round-trips through parse.
+        for t in [Topology::default(), Topology { pp: 4, tp: 1, cp: 3 }] {
+            assert_eq!(t.to_string().parse::<Topology>().unwrap(), t);
+        }
+        assert!("".parse::<Topology>().is_err());
+        assert!("pp".parse::<Topology>().is_err());
+        assert!("pp0.tp2".parse::<Topology>().is_err());
+        assert!("pp2,tp2".parse::<Topology>().is_err());
     }
 
     #[test]
@@ -646,6 +1254,242 @@ mod tests {
         assert_eq!(cfg.comm_segments, 4);
         assert_eq!(cfg.decode_batch, 4);
         assert!(!cfg.mixed_iterations);
+    }
+
+    #[test]
+    fn grouped_sections_parse_like_engine_aliases() {
+        // The same knobs spelled through the canonical grouped sections.
+        let text = r#"
+            [topology]
+            pp = 2
+            tp = 4
+            cp = 2
+            [overlap]
+            strategy = serial
+            decode_batch = 4
+            [wire]
+            comm_quant = int8
+            precision = fp8
+            [slo]
+            queue_bound = 64
+            kv_offload = on
+            [fault]
+            slack = 8
+        "#;
+        let cfg = EngineConfig::from_map(&parse_config_str(text).unwrap()).unwrap();
+        assert_eq!(cfg.topology(), Topology { pp: 2, tp: 4, cp: 2 });
+        assert_eq!(cfg.strategy, Strategy::Serial);
+        assert_eq!(cfg.decode_batch, 4);
+        assert_eq!(cfg.comm_quant, CommQuant::Int8);
+        assert_eq!(cfg.wire_precision, Some(CommQuant::Fp8));
+        assert_eq!(cfg.queue_bound, 64);
+        assert!(cfg.kv_offload);
+        assert_eq!(cfg.fault_slack, 8.0);
+    }
+
+    #[test]
+    fn every_engine_alias_equals_canonical() {
+        // Each deprecated `engine.*` alias must produce a config equal
+        // to its canonical grouped spelling.
+        let pairs = [
+            ("engine.strategy", "overlap.strategy", "serial"),
+            ("engine.split", "overlap.split", "ratio:0.25"),
+            ("engine.comm_quant", "wire.comm_quant", "int8"),
+            ("engine.gemm_segments", "overlap.gemm_segments", "2"),
+            ("engine.comm_segments", "overlap.comm_segments", "3"),
+            ("engine.tp", "topology.tp", "4"),
+            ("engine.pp_stages", "topology.pp", "2"),
+            ("engine.max_chunk", "overlap.max_chunk", "32"),
+            ("engine.decode_batch", "overlap.decode_batch", "4"),
+            ("engine.mixed_iterations", "overlap.mixed_iterations", "false"),
+            ("engine.lane_gemm", "overlap.lane_gemm", "off"),
+            ("engine.fused_epilogue", "overlap.fused_epilogue", "off"),
+            ("engine.ladder_residual", "overlap.ladder_residual", "on"),
+            ("engine.spec_k", "overlap.spec_k", "4"),
+            ("engine.spec_ngram", "overlap.spec_ngram", "3"),
+            ("engine.link_mbps", "wire.link_mbps", "800"),
+            ("engine.link_alpha_us", "wire.link_alpha_us", "25"),
+            ("engine.fault_plan", "fault.plan", "kill:rank=1:iter=3"),
+            ("engine.fault_slack", "fault.slack", "8"),
+            ("engine.deadline_floor_ms", "fault.deadline_floor_ms", "100"),
+            ("engine.max_recoveries", "fault.max_recoveries", "2"),
+            ("engine.tbt_budget_ms", "slo.tbt_budget_ms", "50"),
+            ("engine.kv_high_water", "slo.kv_high_water", "0.85"),
+            ("engine.queue_bound", "slo.queue_bound", "64"),
+            ("engine.max_preemptions", "slo.max_preemptions", "3"),
+            ("engine.ttft_deadline_ms", "slo.ttft_deadline_ms", "500"),
+            ("engine.wire_precision", "wire.precision", "fp8"),
+            ("engine.decode_wire_precision", "wire.decode_precision", "int4"),
+        ];
+        for (alias, canonical, value) in pairs {
+            let via = |key: &str| {
+                let mut m = BTreeMap::new();
+                m.insert(key.to_string(), value.to_string());
+                EngineConfig::from_map(&m)
+                    .unwrap_or_else(|e| panic!("{key} = {value}: {e}"))
+            };
+            assert_eq!(via(alias), via(canonical), "{alias} vs {canonical}");
+            // And neither spelling may silently equal the default.
+            assert_ne!(via(alias), EngineConfig::default(), "{alias} was a no-op");
+        }
+    }
+
+    #[test]
+    fn grouped_views_mirror_flat_fields() {
+        let mut cfg = EngineConfig::default();
+        assert_eq!(cfg.topology(), Topology::default());
+        assert_eq!(cfg.overlap(), OverlapCfg::default());
+        assert_eq!(cfg.wire(), WireCfg::default());
+        assert_eq!(cfg.slo(), SloCfg::default());
+        assert_eq!(cfg.fault(), FaultCfg::default());
+        cfg.cp = 2;
+        cfg.kv_offload = true;
+        assert_eq!(cfg.topology().cp, 2);
+        assert!(cfg.slo().kv_offload);
+    }
+
+    #[test]
+    fn builder_defaults_equal_flat_defaults() {
+        // Grouped construction is byte-identical to the flat defaults —
+        // the golden pin for the deprecated alias layer.
+        assert_eq!(EngineConfig::builder().build().unwrap(), EngineConfig::default());
+        let built = EngineConfig::builder()
+            .topology(Topology { pp: 2, tp: 2, cp: 1 })
+            .slo(SloCfg { queue_bound: 64, ..Default::default() })
+            .max_batch(4)
+            .build()
+            .unwrap();
+        assert_eq!((built.pp_stages, built.tp, built.cp), (2, 2, 1));
+        assert_eq!(built.queue_bound, 64);
+        assert_eq!(built.max_batch, 4);
+    }
+
+    #[test]
+    fn builder_centralizes_validation() {
+        let bad = EngineConfig::builder()
+            .slo(SloCfg { kv_high_water: 0.0, ..Default::default() })
+            .build();
+        assert_eq!(bad.unwrap_err(), "kv_high_water must be in (0, 1]");
+        let bad = EngineConfig::builder().topology(Topology { pp: 0, tp: 2, cp: 1 }).build();
+        assert_eq!(bad.unwrap_err(), "pp_stages must be >= 1");
+        let bad = EngineConfig::builder().topology(Topology { pp: 1, tp: 0, cp: 1 }).build();
+        assert_eq!(bad.unwrap_err(), "tp must be >= 1");
+        let bad = EngineConfig::builder()
+            .fault(FaultCfg { plan: Some("kill:rank=1".into()), ..Default::default() })
+            .build();
+        assert!(bad.unwrap_err().starts_with("bad fault_plan"));
+    }
+
+    #[test]
+    fn cp_and_offload_knobs_default_off_and_validate() {
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.cp, 1, "context parallelism must be opt-in");
+        assert!(!cfg.kv_offload, "offload must be opt-in");
+        assert_eq!(cfg.kv_resident_tokens, 0, "uncapped resident pool by default");
+        assert_eq!(cfg.kv_prefetch_pages, 2);
+
+        let map = parse_config_str(
+            "[topology]\ncp = 2\n[slo]\nkv_offload = on\n\
+             kv_resident_tokens = 4096\nkv_prefetch_pages = 4",
+        )
+        .unwrap();
+        let cfg = EngineConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.cp, 2);
+        assert!(cfg.kv_offload);
+        assert_eq!(cfg.kv_resident_tokens, 4096);
+        assert_eq!(cfg.kv_prefetch_pages, 4);
+
+        let bad = parse_config_str("[topology]\ncp = 0").unwrap();
+        assert!(EngineConfig::from_map(&bad).is_err());
+        // Budget slices do not compose with sharded prefill.
+        let bad = parse_config_str("[topology]\ncp = 2\n[slo]\ntbt_budget_ms = 50").unwrap();
+        let err = EngineConfig::from_map(&bad).unwrap_err();
+        assert!(err.contains("tbt_budget_ms requires cp = 1"), "{err}");
+    }
+
+    #[test]
+    fn to_map_from_map_is_a_fixed_point() {
+        // Deterministic spot check before the property run: defaults.
+        let cfg = EngineConfig::default();
+        let m = cfg.to_map();
+        assert_eq!(EngineConfig::from_map(&m).unwrap(), cfg);
+        assert_eq!(EngineConfig::from_map(&m).unwrap().to_map(), m);
+        // None-valued options stay unset, not emitted as a spelling.
+        assert!(!m.contains_key("wire.precision"));
+        assert!(!m.contains_key("fault.plan"));
+    }
+
+    #[test]
+    fn prop_config_round_trips_through_canonical_map() {
+        Prop::new(0xC0FF).cases(128).run("map → config → map fixed point", |rng| {
+            let cfg = random_config(rng);
+            let m = cfg.to_map();
+            let back = EngineConfig::from_map(&m).map_err(|e| format!("{m:?}: {e}"))?;
+            if back != cfg {
+                return Err(format!("config drifted: {cfg:?} vs {back:?}"));
+            }
+            if back.to_map() != m {
+                return Err(format!("map drifted: {m:?} vs {:?}", back.to_map()));
+            }
+            Ok(())
+        });
+    }
+
+    /// A random *valid* config exercising every field the map carries.
+    fn random_config(rng: &mut Rng) -> EngineConfig {
+        let strategies = Strategy::all();
+        let splits = [
+            SplitPolicy::Even,
+            SplitPolicy::AttnBalanced,
+            SplitPolicy::AdaptiveAttnMlp,
+            SplitPolicy::Ratio(0.05 + rng.f64() * 0.9),
+        ];
+        let cp = rng.range(1, 4);
+        EngineConfig {
+            strategy: strategies[rng.range(0, strategies.len())],
+            split: splits[rng.range(0, splits.len())],
+            comm_quant: CommQuant::LADDER[rng.range(0, CommQuant::LADDER.len())],
+            gemm_segments: rng.range(1, 8),
+            comm_segments: rng.range(1, 4),
+            tp: rng.range(1, 8),
+            pp_stages: rng.range(1, 4),
+            cp,
+            max_chunk: 16 << rng.range(0, 4),
+            max_batch: rng.range(1, 16),
+            decode_batch: rng.range(1, 16),
+            mixed_iterations: rng.below(2) == 0,
+            lane_gemm: rng.below(2) == 0,
+            fused_epilogue: rng.below(2) == 0,
+            ladder_residual: rng.below(2) == 0,
+            spec_k: rng.range(0, 5),
+            spec_ngram: rng.range(1, 4),
+            decode_steps: rng.range(0, 32),
+            artifacts_dir: "artifacts".into(),
+            link_mbps: if rng.below(2) == 0 { Some(rng.f64() * 1000.0 + 1.0) } else { None },
+            link_alpha_us: rng.f64() * 100.0,
+            fault_plan: if rng.below(4) == 0 { Some("kill:rank=1:iter=3".into()) } else { None },
+            fault_slack: 1.0 + rng.f64() * 32.0,
+            deadline_floor_ms: rng.f64() * 500.0,
+            max_recoveries: rng.range(1, 8),
+            tbt_budget_ms: if cp > 1 { 0.0 } else { rng.f64() * 100.0 },
+            kv_high_water: 0.1 + rng.f64() * 0.9,
+            queue_bound: rng.range(0, 128),
+            max_preemptions: rng.range(1, 4),
+            ttft_deadline_ms: rng.f64() * 1000.0,
+            wire_precision: if rng.below(2) == 0 {
+                Some(CommQuant::LADDER[rng.range(0, CommQuant::LADDER.len())])
+            } else {
+                None
+            },
+            decode_wire_precision: if rng.below(2) == 0 {
+                Some(CommQuant::LADDER[rng.range(0, CommQuant::LADDER.len())])
+            } else {
+                None
+            },
+            kv_offload: rng.below(2) == 0,
+            kv_resident_tokens: rng.range(0, 1 << 20),
+            kv_prefetch_pages: rng.range(0, 8),
+        }
     }
 
     #[test]

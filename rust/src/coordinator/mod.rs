@@ -1,8 +1,10 @@
-//! The serving engine: leader + a `pp_stages × tp` grid of worker pairs.
+//! The serving engine: leader + a `cp × pp_stages × tp` grid of worker
+//! pairs.
 //!
-//! Topology (one process; `pp_stages = 1` is the paper's one-node TP
-//! deployment, `pp_stages > 1` the 2D pipeline×tensor deployment of
-//! DESIGN.md §11):
+//! Topology (one process; `pp_stages = 1, cp = 1` is the paper's
+//! one-node TP deployment, `pp_stages > 1` the 2D pipeline×tensor
+//! deployment of DESIGN.md §11, `cp > 1` the ring context-parallel
+//! third axis of DESIGN.md §17):
 //!
 //! ```text
 //!   leader (Engine) ──jobs──▶ every rank        stage s, rank r:
@@ -83,6 +85,19 @@
 //! non-speculative engine while each iteration advances up to `k + 1`
 //! tokens per sequence.
 //!
+//! Context parallelism (DESIGN.md §17): with `cp > 1` the leader's
+//! chunk tiling is sliced into `cp` contiguous spans and each span runs
+//! on its own full `pp × tp` grid. Group `c > 0` first drains the
+//! preceding groups' K/V prefix off a per-(stage, tp-rank)
+//! [`RingPass`] ring — one shard message per stage-local layer — then
+//! prefills its own span with the unchanged ISO machinery, then
+//! forwards the grown prefix to group `c + 1`. The fold order is
+//! pinned, so the computed KV and logits are bit-identical to the flat
+//! engine's. Decode is *not* sequence-parallel (the paper's rule): the
+//! last group, which ends prefill holding the full prefix, runs every
+//! decode/verify lane and holds the leader's reply channel; earlier
+//! groups idle through lane steps in job lockstep.
+//!
 //! Python is long gone by the time this runs: stages were AOT-lowered to
 //! HLO text by `make artifacts` and are compiled per worker at startup.
 
@@ -99,10 +114,12 @@ use crate::batch::{
     accept_count, plan_prefill_pp, ChunkJob, DecodeSlot, DraftProposer, LaneSeq, MixedPlanner,
     NGramProposer, SpecSlot,
 };
-use crate::collective::{ring, seg_range, stage_grid, FusedEpilogue, RingHandle, StagePort};
+use crate::collective::{
+    cp_ring, ring, seg_range, stage_grid, FusedEpilogue, RingHandle, RingPass, ShardMsg, StagePort,
+};
 use crate::config::{CommQuant, EngineConfig, PrecisionPolicy, Strategy};
 use crate::fault::{EngineError, FaultInjector, FaultPlan, SupervisionEvent};
-use crate::kv::KvManager;
+use crate::kv::TieredKv;
 use crate::metrics::{EngineMetrics, Timer};
 use crate::runtime::{Arg, DevTensor, Executable, Manifest, Tensor, WorkerRuntime};
 use crate::split::SplitContext;
@@ -260,6 +277,14 @@ pub struct WorkerStats {
     /// Time the compute thread spent blocked waiting on the previous
     /// stage's activations — the rank's share of the pipeline bubble.
     pub p2p_stall_ms: f64,
+    /// KV-shard bytes this rank forwarded around the context-parallel
+    /// ring (DESIGN.md §17); zero when `cp = 1`.
+    pub cp_shard_bytes: u64,
+    /// KV-shard messages this rank forwarded around the CP ring.
+    pub cp_shard_msgs: u64,
+    /// Time the compute thread spent blocked waiting on the previous
+    /// CP group's KV prefix — the shard ring's share of the wavefront.
+    pub cp_stall_ms: f64,
 }
 
 impl WorkerStats {
@@ -313,6 +338,9 @@ impl WorkerStats {
         self.p2p_bytes += o.p2p_bytes;
         self.p2p_msgs += o.p2p_msgs;
         self.p2p_stall_ms += o.p2p_stall_ms;
+        self.cp_shard_bytes += o.cp_shard_bytes;
+        self.cp_shard_msgs += o.cp_shard_msgs;
+        self.cp_stall_ms += o.cp_stall_ms;
     }
 }
 
@@ -349,6 +377,8 @@ pub struct EngineReport {
     pub pp_stages: usize,
     /// Tensor-parallel width per stage.
     pub tp: usize,
+    /// Ring context-parallel group count (1 = no third axis).
+    pub cp: usize,
 }
 
 /// Accounting from `Engine::serve_trace` (continuous batching).
@@ -403,12 +433,17 @@ impl TraceReport {
 
 /// Everything a rank's compute thread owns.
 struct ComputeWorker {
-    /// Pipeline stage this rank belongs to.
+    /// Pipeline stage this rank belongs to (within its CP group).
     stage: usize,
     /// Total pipeline stages.
     stages: usize,
-    /// This rank holds the leader's reply channel (last stage, TP rank 0)
-    /// and is therefore the one that compiles and runs the logits stage.
+    /// Context-parallel group this rank belongs to (0 when `cp = 1`).
+    cp_group: usize,
+    /// Total context-parallel groups (config `topology.cp`).
+    cp: usize,
+    /// This rank holds the leader's reply channel (last CP group, last
+    /// stage, TP rank 0) and is therefore the one that compiles and runs
+    /// the logits stage.
     is_reply: bool,
     strategy: Strategy,
     /// Layers owned by this stage (the stage's contiguous slice; equals
@@ -418,6 +453,9 @@ struct ComputeWorker {
     d_model: usize,
     /// Point-to-point activation port to the neighboring stages.
     port: StagePort,
+    /// KV-shard port to the neighboring CP groups (DESIGN.md §17); the
+    /// solo port when `cp = 1`.
+    shard_ring: RingPass,
     /// Row-segments per collective (config `comm_segments`).
     comm_segments: usize,
     /// Resolved per-phase wire rungs (DESIGN.md §16): prefill reduces
@@ -479,6 +517,7 @@ impl ComputeWorker {
         cfg: &EngineConfig,
         manifest: Manifest,
         port: StagePort,
+        shard_ring: RingPass,
         to_comm: Sender<CommJob>,
         from_comm: Receiver<SegAck>,
         recycle_tx: Sender<Vec<f32>>,
@@ -486,9 +525,14 @@ impl ComputeWorker {
     ) -> Result<Self> {
         let tp = cfg.tp;
         let stages = cfg.pp_stages;
-        let stage = rank / tp;
-        let tp_rank = rank % tp;
-        let is_reply = stage == stages - 1 && tp_rank == 0;
+        let cp = cfg.cp.max(1);
+        // World rank layout: `c × (pp × tp) + s × tp + r` — each CP
+        // group is a full pp × tp grid (DESIGN.md §17).
+        let group_rank = rank % (stages * tp);
+        let cp_group = rank / (stages * tp);
+        let stage = group_rank / tp;
+        let tp_rank = group_rank % tp;
+        let is_reply = cp_group == cp - 1 && stage == stages - 1 && tp_rank == 0;
         let rt = WorkerRuntime::new(manifest)?;
         let geo = rt.manifest.config;
         let (layer_lo, layer_hi) = stage_layer_range(geo.n_layers, stages, stage);
@@ -555,11 +599,14 @@ impl ComputeWorker {
         Ok(ComputeWorker {
             stage,
             stages,
+            cp_group,
+            cp,
             is_reply,
             strategy: cfg.strategy,
             local_layers: layer_hi - layer_lo,
             d_model: geo.d_model,
             port,
+            shard_ring,
             comm_segments: cfg.comm_segments.max(1),
             precision: cfg.precision(),
             lane_gemm: cfg.lane_gemm,
@@ -646,6 +693,113 @@ impl ComputeWorker {
         } else {
             self.recv_stage(c.len)
         }
+    }
+
+    /// Whether this rank's group runs the decode/verify lanes. Decode
+    /// keeps sequence parallelism off (the paper's "SP is not allowed"
+    /// rule, DESIGN.md §17): after prefill the last CP group holds every
+    /// sequence's full KV prefix, so it alone serves decode; earlier
+    /// groups contribute their prefill shard and idle through lane work.
+    fn cp_owns_lane(&self) -> bool {
+        self.cp_group == self.cp - 1
+    }
+
+    /// This group's slice of a leader-planned chunk tiling plus its
+    /// shard's token boundaries `[prefix, end)` within the padded prompt
+    /// (DESIGN.md §17): rows `[0, prefix)` must be KV-resident before
+    /// the slice's first attention (they stream in from the previous
+    /// group), and rows `[0, end)` are resident — and forwarded — once
+    /// the slice completes. With `cp = 1` this is the whole tiling.
+    fn cp_span<'a>(&self, chunks: &'a [ChunkJob]) -> (&'a [ChunkJob], usize, usize) {
+        let k = chunks.len();
+        let total = chunks.last().map_or(0, |c| c.offset + c.len);
+        if self.cp == 1 {
+            return (chunks, 0, total);
+        }
+        let (lo, hi) = seg_range(k, self.cp, self.cp_group);
+        let tok = |i: usize| if i < k { chunks[i].offset } else { total };
+        (&chunks[lo..hi], tok(lo), tok(hi))
+    }
+
+    /// Copy token rows `[row_start, row_start + rows)` of a cached K or V
+    /// tensor (shape `[heads, max_seq, head_dim]`) into a dense wire
+    /// buffer laid out `[heads, rows, head_dim]`.
+    fn load_kv_rows(&self, cache: &Tensor, row_start: usize, rows: usize) -> Vec<f32> {
+        let (heads, max_seq, hd) = (self.kv_shape[0], self.kv_shape[1], self.kv_shape[2]);
+        let mut out = vec![0.0; heads * rows * hd];
+        for h in 0..heads {
+            for t in 0..rows {
+                let src = (h * max_seq + row_start + t) * hd;
+                let dst = (h * rows + t) * hd;
+                out[dst..dst + hd].copy_from_slice(&cache.data[src..src + hd]);
+            }
+        }
+        out
+    }
+
+    /// Scatter a dense `[heads, rows, head_dim]` wire buffer back into a
+    /// cached tensor at token rows `[row_start, row_start + rows)`.
+    fn store_kv_rows(&self, cache: &mut Tensor, data: &[f32], row_start: usize, rows: usize) {
+        let (heads, max_seq, hd) = (self.kv_shape[0], self.kv_shape[1], self.kv_shape[2]);
+        for h in 0..heads {
+            for t in 0..rows {
+                let src = (h * rows + t) * hd;
+                let dst = (h * max_seq + row_start + t) * hd;
+                cache.data[dst..dst + hd].copy_from_slice(&data[src..src + hd]);
+            }
+        }
+    }
+
+    /// Receive the prompt's prefix K/V rows `[0, rows)` for every local
+    /// layer from the previous CP group and scatter them into this
+    /// slot's caches (DESIGN.md §17). The wavefront is stage-granular:
+    /// each stage exchanges only its own layer slice, one shard message
+    /// per stage-local layer, in layer order on both ends.
+    fn cp_recv_prefix(&mut self, slot: usize, rows: usize) -> Result<()> {
+        if self.cp == 1 || self.cp_group == 0 || rows == 0 {
+            return Ok(());
+        }
+        self.ensure_slot(slot);
+        for l in 0..self.local_layers {
+            let t = Timer::start();
+            let msg = self.shard_ring.try_recv_prev()?;
+            self.stats.cp_stall_ms += t.elapsed_ms();
+            if msg.slot != slot || msg.layer != l || msg.row_start != 0 || msg.rows != rows {
+                bail!(
+                    "cp shard mismatch: got slot {} layer {} rows [{}, {}), \
+                     want slot {slot} layer {l} rows [0, {rows})",
+                    msg.slot,
+                    msg.layer,
+                    msg.row_start,
+                    msg.row_start + msg.rows
+                );
+            }
+            let caches =
+                self.caches.get_mut(&slot).expect("invariant: slot cache allocated at spawn");
+            let (mut k, mut v) = std::mem::take(&mut caches[l]);
+            self.store_kv_rows(&mut k, &msg.k, 0, rows);
+            self.store_kv_rows(&mut v, &msg.v, 0, rows);
+            self.caches.get_mut(&slot).expect("invariant: slot cache allocated at spawn")[l] =
+                (k, v);
+        }
+        Ok(())
+    }
+
+    /// Forward K/V rows `[0, rows)` — the received prefix plus this
+    /// group's freshly computed shard — for every local layer to the
+    /// next CP group. The last group owns the full prefix and sends
+    /// nothing; a dead neighbor surfaces as a typed error.
+    fn cp_send_prefix(&mut self, slot: usize, rows: usize) -> Result<()> {
+        if self.cp == 1 || self.cp_group == self.cp - 1 || rows == 0 {
+            return Ok(());
+        }
+        for l in 0..self.local_layers {
+            let caches = self.caches.get(&slot).expect("invariant: slot cache allocated at spawn");
+            let k = self.load_kv_rows(&caches[l].0, 0, rows);
+            let v = self.load_kv_rows(&caches[l].1, 0, rows);
+            self.shard_ring.try_send_next(ShardMsg { slot, layer: l, row_start: 0, rows, k, v })?;
+        }
+        Ok(())
     }
 
     /// Submit a partial for all-reduce; the reduced rows stream back as
@@ -846,12 +1000,18 @@ impl ComputeWorker {
         logits_row: usize,
     ) -> Result<Option<Vec<f32>>> {
         self.ensure_slot(slot);
+        // Context parallelism (DESIGN.md §17): each group executes its
+        // contiguous chunk slice after pulling the preceding groups' KV
+        // prefix off the shard ring, then forwards the grown prefix on.
+        let (my, prefix, end) = self.cp_span(chunks);
+        self.cp_recv_prefix(slot, prefix)?;
         let xs = match self.strategy {
-            Strategy::Iso => self.prefill_pipelined(slot, tokens, chunks)?,
-            _ => self.prefill_blocking(slot, tokens, chunks)?,
+            Strategy::Iso => self.prefill_pipelined(slot, tokens, my)?,
+            _ => self.prefill_blocking(slot, tokens, my)?,
         };
+        self.cp_send_prefix(slot, end)?;
         if self.is_reply {
-            let last_idx = chunks.iter().position(|c| c.last).expect("no last chunk");
+            let last_idx = my.iter().position(|c| c.last).expect("no last chunk");
             Ok(Some(self.logits_row_of(&xs[last_idx], logits_row)?))
         } else {
             Ok(None)
@@ -980,6 +1140,11 @@ impl ComputeWorker {
     /// overlap unprofitable in decode (§1, §6) and so do we. The single
     /// row flows through the stages like a one-chunk pipeline.
     fn decode(&mut self, slot: usize, token: i32, offset: usize) -> Result<Option<Vec<f32>>> {
+        if self.cp > 1 && !self.cp_owns_lane() {
+            // Decode is not sequence-parallel (DESIGN.md §17): only the
+            // last CP group, which holds the full KV prefix, decodes.
+            return Ok(None);
+        }
         self.ensure_slot(slot);
         let mut x = if self.stage == 0 {
             self.run_embed(&[token])?
@@ -1247,7 +1412,13 @@ impl ComputeWorker {
     /// layer: `[P_attn×k, V_attn, P_mlp×k, V_mlp]`.
     fn step_mixed_spec(&mut self, p: &StepPrefill, lane: &[SpecSlot]) -> Result<StepLogits> {
         self.ensure_slot(p.slot);
-        let k = p.chunks.len();
+        // Under cp > 1 only the last group reaches the mixed schedules
+        // (earlier groups are lane-gated in `exec_step`), so the prefix
+        // recv below is the whole shard-ring interaction: the last group
+        // never forwards.
+        let (chunks, prefix, _) = self.cp_span(&p.chunks);
+        self.cp_recv_prefix(p.slot, prefix)?;
+        let k = chunks.len();
         let lane_rows: usize = lane.iter().map(SpecSlot::width).sum();
         let mut xs: Vec<Tensor> = Vec::with_capacity(k);
         let mut x_lane =
@@ -1258,13 +1429,13 @@ impl ComputeWorker {
             self.fault_check(l)?;
             for i in 0..k {
                 if l == 0 {
-                    let x = self.chunk_in(&p.tokens, &p.chunks[i])?;
+                    let x = self.chunk_in(&p.tokens, &chunks[i])?;
                     xs.push(x);
                 } else {
                     self.recv_reduced_apply(&mut xs[i])?;
                 }
-                let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
-                self.submit(partial.data, p.chunks[i].len, &mut xs[i])?;
+                let partial = self.run_attn(p.slot, l, &xs[i], chunks[i].offset)?;
+                self.submit(partial.data, chunks[i].len, &mut xs[i])?;
             }
             if l == 0 && self.stage > 0 {
                 // Wire order is [chunks…, lane]: the upstream stage
@@ -1278,7 +1449,7 @@ impl ComputeWorker {
             for i in 0..k {
                 self.recv_reduced_apply(&mut xs[i])?;
                 let partial = self.run_mlp(l, &xs[i])?;
-                self.submit(partial.data, p.chunks[i].len, &mut xs[i])?;
+                self.submit(partial.data, chunks[i].len, &mut xs[i])?;
             }
             self.recv_reduced_apply(&mut x_lane)?;
             self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
@@ -1296,7 +1467,7 @@ impl ComputeWorker {
         }
 
         if self.is_reply {
-            let last_idx = p.chunks.iter().position(|c| c.last).expect("no last chunk");
+            let last_idx = chunks.iter().position(|c| c.last).expect("no last chunk");
             let prefill_logits = self.logits_row_of(&xs[last_idx], p.logits_row)?;
             let lane_logits = self.lane_logits(&x_lane, &mut row)?;
             Ok((Some(prefill_logits), Some(lane_logits)))
@@ -1317,7 +1488,11 @@ impl ComputeWorker {
         lane: &[DecodeSlot],
     ) -> Result<StepLogits> {
         self.ensure_slot(p.slot);
-        let k = p.chunks.len();
+        // See `step_mixed_spec`: under cp > 1 only the last group runs
+        // the mixed schedule, over its own chunk slice.
+        let (chunks, prefix, _) = self.cp_span(&p.chunks);
+        self.cp_recv_prefix(p.slot, prefix)?;
+        let k = chunks.len();
         let mut xs: Vec<Tensor> = Vec::with_capacity(k);
         let mut x_lane =
             if self.stage == 0 { self.embed_lane(lane)? } else { Tensor::default() };
@@ -1329,13 +1504,13 @@ impl ComputeWorker {
             // are on the ring while the lane computes.
             for i in 0..k {
                 if l == 0 {
-                    let x = self.chunk_in(&p.tokens, &p.chunks[i])?;
+                    let x = self.chunk_in(&p.tokens, &chunks[i])?;
                     xs.push(x);
                 } else {
                     self.recv_reduced_apply(&mut xs[i])?;
                 }
-                let partial = self.run_attn(p.slot, l, &xs[i], p.chunks[i].offset)?;
-                self.submit(partial.data, p.chunks[i].len, &mut xs[i])?;
+                let partial = self.run_attn(p.slot, l, &xs[i], chunks[i].offset)?;
+                self.submit(partial.data, chunks[i].len, &mut xs[i])?;
             }
             if l == 0 && self.stage > 0 {
                 // Wire order is [chunks…, lane]: the upstream stage
@@ -1349,7 +1524,7 @@ impl ComputeWorker {
             for i in 0..k {
                 self.recv_reduced_apply(&mut xs[i])?;
                 let partial = self.run_mlp(l, &xs[i])?;
-                self.submit(partial.data, p.chunks[i].len, &mut xs[i])?;
+                self.submit(partial.data, chunks[i].len, &mut xs[i])?;
             }
             self.recv_reduced_apply(&mut x_lane)?;
             self.lane_mlp_submit(l, &mut x_lane, &mut row)?;
@@ -1367,7 +1542,7 @@ impl ComputeWorker {
         }
 
         if self.is_reply {
-            let last_idx = p.chunks.iter().position(|c| c.last).expect("no last chunk");
+            let last_idx = chunks.iter().position(|c| c.last).expect("no last chunk");
             let prefill_logits = self.logits_row_of(&xs[last_idx], p.logits_row)?;
             let decode_logits = self.lane_logits(&x_lane, &mut row)?;
             Ok((Some(prefill_logits), Some(decode_logits)))
@@ -1386,6 +1561,19 @@ impl ComputeWorker {
     ) -> Result<StepLogits> {
         if !lane.is_empty() && !spec.is_empty() {
             bail!("a step cannot carry both a decode lane and a verify lane");
+        }
+        if self.cp > 1 && !self.cp_owns_lane() {
+            // Lane work is not sequence-parallel (DESIGN.md §17): groups
+            // before the last contribute their prefill shard — pulling
+            // and forwarding the KV prefix inside `prefill` — and idle
+            // through lane-only steps, staying in job lockstep.
+            return match prefill {
+                Some(p) => {
+                    let logits = self.prefill(p.slot, &p.tokens, &p.chunks, p.logits_row)?;
+                    Ok((logits, None))
+                }
+                None => Ok((None, None)),
+            };
         }
         if !spec.is_empty() {
             return match prefill {
@@ -1634,6 +1822,7 @@ fn compute_main(
     jobs: Receiver<Job>,
     reply: Option<Sender<Reply>>,
     port: StagePort,
+    shard_ring: RingPass,
     to_comm: Sender<CommJob>,
     from_comm: Receiver<SegAck>,
     recycle_tx: Sender<Vec<f32>>,
@@ -1642,7 +1831,8 @@ fn compute_main(
 ) -> Result<WorkerStats> {
     let outcome = catch_unwind(AssertUnwindSafe(|| {
         compute_loop(
-            rank, cfg, manifest, jobs, reply, port, to_comm, from_comm, recycle_tx, injector,
+            rank, cfg, manifest, jobs, reply, port, shard_ring, to_comm, from_comm, recycle_tx,
+            injector,
         )
     }));
     match outcome {
@@ -1674,14 +1864,16 @@ fn compute_loop(
     jobs: Receiver<Job>,
     reply: Option<Sender<Reply>>,
     port: StagePort,
+    shard_ring: RingPass,
     to_comm: Sender<CommJob>,
     from_comm: Receiver<SegAck>,
     recycle_tx: Sender<Vec<f32>>,
     injector: Arc<FaultInjector>,
 ) -> Result<WorkerStats> {
-    let mut w =
-        ComputeWorker::build(rank, &cfg, manifest, port, to_comm, from_comm, recycle_tx, injector)
-            .with_context(|| format!("building worker {rank}"))?;
+    let mut w = ComputeWorker::build(
+        rank, &cfg, manifest, port, shard_ring, to_comm, from_comm, recycle_tx, injector,
+    )
+    .with_context(|| format!("building worker {rank}"))?;
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Step { prefill, decode, spec } => {
@@ -1712,6 +1904,8 @@ fn compute_loop(
     }
     w.stats.p2p_bytes = w.port.sent_bytes;
     w.stats.p2p_msgs = w.port.sent_msgs;
+    w.stats.cp_shard_bytes = w.shard_ring.sent_bytes;
+    w.stats.cp_shard_msgs = w.shard_ring.sent_msgs;
     Ok(w.stats)
 }
 
@@ -1734,13 +1928,16 @@ struct Mesh {
 }
 
 impl Mesh {
-    /// Spawn `pp × tp` compute/comm thread pairs: one TP ring per
-    /// stage, stages chained by p2p activation ports (stage s rank r →
-    /// stage s+1 rank r). The emulated link speed, when set, throttles
-    /// both fabrics.
+    /// Spawn `cp × pp × tp` compute/comm thread pairs: each CP group is
+    /// a full `pp × tp` grid — one TP ring per stage, stages chained by
+    /// p2p activation ports (stage s rank r → stage s+1 rank r) — and
+    /// the groups are chained by per-(stage, tp-rank) KV shard rings
+    /// (DESIGN.md §17). World rank is `c × (pp × tp) + s × tp + r`. The
+    /// emulated link speed, when set, throttles all three fabrics.
     fn spawn(cfg: &EngineConfig, manifest: &Manifest, injector: &Arc<FaultInjector>) -> Mesh {
         let pp = cfg.pp_stages;
         let tp = cfg.tp;
+        let cp = cfg.cp.max(1);
         let throttle = cfg.link_mbps.map(|mbps| crate::collective::Throttle {
             alpha_s: cfg.link_alpha_us * 1e-6,
             bytes_per_s: mbps * 1e6,
@@ -1750,47 +1947,63 @@ impl Mesh {
         let mut job_txs = Vec::new();
         let mut compute_joins = Vec::new();
         let mut comm_joins = Vec::new();
-        for (stage, ports_s) in stage_grid(pp, tp).into_iter().enumerate() {
-            let rings = ring(tp);
-            for (r, (mut ring_handle, mut port)) in rings.into_iter().zip(ports_s).enumerate() {
-                let rank = stage * tp + r;
-                let (job_tx, job_rx) = channel();
-                let (to_comm, comm_rx) = channel();
-                let (ack_tx, from_comm) = channel();
-                let (recycle_tx, recycle_rx) = channel();
-                if let Some(t) = throttle {
-                    ring_handle.throttle = Some(t);
-                    port.throttle = Some(t);
+        // One cyclic shard ring per (stage, tp-rank) pair, its ports
+        // handed out to the CP groups in ascending group order.
+        let mut shard_chains: Vec<std::vec::IntoIter<RingPass>> =
+            (0..pp * tp).map(|_| cp_ring(cp).into_iter()).collect();
+        for c in 0..cp {
+            for (stage, ports_s) in stage_grid(pp, tp).into_iter().enumerate() {
+                let rings = ring(tp);
+                for (r, (mut ring_handle, mut port)) in rings.into_iter().zip(ports_s).enumerate()
+                {
+                    let rank = c * (pp * tp) + stage * tp + r;
+                    let mut shard_ring = shard_chains[stage * tp + r]
+                        .next()
+                        .expect("invariant: one shard port per CP group");
+                    let (job_tx, job_rx) = channel();
+                    let (to_comm, comm_rx) = channel();
+                    let (ack_tx, from_comm) = channel();
+                    let (recycle_tx, recycle_rx) = channel();
+                    if let Some(t) = throttle {
+                        ring_handle.throttle = Some(t);
+                        port.throttle = Some(t);
+                        shard_ring.throttle = Some(t);
+                    }
+                    let inj_comm = Arc::clone(injector);
+                    let ev_comm = event_tx.clone();
+                    comm_joins.push(
+                        std::thread::Builder::new()
+                            .name(format!("iso-comm-{rank}"))
+                            .spawn(move || {
+                                comm_main(
+                                    rank, ring_handle, comm_rx, ack_tx, recycle_rx, inj_comm,
+                                    ev_comm,
+                                )
+                            })
+                            .expect("spawn comm thread"),
+                    );
+                    let reply = if c == cp - 1 && stage == pp - 1 && r == 0 {
+                        Some(reply_tx.clone())
+                    } else {
+                        None
+                    };
+                    let cfg_c = cfg.clone();
+                    let manifest_c = manifest.clone();
+                    let inj_compute = Arc::clone(injector);
+                    let ev_compute = event_tx.clone();
+                    compute_joins.push(
+                        std::thread::Builder::new()
+                            .name(format!("iso-compute-{rank}"))
+                            .spawn(move || {
+                                compute_main(
+                                    rank, cfg_c, manifest_c, job_rx, reply, port, shard_ring,
+                                    to_comm, from_comm, recycle_tx, inj_compute, ev_compute,
+                                )
+                            })
+                            .expect("spawn compute thread"),
+                    );
+                    job_txs.push(job_tx);
                 }
-                let inj_comm = Arc::clone(injector);
-                let ev_comm = event_tx.clone();
-                comm_joins.push(
-                    std::thread::Builder::new()
-                        .name(format!("iso-comm-{rank}"))
-                        .spawn(move || {
-                            comm_main(
-                                rank, ring_handle, comm_rx, ack_tx, recycle_rx, inj_comm, ev_comm,
-                            )
-                        })
-                        .expect("spawn comm thread"),
-                );
-                let reply = if stage == pp - 1 && r == 0 { Some(reply_tx.clone()) } else { None };
-                let cfg_c = cfg.clone();
-                let manifest_c = manifest.clone();
-                let inj_compute = Arc::clone(injector);
-                let ev_compute = event_tx.clone();
-                compute_joins.push(
-                    std::thread::Builder::new()
-                        .name(format!("iso-compute-{rank}"))
-                        .spawn(move || {
-                            compute_main(
-                                rank, cfg_c, manifest_c, job_rx, reply, port, to_comm, from_comm,
-                                recycle_tx, inj_compute, ev_compute,
-                            )
-                        })
-                        .expect("spawn compute thread"),
-                );
-                job_txs.push(job_tx);
             }
         }
         Mesh { job_txs, reply_rx, event_rx, compute_joins, comm_joins }
@@ -1901,9 +2114,25 @@ pub struct SpecStepOut {
     pub emitted: Vec<Vec<i32>>,
 }
 
+/// One iteration's worth of work for the canonical [`Engine::step`]
+/// entry point: at most one prefill plus at most one fused lane —
+/// one-token decode rows or speculative verify windows, never both.
+/// [`Engine::step_decode`] and [`Engine::step_spec`] are thin wrappers
+/// building the batch from the pre-topology two-argument signatures.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepBatch<'a> {
+    /// At most one prefill: `(slot, prompt)`.
+    pub prefill: Option<(usize, &'a [i32])>,
+    /// Fused decode lane entries (one token each), empty for none.
+    pub decode: &'a [DecodeSlot],
+    /// Fused speculative verify windows, empty for none.
+    pub spec: &'a [SpecSlot],
+}
+
 impl Engine {
-    /// Start the engine: spawn `cfg.tp` worker pairs, compile artifacts,
-    /// load weights. Everything heavyweight happens here, once.
+    /// Start the engine: spawn the `cp × pp × tp` worker-pair grid,
+    /// compile artifacts, load weights. Everything heavyweight happens
+    /// here, once.
     pub fn start(cfg: EngineConfig) -> Result<Engine> {
         if cfg.comm_segments == 0 {
             bail!("comm_segments must be >= 1");
@@ -1917,10 +2146,16 @@ impl Engine {
         if cfg.pp_stages == 0 {
             bail!("pp_stages must be >= 1");
         }
+        if cfg.cp == 0 {
+            bail!("cp must be >= 1");
+        }
         // Overload knobs are validated here too because benches and
         // tests construct EngineConfig directly, bypassing from_map.
         if cfg.tbt_budget_ms < 0.0 {
             bail!("tbt_budget_ms must be >= 0");
+        }
+        if cfg.cp > 1 && cfg.tbt_budget_ms > 0.0 {
+            bail!("tbt_budget_ms requires cp = 1 (bounded chunked prefill is not sharded)");
         }
         if !(cfg.kv_high_water > 0.0 && cfg.kv_high_water <= 1.0) {
             bail!("kv_high_water must be in (0, 1]");
@@ -1992,9 +2227,12 @@ impl Engine {
         Ok(())
     }
 
-    /// Global rank of the reply-owning worker (last stage, ring rank 0).
+    /// Global rank of the reply-owning worker (last CP group, last
+    /// stage, ring rank 0).
     fn reply_rank(&self) -> usize {
-        (self.cfg.pp_stages - 1) * self.cfg.tp
+        let pp = self.cfg.pp_stages;
+        let tp = self.cfg.tp;
+        (self.cfg.cp.max(1) - 1) * pp * tp + (pp - 1) * tp
     }
 
     /// Leader detection deadline for one iteration (DESIGN.md §14):
@@ -2086,13 +2324,17 @@ impl Engine {
     /// Single-stage engines keep the pre-PP tiling (depth 1 = largest
     /// tiles).
     fn micro_batch_depth(&self) -> usize {
-        if self.cfg.pp_stages <= 1 {
+        let per_group = if self.cfg.pp_stages <= 1 {
             1
         } else if self.cfg.strategy == Strategy::Iso {
             2 * self.cfg.pp_stages
         } else {
             self.cfg.pp_stages
-        }
+        };
+        // Under context parallelism the tiling is sliced `cp` ways
+        // (DESIGN.md §17), so scale the depth to keep every group's
+        // pipeline as deep as the flat engine's.
+        per_group * self.cfg.cp.max(1)
     }
 
     /// Plan the prefill half of a step: pad, validate, tile (via the
@@ -2124,10 +2366,13 @@ impl Engine {
         Ok(StepPrefill { slot, tokens: padded, chunks, logits_row, completes: true })
     }
 
-    /// One mixed iteration (DESIGN.md §9): at most one prefill plus a
-    /// fused decode lane over engine-managed slots. Lane entries advance
-    /// independent sequences one token each, sharing one B-row collective
-    /// per layer-stage.
+    /// One mixed iteration (DESIGN.md §9): at most one prefill plus at
+    /// most one fused lane — one-token decode rows or speculative
+    /// verify windows over engine-managed slots, never both. Lane
+    /// entries advance independent sequences, sharing one B-row
+    /// collective per layer-stage. This is the canonical entry point;
+    /// [`Engine::step_decode`] and [`Engine::step_spec`] are thin
+    /// wrappers over it keeping the pre-topology signatures alive.
     ///
     /// # Examples
     ///
@@ -2137,42 +2382,72 @@ impl Engine {
     /// ```no_run
     /// use iso::batch::DecodeSlot;
     /// use iso::config::EngineConfig;
-    /// use iso::coordinator::Engine;
+    /// use iso::coordinator::{Engine, StepBatch};
     ///
     /// # fn main() -> anyhow::Result<()> {
     /// let mut engine = Engine::start(EngineConfig::default())?;
     /// let slot = engine.alloc_slot()?;
-    /// // Iteration 1: prefill the prompt (no decode lane yet).
+    /// // Iteration 1: prefill the prompt (no lane yet).
     /// let prompt = [1, 2, 3, 4];
-    /// let out = engine.step(Some((slot, &prompt[..])), &[])?;
+    /// let batch = StepBatch { prefill: Some((slot, &prompt[..])), ..Default::default() };
+    /// let out = engine.step(batch)?;
     /// let first = out.prefill.expect("prefill ran").first_token;
     /// // Iteration 2: the sequence joins the fused decode lane.
     /// let lane = [DecodeSlot { slot, token: first, offset: prompt.len() }];
-    /// let out = engine.step(None, &lane)?;
+    /// let out = engine.step(StepBatch { decode: &lane, ..Default::default() })?;
     /// println!("next token: {}", out.decode_tokens[0]);
     /// engine.free_slot(slot)?;
     /// engine.shutdown()?;
     /// # Ok(())
     /// # }
     /// ```
-    pub fn step(
+    pub fn step(&mut self, batch: StepBatch<'_>) -> Result<StepOut> {
+        if !batch.decode.is_empty() && !batch.spec.is_empty() {
+            bail!("a step cannot carry both a decode lane and a verify lane");
+        }
+        let planned = match batch.prefill {
+            Some((slot, prompt)) => Some(Arc::new(self.plan_step_prefill(slot, prompt)?)),
+            None => None,
+        };
+        if planned.is_none() && batch.decode.is_empty() && batch.spec.is_empty() {
+            bail!("empty step: no prefill and no lane");
+        }
+        let max_seq = self.manifest.config.max_seq;
+        if let Some(d) = batch.decode.iter().find(|d| d.offset >= max_seq) {
+            bail!("lane slot {} offset {} exceeds max_seq {max_seq}", d.slot, d.offset);
+        }
+        for w in batch.spec {
+            if w.tokens.is_empty() {
+                bail!("slot {}: empty verify window", w.slot);
+            }
+            if w.offset + w.width() > max_seq {
+                bail!(
+                    "slot {}: verify window [{}, {}) exceeds max_seq {max_seq}",
+                    w.slot,
+                    w.offset,
+                    w.offset + w.width()
+                );
+            }
+        }
+        let lanes =
+            batch.decode.iter().map(|d| d.slot).chain(batch.spec.iter().map(|w| w.slot));
+        self.check_lane_slots(planned.as_deref(), lanes)?;
+        self.run_step(planned, batch.decode, batch.spec, true)
+    }
+
+    /// The pre-topology two-argument mixed step — at most one prefill
+    /// plus a fused decode lane — kept as a thin wrapper over
+    /// [`Engine::step`] so existing callers and the A/B baselines keep
+    /// compiling unchanged.
+    pub fn step_decode(
         &mut self,
         prefill: Option<(usize, &[i32])>,
         decode: &[DecodeSlot],
     ) -> Result<StepOut> {
-        let planned = match prefill {
-            Some((slot, prompt)) => Some(Arc::new(self.plan_step_prefill(slot, prompt)?)),
-            None => None,
-        };
-        if planned.is_none() && decode.is_empty() {
+        if prefill.is_none() && decode.is_empty() {
             bail!("empty step: no prefill and no decode lane");
         }
-        let max_seq = self.manifest.config.max_seq;
-        if let Some(d) = decode.iter().find(|d| d.offset >= max_seq) {
-            bail!("lane slot {} offset {} exceeds max_seq {max_seq}", d.slot, d.offset);
-        }
-        self.check_lane_slots(planned.as_deref(), decode.iter().map(|d| d.slot))?;
-        self.run_step(planned, decode, &[], true)
+        self.step(StepBatch { prefill, decode, spec: &[] })
     }
 
     /// One speculative mixed iteration (DESIGN.md §10): at most one
@@ -2182,7 +2457,7 @@ impl Engine {
     /// greedy row tokens, the accepted-draft count, and the emitted
     /// tokens. KV rollback of rejected rows is implicit in the engine's
     /// dense caches (later windows overwrite before reading); callers
-    /// tracking a paged [`KvManager`] mirror the acceptance with
+    /// tracking a paged [`KvManager`](crate::kv::KvManager) mirror the acceptance with
     /// `truncate`, as `serve_trace` does.
     ///
     /// # Examples
@@ -2198,7 +2473,7 @@ impl Engine {
     /// # fn main() -> anyhow::Result<()> {
     /// let mut engine = Engine::start(EngineConfig::default())?;
     /// let slot = engine.alloc_slot()?;
-    /// let out = engine.step(Some((slot, &[1, 2, 3, 4][..])), &[])?;
+    /// let out = engine.step_decode(Some((slot, &[1, 2, 3, 4][..])), &[])?;
     /// let first = out.prefill.expect("prefill ran").first_token;
     /// // Verify window: last emitted token + two drafted candidates.
     /// let window = SpecSlot { slot, tokens: vec![first, 7, 9], offset: 4 };
@@ -2214,29 +2489,10 @@ impl Engine {
         prefill: Option<(usize, &[i32])>,
         spec: &[SpecSlot],
     ) -> Result<SpecStepOut> {
-        let planned = match prefill {
-            Some((slot, prompt)) => Some(Arc::new(self.plan_step_prefill(slot, prompt)?)),
-            None => None,
-        };
-        if planned.is_none() && spec.is_empty() {
+        if prefill.is_none() && spec.is_empty() {
             bail!("empty step: no prefill and no verify lane");
         }
-        let max_seq = self.manifest.config.max_seq;
-        for w in spec {
-            if w.tokens.is_empty() {
-                bail!("slot {}: empty verify window", w.slot);
-            }
-            if w.offset + w.width() > max_seq {
-                bail!(
-                    "slot {}: verify window [{}, {}) exceeds max_seq {max_seq}",
-                    w.slot,
-                    w.offset,
-                    w.offset + w.width()
-                );
-            }
-        }
-        self.check_lane_slots(planned.as_deref(), spec.iter().map(|w| w.slot))?;
-        let out = self.run_step(planned, &[], spec, true)?;
+        let out = self.step(StepBatch { prefill, decode: &[], spec })?;
         Ok(self.apply_spec_out(spec, out))
     }
 
@@ -2386,12 +2642,16 @@ impl Engine {
     /// landed anywhere observable).
     fn absorb_mesh(&mut self, mesh: Mesh) {
         let tp = self.cfg.tp.max(1);
+        let pp = self.cfg.pp_stages.max(1);
         let (computes, comms) = mesh.join_all();
         let mut workers: Vec<WorkerStats> = computes
             .into_iter()
             .enumerate()
             .map(|(rank, r)| {
-                r.unwrap_or(WorkerStats { rank, stage: rank / tp, ..Default::default() })
+                // Stage within the rank's CP group (world layout
+                // `c × (pp × tp) + s × tp + r`, DESIGN.md §17).
+                let stage = rank % (pp * tp) / tp;
+                r.unwrap_or(WorkerStats { rank, stage, ..Default::default() })
             })
             .collect();
         for (w, comm) in workers.iter_mut().zip(comms.iter()) {
@@ -2500,7 +2760,8 @@ impl Engine {
     /// decode collectives batch B× and decode compute hides behind
     /// prefill communication. With `cfg.spec_k > 0` the decode lane
     /// speculates (DESIGN.md §10): each lane sequence verifies `spec_k`
-    /// self-drafted tokens per iteration and a paged [`KvManager`]
+    /// self-drafted tokens per iteration and a paged
+    /// [`KvManager`](crate::kv::KvManager)
     /// mirrors the accept/rollback motion. With mixed iterations off, the
     /// legacy per-request loop runs for A/B comparison. All modes emit
     /// identical tokens.
@@ -2581,7 +2842,17 @@ impl Engine {
         let kv_block = 16usize;
         let kv_cap =
             self.cfg.max_batch * self.manifest.config.max_seq.div_ceil(kv_block) * kv_block;
-        let mut kvm = KvManager::new(kv_cap, kv_block);
+        // The paged mirror is tiered (DESIGN.md §17): with `kv_offload`
+        // cold pages spill to the modeled host tier under the resident
+        // cap; without it an over-cap sequence is a typed admission
+        // error. Cap 0 keeps the tier inert (the pre-offload mirror).
+        let mut kvm = TieredKv::new(
+            kv_cap,
+            kv_block,
+            self.cfg.kv_resident_tokens,
+            self.cfg.kv_prefetch_pages,
+            self.cfg.kv_offload,
+        );
         let mut live: Vec<Live> = Vec::new();
         let mut preempted: std::collections::VecDeque<Preempted> =
             std::collections::VecDeque::new();
@@ -2754,9 +3025,9 @@ impl Engine {
             // keep draining KV), and at most `max_preemptions` evictions
             // per sequence (a hot sequence eventually pins).
             if self.cfg.kv_high_water < 1.0 {
-                let high_water =
-                    (kvm.total_blocks() as f64 * self.cfg.kv_high_water) as usize;
-                while kvm.total_blocks() - kvm.free_blocks() > high_water {
+                let total_blocks = kvm.allocator().total_blocks();
+                let high_water = (total_blocks as f64 * self.cfg.kv_high_water) as usize;
+                while total_blocks - kvm.free_blocks() > high_water {
                     if live.iter().filter(|l| l.lane.prefilled).count() <= 1 {
                         break;
                     }
@@ -2935,6 +3206,11 @@ impl Engine {
                 l.lane.decode_left -= 1;
                 l.tokens.push(token);
                 kvm.append(d.slot as u64, 1)?;
+                if self.cfg.kv_offload {
+                    // Keep the tail window resident ahead of the decode
+                    // cursor (modeled H2D overlap, DESIGN.md §17).
+                    kvm.prefetch(d.slot as u64)?;
+                }
                 let tbt = now_ms - l.last_emit_ms;
                 l.last_emit_ms = now_ms;
                 report.tbt_ms.record(tbt);
@@ -2954,6 +3230,9 @@ impl Engine {
                     kvm.append(w.slot as u64, w.width())?;
                     let take = em.len().min(l.lane.decode_left);
                     kvm.truncate(w.slot as u64, w.offset + take)?;
+                    if self.cfg.kv_offload {
+                        kvm.prefetch(w.slot as u64)?;
+                    }
                     for &tok in &em[..take] {
                         l.tokens.push(tok);
                     }
@@ -2975,6 +3254,11 @@ impl Engine {
             }
         }
         report.wall_s = clock.elapsed_ms() / 1e3;
+        // Tier traffic (DESIGN.md §17): zero unless the offload tier
+        // actually moved pages, so resident-only runs report nothing.
+        self.metrics.kv_spilled_pages += kvm.spilled_pages;
+        self.metrics.kv_fetched_pages += kvm.fetched_pages;
+        self.metrics.kv_prefetched_pages += kvm.prefetched_pages;
         Ok(report)
     }
 
@@ -3157,6 +3441,11 @@ impl Engine {
         // output.
         metrics.p2p_bytes = workers.iter().map(|w| w.p2p_bytes).sum();
         metrics.p2p_msgs = workers.iter().map(|w| w.p2p_msgs).sum();
+        // Context-parallel accounting (DESIGN.md §17). cp = 1 engines
+        // record nothing here, keeping their reports byte-identical.
+        metrics.cp_shard_bytes = workers.iter().map(|w| w.cp_shard_bytes).sum();
+        metrics.cp_shard_msgs = workers.iter().map(|w| w.cp_shard_msgs).sum();
+        metrics.cp_stall_ms = workers.iter().map(|w| w.cp_stall_ms).sum();
         if self.cfg.pp_stages > 1 {
             for w in &workers {
                 metrics.pp_bubble_ms.record(w.p2p_stall_ms);
@@ -3172,6 +3461,7 @@ impl Engine {
             workers,
             pp_stages: self.cfg.pp_stages,
             tp: self.cfg.tp,
+            cp: self.cfg.cp.max(1),
         })
     }
 }
@@ -3275,6 +3565,7 @@ mod tests {
             tokens: (0..1024).collect(),
             chunks: Vec::new(),
             logits_row: 0,
+            completes: true,
         });
         let decode = Arc::new(vec![DecodeSlot { slot: 1, token: 7, offset: 3 }; 8]);
         let spec = Arc::new(vec![

@@ -61,6 +61,16 @@ impl LinkProfile {
         steps * (self.alpha_s + (bytes / r as f64) / self.link_bytes_per_s)
     }
 
+    /// One point-to-point transfer of `bytes` over the link — the α/β
+    /// model shared by the pipeline stage hops (DESIGN.md §11) and the
+    /// CP shard ring's per-layer prefix forward (DESIGN.md §17).
+    pub fn p2p_s(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.alpha_s + bytes / self.link_bytes_per_s
+    }
+
     /// Bus bandwidth achieved by the ring (NCCL's "busbw") — diagnostic.
     pub fn busbw(&self, bytes: f64, r: usize) -> f64 {
         let t = self.ring_allreduce_s(bytes, r);
@@ -297,6 +307,15 @@ mod tests {
         assert!(t8 > t4); // 2(R-1)/R grows with R
         assert!(l.ring_allreduce_s(200e6, 4) > 1.9 * t4);
         assert_eq!(l.ring_allreduce_s(100e6, 1), 0.0);
+    }
+
+    #[test]
+    fn p2p_is_alpha_beta() {
+        let l = LinkProfile { alpha_s: 10e-6, link_bytes_per_s: 10e9 };
+        assert_eq!(l.p2p_s(0.0), 0.0);
+        assert!((l.p2p_s(1e9) - (10e-6 + 0.1)).abs() < 1e-12);
+        // Matches the pp stage-hop arithmetic it factors out.
+        assert_eq!(l.p2p_s(4096.0), l.alpha_s + 4096.0 / l.link_bytes_per_s);
     }
 
     #[test]

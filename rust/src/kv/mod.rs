@@ -13,6 +13,12 @@
 //! to the accepted prefix — [`KvManager::truncate`] returns the blocks of
 //! the rejected suffix to the free list without disturbing the accepted
 //! prefix's block table.
+//!
+//! Long-context serving (DESIGN.md §17) adds [`TieredKv`]: the same
+//! allocator fronted by a capped *resident* pool over a modeled host tier —
+//! cold pages spill farthest-behind-the-cursor first and prefetch back
+//! ahead of the decode cursor, opening prompts the resident pool alone
+//! cannot hold.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -216,6 +222,348 @@ impl KvManager {
         }
         if !seen.iter().all(|&s| s) {
             return Err("leaked blocks (neither free nor owned)".into());
+        }
+        Ok(())
+    }
+}
+
+/// Error surface of the tiered (resident + host) KV model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KvTierError {
+    /// The resident pool cannot hold the request and offload is off —
+    /// the typed failure a too-long prompt hits without
+    /// `slo.kv_offload` (DESIGN.md §17).
+    ResidentPoolExceeded {
+        /// Offending sequence id.
+        seq: u64,
+        /// Resident tokens the request would have needed.
+        need: usize,
+        /// The configured resident cap in tokens.
+        cap: usize,
+    },
+    /// An underlying block-allocator error.
+    Kv(KvError),
+}
+
+impl fmt::Display for KvTierError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvTierError::ResidentPoolExceeded { seq, need, cap } => write!(
+                f,
+                "sequence {seq} exceeds the resident KV pool (need {need} tokens, \
+                 cap {cap}); enable slo.kv_offload to spill to the host tier"
+            ),
+            KvTierError::Kv(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for KvTierError {}
+
+impl From<KvError> for KvTierError {
+    fn from(e: KvError) -> Self {
+        KvTierError::Kv(e)
+    }
+}
+
+/// Per-sequence page residency for [`TieredKv`]: one flag per block of
+/// the sequence's block table, plus a low-water hint so the coldest
+/// resident page is found without rescanning from zero.
+#[derive(Debug, Clone, Default)]
+struct SeqResidency {
+    /// `flags[p]` — is the sequence's `p`-th page resident?
+    flags: Vec<bool>,
+    /// No resident page exists below this index (monotone except when a
+    /// fetch brings an older page back).
+    low: usize,
+}
+
+impl SeqResidency {
+    /// Lowest resident page at or above `from`, advancing the hint.
+    fn first_resident(&mut self, from: usize) -> Option<usize> {
+        while self.low < self.flags.len() && !self.flags[self.low] {
+            self.low += 1;
+        }
+        let mut p = self.low.max(from);
+        while p < self.flags.len() && !self.flags[p] {
+            p += 1;
+        }
+        (p < self.flags.len()).then_some(p)
+    }
+}
+
+/// Two-tier paged KV model (DESIGN.md §17): a capped *resident* pool in
+/// front of an unbounded modeled *host* tier. The block allocator —
+/// offsets, tables, free-list invariants — is the wrapped [`KvManager`]
+/// over the whole logical space, so allocator-visible state is
+/// **identical** to an all-resident run (pinned by the twin property
+/// test); the tier only decides which pages are resident and counts the
+/// modeled traffic (`spilled_pages` / `fetched_pages` /
+/// `prefetched_pages`) the metrics report.
+///
+/// Spill policy is *least-recently-needed*: the decode cursor is the
+/// sequence's write head, so the resident page farthest behind it (the
+/// lowest page index, globally over all sequences) is the coldest and
+/// spills first. The page under the write head and the pages of a
+/// demanded range ([`TieredKv::ensure_resident`], [`TieredKv::prefetch`])
+/// are pinned while they are hot; if the pinned window alone exceeds the
+/// cap, residency overshoots rather than failing — the cap is a
+/// pressure target, not a hard wall, exactly like a pinned-page budget.
+///
+/// With `resident_cap_tokens = 0` (uncapped) the tier never spills and
+/// every operation is byte-identical to the bare [`KvManager`] — the
+/// default-off contract of every knob in this repo.
+#[derive(Debug)]
+pub struct TieredKv {
+    inner: KvManager,
+    block_tokens: usize,
+    resident_cap_tokens: usize,
+    offload: bool,
+    prefetch_pages: usize,
+    residency: BTreeMap<u64, SeqResidency>,
+    resident_blocks: usize,
+    /// Pages spilled resident → host (modeled D2H traffic).
+    pub spilled_pages: u64,
+    /// Pages demand-fetched host → resident (modeled H2D stalls).
+    pub fetched_pages: u64,
+    /// Pages brought back ahead of the cursor (modeled H2D overlap).
+    pub prefetched_pages: u64,
+}
+
+impl TieredKv {
+    /// A tier over `capacity_tokens` of logical KV (the host tier backs
+    /// all of it) with at most `resident_cap_tokens` resident
+    /// (`0` = uncapped). `offload = false` keeps everything resident and
+    /// turns a cap overflow into [`KvTierError::ResidentPoolExceeded`].
+    pub fn new(
+        capacity_tokens: usize,
+        block_tokens: usize,
+        resident_cap_tokens: usize,
+        prefetch_pages: usize,
+        offload: bool,
+    ) -> Self {
+        TieredKv {
+            inner: KvManager::new(capacity_tokens, block_tokens),
+            block_tokens,
+            resident_cap_tokens,
+            offload,
+            prefetch_pages,
+            residency: BTreeMap::new(),
+            resident_blocks: 0,
+            spilled_pages: 0,
+            fetched_pages: 0,
+            prefetched_pages: 0,
+        }
+    }
+
+    /// The wrapped allocator (read-only: lengths, tables, free lists).
+    pub fn allocator(&self) -> &KvManager {
+        &self.inner
+    }
+
+    /// Tokens currently resident across all sequences.
+    pub fn resident_tokens(&self) -> usize {
+        self.resident_blocks * self.block_tokens
+    }
+
+    /// Whether the page holding `token_pos` of `seq` is resident.
+    pub fn is_resident(&self, seq: u64, token_pos: usize) -> bool {
+        let page = token_pos / self.block_tokens;
+        self.residency.get(&seq).map(|r| r.flags.get(page) == Some(&true)).unwrap_or(false)
+    }
+
+    /// Current token length of `seq`, if registered.
+    pub fn seq_len(&self, seq: u64) -> Option<usize> {
+        self.inner.seq_len(seq)
+    }
+
+    /// Blocks currently on the free list of the logical space.
+    pub fn free_blocks(&self) -> usize {
+        self.inner.free_blocks()
+    }
+
+    /// Register a new empty sequence.
+    pub fn add_seq(&mut self, seq: u64) {
+        self.inner.add_seq(seq);
+        self.residency.insert(seq, SeqResidency::default());
+    }
+
+    /// Can `tokens` more be appended to `seq` without failing? Mirrors
+    /// [`TieredKv::append`], including the offload-off resident check.
+    pub fn can_append(&self, seq: u64, tokens: usize) -> bool {
+        if !self.inner.can_append(seq, tokens) {
+            return false;
+        }
+        if !self.offload && self.resident_cap_tokens > 0 {
+            let after = self.resident_blocks_after(seq, tokens) * self.block_tokens;
+            if after > self.resident_cap_tokens {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Resident blocks after an append of `tokens` to `seq`, assuming
+    /// nothing spills (the offload-off accounting).
+    fn resident_blocks_after(&self, seq: u64, tokens: usize) -> usize {
+        let len = self.inner.seq_len(seq).unwrap_or(0);
+        let have = self.inner.block_table(seq).map(|t| t.len()).unwrap_or(0);
+        let need = (len + tokens).div_ceil(self.block_tokens).saturating_sub(have);
+        self.resident_blocks + need
+    }
+
+    /// Append a chunk of `tokens` to `seq`; returns the chunk's absolute
+    /// start position. New pages land resident; under offload, residency
+    /// past the cap spills the coldest pages (only the page under the
+    /// write head is pinned — a streamed chunk is written, consumed, and
+    /// its cold part spills). Without offload, a chunk that cannot fit
+    /// the resident cap fails typed — the state is untouched.
+    pub fn append(&mut self, seq: u64, tokens: usize) -> Result<usize, KvTierError> {
+        if !self.offload && self.resident_cap_tokens > 0 {
+            let after = self.resident_blocks_after(seq, tokens) * self.block_tokens;
+            if after > self.resident_cap_tokens {
+                return Err(KvTierError::ResidentPoolExceeded {
+                    seq,
+                    need: after,
+                    cap: self.resident_cap_tokens,
+                });
+            }
+        }
+        let start = self.inner.append(seq, tokens)?;
+        let pages = self.inner.block_table(seq).expect("appended seq exists").len();
+        let r = self.residency.get_mut(&seq).expect("residency tracked per seq");
+        while r.flags.len() < pages {
+            r.flags.push(true);
+            self.resident_blocks += 1;
+        }
+        if self.offload {
+            self.enforce_cap(seq, pages.saturating_sub(1)..usize::MAX);
+        }
+        Ok(start)
+    }
+
+    /// Shrink `seq` to `new_len` tokens (speculative rollback); cut
+    /// pages leave whichever tier held them.
+    pub fn truncate(&mut self, seq: u64, new_len: usize) -> Result<(), KvTierError> {
+        self.inner.truncate(seq, new_len)?;
+        let pages = self.inner.block_table(seq).expect("truncated seq exists").len();
+        let r = self.residency.get_mut(&seq).expect("residency tracked per seq");
+        while r.flags.len() > pages {
+            if r.flags.pop().expect("non-empty flags") {
+                self.resident_blocks -= 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Release a sequence entirely (both tiers).
+    pub fn release(&mut self, seq: u64) -> Result<(), KvTierError> {
+        self.inner.release(seq)?;
+        let r = self.residency.remove(&seq).expect("residency tracked per seq");
+        self.resident_blocks -= r.flags.iter().filter(|&&f| f).count();
+        Ok(())
+    }
+
+    /// Demand-fetch: make every page of `seq` covering `[0, upto_tokens)`
+    /// resident (counted in `fetched_pages`), then re-enforce the cap
+    /// spilling only pages *outside* the demanded range. The replay /
+    /// re-prefill motion uses this before touching a restored prefix.
+    pub fn ensure_resident(&mut self, seq: u64, upto_tokens: usize) -> Result<(), KvTierError> {
+        let len = self.inner.seq_len(seq).ok_or(KvError::UnknownSeq(seq))?;
+        let pages = upto_tokens.min(len).div_ceil(self.block_tokens);
+        let r = self.residency.get_mut(&seq).expect("residency tracked per seq");
+        for p in 0..pages {
+            if !r.flags[p] {
+                r.flags[p] = true;
+                r.low = r.low.min(p);
+                self.resident_blocks += 1;
+                self.fetched_pages += 1;
+            }
+        }
+        if self.offload {
+            self.enforce_cap(seq, 0..pages);
+        }
+        Ok(())
+    }
+
+    /// Prefetch ahead of the decode cursor: bring the last
+    /// `prefetch_pages` pages of `seq` (the window the next decode steps
+    /// read and extend) back resident before they stall a step, counted
+    /// in `prefetched_pages`. No-op when the tail is already resident.
+    pub fn prefetch(&mut self, seq: u64) -> Result<(), KvTierError> {
+        let len = self.inner.seq_len(seq).ok_or(KvError::UnknownSeq(seq))?;
+        let pages = len.div_ceil(self.block_tokens);
+        let from = pages.saturating_sub(self.prefetch_pages);
+        let r = self.residency.get_mut(&seq).expect("residency tracked per seq");
+        for p in from..pages {
+            if !r.flags[p] {
+                r.flags[p] = true;
+                r.low = r.low.min(p);
+                self.resident_blocks += 1;
+                self.prefetched_pages += 1;
+            }
+        }
+        if self.offload {
+            self.enforce_cap(seq, from..usize::MAX);
+        }
+        Ok(())
+    }
+
+    /// Spill coldest-first until residency fits the cap. Pages of
+    /// `protect_seq` inside the `protect` page range are pinned; if only
+    /// pinned pages remain, residency overshoots (see type docs).
+    fn enforce_cap(&mut self, protect_seq: u64, protect: std::ops::Range<usize>) {
+        if self.resident_cap_tokens == 0 {
+            return;
+        }
+        while self.resident_blocks * self.block_tokens > self.resident_cap_tokens {
+            // Coldest page: the resident page farthest behind its write
+            // head, globally. Ties resolve to the lowest sequence id —
+            // deterministic, like every scheduling decision here.
+            let mut best: Option<(usize, u64, usize)> = None;
+            for (&seq, r) in self.residency.iter_mut() {
+                let Some(mut p) = r.first_resident(0) else { continue };
+                if seq == protect_seq && protect.contains(&p) {
+                    match r.first_resident(protect.end) {
+                        Some(q) => p = q,
+                        None => continue,
+                    }
+                }
+                let dist = r.flags.len() - p;
+                if best.map(|(d, _, _)| dist > d).unwrap_or(true) {
+                    best = Some((dist, seq, p));
+                }
+            }
+            let Some((_, seq, page)) = best else { return };
+            let r = self.residency.get_mut(&seq).expect("candidate seq exists");
+            r.flags[page] = false;
+            self.resident_blocks -= 1;
+            self.spilled_pages += 1;
+        }
+    }
+
+    /// Internal invariants: the wrapped allocator's, plus residency
+    /// flags exactly covering each block table and the resident count
+    /// matching the flags.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.inner.check_invariants()?;
+        let mut resident = 0;
+        for (&seq, r) in &self.residency {
+            let table = self.inner.block_table(seq).ok_or(format!("seq {seq} untracked"))?;
+            if r.flags.len() != table.len() {
+                return Err(format!(
+                    "seq {seq}: {} residency flags over {} blocks",
+                    r.flags.len(),
+                    table.len()
+                ));
+            }
+            resident += r.flags.iter().filter(|&&f| f).count();
+        }
+        if resident != self.resident_blocks {
+            return Err(format!(
+                "resident count drifted: {} counted, {} cached",
+                resident, self.resident_blocks
+            ));
         }
         Ok(())
     }
@@ -551,5 +899,217 @@ mod tests {
             let idx = h * 32 + 4 * 4;
             assert_eq!(kv.k[idx], k[idx]);
         }
+    }
+}
+
+#[cfg(test)]
+mod tier_tests {
+    use super::*;
+    use crate::util::{Prop, Rng};
+
+    #[test]
+    fn uncapped_tier_matches_bare_manager() {
+        // resident_cap_tokens = 0 is the default-off contract: the tier
+        // is byte-identical to the bare allocator and never moves a page.
+        let mut tier = TieredKv::new(256, 16, 0, 2, false);
+        let mut bare = KvManager::new(256, 16);
+        tier.add_seq(7);
+        bare.add_seq(7);
+        for chunk in [5, 16, 1, 40] {
+            assert_eq!(tier.append(7, chunk).unwrap(), bare.append(7, chunk).unwrap());
+            assert_eq!(tier.free_blocks(), bare.free_blocks());
+        }
+        tier.truncate(7, 20).unwrap();
+        bare.truncate(7, 20).unwrap();
+        assert_eq!(tier.free_blocks(), bare.free_blocks());
+        assert_eq!(tier.seq_len(7), bare.seq_len(7));
+        assert_eq!(tier.resident_tokens(), 2 * 16);
+        assert_eq!(tier.spilled_pages + tier.fetched_pages + tier.prefetched_pages, 0);
+        tier.check_invariants().unwrap();
+        tier.release(7).unwrap();
+        assert_eq!(tier.resident_tokens(), 0);
+        tier.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn over_cap_without_offload_is_a_typed_error() {
+        let mut tier = TieredKv::new(512, 16, 64, 2, false);
+        tier.add_seq(1);
+        assert_eq!(tier.append(1, 64).unwrap(), 0);
+        assert!(!tier.can_append(1, 1));
+        let err = tier.append(1, 1).unwrap_err();
+        assert_eq!(err, KvTierError::ResidentPoolExceeded { seq: 1, need: 80, cap: 64 });
+        // The failed append left no trace.
+        assert_eq!(tier.seq_len(1), Some(64));
+        assert_eq!(tier.resident_tokens(), 64);
+        assert_eq!(tier.spilled_pages, 0);
+        tier.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn offload_spills_coldest_pages_first() {
+        let mut tier = TieredKv::new(1024, 16, 64, 2, true);
+        tier.add_seq(1);
+        for _ in 0..10 {
+            tier.append(1, 16).unwrap();
+        }
+        // 10 pages written, 4 fit: the 6 farthest behind the cursor spill.
+        assert_eq!(tier.resident_tokens(), 64);
+        assert_eq!(tier.spilled_pages, 6);
+        for page in 0..6 {
+            assert!(!tier.is_resident(1, page * 16), "page {page} should be cold");
+        }
+        for page in 6..10 {
+            assert!(tier.is_resident(1, page * 16), "page {page} should be hot");
+        }
+        tier.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ensure_resident_demand_fetches_a_prefix() {
+        let mut tier = TieredKv::new(1024, 16, 64, 2, true);
+        tier.add_seq(1);
+        tier.append(1, 160).unwrap();
+        assert!(!tier.is_resident(1, 0));
+        tier.ensure_resident(1, 48).unwrap();
+        // The demanded prefix is pinned; the cap spilled tail pages instead.
+        for page in 0..3 {
+            assert!(tier.is_resident(1, page * 16), "page {page} should be fetched");
+        }
+        assert_eq!(tier.fetched_pages, 3);
+        assert_eq!(tier.resident_tokens(), 64);
+        tier.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefetch_restores_the_tail_window() {
+        let mut tier = TieredKv::new(1024, 16, 64, 2, true);
+        tier.add_seq(1);
+        tier.append(1, 160).unwrap();
+        // Drag the whole resident budget to the front of the sequence...
+        tier.ensure_resident(1, 64).unwrap();
+        assert!(!tier.is_resident(1, 159));
+        // ...then prefetch brings the decode window back before a step.
+        tier.prefetch(1).unwrap();
+        assert!(tier.is_resident(1, 159));
+        assert!(tier.is_resident(1, 128 + 1));
+        assert_eq!(tier.prefetched_pages, 2);
+        assert_eq!(tier.resident_tokens(), 64);
+        tier.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn million_token_prompt_needs_offload() {
+        // Acceptance (DESIGN.md §17): a 1M-token prompt fails typed on a
+        // resident-only pool and completes once offload may spill.
+        let cap = 1 << 14;
+        let mut strict = TieredKv::new(1 << 20, 256, cap, 4, false);
+        strict.add_seq(1);
+        let mut failed = None;
+        for _ in 0..256 {
+            if let Err(e) = strict.append(1, 4096) {
+                failed = Some(e);
+                break;
+            }
+        }
+        match failed {
+            Some(KvTierError::ResidentPoolExceeded { seq: 1, cap: c, .. }) => {
+                assert_eq!(c, cap);
+            }
+            other => panic!("expected ResidentPoolExceeded, got {other:?}"),
+        }
+
+        let mut tier = TieredKv::new(1 << 20, 256, cap, 4, true);
+        tier.add_seq(1);
+        for _ in 0..256 {
+            tier.append(1, 4096).unwrap();
+        }
+        assert_eq!(tier.seq_len(1), Some(1 << 20));
+        assert_eq!(tier.resident_tokens(), cap);
+        assert_eq!(tier.spilled_pages as usize, (1 << 20) / 256 - cap / 256);
+        tier.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_offload_twin_matches_all_resident_run() {
+        // Tentpole (DESIGN.md §17): spill/fetch/prefetch motion is pure
+        // residency bookkeeping — the allocator state the scheduler sees
+        // (lengths, offsets, block tables, free counts) must stay
+        // identical to an uninterrupted all-resident twin under the same
+        // traffic, mirroring the preempt/restore twin above.
+        Prop::new(211).cases(150).run("kv offload twin equivalence", |rng: &mut Rng| {
+            let block = 16;
+            let cap = block * rng.range(3, 9);
+            let mut tier = TieredKv::new(2048, block, cap, rng.range(1, 4), true);
+            let mut bare = KvManager::new(2048, block);
+            let n_seqs = rng.range(2, 5) as u64;
+            for s in 0..n_seqs {
+                tier.add_seq(s);
+                bare.add_seq(s);
+                let prefill = rng.range(8, 96);
+                let ot = tier.append(s, prefill).map_err(|e| e.to_string())?;
+                let ob = bare.append(s, prefill).map_err(|e| e.to_string())?;
+                if ot != ob {
+                    return Err(format!("prefill offsets diverged: {ot} vs {ob}"));
+                }
+            }
+            for _ in 0..100 {
+                let s = rng.below(n_seqs);
+                match rng.range(0, 6) {
+                    // Decode step on both twins.
+                    0..=2 => {
+                        if !bare.can_append(s, 1) {
+                            continue;
+                        }
+                        let ot = tier.append(s, 1).map_err(|e| e.to_string())?;
+                        let ob = bare.append(s, 1).map_err(|e| e.to_string())?;
+                        if ot != ob {
+                            return Err(format!("append offsets diverged: {ot} vs {ob}"));
+                        }
+                    }
+                    // Speculative rollback on both twins.
+                    3 => {
+                        let len = bare.seq_len(s).unwrap();
+                        let keep = rng.range(0, len + 1);
+                        tier.truncate(s, keep).map_err(|e| e.to_string())?;
+                        bare.truncate(s, keep).map_err(|e| e.to_string())?;
+                    }
+                    // Tier-only motion: demand fetch or prefetch. The bare
+                    // twin has no counterpart — that is the point.
+                    4 => {
+                        let len = bare.seq_len(s).unwrap();
+                        tier.ensure_resident(s, rng.range(0, len + 1))
+                            .map_err(|e| e.to_string())?;
+                    }
+                    _ => tier.prefetch(s).map_err(|e| e.to_string())?,
+                }
+                for s in 0..n_seqs {
+                    if tier.seq_len(s) != bare.seq_len(s) {
+                        return Err(format!("seq {s} lengths diverged"));
+                    }
+                    let (bt, bb) = (
+                        tier.allocator().block_table(s).unwrap().len(),
+                        bare.block_table(s).unwrap().len(),
+                    );
+                    if bt != bb {
+                        return Err(format!("seq {s} block counts diverged: {bt} vs {bb}"));
+                    }
+                }
+                if tier.free_blocks() != bare.free_blocks() {
+                    return Err("free-block counts diverged".into());
+                }
+                tier.check_invariants()?;
+                bare.check_invariants()?;
+            }
+            for s in 0..n_seqs {
+                tier.release(s).map_err(|e| e.to_string())?;
+                bare.release(s).map_err(|e| e.to_string())?;
+            }
+            if tier.resident_tokens() != 0 {
+                return Err("release left resident pages behind".into());
+            }
+            tier.check_invariants()?;
+            Ok(())
+        });
     }
 }

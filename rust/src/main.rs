@@ -10,7 +10,7 @@ use anyhow::{anyhow, bail, Result};
 
 use iso::cli::{Cli, USAGE};
 use iso::config::{
-    parse_config_file, CommQuant, EngineConfig, SimExperiment, SplitPolicy, Strategy,
+    parse_config_file, CommQuant, EngineConfig, SimExperiment, SplitPolicy, Strategy, Topology,
 };
 use iso::coordinator::Engine;
 use iso::hw::NodeProfile;
@@ -52,11 +52,27 @@ fn serve(cli: &Cli) -> Result<()> {
     if cli.has("strategy") {
         cfg.strategy = strategy_flag(cli)?;
     }
+    // Deprecated per-axis aliases (kept byte-compatible). The canonical
+    // spelling is `--topology ppP.tpT.cpC` (DESIGN.md §17); the note is
+    // stderr-only and gated on --verbose so scripted stdout never moves.
     if cli.has("tp") {
         cfg.tp = cli.usize_or("tp", cfg.tp).map_err(|e| anyhow!(e))?;
+        if cli.has("verbose") {
+            eprintln!("note: --tp is deprecated; use --topology ppP.tpT.cpC");
+        }
     }
     if cli.has("pp-stages") {
         cfg.pp_stages = cli.usize_or("pp-stages", cfg.pp_stages).map_err(|e| anyhow!(e))?;
+        if cli.has("verbose") {
+            eprintln!("note: --pp-stages is deprecated; use --topology ppP.tpT.cpC");
+        }
+    }
+    if let Some(t) = cli.get("topology") {
+        // Canonical wins over the deprecated aliases when both are given.
+        let t: Topology = t.parse().map_err(|e| anyhow!("bad --topology: {e}"))?;
+        cfg.pp_stages = t.pp;
+        cfg.tp = t.tp;
+        cfg.cp = t.cp;
     }
     if let Some(q) = cli.get("comm-quant") {
         cfg.comm_quant = CommQuant::parse(q).ok_or_else(|| anyhow!("bad --comm-quant {q:?}"))?;
@@ -130,13 +146,28 @@ fn serve(cli: &Cli) -> Result<()> {
         let v = cli.get("ttft-deadline-ms").unwrap();
         cfg.ttft_deadline_ms = v.parse().map_err(|_| anyhow!("bad --ttft-deadline-ms {v:?}"))?;
     }
+    if let Some(v) = cli.get("kv-offload") {
+        cfg.kv_offload = iso::config::parse_bool(v, "--kv-offload").map_err(|e| anyhow!(e))?;
+    }
+    if cli.has("kv-resident-tokens") {
+        cfg.kv_resident_tokens = cli
+            .usize_or("kv-resident-tokens", cfg.kv_resident_tokens)
+            .map_err(|e| anyhow!(e))?;
+    }
+    if cli.has("kv-prefetch-pages") {
+        cfg.kv_prefetch_pages =
+            cli.usize_or("kv-prefetch-pages", cfg.kv_prefetch_pages).map_err(|e| anyhow!(e))?;
+    }
     let n_requests = cli.usize_or("requests", 8).map_err(|e| anyhow!(e))?;
     let prompt_len = cli.usize_or("prompt-len", 128).map_err(|e| anyhow!(e))?;
     let decode = cli.usize_or("decode", 0).map_err(|e| anyhow!(e))?;
 
+    // Opt-in banner suffix: " cp=N" only when the third axis is in play,
+    // so cp=1 invocations keep byte-identical stdout (DESIGN.md §17).
+    let cp_tag = if cfg.cp > 1 { format!(" cp={}", cfg.cp) } else { String::new() };
     println!(
-        "engine: pp={} tp={} strategy={} comm_quant={:?} mixed={} decode_batch={} spec_k={} \
-         comm_segments={} fused_epilogue={} ladder_residual={} artifacts={}",
+        "engine: pp={} tp={}{cp_tag} strategy={} comm_quant={:?} mixed={} decode_batch={} \
+         spec_k={} comm_segments={} fused_epilogue={} ladder_residual={} artifacts={}",
         cfg.pp_stages,
         cfg.tp,
         cfg.strategy,
@@ -154,6 +185,13 @@ fn serve(cli: &Cli) -> Result<()> {
     if cfg.wire_precision.is_some() || cfg.decode_wire_precision.is_some() {
         let p = cfg.precision();
         println!("wire_precision: prefill={} decode={}", p.prefill.label(), p.decode.label());
+    }
+    // Same rule for the cold-KV tier (DESIGN.md §17): silent unless on.
+    if cfg.kv_offload {
+        println!(
+            "kv_offload: resident_tokens={} prefetch_pages={}",
+            cfg.kv_resident_tokens, cfg.kv_prefetch_pages
+        );
     }
     let mut engine = Engine::start(cfg)?;
     let vocab = engine.manifest.config.vocab;
@@ -205,7 +243,7 @@ fn serve(cli: &Cli) -> Result<()> {
     // to the legacy report), stage-grouped for pipeline engines.
     print!(
         "{}",
-        iso::report::worker_rollup(&report.workers, report.pp_stages, report.tp)
+        iso::report::worker_rollup_cp(&report.workers, report.pp_stages, report.tp, report.cp)
     );
     Ok(())
 }

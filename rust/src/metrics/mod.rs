@@ -232,6 +232,22 @@ pub struct EngineMetrics {
     /// Submits rejected with `Overloaded` backpressure at the bounded
     /// admission queue.
     pub rejected: u64,
+    /// KV-shard bytes forwarded around the context-parallel ring
+    /// (DESIGN.md §17); 0 when `cp = 1`.
+    pub cp_shard_bytes: u64,
+    /// KV-shard messages forwarded around the CP ring.
+    pub cp_shard_msgs: u64,
+    /// Compute time blocked waiting on the previous CP group's KV
+    /// prefix (summed across ranks, ms).
+    pub cp_stall_ms: f64,
+    /// Cold KV pages the tiered mirror spilled resident → host
+    /// (DESIGN.md §17); 0 unless `kv_offload` ran under a resident cap.
+    pub kv_spilled_pages: u64,
+    /// KV pages demand-fetched host → resident (modeled H2D stalls).
+    pub kv_fetched_pages: u64,
+    /// KV pages brought back ahead of the decode cursor (modeled H2D
+    /// overlap).
+    pub kv_prefetched_pages: u64,
 }
 
 impl EngineMetrics {
@@ -355,6 +371,23 @@ impl EngineMetrics {
             s.push_str(&format!(
                 "\npreemptions={} preempted_tokens={} sheds={} rejected={}",
                 self.preemptions, self.preempted_tokens, self.sheds, self.rejected
+            ));
+        }
+        // Context-parallel counters appear only when shards actually
+        // moved on the ring, so cp = 1 reports stay byte-identical.
+        if self.cp_shard_msgs > 0 {
+            s.push_str(&format!(
+                "\ncp_shard_bytes={} cp_shard_msgs={} cp_stall_ms={:.2}",
+                self.cp_shard_bytes, self.cp_shard_msgs, self.cp_stall_ms
+            ));
+        }
+        // Offload counters appear only when the tier actually moved
+        // pages, so resident-only reports stay byte-identical.
+        if self.kv_spilled_pages > 0 || self.kv_fetched_pages > 0 || self.kv_prefetched_pages > 0
+        {
+            s.push_str(&format!(
+                "\nkv_spilled_pages={} kv_fetched_pages={} kv_prefetched_pages={}",
+                self.kv_spilled_pages, self.kv_fetched_pages, self.kv_prefetched_pages
             ));
         }
         s

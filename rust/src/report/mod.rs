@@ -165,6 +165,45 @@ pub fn worker_rollup(workers: &[WorkerStats], pp_stages: usize, tp: usize) -> St
     s
 }
 
+/// [`worker_rollup`] extended with the ring context-parallel axis
+/// (DESIGN.md §17). `cp <= 1` delegates to the two-axis rollup —
+/// byte-identical output, pinned by test — while `cp > 1` engines print
+/// one `group c` header per CP group (its summed compute, shard-ring
+/// traffic, and shard-ring stall) and nest that group's stage rollup
+/// beneath it, so an imbalanced shard assignment or a slow shard hop is
+/// visible per group. Workers are expected in global-rank order
+/// (`c × (pp × tp) + s × tp + r`).
+pub fn worker_rollup_cp(
+    workers: &[WorkerStats],
+    pp_stages: usize,
+    tp: usize,
+    cp: usize,
+) -> String {
+    if cp <= 1 {
+        return worker_rollup(workers, pp_stages, tp);
+    }
+    let group_sz = pp_stages.max(1) * tp.max(1);
+    let mut s = String::new();
+    for c in 0..cp {
+        let lo = (c * group_sz).min(workers.len());
+        let hi = ((c + 1) * group_sz).min(workers.len());
+        let ranks = &workers[lo..hi];
+        let compute: f64 = ranks.iter().map(|w| w.compute_ms).sum();
+        let shard: u64 = ranks.iter().map(|w| w.cp_shard_bytes).sum();
+        let stall: f64 = ranks.iter().map(|w| w.cp_stall_ms).sum();
+        s.push_str(&format!(
+            "group {c} (pp={pp_stages} tp={tp}): compute={compute:.0}ms \
+             cp_shard_sent={shard}B cp_stall={stall:.0}ms\n"
+        ));
+        for line in worker_rollup(ranks, pp_stages, tp).lines() {
+            s.push_str("  ");
+            s.push_str(line);
+            s.push('\n');
+        }
+    }
+    s
+}
+
 /// One measured case for the machine-readable perf snapshot
 /// (`BENCH_PR1.json` and successors) that seeds the perf trajectory
 /// across PRs (EXPERIMENTS.md).
@@ -363,6 +402,33 @@ mod tests {
         assert!(s.contains("bubble_wait=4ms"));
         assert!(s.contains("p2p_sent=200B"));
         assert!(s.contains("(tp=2)"));
+        assert_eq!(s.matches("rank ").count(), 4);
+    }
+
+    #[test]
+    fn cp_rollup_delegates_at_cp1_and_groups_at_cp2() {
+        // Tentpole (PR 9): cp = 1 must not change the rollup by a byte;
+        // cp = 2 nests the per-group stage rollup under `group` headers
+        // that sum compute and shard-ring traffic.
+        let mk = |rank: usize, stage: usize| WorkerStats {
+            rank,
+            stage,
+            compute_ms: 10.0,
+            cp_shard_bytes: 64,
+            cp_stall_ms: 1.5,
+            ..Default::default()
+        };
+        let flat = vec![mk(0, 0), mk(1, 0)];
+        assert_eq!(worker_rollup_cp(&flat, 1, 2, 1), worker_rollup(&flat, 1, 2));
+        let workers = vec![mk(0, 0), mk(1, 0), mk(2, 0), mk(3, 0)];
+        let s = worker_rollup_cp(&workers, 1, 2, 2);
+        let g0 = s.find("group 0").unwrap();
+        let g1 = s.find("group 1").unwrap();
+        let r2 = s.find("rank 2").unwrap();
+        assert!(g0 < g1 && g0 < r2 && r2 > g1, "ranks must nest under groups");
+        assert!(s.contains("compute=20ms"), "group compute must sum its ranks");
+        assert!(s.contains("cp_shard_sent=128B"));
+        assert!(s.contains("cp_stall=3ms"));
         assert_eq!(s.matches("rank ").count(), 4);
     }
 

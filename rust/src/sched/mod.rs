@@ -717,6 +717,88 @@ pub fn pp_best_config(
         .unwrap()
 }
 
+/// Predicted wall time of one prefill through a `cp × tp` context-parallel
+/// engine (DESIGN.md §17): the *tokens* are split into `cp` contiguous
+/// shards (balanced via `seg_range`, exactly the engine's assignment),
+/// each shard's group internally tensor-parallel over a `tp`-rank ring,
+/// and per layer each group forwards the prefix K/V to its successor over
+/// a `p2p` link so attention sees the exact causal history.
+///
+/// Per layer, group `c` costs its shard's compute (`1/tp` of the shard's
+/// FLOPs, including the causally-imbalanced attention term —
+/// [`ModelSpec::layer_chunk_cost`] at the shard's offset) plus two ring
+/// all-reduces over the shard's `t_c` rows; the groups form a wavefront
+/// over layers priced by [`crate::sim::pipeline_makespan`] with the mean
+/// per-layer prefix-K/V forward as the hop. The model captures the third
+/// axis's trade: CP shrinks each group's all-reduce payload and row count
+/// (fewer bytes, fewer α-steps than one wide TP ring) at the price of
+/// the layer wavefront's fill/drain and the shard chain's hops — so which
+/// `(cp, tp)` wins at fixed world size depends on the link, mirroring the
+/// pp-vs-tp crossover one axis over (`BENCH_CP.json` records the sweep).
+pub fn cp_iteration_s(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    prompt_len: usize,
+    cp: usize,
+    tp: usize,
+    p2p: &crate::hw::LinkProfile,
+    int8_wire: bool,
+) -> f64 {
+    assert!(cp >= 1 && tp >= 1);
+    assert!(prompt_len >= cp, "sub-token shards");
+    let group_s: Vec<f64> = (0..cp)
+        .map(|c| {
+            let (lo, hi) = crate::collective::seg_range(prompt_len, cp, c);
+            let t = hi - lo;
+            let cost = model.layer_chunk_cost(t, lo);
+            let flops = cost.gemm_flops_attn + cost.gemm_flops_mlp + cost.attn_flops;
+            let compute_s = node.device.gemm_s(flops / tp as f64, t);
+            let wire = if int8_wire {
+                cost.ar_bytes as f64 * crate::hw::INT8_WIRE_FACTOR
+            } else {
+                cost.ar_bytes as f64
+            };
+            compute_s + 2.0 * node.link.ring_allreduce_s(wire, tp)
+        })
+        .collect();
+    let hop_s = if cp > 1 {
+        // Mean prefix K/V payload a group forwards per layer (group c
+        // sends rows [0, hi_c)), spread over the tp ranks that each own
+        // a kv-head slice of the shard chain.
+        let prefix_rows: usize = (0..cp - 1)
+            .map(|c| crate::collective::seg_range(prompt_len, cp, c).1)
+            .sum();
+        let mean_rows = prefix_rows as f64 / (cp - 1) as f64;
+        let bytes = mean_rows * (2 * model.kv_dim() * model.act_bytes) as f64 / tp as f64;
+        p2p.p2p_s(bytes)
+    } else {
+        0.0
+    };
+    crate::sim::pipeline_makespan(&group_s, hop_s, model.n_layers)
+}
+
+/// The `(cp, tp)` candidate with the smallest predicted prefill time
+/// under [`cp_iteration_s`] — what the `BENCH_CP.json` sweep checks the
+/// crossover direction against.
+pub fn cp_best_config(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    prompt_len: usize,
+    candidates: &[(usize, usize)],
+    p2p: &crate::hw::LinkProfile,
+    int8_wire: bool,
+) -> (usize, usize) {
+    assert!(!candidates.is_empty());
+    *candidates
+        .iter()
+        .min_by(|a, b| {
+            let ta = cp_iteration_s(node, model, prompt_len, a.0, a.1, p2p, int8_wire);
+            let tb = cp_iteration_s(node, model, prompt_len, b.0, b.1, p2p, int8_wire);
+            ta.partial_cmp(&tb).unwrap()
+        })
+        .unwrap()
+}
+
 // ---------------------------------------------------------------------------
 // Recovery cost model (DESIGN.md §14)
 // ---------------------------------------------------------------------------
@@ -1259,6 +1341,46 @@ mod tests {
         // layer τ = 2 ARs · 2(2−1)(α + b/2/bw) ≈ 4α (compute ~0, bw ~∞).
         let tau = 4.0 * 1e-3;
         assert!((got / tau - 14.0).abs() < 0.01, "got {} vs 14τ", got / tau);
+    }
+
+    #[test]
+    fn cp_model_alpha_bound_link_favors_context_shards() {
+        // Hand arithmetic (DESIGN.md §17): on a latency-bound ring the
+        // per-layer all-reduce costs 2·2(R−1)·α — 12α at tp=4, 4α at
+        // tp=2. Flat TP serializes L layers: L·12α. The cp=2 wavefront
+        // over L layers with uniform 4α group-layers and one α hop is
+        // (2 + L − 1)·4α + (2 − 1)·α. At fixed world size cp=2 must win
+        // decisively on the weak link.
+        let node = pp_node(1e30, 1e-3, 1e18); // compute ~0, α-dominated
+        let model = ModelSpec::mha_30b();
+        let p2p = crate::hw::LinkProfile { alpha_s: 1e-3, link_bytes_per_s: 1e18 };
+        let l = model.n_layers as f64;
+        let flat = cp_iteration_s(&node, &model, 4096, 1, 4, &p2p, false);
+        let deep = cp_iteration_s(&node, &model, 4096, 2, 2, &p2p, false);
+        assert!((flat / (12.0e-3 * l) - 1.0).abs() < 0.01, "flat {flat} vs {}", 12.0e-3 * l);
+        let want = (l + 1.0) * 4.0e-3 + 1.0e-3;
+        assert!((deep / want - 1.0).abs() < 0.01, "deep {deep} vs hand value {want}");
+        assert!(deep < 0.5 * flat, "α-bound link: cp2×2 ({deep}) should rout 1×4 ({flat})");
+        let cands = [(1usize, 4usize), (2, 2)];
+        assert_eq!(cp_best_config(&node, &model, 4096, &cands, &p2p, false), (2, 2));
+    }
+
+    #[test]
+    fn cp_model_comm_free_favors_flat_tp() {
+        // With a free interconnect both factorizations do the same total
+        // FLOPs per rank (the shards' layer costs sum exactly to the
+        // whole-prompt layer cost, causal term included), but cp=2 pays
+        // the layer wavefront's fill/drain, the causally-imbalanced
+        // second shard, and the short-row efficiency cliff — flat TP
+        // must win, the other side of the crossover.
+        let node = pp_node(1e12, 0.0, 1e18);
+        let model = ModelSpec::mha_30b();
+        let free = crate::hw::LinkProfile { alpha_s: 0.0, link_bytes_per_s: 1e18 };
+        let flat = cp_iteration_s(&node, &model, 4096, 1, 4, &free, false);
+        let deep = cp_iteration_s(&node, &model, 4096, 2, 2, &free, false);
+        assert!(flat < deep, "comm-free: 1×4 ({flat}) must beat cp2×2 ({deep})");
+        let cands = [(1usize, 4usize), (2, 2)];
+        assert_eq!(cp_best_config(&node, &model, 4096, &cands, &free, false), (1, 4));
     }
 
     #[test]

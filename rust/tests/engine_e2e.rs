@@ -402,16 +402,16 @@ fn assert_fused_decode_equivalence(prompts: &[Vec<i32>], steps: usize) {
     let mut lane = Vec::new();
     for p in prompts {
         let slot_a = seq_eng.alloc_slot().unwrap();
-        let a = seq_eng.step(Some((slot_a, p)), &[]).unwrap().prefill.unwrap();
+        let a = seq_eng.step_decode(Some((slot_a, p)), &[]).unwrap().prefill.unwrap();
         let slot_b = lane_eng.alloc_slot().unwrap();
-        let bout = lane_eng.step(Some((slot_b, p)), &[]).unwrap().prefill.unwrap();
+        let bout = lane_eng.step_decode(Some((slot_b, p)), &[]).unwrap().prefill.unwrap();
         assert_eq!(a.logits, bout.logits, "prefill logits diverged before decode");
         seq_state.push((slot_a, a.first_token, p.len()));
         lane.push(DecodeSlot { slot: slot_b, token: bout.first_token, offset: p.len() });
     }
 
     for round in 0..steps {
-        let out = lane_eng.step(None, &lane).unwrap();
+        let out = lane_eng.step_decode(None, &lane).unwrap();
         assert_eq!(out.decode_logits.len(), b);
         for j in 0..b {
             let (slot, token, offset) = seq_state[j];

@@ -50,9 +50,9 @@ fn verify_rows_bit_identical_to_decode_chain() {
     let mut chain_eng = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
 
     let slot_s = spec_eng.alloc_slot().unwrap();
-    let a = spec_eng.step(Some((slot_s, &prompt)), &[]).unwrap().prefill.unwrap();
+    let a = spec_eng.step_decode(Some((slot_s, &prompt)), &[]).unwrap().prefill.unwrap();
     let slot_c = chain_eng.alloc_slot().unwrap();
-    let b = chain_eng.step(Some((slot_c, &prompt)), &[]).unwrap().prefill.unwrap();
+    let b = chain_eng.step_decode(Some((slot_c, &prompt)), &[]).unwrap().prefill.unwrap();
     assert_eq!(a.logits, b.logits, "prefill diverged before any speculation");
 
     // Window: last emitted token + 3 arbitrary drafts (almost certainly
@@ -117,7 +117,7 @@ fn accepted_drafts_fast_forward_the_sequence() {
 
     let mut eng = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
     let slot = eng.alloc_slot().unwrap();
-    let pre = eng.step(Some((slot, &prompt)), &[]).unwrap().prefill.unwrap();
+    let pre = eng.step_decode(Some((slot, &prompt)), &[]).unwrap().prefill.unwrap();
     assert_eq!(pre.first_token, g.tokens[0]);
     // Window = first token + the chain's next 3 tokens as drafts.
     let window = SpecSlot {
@@ -223,7 +223,7 @@ fn step_spec_validates_windows() {
     let mut e = Engine::start(cfg(Strategy::Iso, 2)).unwrap();
     let slot = e.alloc_slot().unwrap();
     let prompt: Vec<i32> = (0..16).map(|i| i as i32).collect();
-    e.step(Some((slot, &prompt)), &[]).unwrap();
+    e.step_decode(Some((slot, &prompt)), &[]).unwrap();
     // Empty window.
     let bad = SpecSlot { slot, tokens: vec![], offset: 16 };
     assert!(e.step_spec(None, &[bad]).is_err());
