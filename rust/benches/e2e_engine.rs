@@ -34,6 +34,7 @@ use iso::sched::{
     pp_best_config, pp_bubble_fraction, pp_iteration_s, recovery_s, slo_admitted_frac, slo_ttft_s,
     Coster, MixedIteration,
 };
+use iso::tune::{self, Workload};
 use iso::util::bench::{bench, section};
 use iso::workload::{LenDist, TraceGen};
 
@@ -80,6 +81,10 @@ fn precision_snapshot_path() -> String {
 
 fn cp_snapshot_path() -> String {
     std::env::var("ISO_PERF_SNAPSHOT_CP").unwrap_or_else(|_| "../BENCH_CP.json".into())
+}
+
+fn tune_snapshot_path() -> String {
+    std::env::var("ISO_PERF_SNAPSHOT_TUNE").unwrap_or_else(|_| "../BENCH_TUNE.json".into())
 }
 
 /// The PP×TP factorizations of a 4-device node that the deterministic
@@ -873,6 +878,76 @@ fn engine_cp_sweep(path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Simulator side of the PR-10 auto-tune sweep (no artifacts needed,
+/// fully deterministic — gated against `BENCH_BASELINE.json` in CI):
+/// for each GPU preset × workload mix, plan the joint knob space, then
+/// re-price the top-5 through the event-sim "measured" twin
+/// (`tune::sim_measured_request_s`). Each rank's predicted/measured
+/// milliseconds are recorded, plus one agreement record per cell with
+/// the Kendall τ and the hand-tuned default's measured time — the same
+/// quantities `rust/tests/auto_tune.rs` pins, kept here so regressions
+/// show up as numbers, not just pass/fail.
+fn sim_tune_sweep(path: &str) {
+    let model = ModelSpec::mha_30b();
+    section("simulator: auto-tune predicted vs sim-measured, top-5 (30b, 4 devices)");
+    let mut records = Vec::new();
+    for (tag, node) in [("4090-4", NodeProfile::rtx4090(4)), ("a800-4", NodeProfile::a800(4))] {
+        for w in [Workload::prefill_heavy(), Workload::mixed(), Workload::decode_heavy()] {
+            let p = tune::plan(&node, &model, &w);
+            let top = &p.ranked[..5.min(p.ranked.len())];
+            let pred: Vec<f64> = top.iter().map(|pc| pc.predicted_s).collect();
+            let meas: Vec<f64> = top
+                .iter()
+                .map(|pc| tune::sim_measured_request_s(&node, &model, &w, &pc.cfg))
+                .collect();
+            for (i, pc) in top.iter().enumerate() {
+                let pred_ms = pred[i] * 1e3;
+                let meas_ms = meas[i] * 1e3;
+                println!(
+                    "  {tag} {:<13} rank{} {:<44} pred {pred_ms:9.3}ms meas {meas_ms:9.3}ms",
+                    w.name,
+                    i + 1,
+                    pc.summary
+                );
+                records.push(
+                    PerfRecord::new(
+                        &format!("sim tune {tag} {} rank{}", w.name, i + 1),
+                        pred_ms,
+                        pred_ms,
+                        pred_ms,
+                    )
+                    .with("rank", (i + 1) as f64)
+                    .with("predicted_ms", pred_ms)
+                    .with("measured_ms", meas_ms),
+                );
+            }
+            let tau = tune::kendall_tau(&pred, &meas);
+            let ht = tune::hand_tuned_default(&node, &w);
+            let ht_ms = tune::sim_measured_request_s(&node, &model, &w, &ht) * 1e3;
+            let best_ms = meas[0] * 1e3;
+            println!(
+                "  → {tag} {:<13} tau {tau:+.3}  best-measured {best_ms:9.3}ms  \
+                 hand-tuned {ht_ms:9.3}ms",
+                w.name
+            );
+            records.push(
+                PerfRecord::new(
+                    &format!("sim tune {tag} {} agreement", w.name),
+                    best_ms,
+                    best_ms,
+                    best_ms,
+                )
+                .with("tau", tau)
+                .with("best_measured_ms", best_ms)
+                .with("hand_tuned_ms", ht_ms),
+            );
+        }
+    }
+    if let Err(e) = append_perf_records(path, "sim_tune", &records) {
+        eprintln!("could not write {path}: {e}");
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let path = snapshot_path();
     let pr2_path = pr2_snapshot_path();
@@ -911,6 +986,11 @@ fn main() -> anyhow::Result<()> {
     // platforms (no artifacts needed; gated against BENCH_BASELINE.json
     // in CI).
     sim_cp_sweep(&cp_path);
+
+    // --- PR-10: auto-tune rank agreement — top-5 predicted vs
+    // sim-measured per profile × workload (no artifacts needed; gated
+    // against BENCH_BASELINE.json in CI).
+    sim_tune_sweep(&tune_snapshot_path());
 
     // --- simulator side of the segment sweep (no artifacts needed).
     let sim_exp = SimExperiment::new(

@@ -135,6 +135,20 @@ COMMANDS:
                 livelock, default 2)
               --ttft-deadline-ms X (shed queued requests whose wait
                 exceeds X ms before they start; 0 = off)
+              --auto-tune (calibrate a hardware profile, rank the joint
+                knob space against the cost models, and adopt the
+                winner's topology/overlap/wire knobs; DESIGN.md §18)
+              --auto-tune=dry-run (print the ranked plan and the pruned-
+                axis ledger, then exit without starting the engine)
+              --tune-profile 4090|a800 (plan against a built-in preset
+                instead of the CPU engine testbed; --tune-cards N sets
+                its ring size, default 4)
+              --tune-model 30b|70b|tiny (model geometry the planner
+                prices; default tiny for the CPU testbed, 30b for
+                presets)
+              --profile-cache FILE (persist the calibrated profile as
+                JSON; reused on the next run instead of recalibrating —
+                delete the file to invalidate, see TUNING.md)
               --config FILE (e.g. configs/engine-iso.conf; flags override)
               --verbose (deprecation notes for alias flags, stderr only)
   table1      print the paper's Table 1 from the calibrated simulator

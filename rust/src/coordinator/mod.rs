@@ -415,6 +415,10 @@ pub struct TraceReport {
     /// Arrivals rejected at the bounded admission queue; 0 with
     /// `queue_bound = 0`.
     pub rejected: u64,
+    /// One-line summary of the auto-tuned config this trace ran under
+    /// (`serve --auto-tune`, DESIGN.md §18); `None` for hand-set configs,
+    /// keeping legacy reports byte-identical.
+    pub tuned: Option<String>,
 }
 
 impl TraceReport {

@@ -246,6 +246,31 @@ impl NodeProfile {
         Ok(p)
     }
 
+    /// The `[hardware]` config keys describing this profile — the exact
+    /// inverse of [`NodeProfile::from_map`], so a calibrated
+    /// `MeasuredProfile` (`tune::calibrate`) can be exported where the
+    /// hand-coded constants sit today and fed back through `--hw-file`.
+    /// Scaled keys (`peak_tflops`, `launch_us`, …) round-trip through
+    /// Rust's shortest float formatting; re-parsing reproduces the
+    /// profile to within float re-scaling (≤ 1 ulp per field).
+    pub fn to_map(&self) -> std::collections::BTreeMap<String, String> {
+        let mut m = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: String| {
+            m.insert(format!("hardware.{k}"), v);
+        };
+        put("name", self.device.name.clone());
+        put("cards", self.cards.to_string());
+        put("peak_tflops", (self.device.peak_flops / 1e12).to_string());
+        put("peak_eff", self.device.peak_eff.to_string());
+        put("m_half", self.device.m_half.to_string());
+        put("launch_us", (self.device.launch_s * 1e6).to_string());
+        put("contention", self.device.contention.to_string());
+        put("link_alpha_us", (self.link.alpha_s * 1e6).to_string());
+        put("link_gbps", (self.link.link_bytes_per_s / 1e9).to_string());
+        put("int8_wire", self.int8_wire_default.to_string());
+        m
+    }
+
     /// The CPU engine testbed itself (DESIGN.md §2): XLA-CPU f32 GEMM
     /// throughput with its (much earlier) small-m efficiency knee, and the
     /// ring's throttled α/β when the engine emulates a PCIe-class link.
@@ -444,6 +469,29 @@ mod tests {
         assert!(NodeProfile::from_map(&bad_val).is_err());
         let zero_cards = crate::config::parse_config_str("[hardware]\ncards = 0").unwrap();
         assert!(NodeProfile::from_map(&zero_cards).is_err());
+    }
+
+    #[test]
+    fn to_map_round_trips_through_from_map() {
+        for node in [
+            NodeProfile::rtx4090(4),
+            NodeProfile::a800(8),
+            NodeProfile::cpu_engine(2, Some(64.0), 120.0),
+        ] {
+            let back = NodeProfile::from_map(&node.to_map()).unwrap();
+            assert_eq!(back.device.name, node.device.name);
+            assert_eq!(back.cards, node.cards);
+            assert_eq!(back.int8_wire_default, node.int8_wire_default);
+            // Scaled float keys re-scale on parse; allow 1-ulp wobble.
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * b.abs().max(1.0);
+            assert!(close(back.device.peak_flops, node.device.peak_flops));
+            assert!(close(back.device.peak_eff, node.device.peak_eff));
+            assert!(close(back.device.m_half, node.device.m_half));
+            assert!(close(back.device.launch_s, node.device.launch_s));
+            assert!(close(back.device.contention, node.device.contention));
+            assert!(close(back.link.alpha_s, node.link.alpha_s));
+            assert!(close(back.link.link_bytes_per_s, node.link.link_bytes_per_s));
+        }
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //! * a **calibrated simulator** (`sim`, `sched`, `hw`, `model`, `split`)
 //!   reproducing every table and figure of the paper's evaluation on
 //!   modeled 4090/A800 nodes;
+//! * a **profile-driven auto-tuner** (`tune`): a calibration pass that
+//!   fits the `hw` constants from micro-benchmarks, a planner that ranks
+//!   the joint knob space against the `sched` cost models, and the
+//!   predicted-vs-measured rank-agreement harness that keeps the two
+//!   honest (`serve --auto-tune`, DESIGN.md §18);
 //! * shared substrates: `config`, `quant`, `metrics`, `workload`,
 //!   `report`, `util`.
 //!
@@ -45,5 +50,6 @@ pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod split;
+pub mod tune;
 pub mod util;
 pub mod workload;

@@ -17,6 +17,7 @@ use iso::hw::NodeProfile;
 use iso::model::ModelSpec;
 use iso::report::{gantt, render_table1, table1, table1_csv};
 use iso::sched::{reduction_vs_serial, run};
+use iso::tune::{AnalyticProbe, MeasuredProfile};
 use iso::workload::{LenDist, TraceGen};
 
 fn main() -> Result<()> {
@@ -162,6 +163,60 @@ fn serve(cli: &Cli) -> Result<()> {
     let prompt_len = cli.usize_or("prompt-len", 128).map_err(|e| anyhow!(e))?;
     let decode = cli.usize_or("decode", 0).map_err(|e| anyhow!(e))?;
 
+    // --- Auto-tune (DESIGN.md §18): calibrate → plan, then either print
+    // the ranked plan and stop (dry-run) or adopt the winner's knobs
+    // before engine start. Absent the flag, stdout is byte-identical to
+    // the hand-tuned path.
+    let mut tuned: Option<String> = None;
+    if let Some(mode) = cli.get("auto-tune") {
+        if mode != "true" && mode != "dry-run" {
+            bail!("bad --auto-tune {mode:?} (bare flag, or --auto-tune=dry-run)");
+        }
+        let (profile, cached) = tune_profile(cli, &cfg)?;
+        let model_name = cli.get_or(
+            "tune-model",
+            if profile.node.device.name.starts_with("cpu-engine") { "tiny" } else { "30b" },
+        );
+        let model = ModelSpec::by_name(&model_name)
+            .ok_or_else(|| anyhow!("bad --tune-model {model_name:?}"))?;
+        let w = iso::tune::Workload {
+            name: "serve".into(),
+            prompt_len,
+            decode_steps: decode,
+            decode_ctx: prompt_len + decode,
+            accept: 0.8,
+        };
+        let plan = iso::tune::plan(&profile.node, &model, &w);
+        if mode == "dry-run" {
+            print!("{}", plan.render(10));
+            return Ok(());
+        }
+        let best = plan
+            .best()
+            .ok_or_else(|| anyhow!("auto-tune: every candidate was pruned"))?;
+        let summary = format!(
+            "{} predicted={:.2}ms profile={} ({})",
+            best.summary,
+            best.predicted_s * 1e3,
+            profile.source,
+            if cached { "cached" } else { "calibrated" },
+        );
+        // Adopt the planner's knobs; run-level scalars (requests, decode
+        // steps, artifacts) stay the operator's.
+        let picked = &best.cfg;
+        cfg.pp_stages = picked.pp_stages;
+        cfg.tp = picked.tp;
+        cfg.cp = picked.cp;
+        cfg.comm_segments = picked.comm_segments;
+        cfg.decode_batch = picked.decode_batch;
+        cfg.spec_k = picked.spec_k;
+        cfg.fused_epilogue = picked.fused_epilogue;
+        cfg.wire_precision = picked.wire_precision;
+        cfg.decode_wire_precision = picked.decode_wire_precision;
+        println!("auto_tune: {summary}");
+        tuned = Some(summary);
+    }
+
     // Opt-in banner suffix: " cp=N" only when the third axis is in play,
     // so cp=1 invocations keep byte-identical stdout (DESIGN.md §17).
     let cp_tag = if cfg.cp > 1 { format!(" cp={}", cfg.cp) } else { String::new() };
@@ -211,6 +266,7 @@ fn serve(cli: &Cli) -> Result<()> {
         // Continuous batching over a paced arrival trace.
         let trace = engine.serve_trace(&reqs)?;
         let mut t = trace.clone();
+        t.tuned = tuned.clone();
         println!(
             "completed {} requests in {} iterations, {:.0} tok/s; {}",
             trace.completed,
@@ -224,6 +280,11 @@ fn serve(cli: &Cli) -> Result<()> {
         }
         if !t.occupancy.is_empty() {
             println!("{}", t.occupancy.summary("iter_occupancy"));
+        }
+        // Opt-in banner (DESIGN.md §18): absent unless --auto-tune picked
+        // the config, so hand-tuned invocations keep byte-identical stdout.
+        if let Some(s) = &t.tuned {
+            println!("tuned: {s}");
         }
     } else {
         for r in &reqs {
@@ -246,6 +307,30 @@ fn serve(cli: &Cli) -> Result<()> {
         iso::report::worker_rollup_cp(&report.workers, report.pp_stages, report.tp, report.cp)
     );
     Ok(())
+}
+
+/// Resolve the hardware profile `--auto-tune` plans against: a named
+/// preset (`--tune-profile 4090|a800` with `--tune-cards N`), else the
+/// CPU engine testbed the real engine runs on, sized to the configured
+/// rank grid and emulated link. `--profile-cache FILE` persists the
+/// calibration (`tune::MeasuredProfile` JSON) across runs; without it
+/// every invocation recalibrates. Returns the profile and whether it
+/// came from the cache.
+fn tune_profile(cli: &Cli, cfg: &EngineConfig) -> Result<(MeasuredProfile, bool)> {
+    let node = if let Some(name) = cli.get("tune-profile") {
+        let cards = cli.usize_or("tune-cards", 4).map_err(|e| anyhow!(e))?;
+        NodeProfile::by_name(name, cards)
+            .ok_or_else(|| anyhow!("bad --tune-profile {name:?} (4090|a800)"))?
+    } else {
+        NodeProfile::cpu_engine(cfg.topology().world(), cfg.link_mbps, cfg.link_alpha_us)
+    };
+    let probe = AnalyticProbe::new(node);
+    if let Some(path) = cli.get("profile-cache") {
+        MeasuredProfile::load_or_calibrate(std::path::Path::new(path), &probe)
+            .map_err(|e| anyhow!(e))
+    } else {
+        Ok((iso::tune::calibrate(&probe), false))
+    }
 }
 
 fn cmd_table1(cli: &Cli) -> Result<()> {

@@ -607,6 +607,26 @@ pub fn pp_iteration_s(
     p2p: &crate::hw::LinkProfile,
     int8_wire: bool,
 ) -> f64 {
+    let q = if int8_wire { CommQuant::Int8 } else { CommQuant::Fp16 };
+    pp_iteration_rung_s(node, model, prompt_len, chunks, pp, tp, p2p, q)
+}
+
+/// [`pp_iteration_s`] generalized over the full wire-precision ladder:
+/// both per-layer TP collectives are priced at rung `q`
+/// ([`crate::hw::wire_factor`]), so the auto-tuner can rank `(pp, tp)`
+/// candidates jointly with the precision axis. `Fp16`/`Int8` reproduce
+/// the legacy bool exactly (the bool entry point delegates here).
+#[allow(clippy::too_many_arguments)]
+pub fn pp_iteration_rung_s(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    prompt_len: usize,
+    chunks: usize,
+    pp: usize,
+    tp: usize,
+    p2p: &crate::hw::LinkProfile,
+    q: CommQuant,
+) -> f64 {
     assert!(pp >= 1 && tp >= 1 && chunks >= 1);
     assert!(pp <= model.n_layers, "more stages than layers");
     assert!(prompt_len >= chunks, "sub-token chunks");
@@ -618,7 +638,7 @@ pub fn pp_iteration_s(
         (full.gemm_flops_attn + full.gemm_flops_mlp + full.attn_flops) / chunks as f64;
     let compute_s = node.device.gemm_s(flops_per_chunk / tp as f64, t);
     let ar_bytes = (t * model.d_model * model.act_bytes) as f64;
-    let wire = if int8_wire { ar_bytes * crate::hw::INT8_WIRE_FACTOR } else { ar_bytes };
+    let wire = ar_bytes * crate::hw::wire_factor(q);
     let layer_s = compute_s + 2.0 * node.link.ring_allreduce_s(wire, tp);
     let stage_s: Vec<f64> = (0..pp)
         .map(|s| {
@@ -744,6 +764,26 @@ pub fn cp_iteration_s(
     p2p: &crate::hw::LinkProfile,
     int8_wire: bool,
 ) -> f64 {
+    let q = if int8_wire { CommQuant::Int8 } else { CommQuant::Fp16 };
+    cp_iteration_rung_s(node, model, prompt_len, cp, tp, p2p, q)
+}
+
+/// [`cp_iteration_s`] generalized over the full wire-precision ladder:
+/// each group's two per-layer TP collectives are priced at rung `q`
+/// ([`crate::hw::wire_factor`]); the prefix-K/V hop stays at the cache's
+/// storage width (KV pages are not wire-quantized by the rung knob).
+/// `Fp16`/`Int8` reproduce the legacy bool exactly (the bool entry point
+/// delegates here) — this is the form the auto-tuner ranks `(cp, tp)`
+/// candidates with.
+pub fn cp_iteration_rung_s(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    prompt_len: usize,
+    cp: usize,
+    tp: usize,
+    p2p: &crate::hw::LinkProfile,
+    q: CommQuant,
+) -> f64 {
     assert!(cp >= 1 && tp >= 1);
     assert!(prompt_len >= cp, "sub-token shards");
     let group_s: Vec<f64> = (0..cp)
@@ -753,11 +793,7 @@ pub fn cp_iteration_s(
             let cost = model.layer_chunk_cost(t, lo);
             let flops = cost.gemm_flops_attn + cost.gemm_flops_mlp + cost.attn_flops;
             let compute_s = node.device.gemm_s(flops / tp as f64, t);
-            let wire = if int8_wire {
-                cost.ar_bytes as f64 * crate::hw::INT8_WIRE_FACTOR
-            } else {
-                cost.ar_bytes as f64
-            };
+            let wire = cost.ar_bytes as f64 * crate::hw::wire_factor(q);
             compute_s + 2.0 * node.link.ring_allreduce_s(wire, tp)
         })
         .collect();
@@ -1518,5 +1554,75 @@ mod tests {
         for w in picks.windows(2) {
             assert!(w[0] <= w[1], "non-monotone: {picks:?}");
         }
+    }
+
+    #[test]
+    fn rung_generalizations_reproduce_legacy_bool_exactly() {
+        // The auto-tuner ranks (pp, tp) / (cp, tp) jointly with the wire
+        // rung; the legacy bool entry points must stay bit-identical so
+        // every older pin (BENCH_PR4 / BENCH_CP) is untouched.
+        let node = NodeProfile::rtx4090(4);
+        let model = ModelSpec::mha_30b();
+        let link = node.link;
+        for (b, q) in [(false, CommQuant::Fp16), (true, CommQuant::Int8)] {
+            assert_eq!(
+                pp_iteration_s(&node, &model, 4096, 4, 2, 2, &link, b),
+                pp_iteration_rung_s(&node, &model, 4096, 4, 2, 2, &link, q),
+            );
+            assert_eq!(
+                cp_iteration_s(&node, &model, 4096, 2, 2, &link, b),
+                cp_iteration_rung_s(&node, &model, 4096, 2, 2, &link, q),
+            );
+        }
+        // Walking down the ladder only shrinks the wire terms, so both
+        // models are monotone non-increasing in LADDER order.
+        let pp_ladder: Vec<f64> = CommQuant::LADDER
+            .iter()
+            .map(|&q| pp_iteration_rung_s(&node, &model, 4096, 4, 2, 2, &link, q))
+            .collect();
+        let cp_ladder: Vec<f64> = CommQuant::LADDER
+            .iter()
+            .map(|&q| cp_iteration_rung_s(&node, &model, 4096, 2, 2, &link, q))
+            .collect();
+        for w in pp_ladder.windows(2).chain(cp_ladder.windows(2)) {
+            assert!(w[0] >= w[1], "ladder not monotone: {w:?}");
+        }
+    }
+
+    #[test]
+    fn deadline_bounds_recovery_under_cp_topologies() {
+        // Coverage gap (PR 10): when the auto-tuner picks a cp > 1
+        // topology, the fault deadline is taken over the *cp* iteration
+        // time — recovery must stay bounded by the closed form
+        // (slack + 1)·iter + respawn when replaying one full prompt at
+        // the same topology's prefill throughput.
+        let node = NodeProfile::rtx4090(4);
+        let model = ModelSpec::mha_30b();
+        let (prompt, slack, respawn) = (4096usize, 4.0f64, 2.0f64);
+        for cp in [2usize, 4] {
+            let tp = node.cards / cp;
+            let iter = cp_iteration_s(&node, &model, prompt, cp, tp, &node.link, true);
+            assert!(iter.is_finite() && iter > 0.0);
+            let deadline = iteration_deadline_s(iter, slack);
+            assert!((deadline - slack * iter).abs() < 1e-15);
+            // Replaying the whole prompt at this topology's throughput
+            // costs exactly one more iteration.
+            let tok_s = prompt as f64 / iter;
+            let rec = recovery_s(deadline, respawn, prompt, tok_s);
+            let bound = (slack + 1.0) * iter + respawn;
+            assert!((rec - bound).abs() < 1e-9, "cp={cp}: {rec} vs {bound}");
+            // The overhead share at a realistic fault rate stays small —
+            // the planner can treat cp topologies as recoverable.
+            let frac = expected_overhead_frac(1e-3, iter, rec);
+            assert!(frac < 0.05, "cp={cp}: overhead {frac}");
+        }
+        // Deadline ordering follows the iteration-time ordering, so
+        // whichever (cp, tp) the planner ranks faster also detects faster.
+        let i21 = cp_iteration_s(&node, &model, prompt, 2, 2, &node.link, true);
+        let i41 = cp_iteration_s(&node, &model, prompt, 4, 1, &node.link, true);
+        assert_eq!(
+            iteration_deadline_s(i21, slack) < iteration_deadline_s(i41, slack),
+            i21 < i41
+        );
     }
 }

@@ -1,0 +1,1083 @@
+//! Profile-driven auto-tuner: calibrate → plan → verify (DESIGN.md §18).
+//!
+//! TUNING.md documents ~10 interacting knobs; every one already has a
+//! tier-1-pinned cost model in [`crate::sched`]. This module closes the
+//! loop (ROADMAP item 5):
+//!
+//! * **calibrate** — [`calibrate`] runs short micro-benchmarks through a
+//!   [`Probe`] (GEMM wall time at the engine's row counts, ring
+//!   all-reduce α/β per wire rung, p2p stage-port latency) and fits a
+//!   [`MeasuredProfile`] that slots in exactly where the hand-coded
+//!   [`NodeProfile`] constants sit today. The deterministic
+//!   [`AnalyticProbe`] answers from a profile's closed forms (what the
+//!   stub backend's modeled kernels report), so tests can pin that the
+//!   fit recovers `NodeProfile::{rtx4090,a800}` to within float noise;
+//!   a live backend supplies its own `Probe` with real timers.
+//! * **plan** — [`plan`] enumerates the joint config space (topology
+//!   grid pp×tp×cp × comm_segments × decode_batch × spec_k × precision
+//!   policy × fused_epilogue) against the `sched::*` cost models, prunes
+//!   with the validity rules [`EngineConfig`] already enforces (every
+//!   pruned axis keeps a one-line "why"), and returns a ranked
+//!   [`Plan`].
+//! * **verify** — [`sim_measured_request_s`] re-prices a planned config
+//!   through the discrete-event engine twin ([`crate::sim::simulate`]
+//!   over the ISO mixed iteration), and [`kendall_tau`] quantifies rank
+//!   agreement between the planner's predictions and measurements —
+//!   pinned ≥ 0.8 in `rust/tests/auto_tune.rs` (pure sim tier-1, real
+//!   engine artifact-gated).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::{CommQuant, EngineConfig, OverlapCfg, SplitPolicy, Topology, WireCfg};
+use crate::hw::{wire_factor, LinkProfile, NodeProfile};
+use crate::model::ModelSpec;
+use crate::sched::{self, spec_decode, Coster, MixedIteration};
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Probe: the micro-benchmark surface
+// ---------------------------------------------------------------------------
+
+/// The micro-benchmark surface [`calibrate`] measures through: one GEMM,
+/// one ring all-reduce, one p2p send — each returning wall seconds. A
+/// live backend implements this with real timers; [`AnalyticProbe`]
+/// answers deterministically from a [`NodeProfile`]'s closed forms.
+pub trait Probe {
+    /// Human-readable probe/backend name (lands in
+    /// [`MeasuredProfile::source`]).
+    fn name(&self) -> String;
+    /// Ring size the collectives run over.
+    fn cards(&self) -> usize;
+    /// The device's advertised peak FLOP/s (spec sheet / device query).
+    /// Timing alone only identifies `peak_flops × eff(m)`; the hint
+    /// splits the product the same way the hand-coded constants do.
+    fn peak_flops_hint(&self) -> f64;
+    /// Compute slowdown while a collective is in flight, as reported by
+    /// the backend's overlap micro-benchmark.
+    fn contention_hint(&self) -> f64;
+    /// Whether this backend quantizes the wire to int8 by default.
+    fn int8_wire_default(&self) -> bool;
+    /// Wall seconds of one GEMM of `flops` at `m` rows.
+    fn gemm_s(&self, flops: f64, m: usize) -> f64;
+    /// Wall seconds of one ring all-reduce of `fp16_bytes` at rung `q`.
+    fn allreduce_s(&self, fp16_bytes: usize, q: CommQuant) -> f64;
+    /// Wall seconds of one p2p transfer of `bytes`.
+    fn p2p_s(&self, bytes: f64) -> f64;
+}
+
+/// The deterministic probe: answers every micro-benchmark from a
+/// [`NodeProfile`]'s closed-form models — exactly what the stub backend's
+/// modeled kernels report. [`calibrate`] against it must reproduce the
+/// profile's constants (the round-trip the tier-1 harness pins).
+#[derive(Clone, Debug)]
+pub struct AnalyticProbe {
+    node: NodeProfile,
+}
+
+impl AnalyticProbe {
+    /// A probe over `node`'s closed forms.
+    pub fn new(node: NodeProfile) -> Self {
+        AnalyticProbe { node }
+    }
+}
+
+impl Probe for AnalyticProbe {
+    fn name(&self) -> String {
+        format!("analytic:{}", self.node.device.name)
+    }
+    fn cards(&self) -> usize {
+        self.node.cards
+    }
+    fn peak_flops_hint(&self) -> f64 {
+        self.node.device.peak_flops
+    }
+    fn contention_hint(&self) -> f64 {
+        self.node.device.contention
+    }
+    fn int8_wire_default(&self) -> bool {
+        self.node.int8_wire_default
+    }
+    fn gemm_s(&self, flops: f64, m: usize) -> f64 {
+        self.node.device.gemm_s(flops, m)
+    }
+    fn allreduce_s(&self, fp16_bytes: usize, q: CommQuant) -> f64 {
+        self.node.allreduce_rung_s(fp16_bytes, q)
+    }
+    fn p2p_s(&self, bytes: f64) -> f64 {
+        self.node.link.p2p_s(bytes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MeasuredProfile: the calibration product
+// ---------------------------------------------------------------------------
+
+/// A calibrated hardware profile: the fitted [`NodeProfile`] (drop-in for
+/// the hand-coded constants) plus provenance. Serializes to the on-disk
+/// cache behind `serve --profile-cache`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MeasuredProfile {
+    /// The fitted constants, in the exact shape every cost model takes.
+    pub node: NodeProfile,
+    /// Which probe produced it (e.g. `analytic:rtx4090`).
+    pub source: String,
+    /// Micro-benchmark samples the fit consumed.
+    pub samples: usize,
+    /// Max relative residual of the fitted model over a held-out
+    /// validation grid — how well the closed forms explain the probe.
+    pub fit_err: f64,
+    /// Measured per-rung wire factor (time ratio vs the fp16 rung after
+    /// removing the α term), ladder order. Empty on one-card nodes.
+    pub wire_factors: Vec<(String, f64)>,
+}
+
+impl MeasuredProfile {
+    /// The profile as a JSON document (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        let n = &self.node;
+        let mut hw = Json::obj();
+        hw.set("name", n.device.name.as_str())
+            .set("cards", n.cards)
+            .set("peak_flops", n.device.peak_flops)
+            .set("peak_eff", n.device.peak_eff)
+            .set("m_half", n.device.m_half)
+            .set("launch_s", n.device.launch_s)
+            .set("contention", n.device.contention)
+            .set("link_alpha_s", n.link.alpha_s)
+            .set("link_bytes_per_s", n.link.link_bytes_per_s)
+            .set("int8_wire", n.int8_wire_default);
+        let mut wf = Json::obj();
+        for (label, factor) in &self.wire_factors {
+            wf.set(label, *factor);
+        }
+        let mut j = Json::obj();
+        j.set("source", self.source.as_str())
+            .set("samples", self.samples)
+            .set("fit_err", self.fit_err)
+            .set("hardware", hw)
+            .set("wire_factors", wf);
+        j
+    }
+
+    /// Parse a profile previously written by [`MeasuredProfile::to_json`].
+    pub fn from_json(j: &Json) -> Result<MeasuredProfile, String> {
+        let f = |keys: &[&str]| -> Result<f64, String> {
+            j.path(keys)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("profile cache: missing number {}", keys.join(".")))
+        };
+        let hw_str = |key: &str| -> Result<String, String> {
+            j.path(&["hardware", key])
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("profile cache: missing hardware.{key}"))
+        };
+        let hw_bool = |key: &str| -> Result<bool, String> {
+            match j.path(&["hardware", key]) {
+                Some(Json::Bool(b)) => Ok(*b),
+                _ => Err(format!("profile cache: missing hardware.{key}")),
+            }
+        };
+        let mut node = NodeProfile::a800(1);
+        node.device.name = hw_str("name")?;
+        node.cards = f(&["hardware", "cards"])? as usize;
+        if node.cards == 0 {
+            return Err("profile cache: cards must be >= 1".into());
+        }
+        node.device.peak_flops = f(&["hardware", "peak_flops"])?;
+        node.device.peak_eff = f(&["hardware", "peak_eff"])?;
+        node.device.m_half = f(&["hardware", "m_half"])?;
+        node.device.launch_s = f(&["hardware", "launch_s"])?;
+        node.device.contention = f(&["hardware", "contention"])?;
+        node.link.alpha_s = f(&["hardware", "link_alpha_s"])?;
+        node.link.link_bytes_per_s = f(&["hardware", "link_bytes_per_s"])?;
+        node.int8_wire_default = hw_bool("int8_wire")?;
+        let source = j
+            .get("source")
+            .and_then(Json::as_str)
+            .ok_or("profile cache: missing source")?
+            .to_string();
+        let samples = f(&["samples"])? as usize;
+        let fit_err = f(&["fit_err"])?;
+        // Rebuild wire factors in ladder order (objects sort by key).
+        let mut wire_factors = Vec::new();
+        for q in CommQuant::LADDER {
+            if let Some(x) = j.path(&["wire_factors", q.label()]).and_then(Json::as_f64) {
+                wire_factors.push((q.label().to_string(), x));
+            }
+        }
+        Ok(MeasuredProfile { node, source, samples, fit_err, wire_factors })
+    }
+
+    /// Write the profile to `path` (the `--profile-cache` file).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+
+    /// Read a profile back from `path`.
+    pub fn load(path: &Path) -> Result<MeasuredProfile, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        MeasuredProfile::from_json(&Json::parse(&text)?)
+    }
+
+    /// Load the cached profile at `path` if present, else [`calibrate`]
+    /// through `probe` and write the cache. Returns the profile and
+    /// whether it came from the cache (so the CLI can say so).
+    pub fn load_or_calibrate(
+        path: &Path,
+        probe: &dyn Probe,
+    ) -> Result<(MeasuredProfile, bool), String> {
+        if path.exists() {
+            return MeasuredProfile::load(path).map(|p| (p, true));
+        }
+        let p = calibrate(probe);
+        p.save(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Ok((p, false))
+    }
+
+    /// The fitted constants as `[hardware]` config keys
+    /// ([`NodeProfile::to_map`]) — feedable back through `--hw-file`.
+    pub fn hw_map(&self) -> BTreeMap<String, String> {
+        self.node.to_map()
+    }
+}
+
+/// Ordinary-least-squares fit `y = a + b·x`; returns `(a, b)`.
+fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert!(xs.len() == ys.len() && xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+    }
+    if sxx == 0.0 {
+        return (my, 0.0);
+    }
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// Relative error of `got` vs `want`, tolerant of zero/non-finite
+/// references (degenerate probes must not poison the fit-error metric).
+fn rel_err(got: f64, want: f64) -> f64 {
+    if !got.is_finite() || !want.is_finite() {
+        return if got == want { 0.0 } else { f64::INFINITY };
+    }
+    (got - want).abs() / want.abs().max(1e-30)
+}
+
+/// Calibrate a [`MeasuredProfile`] from micro-benchmarks through `probe`
+/// (DESIGN.md §18).
+///
+/// The fit is exact for probes that obey the closed forms: GEMM pairs at
+/// fixed `m` isolate `launch_s` and the per-flop slope `1/(peak·eff(m))`;
+/// regressing that slope on `1/m` recovers `m_half` and
+/// `peak_flops × peak_eff` (split via [`Probe::peak_flops_hint`]); two
+/// all-reduce sizes at the fp16 rung recover ring α and link bandwidth;
+/// per-rung repeats recover the measured wire factors. One-card nodes
+/// fall back to the p2p port for α/β (they run no collectives).
+/// Degenerate links (zero bandwidth → infinite probe times) yield a
+/// zero-bandwidth profile rather than NaN, so planning stays total.
+pub fn calibrate(probe: &dyn Probe) -> MeasuredProfile {
+    let mut samples = 0usize;
+
+    // --- GEMM: two flop counts per row count.
+    let row_counts = [64usize, 256, 1024, 8192];
+    let (f1, f2) = (1.0e12, 4.0e12);
+    let mut launch_sum = 0.0;
+    let mut inv_m = Vec::new();
+    let mut per_flop = Vec::new();
+    for &m in &row_counts {
+        let t1 = probe.gemm_s(f1, m);
+        let t2 = probe.gemm_s(f2, m);
+        samples += 2;
+        let slope = (t2 - t1) / (f2 - f1);
+        launch_sum += t1 - f1 * slope;
+        inv_m.push(1.0 / m as f64);
+        per_flop.push(slope);
+    }
+    let launch_s = (launch_sum / row_counts.len() as f64).max(0.0);
+    // per_flop(m) = (1 + m_half/m) / (peak·peak_eff): linear in 1/m.
+    let (a, b) = linfit(&inv_m, &per_flop);
+    let peak_flops = probe.peak_flops_hint();
+    let (peak_eff, m_half) = if a > 0.0 && peak_flops > 0.0 && a.is_finite() {
+        ((1.0 / a) / peak_flops, (b / a).max(0.0))
+    } else {
+        (1.0, 0.0)
+    };
+
+    // --- Link: α/β from the ring (or the p2p port on one-card nodes),
+    // then the per-rung wire factors from slope ratios.
+    let r = probe.cards();
+    let (bytes1, bytes2) = (1usize << 20, 64usize << 20);
+    let mut wire_factors = Vec::new();
+    let (alpha_s, link_bytes_per_s) = if r > 1 {
+        let t1 = probe.allreduce_s(bytes1, CommQuant::Fp16);
+        let t2 = probe.allreduce_s(bytes2, CommQuant::Fp16);
+        samples += 2;
+        if t1.is_finite() && t2.is_finite() {
+            let k = 2.0 * (r as f64 - 1.0);
+            let slope = (t2 - t1) / (bytes2 - bytes1) as f64;
+            let alpha = ((t1 - slope * bytes1 as f64) / k).max(0.0);
+            let bw = if slope > 0.0 { k / (r as f64 * slope) } else { 1e18 };
+            let fp16_wire = t2 - k * alpha;
+            for q in CommQuant::LADDER {
+                let tq = probe.allreduce_s(bytes2, q);
+                samples += 1;
+                let factor = if fp16_wire > 0.0 && tq.is_finite() {
+                    (tq - k * alpha) / fp16_wire
+                } else {
+                    wire_factor(q)
+                };
+                wire_factors.push((q.label().to_string(), factor));
+            }
+            (alpha, bw)
+        } else {
+            // Zero-bandwidth link: every sample is infinite. Record the
+            // degeneracy honestly instead of NaN.
+            (0.0, 0.0)
+        }
+    } else {
+        let t1 = probe.p2p_s(bytes1 as f64);
+        let t2 = probe.p2p_s(bytes2 as f64);
+        samples += 2;
+        if t1.is_finite() && t2.is_finite() {
+            let slope = (t2 - t1) / (bytes2 - bytes1) as f64;
+            let alpha = (t1 - slope * bytes1 as f64).max(0.0);
+            let bw = if slope > 0.0 { 1.0 / slope } else { 1e18 };
+            (alpha, bw)
+        } else {
+            (0.0, 0.0)
+        }
+    };
+
+    let mut node = NodeProfile::a800(1);
+    node.device.name = probe.name();
+    node.device.peak_flops = peak_flops;
+    node.device.peak_eff = peak_eff;
+    node.device.m_half = m_half;
+    node.device.launch_s = launch_s;
+    node.device.contention = probe.contention_hint().max(1.0);
+    node.link = LinkProfile { alpha_s, link_bytes_per_s };
+    node.cards = r;
+    node.int8_wire_default = probe.int8_wire_default();
+
+    // --- Held-out validation grid: how well the fit explains the probe.
+    let mut fit_err = 0.0f64;
+    for &(flops, m) in &[(5.0e11, 128usize), (2.0e12, 2048)] {
+        samples += 1;
+        fit_err = fit_err.max(rel_err(node.device.gemm_s(flops, m), probe.gemm_s(flops, m)));
+    }
+    if r > 1 && link_bytes_per_s > 0.0 {
+        for &bytes in &[4usize << 20, 16 << 20] {
+            samples += 1;
+            fit_err = fit_err.max(rel_err(
+                node.allreduce_rung_s(bytes, CommQuant::Fp16),
+                probe.allreduce_s(bytes, CommQuant::Fp16),
+            ));
+        }
+    }
+    if !fit_err.is_finite() {
+        fit_err = f64::MAX;
+    }
+
+    MeasuredProfile { node, source: probe.name(), samples, fit_err, wire_factors }
+}
+
+// ---------------------------------------------------------------------------
+// Workload mixes
+// ---------------------------------------------------------------------------
+
+/// The serving mix a plan optimizes for: one representative request —
+/// `prompt_len` prefill tokens, then `decode_steps` emitted tokens at KV
+/// context `decode_ctx` — with the observed speculative acceptance rate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    /// Mix label for reports/bench cases.
+    pub name: String,
+    /// Prefill tokens per request (≥ 2: a 1-token prefill cannot be
+    /// ISO-split or costed).
+    pub prompt_len: usize,
+    /// Decode tokens emitted per request after prefill (0 = TTFT-only).
+    pub decode_steps: usize,
+    /// KV context the decode lane reads at.
+    pub decode_ctx: usize,
+    /// Per-draft speculative acceptance probability in `[0, 1]`.
+    pub accept: f64,
+}
+
+impl Workload {
+    /// Long-prompt, TTFT-dominated mix (summarization-style).
+    pub fn prefill_heavy() -> Workload {
+        Workload {
+            name: "prefill-heavy".into(),
+            prompt_len: 16384,
+            decode_steps: 0,
+            decode_ctx: 16384,
+            accept: 0.8,
+        }
+    }
+
+    /// Balanced chat-style mix.
+    pub fn mixed() -> Workload {
+        Workload {
+            name: "mixed".into(),
+            prompt_len: 4096,
+            decode_steps: 256,
+            decode_ctx: 4096,
+            accept: 0.8,
+        }
+    }
+
+    /// Short-prompt, long-generation mix (agentic/codegen-style).
+    pub fn decode_heavy() -> Workload {
+        Workload {
+            name: "decode-heavy".into(),
+            prompt_len: 512,
+            decode_steps: 1024,
+            decode_ctx: 1536,
+            accept: 0.8,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The planner
+// ---------------------------------------------------------------------------
+
+/// One ranked plan entry: a fully validated [`EngineConfig`] plus the
+/// cost-model prediction that ranked it.
+#[derive(Clone, Debug)]
+pub struct PlannedConfig {
+    /// The config, exactly as `Engine::start` would take it.
+    pub cfg: EngineConfig,
+    /// One-line human label (`pp1.tp4.cp1 seg4 b8 k4 int8/int4 fused`).
+    pub summary: String,
+    /// Predicted request time: `prefill_s + decode_s`.
+    pub predicted_s: f64,
+    /// Predicted prefill wall seconds for the workload's prompt.
+    pub prefill_s: f64,
+    /// Predicted decode device-seconds for the workload's emitted tokens.
+    pub decode_s: f64,
+}
+
+/// A family of candidates the planner discarded, with the one-line "why"
+/// (an [`EngineConfig::validate`] message or a cost-model validity rule).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pruned {
+    /// The one-line reason.
+    pub why: String,
+    /// First candidate the rule fired on.
+    pub example: String,
+    /// Candidates discarded by this rule.
+    pub count: usize,
+}
+
+/// The planner's output: candidates ranked by predicted request time
+/// (ascending — best first), plus the pruned-axis ledger.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Profile name the plan was computed against.
+    pub profile: String,
+    /// Model name.
+    pub model: String,
+    /// Workload mix the predictions price.
+    pub workload: Workload,
+    /// Candidates, best (lowest predicted time) first; ties broken by
+    /// the summary string so the order is fully deterministic.
+    pub ranked: Vec<PlannedConfig>,
+    /// Discard ledger: one line per pruning rule that fired.
+    pub pruned: Vec<Pruned>,
+    /// Candidates that were actually scored.
+    pub evaluated: usize,
+}
+
+impl Plan {
+    /// The winning config, if any candidate survived pruning.
+    pub fn best(&self) -> Option<&PlannedConfig> {
+        self.ranked.first()
+    }
+
+    /// Render the plan for `serve --auto-tune=dry-run`: the top `top`
+    /// rows, then the pruned-axis ledger.
+    pub fn render(&self, top: usize) -> String {
+        let w = &self.workload;
+        let mut out = format!(
+            "auto-tune plan: profile {} model {} workload {} \
+             (prompt {}, decode {} @ ctx {}, accept {:.2})\n",
+            self.profile, self.model, w.name, w.prompt_len, w.decode_steps, w.decode_ctx,
+            w.accept
+        );
+        out.push_str(&format!(
+            "{:>4}  {:<44} {:>12} {:>12} {:>12}\n",
+            "rank", "config", "predicted", "prefill", "decode"
+        ));
+        for (i, pc) in self.ranked.iter().take(top).enumerate() {
+            out.push_str(&format!(
+                "{:>4}  {:<44} {:>9.2} ms {:>9.2} ms {:>9.2} ms\n",
+                i + 1,
+                pc.summary,
+                pc.predicted_s * 1e3,
+                pc.prefill_s * 1e3,
+                pc.decode_s * 1e3,
+            ));
+        }
+        out.push_str(&format!(
+            "evaluated {} candidates, pruned {} ({} rules):\n",
+            self.evaluated,
+            self.pruned.iter().map(|p| p.count).sum::<usize>(),
+            self.pruned.len()
+        ));
+        for p in &self.pruned {
+            out.push_str(&format!(
+                "  - {} [{} candidates, e.g. {}]\n",
+                p.why, p.count, p.example
+            ));
+        }
+        out
+    }
+}
+
+/// One grid point before scoring.
+#[derive(Clone, Copy, Debug)]
+struct Candidate {
+    topo: Topology,
+    comm_segments: usize,
+    decode_batch: usize,
+    spec_k: usize,
+    prefill_q: CommQuant,
+    decode_q: CommQuant,
+    fused_epilogue: bool,
+}
+
+impl Candidate {
+    fn summary(&self) -> String {
+        format!(
+            "{} seg{} b{} k{} {}/{} {}",
+            self.topo,
+            self.comm_segments,
+            self.decode_batch,
+            self.spec_k,
+            self.prefill_q,
+            self.decode_q,
+            if self.fused_epilogue { "fused" } else { "unfused" },
+        )
+    }
+}
+
+/// Every `(pp, tp, cp)` with `pp·tp·cp = cards`, deterministic order.
+fn topologies(cards: usize) -> Vec<Topology> {
+    let mut out = Vec::new();
+    for pp in 1..=cards {
+        if cards % pp != 0 {
+            continue;
+        }
+        let rest = cards / pp;
+        for tp in 1..=rest {
+            if rest % tp != 0 {
+                continue;
+            }
+            out.push(Topology { pp, tp, cp: rest / tp });
+        }
+    }
+    out
+}
+
+fn record_prune(pruned: &mut Vec<Pruned>, why: &str, example: String) {
+    if let Some(p) = pruned.iter_mut().find(|p| p.why == why) {
+        p.count += 1;
+    } else {
+        pruned.push(Pruned { why: why.to_string(), example, count: 1 });
+    }
+}
+
+/// `node` restricted to the `tp`-rank sub-ring that serves the decode
+/// lane (cp gathers decode on its last group; pp's stages each run a
+/// `tp`-wide ring).
+fn lane_node(node: &NodeProfile, tp: usize) -> NodeProfile {
+    let mut n = node.clone();
+    n.cards = tp;
+    n
+}
+
+/// Blocking flat-TP prefill with the epilogue exposure model, priced at
+/// wire rung `q` — [`sched::fused_epilogue_iteration_s`] generalized over
+/// the ladder (identical at the `Fp16`/`Int8` rungs).
+fn flat_prefill_s(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    t: usize,
+    segments: usize,
+    fused: bool,
+    q: CommQuant,
+) -> f64 {
+    let c = Coster { node: node.clone(), model: model.clone(), int8_wire: false };
+    let bytes = t * model.d_model * model.act_bytes;
+    let ar = node.allreduce_rung_s(bytes, q);
+    let epi = sched::epilogue_s(node, model, t);
+    let exposed = sched::epilogue_exposed_s(ar, epi, segments, fused);
+    model.n_layers as f64 * (c.attn_block_s(t, 0) + c.mlp_block_s(t) + 2.0 * (ar + exposed))
+}
+
+/// Predicted decode device-seconds for the workload's emitted tokens:
+/// the fused verify lane on the topology's `tp` sub-ring, windows of
+/// `spec_k + 1` rows, plus the per-iteration pp stage hops.
+fn decode_cost_s(node: &NodeProfile, model: &ModelSpec, w: &Workload, c: &Candidate) -> f64 {
+    if w.decode_steps == 0 {
+        return 0.0;
+    }
+    let lane = lane_node(node, c.topo.tp);
+    let coster = Coster {
+        node: lane,
+        model: model.clone(),
+        int8_wire: c.decode_q.is_quantized(),
+    };
+    let iter = spec_decode::fused_verify_iteration_s(
+        &coster,
+        c.decode_batch,
+        c.spec_k + 1,
+        w.decode_ctx,
+    );
+    let hop = if c.topo.pp > 1 {
+        let bytes = c.decode_batch * (c.spec_k + 1) * model.d_model * model.act_bytes;
+        (c.topo.pp - 1) as f64 * node.link.p2p_s(bytes as f64)
+    } else {
+        0.0
+    };
+    let emitted =
+        c.decode_batch as f64 * spec_decode::expected_emitted(c.spec_k, w.accept);
+    w.decode_steps as f64 * (iter + hop) / emitted
+}
+
+/// Predicted `(prefill_s, decode_s)` of one candidate — the planner's
+/// closed-form score (the "predicted" side of the rank-agreement
+/// harness).
+fn predict_parts(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    w: &Workload,
+    c: &Candidate,
+) -> (f64, f64) {
+    let t = c.topo;
+    let prefill = if t.cp > 1 {
+        sched::cp_iteration_rung_s(node, model, w.prompt_len, t.cp, t.tp, &node.link, c.prefill_q)
+    } else if t.pp > 1 {
+        let chunks = w.prompt_len.clamp(1, PP_CHUNKS);
+        sched::pp_iteration_rung_s(
+            node, model, w.prompt_len, chunks, t.pp, t.tp, &node.link, c.prefill_q,
+        )
+    } else {
+        flat_prefill_s(node, model, w.prompt_len, c.comm_segments, c.fused_epilogue, c.prefill_q)
+    };
+    (prefill, decode_cost_s(node, model, w, c))
+}
+
+/// Micro-batches the planner assumes for pipeline candidates (matches
+/// the `BENCH_PR4.json` sweep depth).
+const PP_CHUNKS: usize = 4;
+
+/// Enumerate, prune, score, and rank the joint knob space for `node` ×
+/// `model` × `w` (DESIGN.md §18). Deterministic for fixed inputs; never
+/// panics on degenerate profiles (zero-bandwidth links and one-card
+/// nodes produce infinite/zero predictions, not NaN comparisons).
+pub fn plan(node: &NodeProfile, model: &ModelSpec, w: &Workload) -> Plan {
+    assert!(w.prompt_len >= 2, "a prompt of {} tokens cannot be planned", w.prompt_len);
+    assert!((0.0..=1.0).contains(&w.accept), "accept must be in [0, 1]");
+
+    let segment_grid: &[usize] = &[1, 2, 4, 8];
+    let fused_grid: &[bool] = &[true, false];
+    let batch_grid: &[usize] = if w.decode_steps > 0 { &[1, 4, 8, 16] } else { &[1] };
+    let spec_grid: &[usize] = if w.decode_steps > 0 { &[0, 2, 4] } else { &[0] };
+    let policy_grid: Vec<(CommQuant, CommQuant)> = if w.decode_steps > 0 {
+        vec![
+            (CommQuant::F32, CommQuant::F32),
+            (CommQuant::Fp16, CommQuant::Fp16),
+            (CommQuant::Fp16, CommQuant::Int8),
+            (CommQuant::Int8, CommQuant::Int8),
+            (CommQuant::Fp8, CommQuant::Fp8),
+            (CommQuant::Int4, CommQuant::Int4),
+            (CommQuant::Fp16, CommQuant::Int4),
+        ]
+    } else {
+        CommQuant::LADDER.iter().map(|&q| (q, q)).collect()
+    };
+
+    let mut pruned: Vec<Pruned> = Vec::new();
+    if w.decode_steps == 0 {
+        record_prune(
+            &mut pruned,
+            "workload has no decode phase; decode_batch/spec_k/decode-rung axes collapsed",
+            "b1 k0".into(),
+        );
+    }
+
+    let mut ranked: Vec<PlannedConfig> = Vec::new();
+    let mut evaluated = 0usize;
+    for topo in topologies(node.cards) {
+        let flat = topo.pp == 1 && topo.cp == 1;
+        for &seg in segment_grid {
+            for &fused in fused_grid {
+                for &b in batch_grid {
+                    for &k in spec_grid {
+                        for &(pq, dq) in &policy_grid {
+                            let cand = Candidate {
+                                topo,
+                                comm_segments: seg,
+                                decode_batch: b,
+                                spec_k: k,
+                                prefill_q: pq,
+                                decode_q: dq,
+                                fused_epilogue: fused,
+                            };
+                            // Cost-model validity rules first (mirrors of
+                            // the sched asserts), then EngineConfig's own.
+                            if topo.pp > model.n_layers {
+                                record_prune(
+                                    &mut pruned,
+                                    "more pipeline stages than layers",
+                                    cand.summary(),
+                                );
+                                continue;
+                            }
+                            if topo.pp > 1 && topo.cp > 1 {
+                                record_prune(
+                                    &mut pruned,
+                                    "no composed pp×cp cost model: the engine can run it \
+                                     but the planner cannot rank it",
+                                    cand.summary(),
+                                );
+                                continue;
+                            }
+                            if topo.cp > w.prompt_len {
+                                record_prune(
+                                    &mut pruned,
+                                    "sub-token context shards: prompt shorter than cp",
+                                    cand.summary(),
+                                );
+                                continue;
+                            }
+                            if !flat && seg != 1 {
+                                record_prune(
+                                    &mut pruned,
+                                    "comm-segment streaming is priced on the flat path \
+                                     only; collapsed to 1 for pp/cp topologies",
+                                    cand.summary(),
+                                );
+                                continue;
+                            }
+                            if !flat && !fused {
+                                record_prune(
+                                    &mut pruned,
+                                    "epilogue fusion is priced on the flat path only; \
+                                     collapsed to the engine default for pp/cp topologies",
+                                    cand.summary(),
+                                );
+                                continue;
+                            }
+                            let overlap = OverlapCfg {
+                                comm_segments: seg,
+                                decode_batch: b,
+                                spec_k: k,
+                                fused_epilogue: fused,
+                                ..OverlapCfg::default()
+                            };
+                            let wire = WireCfg {
+                                wire_precision: Some(pq),
+                                decode_wire_precision: Some(dq),
+                                ..WireCfg::default()
+                            };
+                            let cfg = match EngineConfig::builder()
+                                .topology(topo)
+                                .overlap(overlap)
+                                .wire(wire)
+                                .decode_steps(w.decode_steps)
+                                .build()
+                            {
+                                Ok(cfg) => cfg,
+                                Err(e) => {
+                                    record_prune(&mut pruned, &e, cand.summary());
+                                    continue;
+                                }
+                            };
+                            evaluated += 1;
+                            let (prefill_s, decode_s) = predict_parts(node, model, w, &cand);
+                            ranked.push(PlannedConfig {
+                                cfg,
+                                summary: cand.summary(),
+                                predicted_s: prefill_s + decode_s,
+                                prefill_s,
+                                decode_s,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ranked.sort_by(|a, b| {
+        a.predicted_s.total_cmp(&b.predicted_s).then_with(|| a.summary.cmp(&b.summary))
+    });
+    Plan {
+        profile: node.device.name.clone(),
+        model: model.name.clone(),
+        workload: w.clone(),
+        ranked,
+        pruned,
+        evaluated,
+    }
+}
+
+/// The hand-tuned TUNING.md baseline for `node`: flat TP over every
+/// card, unsegmented collectives, the default decode lane of 8, no
+/// speculation, fused epilogue, and the profile's default wire rung
+/// (int8 on comm-bound nodes, fp16 otherwise). The rank-agreement
+/// harness pins that the planner's #1 pick never measures worse than
+/// this.
+pub fn hand_tuned_default(node: &NodeProfile, w: &Workload) -> EngineConfig {
+    let q = if node.int8_wire_default { CommQuant::Int8 } else { CommQuant::Fp16 };
+    EngineConfig::builder()
+        .topology(Topology { pp: 1, tp: node.cards, cp: 1 })
+        .overlap(OverlapCfg::default())
+        .wire(WireCfg {
+            wire_precision: Some(q),
+            decode_wire_precision: Some(q),
+            ..WireCfg::default()
+        })
+        .decode_steps(w.decode_steps)
+        .build()
+        .expect("the hand-tuned default must validate")
+}
+
+// ---------------------------------------------------------------------------
+// The sim-measured side of the rank-agreement harness
+// ---------------------------------------------------------------------------
+
+/// `node` with the link bandwidth de-rated by rung `q`'s wire factor —
+/// pricing `bytes × wire_factor(q)` through the unscaled models, so the
+/// event-sim twin sees the same per-rung wire the planner priced.
+fn rung_scaled(node: &NodeProfile, q: CommQuant) -> NodeProfile {
+    let mut n = node.clone();
+    n.link.link_bytes_per_s /= wire_factor(q);
+    n
+}
+
+/// The "measured" side of the tier-1 rank-agreement harness: re-price a
+/// planned config through the discrete-event engine twin. Flat
+/// topologies run one ISO mixed iteration ([`sched::mixed_iteration_s`]:
+/// two intra-sequence chunks ping-ponging compute/comm under stream
+/// contention, the decode lane riding along) plus the per-chunk epilogue
+/// exposure; pp/cp topologies run their wavefront models on the
+/// rung-scaled link. The decode tail is priced by the same lane model
+/// the planner uses (the lane graph is a serial chain, where the event
+/// sim and the closed form agree by construction). The real
+/// engine-measured counterpart lives in `rust/tests/auto_tune.rs` behind
+/// the artifact gate.
+pub fn sim_measured_request_s(
+    node: &NodeProfile,
+    model: &ModelSpec,
+    w: &Workload,
+    cfg: &EngineConfig,
+) -> f64 {
+    let topo = cfg.topology();
+    let prec = cfg.precision();
+    let prefill = if topo.cp > 1 {
+        sched::cp_iteration_rung_s(
+            node, model, w.prompt_len, topo.cp, topo.tp, &node.link, prec.prefill,
+        )
+    } else if topo.pp > 1 {
+        let chunks = w.prompt_len.clamp(1, PP_CHUNKS);
+        sched::pp_iteration_rung_s(
+            node, model, w.prompt_len, chunks, topo.pp, topo.tp, &node.link, prec.prefill,
+        )
+    } else {
+        let scaled = rung_scaled(node, prec.prefill);
+        let lane_b = if w.decode_steps > 0 { cfg.decode_batch } else { 0 };
+        let mix = MixedIteration {
+            prefill_tokens: w.prompt_len,
+            decode_batch: lane_b,
+            decode_ctx: w.decode_ctx,
+            fused: true,
+        };
+        let iso = sched::mixed_iteration_s(
+            &scaled,
+            model,
+            SplitPolicy::Even,
+            &mix,
+            cfg.comm_segments,
+            false,
+        );
+        // Per-chunk epilogue exposure, consumed in ack order on the comm
+        // thread (the part ISO's cross-chunk overlap cannot hide).
+        let mut exposure = 0.0;
+        let t0 = w.prompt_len / 2;
+        for t in [t0, w.prompt_len - t0] {
+            if t == 0 {
+                continue;
+            }
+            let bytes = t * model.d_model * model.act_bytes;
+            let ar = scaled.allreduce_rung_s(bytes, CommQuant::Fp16);
+            let epi = sched::epilogue_s(node, model, t);
+            exposure += 2.0
+                * model.n_layers as f64
+                * sched::epilogue_exposed_s(ar, epi, cfg.comm_segments, cfg.fused_epilogue);
+        }
+        iso + exposure
+    };
+    let cand = Candidate {
+        topo,
+        comm_segments: cfg.comm_segments,
+        decode_batch: cfg.decode_batch,
+        spec_k: cfg.spec_k,
+        prefill_q: prec.prefill,
+        decode_q: prec.decode,
+        fused_epilogue: cfg.fused_epilogue,
+    };
+    prefill + decode_cost_s(node, model, w, &cand)
+}
+
+// ---------------------------------------------------------------------------
+// Rank agreement
+// ---------------------------------------------------------------------------
+
+/// Kendall rank correlation (τ-b, tie-corrected) between two paired
+/// samples: `+1` = identical ordering, `−1` = reversed, `0` =
+/// independent. Fully tied inputs return `+1` (vacuous agreement).
+/// Comparisons use [`f64::total_cmp`], so NaN never panics.
+pub fn kendall_tau(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "paired samples");
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let (mut concordant, mut discordant) = (0i64, 0i64);
+    let (mut ties_a, mut ties_b) = (0i64, 0i64);
+    for i in 0..n {
+        for j in i + 1..n {
+            use std::cmp::Ordering::Equal;
+            let oa = a[i].total_cmp(&a[j]);
+            let ob = b[i].total_cmp(&b[j]);
+            match (oa, ob) {
+                (Equal, Equal) => {
+                    ties_a += 1;
+                    ties_b += 1;
+                }
+                (Equal, _) => ties_a += 1,
+                (_, Equal) => ties_b += 1,
+                _ if oa == ob => concordant += 1,
+                _ => discordant += 1,
+            }
+        }
+    }
+    let n0 = (n * (n - 1) / 2) as f64;
+    let denom = ((n0 - ties_a as f64) * (n0 - ties_b as f64)).sqrt();
+    if denom == 0.0 {
+        return 1.0;
+    }
+    (concordant - discordant) as f64 / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kendall_tau_hand_cases() {
+        assert_eq!(kendall_tau(&[1.0, 2.0, 3.0], &[10.0, 20.0, 30.0]), 1.0);
+        assert_eq!(kendall_tau(&[1.0, 2.0, 3.0], &[30.0, 20.0, 10.0]), -1.0);
+        // One swapped adjacent pair among 4: (C, D) = (5, 1) → 4/6.
+        let tau = kendall_tau(&[1.0, 2.0, 3.0, 4.0], &[1.0, 3.0, 2.0, 4.0]);
+        assert!((tau - 4.0 / 6.0).abs() < 1e-12, "{tau}");
+        // Fully tied on one side: vacuous agreement, not a panic.
+        assert_eq!(kendall_tau(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 1.0);
+        // Ties dilute but don't flip: τ-b of a half-tied list stays
+        // positive when the strict pairs agree.
+        let tau = kendall_tau(&[1.0, 1.0, 2.0], &[5.0, 6.0, 7.0]);
+        assert!(tau > 0.0 && tau < 1.0, "{tau}");
+    }
+
+    #[test]
+    fn topology_grid_is_exact_factorization() {
+        let t4 = topologies(4);
+        assert_eq!(t4.len(), 6);
+        assert!(t4.iter().all(|t| t.world() == 4));
+        assert_eq!(topologies(1), vec![Topology { pp: 1, tp: 1, cp: 1 }]);
+    }
+
+    #[test]
+    fn analytic_calibration_recovers_preset_constants() {
+        for preset in [NodeProfile::rtx4090(4), NodeProfile::a800(4)] {
+            let probe = AnalyticProbe::new(preset.clone());
+            let m = calibrate(&probe);
+            let close =
+                |got: f64, want: f64| (got - want).abs() <= 1e-6 * want.abs().max(1e-12);
+            assert!(close(m.node.device.peak_flops, preset.device.peak_flops));
+            assert!(close(m.node.device.peak_eff, preset.device.peak_eff), "{m:?}");
+            assert!(close(m.node.device.m_half, preset.device.m_half), "{m:?}");
+            assert!(close(m.node.device.launch_s, preset.device.launch_s), "{m:?}");
+            assert!(close(m.node.link.alpha_s, preset.link.alpha_s), "{m:?}");
+            assert!(
+                close(m.node.link.link_bytes_per_s, preset.link.link_bytes_per_s),
+                "{m:?}"
+            );
+            assert!(m.fit_err < 1e-9, "fit_err {}", m.fit_err);
+            // Measured wire factors match the ladder constants.
+            for (label, factor) in &m.wire_factors {
+                let q = CommQuant::parse(label).unwrap();
+                assert!(close(*factor, wire_factor(q)), "{label}: {factor}");
+            }
+        }
+    }
+
+    #[test]
+    fn measured_profile_json_round_trips() {
+        let m = calibrate(&AnalyticProbe::new(NodeProfile::rtx4090(4)));
+        let back = MeasuredProfile::from_json(&Json::parse(&m.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_sorted() {
+        let node = NodeProfile::cpu_engine(2, Some(64.0), 120.0);
+        let model = ModelSpec::tiny_gqa();
+        let w = Workload { prompt_len: 64, decode_steps: 16, decode_ctx: 64, ..Workload::mixed() };
+        let a = plan(&node, &model, &w);
+        let b = plan(&node, &model, &w);
+        assert!(!a.ranked.is_empty());
+        assert_eq!(a.evaluated, b.evaluated);
+        let sa: Vec<&str> = a.ranked.iter().map(|p| p.summary.as_str()).collect();
+        let sb: Vec<&str> = b.ranked.iter().map(|p| p.summary.as_str()).collect();
+        assert_eq!(sa, sb);
+        for pair in a.ranked.windows(2) {
+            assert!(pair[0].predicted_s <= pair[1].predicted_s);
+        }
+    }
+
+    #[test]
+    fn plan_prunes_with_reasons() {
+        let node = NodeProfile::rtx4090(4);
+        let model = ModelSpec::mha_30b();
+        let p = plan(&node, &model, &Workload::mixed());
+        // The pp×cp composition rule must have fired on a 4-card grid
+        // (pp2.tp1.cp2 exists) and kept a one-line why.
+        assert!(p.pruned.iter().any(|pr| pr.why.contains("pp×cp")), "{:?}", p.pruned);
+        assert!(p.pruned.iter().all(|pr| pr.count >= 1 && !pr.why.contains('\n')));
+        assert!(p.evaluated > 0 && p.ranked.len() == p.evaluated);
+    }
+
+    #[test]
+    fn render_names_the_winner() {
+        let node = NodeProfile::cpu_engine(2, Some(64.0), 120.0);
+        let model = ModelSpec::tiny_gqa();
+        let w = Workload { prompt_len: 64, decode_steps: 16, decode_ctx: 64, ..Workload::mixed() };
+        let p = plan(&node, &model, &w);
+        let text = p.render(5);
+        assert!(text.contains("auto-tune plan"));
+        assert!(text.contains(&p.best().unwrap().summary));
+    }
+}

@@ -528,3 +528,89 @@ fn teardown_mid_iteration_terminates() {
     mesh.teardown();
     assert!(clock.elapsed() < Duration::from_secs(5), "teardown did not terminate promptly");
 }
+
+#[test]
+fn auto_tuned_shape_runs_chaos_clean_at_planned_rung() {
+    // PR-10 satellite: derive the mesh shape from the auto-tuner instead
+    // of hand-picking it — plan for the 4-thread CPU testbed, take the
+    // best candidate the mini mesh can host (pp×tp only; it has no cp
+    // fabric), and run the chaos protocol at the *planned* wire rungs.
+    // The recovery contract (zero drops, token identity vs the
+    // fault-free baseline at the same rung) must hold for whatever
+    // config the planner picks, not just the hand-enumerated SHAPES.
+    use iso::hw::NodeProfile;
+    use iso::model::ModelSpec;
+    use iso::tune::{plan, Workload};
+
+    let node = NodeProfile::cpu_engine(4, Some(64.0), 120.0);
+    let model = ModelSpec::tiny_gqa();
+    let w = Workload { prompt_len: 64, decode_steps: 16, decode_ctx: 64, ..Workload::mixed() };
+    let p = plan(&node, &model, &w);
+    let pc = p
+        .ranked
+        .iter()
+        .find(|pc| {
+            let t = pc.cfg.topology();
+            t.cp == 1 && t.tp >= 2
+        })
+        .expect("a pp×tp candidate survives pruning on a 4-card node");
+    let topo = pc.cfg.topology();
+    let shape = Shape {
+        name: "auto-tuned",
+        pp: topo.pp,
+        tp: topo.tp,
+        lane: pc.cfg.decode_batch.clamp(1, N_SEQS),
+        k: pc.cfg.spec_k.max(1),
+    };
+    let world = shape.pp * shape.tp;
+    let prec = pc.cfg.precision();
+    let mut rungs = vec![prec.prefill];
+    if prec.decode != prec.prefill {
+        rungs.push(prec.decode);
+    }
+    eprintln!(
+        "auto-tuned chaos shape: {} → pp{}×tp{} lane {} k {}",
+        pc.summary, shape.pp, shape.tp, shape.lane, shape.k
+    );
+    for rung in rungs {
+        let baseline = run_shape_at(shape, FaultPlan::empty(), rung);
+        assert_eq!(
+            baseline.recoveries,
+            0,
+            "auto-tuned @ {}: fault-free run recovered",
+            rung.label()
+        );
+        for spec in
+            [format!("kill:rank={}:iter=2", world - 1), format!("seed=23:n=2:ranks={world}:iters=6")]
+        {
+            let fault_plan = FaultPlan::parse(&spec).expect("sweep specs are valid");
+            let clock = Instant::now();
+            let out = run_shape_at(shape, fault_plan, rung);
+            assert!(
+                clock.elapsed() < Duration::from_secs(60),
+                "auto-tuned @ {} × {spec}: wall-clock bound blown",
+                rung.label()
+            );
+            for (id, s) in out.seqs.iter().enumerate() {
+                assert_eq!(
+                    s.len(),
+                    TARGET,
+                    "auto-tuned @ {} × {spec}: seq {id} dropped tokens",
+                    rung.label()
+                );
+            }
+            assert_eq!(
+                out.seqs, baseline.seqs,
+                "auto-tuned @ {} × {spec}: tokens diverged from the fault-free run",
+                rung.label()
+            );
+            if spec.starts_with("kill:") {
+                assert!(
+                    out.recoveries >= 1,
+                    "auto-tuned @ {} × {spec}: kill did not force a recovery",
+                    rung.label()
+                );
+            }
+        }
+    }
+}

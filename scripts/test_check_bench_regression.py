@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Unit tests for check_bench_regression.py (PR-10 satellite).
+
+The gate grew two load-bearing behaviors that deserve their own tests:
+the repeatable `--snapshot` merge (later files' sections override
+earlier ones — the CI gate feeds one file per PR sweep), and the
+"deterministic `sim_*` section missing from the baseline" failure. Both
+are exercised end-to-end through the CLI with real temp files, stdlib
+only — run directly (`python3 scripts/test_check_bench_regression.py`)
+or via unittest discovery.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "check_bench_regression.py")
+
+
+def rec(case, mean_ms, **extra):
+    r = {"case": case, "mean_ms": mean_ms}
+    r.update(extra)
+    return r
+
+
+class GateHarness(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def write(self, name, payload):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(payload, f)
+        return path
+
+    def run_gate(self, baseline, snapshots):
+        cmd = [sys.executable, SCRIPT, "--baseline", baseline]
+        for s in snapshots:
+            cmd += ["--snapshot", s]
+        return subprocess.run(cmd, capture_output=True, text=True)
+
+    # ----------------------------------------------- snapshot merging --
+
+    def test_sections_merge_across_snapshot_files(self):
+        # The baseline's sections may be split across per-PR snapshot
+        # files; the gate must see their union.
+        baseline = self.write("baseline.json", {
+            "sim_a": [rec("a1", 100.0)],
+            "sim_b": [rec("b1", 50.0)],
+        })
+        snap_a = self.write("snap_a.json", {"sim_a": [rec("a1", 101.0)]})
+        snap_b = self.write("snap_b.json", {"sim_b": [rec("b1", 49.0)]})
+        out = self.run_gate(baseline, [snap_a, snap_b])
+        self.assertEqual(out.returncode, 0, out.stdout + out.stderr)
+        # Either file alone leaves the other section missing → failure.
+        out = self.run_gate(baseline, [snap_a])
+        self.assertEqual(out.returncode, 1)
+        self.assertIn("sim_b: section missing from snapshot", out.stdout)
+
+    def test_later_snapshot_file_overrides_earlier_section(self):
+        # dict.update semantics at section granularity: a regressed copy
+        # of sim_a in the first file is shadowed by the healthy copy in
+        # the second — and vice versa.
+        baseline = self.write("baseline.json", {"sim_a": [rec("a1", 100.0)]})
+        regressed = self.write("regressed.json", {"sim_a": [rec("a1", 200.0)]})
+        healthy = self.write("healthy.json", {"sim_a": [rec("a1", 100.0)]})
+        out = self.run_gate(baseline, [regressed, healthy])
+        self.assertEqual(out.returncode, 0, out.stdout + out.stderr)
+        out = self.run_gate(baseline, [healthy, regressed])
+        self.assertEqual(out.returncode, 1)
+        self.assertIn("REGRESSION sim_a/a1 mean_ms", out.stdout)
+
+    # ------------------------------------- sim_* baseline completeness --
+
+    def test_sim_section_missing_from_baseline_fails(self):
+        # Deterministic simulator sections must be gated: a new sim_*
+        # section that nobody added to BENCH_BASELINE.json is a failure,
+        # not a silent skip — even when everything else is clean.
+        baseline = self.write("baseline.json", {"sim_a": [rec("a1", 100.0)]})
+        snap = self.write("snap.json", {
+            "sim_a": [rec("a1", 100.0)],
+            "sim_tune": [rec("t1", 10.0)],
+        })
+        out = self.run_gate(baseline, [snap])
+        self.assertEqual(out.returncode, 1)
+        self.assertIn("sim_tune: sim section missing from baseline", out.stdout)
+
+    def test_engine_sections_stay_ungated(self):
+        # Artifact-gated engine sections vary by machine and are ignored
+        # when absent from the baseline.
+        baseline = self.write("baseline.json", {"sim_a": [rec("a1", 100.0)]})
+        snap = self.write("snap.json", {
+            "sim_a": [rec("a1", 100.0)],
+            "e2e_engine_tune": [rec("t1", 10.0)],
+        })
+        out = self.run_gate(baseline, [snap])
+        self.assertEqual(out.returncode, 0, out.stdout + out.stderr)
+
+    # -------------------------------------------- direction & tolerance --
+
+    def test_direction_aware_tolerance(self):
+        baseline = self.write("baseline.json", {
+            "sim_a": [rec("a1", 100.0, pred_tok_s=1000.0)],
+        })
+        within = self.write("within.json", {
+            "sim_a": [rec("a1", 109.0, pred_tok_s=910.0)],
+        })
+        out = self.run_gate(baseline, [within])
+        self.assertEqual(out.returncode, 0, out.stdout + out.stderr)
+        slow = self.write("slow.json", {
+            "sim_a": [rec("a1", 100.0, pred_tok_s=800.0)],
+        })
+        out = self.run_gate(baseline, [slow])
+        self.assertEqual(out.returncode, 1)
+        self.assertIn("pred_tok_s", out.stdout)
+
+    def test_ungated_keys_do_not_trip(self):
+        # Identity/context keys (rank, tau, …) carry no direction and
+        # may move freely.
+        baseline = self.write("baseline.json", {
+            "sim_a": [rec("a1", 100.0, rank=1.0, tau=1.0)],
+        })
+        snap = self.write("snap.json", {
+            "sim_a": [rec("a1", 100.0, rank=5.0, tau=-1.0)],
+        })
+        out = self.run_gate(baseline, [snap])
+        self.assertEqual(out.returncode, 0, out.stdout + out.stderr)
+
+    def test_vanished_case_is_a_regression(self):
+        baseline = self.write("baseline.json", {
+            "sim_a": [rec("a1", 100.0), rec("a2", 100.0)],
+        })
+        snap = self.write("snap.json", {"sim_a": [rec("a1", 100.0)]})
+        out = self.run_gate(baseline, [snap])
+        self.assertEqual(out.returncode, 1)
+        self.assertIn("sim_a/a2: case missing from snapshot", out.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
